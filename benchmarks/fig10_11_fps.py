@@ -1,0 +1,30 @@
+"""Paper Figs. 10-11: area-proportionate FPS and FPS/W (normalized)."""
+from repro.cnn.models import MODEL_ZOO, PAPER_CNNS
+from repro.core import simulator as sim
+from repro.core import tpc
+
+PAPER_GMEANS = {  # RMAM@1G vs X@1G: (FPS ratio, FPS/W ratio)
+    "MAM": (1.8, 1.5), "AMM": (17.1, 27.2), "CROSSLIGHT": (65.0, 171.0),
+}
+
+
+def run() -> None:
+    tables = {n: MODEL_ZOO[n]() for n in PAPER_CNNS}
+    res = sim.evaluate_suite(tables)
+    nf = sim.normalized_fps(res)
+    nw = sim.normalized_fps_per_watt(res)
+    for name in tpc.ACCELERATORS:
+        for br in tpc.PAPER_BIT_RATES:
+            for cnn in PAPER_CNNS:
+                print(f"fig10,{name}@{br:g}Gbps,{cnn},"
+                      f"norm_fps={nf[name][br][cnn]:.4f},"
+                      f"norm_fps_w={nw[name][br][cnn]:.4f}")
+    for other, (f_ref, w_ref) in PAPER_GMEANS.items():
+        f = 1 / sim.gmean(nf[other][1.0].values())
+        w = 1 / sim.gmean(nw[other][1.0].values())
+        print(f"fig10_gmean,RMAM_vs_{other}@1Gbps,"
+              f"fps_ratio={f:.2f}(paper {f_ref}),"
+              f"fpsw_ratio={w:.2f}(paper {w_ref})")
+    ra_f = sim.gmean(nf["RAMM"][1.0].values()) / sim.gmean(
+        nf["AMM"][1.0].values())
+    print(f"fig10_gmean,RAMM_vs_AMM@1Gbps,fps_ratio={ra_f:.2f}(paper 1.54)")

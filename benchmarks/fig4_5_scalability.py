@@ -1,0 +1,10 @@
+"""Paper Figs. 4-5: N and received power vs precision x bit rate."""
+from repro.core import scalability as sc
+
+
+def run() -> None:
+    for arch in ("MAM", "AMM"):
+        for p in sc.sweep(arch):
+            print(f"fig4_5,{arch},bits={p.precision_bits},"
+                  f"br={p.bit_rate_gbps:g},N={p.max_n},"
+                  f"rx_dbm={p.received_power_dbm:.2f}")

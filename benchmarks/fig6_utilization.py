@@ -1,0 +1,18 @@
+"""Paper Fig. 6: per-VDPE MRR utilization across DKV sizes."""
+from repro.core.mapping import TPCConfig, vdpe_utilization_for_s
+
+CFGS = {
+    "MAM_N44": TPCConfig("MAM", 44, 44, False),
+    "AMM_N31": TPCConfig("AMM", 31, 31, False),
+    "RMAM_N43": TPCConfig("MAM", 43, 43, True),
+    "RAMM_N31": TPCConfig("AMM", 31, 31, True),
+}
+SIZES = (8, 9, 12, 16, 20, 25, 27, 32, 40, 48, 56, 64, 80, 96, 160,
+         192, 224, 288, 384, 480, 640, 960, 1344, 2304, 3840)
+
+
+def run() -> None:
+    for s in SIZES:
+        row = ",".join(f"{k}={100 * vdpe_utilization_for_s(c, s):.1f}%"
+                       for k, c in CFGS.items())
+        print(f"fig6,S={s},{row}")

@@ -1,0 +1,38 @@
+"""Pallas kernel micro-bench (interpret mode on CPU): Mode 1 vs Mode 2.
+
+Wall-times in interpret mode are NOT TPU times — the derived metric that
+matters is the MXU-pass and HBM-traffic model: Mode-2 packing turns y
+small-S contractions into one 128-lane pass and divides input HBM reads
+by y (EXPERIMENTS.md §Perf discusses the structural win).
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    p, f = 256, 128
+    for s in (9, 25, 32):
+        divs = jnp.asarray(rng.integers(-7, 8, (p, s)), jnp.int8)
+        dkvs = jnp.asarray(rng.integers(-7, 8, (f, s)), jnp.int8)
+        y = ops.N_TPU // ops.X_TPU
+        # structural model: MXU passes and HBM bytes per output tile
+        passes_m1 = -(-s // ops.N_TPU) * f
+        passes_m2 = -(-s // ops.X_TPU) * -(-f // y)
+        bytes_m1 = p * ops.N_TPU            # padded dense lhs reads
+        bytes_m2 = p * ops.X_TPU            # packed lhs read once
+        t0 = time.monotonic()
+        out2 = ops.mode2_gemm(divs, dkvs, ops.X_TPU, y, interpret=True)
+        t2 = time.monotonic() - t0
+        t0 = time.monotonic()
+        out1 = ops.mode1_gemm(divs, dkvs, interpret=True)
+        t1 = time.monotonic() - t0
+        assert np.array_equal(np.asarray(out1), np.asarray(out2))
+        print(f"kernel,S={s},mxu_pass_ratio={passes_m1 / passes_m2:.2f},"
+              f"lhs_hbm_ratio={bytes_m1 / bytes_m2:.2f},"
+              f"interp_s_mode1={t1:.3f},interp_s_mode2={t2:.3f}")

@@ -1,0 +1,51 @@
+"""Benchmark harness: one entry per paper table/figure.
+
+Prints ``name,value,derived`` CSV rows per benchmark plus wall time.
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (fig4_5_scalability, fig6_utilization, fig10_11_fps,
+               kernel_bench, noise_ablation, table2_vdpe_size,
+               table3_dkv_census, table4_comb_switch,
+               table8_area_proportionate)
+
+BENCHES = {
+    "table2_vdpe_size": table2_vdpe_size.run,
+    "fig4_5_scalability": fig4_5_scalability.run,
+    "table3_dkv_census": table3_dkv_census.run,
+    "table4_comb_switch": table4_comb_switch.run,
+    "fig6_utilization": fig6_utilization.run,
+    "table8_area_proportionate": table8_area_proportionate.run,
+    "fig10_11_fps": fig10_11_fps.run,
+    "kernel_bench": kernel_bench.run,
+    "noise_ablation": noise_ablation.run,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    failures = 0
+    for name, fn in BENCHES.items():
+        if args.only and args.only != name:
+            continue
+        t0 = time.monotonic()
+        print(f"### {name}")
+        try:
+            fn()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+        print(f"{name},wall_s,{time.monotonic() - t0:.2f}")
+        print()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

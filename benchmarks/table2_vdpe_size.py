@@ -1,0 +1,11 @@
+"""Paper Table II: VDPE size N at 4-bit precision across bit rates."""
+from repro.core import scalability as sc
+
+
+def run() -> None:
+    got = sc.table2()
+    for arch, rows in got.items():
+        for br, n in rows.items():
+            ref = sc.PAPER_TABLE_II[arch][br]
+            print(f"table2,{arch}@{br:g}Gbps,N={n},paper={ref},"
+                  f"{'MATCH' if n == ref else 'MISMATCH'}")

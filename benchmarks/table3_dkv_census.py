@@ -1,0 +1,8 @@
+"""Paper Table III: DKV-size census of EfficientNet-B7."""
+from repro.cnn.layers import dkv_census
+from repro.cnn.models import efficientnet
+
+
+def run() -> None:
+    for kind, (k, _, d), f, s in dkv_census(efficientnet("B7")):
+        print(f"table3,{kind},K={k},D={d},F={f},S={s}")

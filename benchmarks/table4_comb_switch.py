@@ -1,0 +1,12 @@
+"""Paper Table IV: comb-switch FSR / radius / pair-count designs."""
+from repro.core import photonics as ph
+from repro.core import scalability as sc
+
+
+def run() -> None:
+    for variant, rows in sc.PAPER_TABLE_IV.items():
+        for br, (n, fsr_ref, radius_ref, y_ref) in rows.items():
+            d = ph.design_comb_switch(n)
+            print(f"table4,{variant}@{br:g}Gbps,N={n},y={d.y}(paper {y_ref}),"
+                  f"fsr={d.cs_fsr_nm:.2f}nm(paper {fsr_ref}),"
+                  f"radius={d.radius_um:.2f}um(paper {radius_ref})")

@@ -1,0 +1,16 @@
+"""Paper Table VIII: area-proportionate VDPE counts (ours vs paper)."""
+from repro.core import tpc
+
+
+def run() -> None:
+    for br in tpc.PAPER_BIT_RATES:
+        ours = tpc.area_proportionate_counts(br)
+        for name in tpc.ACCELERATORS:
+            paper = tpc.PAPER_TABLE_VIII[name][br]
+            print(f"table8,{name}@{br:g}Gbps,ours={ours[name]},"
+                  f"paper={paper}")
+        for name in tpc.ACCELERATORS:
+            acc = tpc.build_accelerator(name, br)
+            print(f"table8_power,{name}@{br:g}Gbps,"
+                  f"static_w={acc.power_static_w():.1f},"
+                  f"area_mm2={acc.area_mm2():.1f}")

@@ -1,0 +1,2 @@
+from .checkpointing import (CheckpointManager, latest_step,  # noqa: F401
+                            restore_checkpoint, save_checkpoint)

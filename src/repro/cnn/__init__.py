@@ -1,0 +1,3 @@
+"""CNN workload substrate: layer descriptors + model zoo (paper Section VI-A)."""
+from .layers import ConvKind, LayerSpec  # noqa: F401
+from .models import MODEL_ZOO, build_model  # noqa: F401

@@ -1,0 +1,105 @@
+"""Layer descriptors for CNN tensor-product workloads (paper Section II).
+
+Every CNN layer that performs tensor products is reduced to a ``LayerSpec``
+that captures exactly the quantities the paper's mapping and simulator need:
+
+* ``dkv_size``  S = K·K·D     (Eq. 1-region; the flattened kernel length)
+* ``n_entities``              kernels that hold *distinct* weights
+                              (F for SC/PC/FC, D for DC — a depthwise layer
+                              has one 2-D kernel per channel)
+* ``shares_div``              True when all entities consume the *same* DIV
+                              stream (SC/PC/FC); False for DC, where kernel c
+                              only ever sees channel c's patches
+* ``n_positions``             output spatial points per entity (H_out·W_out)
+* ``macs``                    exact pointwise-multiply count (Eqs. 2, 4, 5)
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Iterable, List
+
+
+class ConvKind(str, enum.Enum):
+    SC = "SC"    # standard convolution
+    DC = "DC"    # depthwise convolution
+    PC = "PC"    # pointwise (1x1) convolution
+    FC = "FC"    # fully connected
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One tensor-product layer, already reduced to VDP quantities."""
+    name: str
+    kind: ConvKind
+    k: int            # spatial kernel size K
+    d: int            # input channels D (per-kernel depth; 1 for DC kernels)
+    f: int            # number of kernel tensors F (output channels / units)
+    h_out: int        # output height
+    w_out: int        # output width
+
+    @property
+    def dkv_size(self) -> int:
+        """S = K·K·D (paper Table III)."""
+        return self.k * self.k * self.d
+
+    @property
+    def n_entities(self) -> int:
+        """Distinct weight vectors to schedule (DC: one per channel)."""
+        return self.f
+
+    @property
+    def shares_div(self) -> bool:
+        """All entities consume the same DIV stream? (False for DC)."""
+        return self.kind is not ConvKind.DC
+
+    @property
+    def n_positions(self) -> int:
+        return self.h_out * self.w_out
+
+    @property
+    def n_vdps(self) -> int:
+        """Total final VDP results for the layer (batch 1)."""
+        return self.f * self.n_positions
+
+    @property
+    def macs(self) -> int:
+        """Pointwise multiplications (Eq. 2 for SC, Eq. 4/5 for DC/PC)."""
+        return self.n_vdps * self.dkv_size
+
+    @property
+    def weight_points(self) -> int:
+        """Eq. 1 / Eq. 3 weight memory footprint in points."""
+        return self.f * self.dkv_size
+
+
+def sc(name: str, k: int, d: int, f: int, h_out: int, w_out: int) -> LayerSpec:
+    return LayerSpec(name, ConvKind.SC, k, d, f, h_out, w_out)
+
+
+def dc(name: str, k: int, channels: int, h_out: int, w_out: int) -> LayerSpec:
+    # one 2-D kernel per channel: S = K·K, F = channels
+    return LayerSpec(name, ConvKind.DC, k, 1, channels, h_out, w_out)
+
+
+def pc(name: str, d: int, f: int, h_out: int, w_out: int) -> LayerSpec:
+    return LayerSpec(name, ConvKind.PC, 1, d, f, h_out, w_out)
+
+
+def fc(name: str, d: int, f: int) -> LayerSpec:
+    return LayerSpec(name, ConvKind.FC, 1, d, f, 1, 1)
+
+
+def total_macs(layers: Iterable[LayerSpec]) -> int:
+    return sum(l.macs for l in layers)
+
+
+def dkv_census(layers: Iterable[LayerSpec]) -> List[tuple]:
+    """Table III style census: (kind, (K,K,D), total F, S) sorted by (kind, S)."""
+    from collections import defaultdict
+    acc: dict = defaultdict(int)
+    for l in layers:
+        acc[(l.kind.value, l.k, l.d, l.dkv_size)] += l.f
+    rows = [(kind, (k, k, d), f, s) for (kind, k, d, s), f in acc.items()]
+    rows.sort(key=lambda r: (r[0], r[3]))
+    return rows

@@ -1,0 +1,274 @@
+"""CNN model zoo — per-layer tensor-product tables (paper Section VI-A).
+
+The paper evaluates EfficientNetB7, Xception, NASNetMobile and ShuffleNetV2
+(input batch 1).  Layer tables are reconstructed from the cited Keras
+Applications definitions; the EfficientNet generator is validated to
+reproduce the paper's Table III DKV census for B7 *exactly*
+(tests/test_cnn_models.py).  MobileNetV1 and ResNet50 are included as extras
+(both are referenced in the paper's Sections I-II).
+
+NASNetMobile note: the NASNet-A cell DAG has data-dependent concat widths;
+we model each normal cell as its published separable-conv census
+(2x sep5x5 + 3x sep3x3, each separable conv applied twice) plus the 1x1
+filter adjusters, and each reduction cell with its sep7x7/5x5/3x3 mix.  This
+captures the DKV-size mixture (S in {9,25,49} DCs + many PC sizes), which is
+what the mapping study consumes; it is an approximation of the exact graph.
+"""
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List
+
+from .layers import ConvKind, LayerSpec, dc, fc, pc, sc
+
+
+def _same(n: int, stride: int) -> int:
+    return math.ceil(n / stride)
+
+
+def _valid(n: int, k: int, stride: int) -> int:
+    return (n - k) // stride + 1
+
+
+# ---------------------------------------------------------------------------
+# EfficientNet (B0..B7) — exact Keras Applications reconstruction
+# ---------------------------------------------------------------------------
+
+_EFFNET_BASE_BLOCKS = [
+    # (expand_ratio, channels, repeats, stride, kernel)
+    (1, 16, 1, 1, 3),
+    (6, 24, 2, 2, 3),
+    (6, 40, 2, 2, 5),
+    (6, 80, 3, 2, 3),
+    (6, 112, 3, 1, 5),
+    (6, 192, 4, 2, 5),
+    (6, 320, 1, 1, 3),
+]
+
+_EFFNET_SCALING = {  # (width, depth, resolution)
+    "B0": (1.0, 1.0, 224), "B1": (1.0, 1.1, 240), "B2": (1.1, 1.2, 260),
+    "B3": (1.2, 1.4, 300), "B4": (1.4, 1.8, 380), "B5": (1.6, 2.2, 456),
+    "B6": (1.8, 2.6, 528), "B7": (2.0, 3.1, 600),
+}
+
+
+def _round_filters(filters: int, width: float, divisor: int = 8) -> int:
+    filters *= width
+    new = max(divisor, int(filters + divisor / 2) // divisor * divisor)
+    if new < 0.9 * filters:
+        new += divisor
+    return int(new)
+
+
+def _round_repeats(repeats: int, depth: float) -> int:
+    return int(math.ceil(depth * repeats))
+
+
+def efficientnet(variant: str = "B7", num_classes: int = 1000) -> List[LayerSpec]:
+    width, depth, res = _EFFNET_SCALING[variant]
+    layers: List[LayerSpec] = []
+    hw = _same(res, 2)
+    stem = _round_filters(32, width)
+    layers.append(sc("stem", 3, 3, stem, hw, hw))
+    c_in = stem
+    for bi, (e, c, r, s, k) in enumerate(_EFFNET_BASE_BLOCKS):
+        c_out = _round_filters(c, width)
+        for ri in range(_round_repeats(r, depth)):
+            stride = s if ri == 0 else 1
+            name = f"block{bi + 1}{chr(ord('a') + ri)}"
+            expanded = c_in * e
+            if e != 1:
+                layers.append(pc(f"{name}_expand", c_in, expanded, hw, hw))
+            hw = _same(hw, stride)
+            layers.append(dc(f"{name}_dwconv", k, expanded, hw, hw))
+            se = max(1, int(c_in * 0.25))
+            layers.append(pc(f"{name}_se_reduce", expanded, se, 1, 1))
+            layers.append(pc(f"{name}_se_expand", se, expanded, 1, 1))
+            layers.append(pc(f"{name}_project", expanded, c_out, hw, hw))
+            c_in = c_out
+    head = _round_filters(1280, width)
+    layers.append(pc("top_conv", c_in, head, hw, hw))
+    layers.append(fc("predictions", head, num_classes))
+    return layers
+
+
+# ---------------------------------------------------------------------------
+# Xception (299x299)
+# ---------------------------------------------------------------------------
+
+def xception(num_classes: int = 1000) -> List[LayerSpec]:
+    L: List[LayerSpec] = []
+    hw = _valid(299, 3, 2)                      # 149
+    L.append(sc("block1_conv1", 3, 3, 32, hw, hw))
+    hw = _valid(hw, 3, 1)                       # 147
+    L.append(sc("block1_conv2", 3, 32, 64, hw, hw))
+
+    def sepconv(name: str, cin: int, cout: int, h: int) -> None:
+        L.append(dc(f"{name}_dw", 3, cin, h, h))
+        L.append(pc(f"{name}_pw", cin, cout, h, h))
+
+    # entry flow: three residual blocks with maxpool stride 2
+    c = 64
+    for bi, cout in enumerate((128, 256, 728), start=2):
+        sepconv(f"block{bi}_sepconv1", c, cout, hw)
+        sepconv(f"block{bi}_sepconv2", cout, cout, hw)
+        hw2 = _same(hw, 2)
+        L.append(pc(f"block{bi}_residual", c, cout, hw2, hw2))
+        hw, c = hw2, cout                        # 74 -> 37 -> 19
+    # middle flow: 8 blocks x 3 sepconvs at 19x19, 728 channels
+    for bi in range(5, 13):
+        for si in range(1, 4):
+            sepconv(f"block{bi}_sepconv{si}", 728, 728, hw)
+    # exit flow
+    sepconv("block13_sepconv1", 728, 728, hw)
+    sepconv("block13_sepconv2", 728, 1024, hw)
+    hw2 = _same(hw, 2)                           # 10
+    L.append(pc("block13_residual", 728, 1024, hw2, hw2))
+    hw = hw2
+    sepconv("block14_sepconv1", 1024, 1536, hw)
+    sepconv("block14_sepconv2", 1536, 2048, hw)
+    L.append(fc("predictions", 2048, num_classes))
+    return L
+
+
+# ---------------------------------------------------------------------------
+# ShuffleNetV2 1.0x (224x224)
+# ---------------------------------------------------------------------------
+
+def shufflenet_v2(num_classes: int = 1000) -> List[LayerSpec]:
+    L: List[LayerSpec] = []
+    hw = _same(224, 2)                           # 112
+    L.append(sc("conv1", 3, 3, 24, hw, hw))
+    hw = _same(hw, 2)                            # 56 (maxpool)
+    c_in = 24
+    stages = [(116, 4), (232, 8), (464, 4)]
+    for si, (c_out, units) in enumerate(stages, start=2):
+        half = c_out // 2
+        for ui in range(units):
+            name = f"stage{si}_unit{ui + 1}"
+            if ui == 0:  # stride-2 unit: both branches convolved
+                hw2 = _same(hw, 2)
+                # branch 1 (shortcut): dw s2 + pw
+                L.append(dc(f"{name}_b1_dw", 3, c_in, hw2, hw2))
+                L.append(pc(f"{name}_b1_pw", c_in, half, hw2, hw2))
+                # branch 2: pw, dw s2, pw
+                L.append(pc(f"{name}_b2_pw1", c_in, half, hw, hw))
+                L.append(dc(f"{name}_b2_dw", 3, half, hw2, hw2))
+                L.append(pc(f"{name}_b2_pw2", half, half, hw2, hw2))
+                hw = hw2
+            else:        # stride-1 unit: channel split, one branch convolved
+                L.append(pc(f"{name}_pw1", half, half, hw, hw))
+                L.append(dc(f"{name}_dw", 3, half, hw, hw))
+                L.append(pc(f"{name}_pw2", half, half, hw, hw))
+            c_in = c_out
+    L.append(pc("conv5", 464, 1024, hw, hw))
+    L.append(fc("predictions", 1024, num_classes))
+    return L
+
+
+# ---------------------------------------------------------------------------
+# NASNetMobile (NASNet-A 4@1056, 224x224) — cell census model (see module doc)
+# ---------------------------------------------------------------------------
+
+def nasnet_mobile(num_classes: int = 1000) -> List[LayerSpec]:
+    L: List[LayerSpec] = []
+    hw = _valid(224, 3, 2)                       # 111
+    L.append(sc("stem_conv1", 3, 3, 32, hw, hw))
+
+    def sep(name: str, k: int, cin: int, cout: int, h: int, stride: int = 1) -> None:
+        """NASNet separable conv: applied twice (dw+pw, then dw+pw again)."""
+        h2 = _same(h, stride)
+        L.append(dc(f"{name}_dw1", k, cin, h2, h2))
+        L.append(pc(f"{name}_pw1", cin, cout, h2, h2))
+        L.append(dc(f"{name}_dw2", k, cout, h2, h2))
+        L.append(pc(f"{name}_pw2", cout, cout, h2, h2))
+
+    def normal_cell(name: str, c_prev: int, f: int, h: int) -> None:
+        L.append(pc(f"{name}_adjust_prev", c_prev, f, h, h))
+        L.append(pc(f"{name}_adjust_cur", c_prev, f, h, h))
+        for i, k in enumerate((5, 5, 3, 3, 3)):
+            sep(f"{name}_sep{i}", k, f, f, h)
+
+    def reduction_cell(name: str, c_prev: int, f: int, h: int) -> int:
+        h2 = _same(h, 2)
+        L.append(pc(f"{name}_adjust_prev", c_prev, f, h, h))
+        L.append(pc(f"{name}_adjust_cur", c_prev, f, h, h))
+        for i, k in enumerate((7, 5, 5, 3, 3)):
+            sep(f"{name}_sep{i}", k, f, f, h, stride=2 if i < 3 else 1)
+        return h2
+
+    filters = 1056 // 24                          # 44
+    # stem reductions at filters/4 and filters/2
+    c_prev = 32
+    hw = reduction_cell("stem_red1", c_prev, filters // 4, hw)   # -> 56
+    c_prev = filters // 4 * 6
+    hw = reduction_cell("stem_red2", c_prev, filters // 2, hw)   # -> 28
+    c_prev = filters // 2 * 6
+    for stage, mult in enumerate((1, 2, 4)):
+        f = filters * mult
+        for ci in range(4):
+            normal_cell(f"stage{stage}_cell{ci}", c_prev, f, hw)
+            c_prev = f * 6                        # 5 blocks + skip concat
+        if stage < 2:
+            hw = reduction_cell(f"stage{stage}_red", c_prev, f * 2, hw)
+    L.append(fc("predictions", c_prev, num_classes))
+    return L
+
+
+# ---------------------------------------------------------------------------
+# Extras: MobileNetV1 and ResNet50 (referenced in paper Sections I-II)
+# ---------------------------------------------------------------------------
+
+def mobilenet_v1(num_classes: int = 1000) -> List[LayerSpec]:
+    L: List[LayerSpec] = []
+    hw = _same(224, 2)
+    L.append(sc("conv1", 3, 3, 32, hw, hw))
+    cfg = [(32, 64, 1), (64, 128, 2), (128, 128, 1), (128, 256, 2),
+           (256, 256, 1), (256, 512, 2)] + [(512, 512, 1)] * 5 + \
+          [(512, 1024, 2), (1024, 1024, 1)]
+    for i, (cin, cout, s) in enumerate(cfg, start=1):
+        hw = _same(hw, s)
+        L.append(dc(f"dw{i}", 3, cin, hw, hw))
+        L.append(pc(f"pw{i}", cin, cout, hw, hw))
+    L.append(fc("predictions", 1024, num_classes))
+    return L
+
+
+def resnet50(num_classes: int = 1000) -> List[LayerSpec]:
+    L: List[LayerSpec] = []
+    hw = _same(224, 2)                            # 112
+    L.append(sc("conv1", 7, 3, 64, hw, hw))
+    hw = _same(hw, 2)                             # 56 (maxpool)
+    c_in = 64
+    stages = [(64, 256, 3, 1), (128, 512, 4, 2),
+              (256, 1024, 6, 2), (512, 2048, 3, 2)]
+    for si, (mid, cout, blocks, stride) in enumerate(stages, start=2):
+        for bi in range(blocks):
+            s = stride if bi == 0 else 1
+            name = f"conv{si}_block{bi + 1}"
+            hw2 = _same(hw, s)
+            L.append(pc(f"{name}_1", c_in, mid, hw2, hw2))
+            L.append(sc(f"{name}_2", 3, mid, mid, hw2, hw2))
+            L.append(pc(f"{name}_3", mid, cout, hw2, hw2))
+            if bi == 0:
+                L.append(pc(f"{name}_0", c_in, cout, hw2, hw2))  # shortcut
+            c_in, hw = cout, hw2
+    L.append(fc("predictions", 2048, num_classes))
+    return L
+
+
+MODEL_ZOO: Dict[str, Callable[[], List[LayerSpec]]] = {
+    "efficientnet_b7": lambda: efficientnet("B7"),
+    "xception": xception,
+    "nasnet_mobile": nasnet_mobile,
+    "shufflenet_v2": shufflenet_v2,
+    "mobilenet_v1": mobilenet_v1,
+    "resnet50": resnet50,
+}
+
+#: The four CNNs evaluated in the paper (Figs. 10-11).
+PAPER_CNNS = ("efficientnet_b7", "xception", "nasnet_mobile", "shufflenet_v2")
+
+
+def build_model(name: str) -> List[LayerSpec]:
+    return MODEL_ZOO[name]()

@@ -1,0 +1,4 @@
+"""Architecture configs: one module per assigned architecture."""
+from .base import (ModelConfig, MoEConfig, SSMConfig, REGISTRY,  # noqa: F401
+                   get_config, load_all, register)
+from .shapes import SHAPES, ShapeConfig, applicable_shapes  # noqa: F401

@@ -1,0 +1,180 @@
+"""Model configuration system: one ModelConfig per assigned architecture.
+
+Every architecture from the assignment is a ``ModelConfig`` registered in
+``REGISTRY`` (one module per arch in this package defines and registers it).
+``reduced()`` produces the CPU-smoke-test variant of any config; the full
+configs are only ever lowered via launch/dryrun.py (ShapeDtypeStruct, no
+allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    n_groups: int = 1
+    chunk: int = 256
+    expand: int = 2
+    conv_width: int = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture description for the unified transformer/SSM stack."""
+    arch_id: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm | audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None   # default d_model // n_heads
+    # attention behaviour
+    sliding_window: Optional[int] = None        # SWA width (mixtral, hymba)
+    local_global_period: Optional[int] = None   # gemma2: every 2nd layer global
+    attn_logit_softcap: Optional[float] = None  # gemma2: 50.0
+    final_logit_softcap: Optional[float] = None  # gemma2: 30.0
+    qkv_bias: bool = False                      # qwen1.5
+    mlp_act: str = "silu"                       # silu (swiglu) | gelu
+    mlp_gated: bool = True                      # GLU (3 mats) vs plain FFN (2)
+    rope_theta: float = 10000.0
+    # mixture of experts
+    moe: Optional[MoEConfig] = None
+    # state space
+    ssm: Optional[SSMConfig] = None
+    # encoder-decoder (seamless)
+    n_encoder_layers: int = 0
+    # multimodal stub: prefix embeddings provided by input_specs
+    prefix_len: int = 0              # patch/frame embedding positions
+    # training
+    tie_embeddings: bool = True
+    scan_unroll: bool = False        # unroll the layer scan (cost audits)
+    attn_scores_dtype: str = "float32"   # "bfloat16" halves score traffic
+    ssm_intra_dtype: str = "float32"     # SSD intra-chunk tensor dtype
+    param_dtype: str = "bfloat16"
+    opt_state_dtype: str = "float32"  # "int8" = quantized Adam moments
+    wsd_schedule: bool = False        # minicpm warmup-stable-decay
+    # notes for DESIGN.md arch-applicability
+    notes: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def vocab_padded(self) -> int:
+        """Vocab rounded to a multiple of 256 for clean model-axis sharding."""
+        return (self.vocab + 255) // 256 * 256
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def supports_long_context(self) -> bool:
+        """Sub-quadratic decode memory: SSM/hybrid/SWA/local-global archs."""
+        return (self.family in ("ssm", "hybrid")
+                or self.sliding_window is not None
+                or self.local_global_period is not None)
+
+    @property
+    def dtype(self):
+        return jnp.bfloat16 if self.param_dtype == "bfloat16" else jnp.float32
+
+    def n_params(self) -> int:
+        """Analytic parameter count (embeddings + stacked blocks)."""
+        d, ff, hd = self.d_model, self.d_ff, self.resolved_head_dim
+        nq, nkv = self.n_heads, self.n_kv_heads
+        attn = d * (nq * hd) + 2 * d * (nkv * hd) + (nq * hd) * d
+        mlp = (3 if self.mlp_gated else 2) * d * ff
+        if self.moe:
+            mlp = mlp * self.moe.n_experts + d * self.moe.n_experts
+        ssm = 0
+        if self.ssm:
+            d_in = self.ssm.expand * d
+            n_h = d_in // self.ssm.head_dim
+            # in_proj (z,x,B,C,dt) + out_proj + A,D + conv
+            d_bc = 2 * self.ssm.n_groups * self.ssm.d_state
+            ssm = d * (2 * d_in + d_bc + n_h) + d_in * d + 2 * n_h \
+                + self.ssm.conv_width * (d_in + d_bc)
+        per_layer = mlp + 2 * d
+        if self.family == "ssm":
+            per_layer += ssm
+        elif self.family == "hybrid":
+            per_layer += attn + ssm
+        else:
+            per_layer += attn
+        total = self.n_layers * per_layer + self.vocab_padded * d
+        if self.n_encoder_layers:
+            enc = self.n_encoder_layers * (attn + mlp + 2 * d)
+            total += enc + self.n_layers * attn      # cross-attention
+        if not self.tie_embeddings:
+            total += self.vocab_padded * d
+        return total
+
+    def n_active_params(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if not self.moe:
+            return self.n_params()
+        d, ff = self.d_model, self.d_ff
+        dense_mlp = (3 if self.mlp_gated else 2) * d * ff
+        inactive = self.n_layers * dense_mlp * (self.moe.n_experts
+                                                - self.moe.top_k)
+        return self.n_params() - inactive
+
+    def reduced(self) -> "ModelConfig":
+        """Small same-family variant for CPU smoke tests."""
+        return dataclasses.replace(
+            self,
+            arch_id=self.arch_id + "-smoke",
+            n_layers=2,
+            d_model=64,
+            n_heads=4,
+            n_kv_heads=2 if self.n_kv_heads < self.n_heads else 4,
+            head_dim=16,
+            d_ff=128,
+            vocab=512,
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+            prefix_len=8 if self.prefix_len else 0,
+            sliding_window=16 if self.sliding_window else None,
+            moe=dataclasses.replace(self.moe, n_experts=4) if self.moe else None,
+            ssm=dataclasses.replace(self.ssm, d_state=16, head_dim=16,
+                                    chunk=16) if self.ssm else None,
+        )
+
+
+REGISTRY: Dict[str, ModelConfig] = {}
+
+
+def register(cfg: ModelConfig) -> ModelConfig:
+    REGISTRY[cfg.arch_id] = cfg
+    return cfg
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if not REGISTRY:
+        load_all()
+    return REGISTRY[arch_id]
+
+
+def load_all() -> Dict[str, ModelConfig]:
+    """Import every per-arch module so it registers itself."""
+    from . import (seamless_m4t_large_v2, gemma2_2b, minicpm_2b,  # noqa: F401
+                   deepseek_67b, qwen15_05b, grok1_314b, mixtral_8x7b,
+                   hymba_15b, mamba2_27b, llava_next_34b)
+    return REGISTRY

@@ -1,0 +1,23 @@
+"""gemma2-2b: local+global alternating attention, logit softcaps.
+
+[arXiv:2408.00118; hf]  26L d_model=2304 8H (GQA kv=4) d_ff=9216
+vocab=256000, head_dim=256, window 4096, attn softcap 50, final softcap 30.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="gemma2-2b",
+    family="dense",
+    n_layers=26,
+    d_model=2304,
+    n_heads=8,
+    n_kv_heads=4,
+    head_dim=256,
+    d_ff=9216,
+    vocab=256000,
+    sliding_window=4096,
+    local_global_period=2,       # alternating local / global layers
+    attn_logit_softcap=50.0,
+    final_logit_softcap=30.0,
+    mlp_act="gelu",
+))

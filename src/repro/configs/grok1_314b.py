@@ -1,0 +1,21 @@
+"""grok-1-314b: MoE 8 experts top-2.
+
+[hf:xai-org/grok-1; unverified]  64L d_model=6144 48H (GQA kv=8) d_ff=32768
+vocab=131072.  Uses int8-quantized Adam moments so the train_4k cell fits
+the single-pod memory budget (DESIGN.md §5).
+"""
+from .base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab=131072,
+    moe=MoEConfig(n_experts=8, top_k=2),
+    tie_embeddings=False,
+    opt_state_dtype="int8",
+))

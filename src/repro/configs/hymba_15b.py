@@ -1,0 +1,20 @@
+"""hymba-1.5b: parallel attention + mamba heads per layer (hybrid).
+
+[arXiv:2411.13676; hf]  32L d_model=1600 25H (GQA kv=5) d_ff=5504
+vocab=32001, ssm_state=16.  Attention branch uses SWA (the published model
+keeps 3 global layers; we use SWA throughout — DESIGN.md §Arch-applicability).
+"""
+from .base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="hymba-1.5b",
+    family="hybrid",
+    n_layers=32,
+    d_model=1600,
+    n_heads=25,
+    n_kv_heads=5,
+    d_ff=5504,
+    vocab=32001,
+    sliding_window=2048,
+    ssm=SSMConfig(d_state=16, head_dim=64, expand=2),
+))

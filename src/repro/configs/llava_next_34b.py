@@ -1,0 +1,20 @@
+"""llava-next-34b: VLM — transformer backbone with anyres patch stub.
+
+[hf:llava-hf/llava-v1.6; unverified]  60L d_model=7168 56H (GQA kv=8)
+d_ff=20480 vocab=64000.  The vision tower is a STUB: input_specs() provides
+precomputed anyres patch embeddings as a prefix.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="llava-next-34b",
+    family="vlm",
+    n_layers=60,
+    d_model=7168,
+    n_heads=56,
+    n_kv_heads=8,
+    d_ff=20480,
+    vocab=64000,
+    prefix_len=2880,       # anyres: base 576 + 4 tiles x 576
+    tie_embeddings=False,
+))

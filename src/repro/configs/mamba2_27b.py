@@ -1,0 +1,20 @@
+"""mamba2-2.7b: attention-free SSD (state-space duality).
+
+[arXiv:2405.21060; unverified]  64L d_model=2560 d_ff=0 vocab=50280,
+ssm_state=128.  The paper's VDPE re-aggregation applies to the in/out
+projections only; the SSD scan itself is not a plain GEMM
+(DESIGN.md §Arch-applicability).
+"""
+from .base import ModelConfig, SSMConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="mamba2-2.7b",
+    family="ssm",
+    n_layers=64,
+    d_model=2560,
+    n_heads=1,            # unused (attention-free)
+    n_kv_heads=1,
+    d_ff=0,               # no MLP: the mamba block is the whole layer
+    vocab=50280,
+    ssm=SSMConfig(d_state=128, head_dim=64, expand=2),
+))

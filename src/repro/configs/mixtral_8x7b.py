@@ -1,0 +1,20 @@
+"""mixtral-8x7b: MoE 8 experts top-2 with sliding-window attention.
+
+[arXiv:2401.04088; hf]  32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000, window 4096.
+"""
+from .base import ModelConfig, MoEConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="mixtral-8x7b",
+    family="moe",
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=32000,
+    sliding_window=4096,
+    moe=MoEConfig(n_experts=8, top_k=2),
+    tie_embeddings=False,
+))

@@ -1,0 +1,32 @@
+"""The paper's own workloads as selectable configs.
+
+The four evaluated CNNs (plus the two extras referenced in Sections I-II)
+are exposed with the same ``--arch`` selection convention as the LM pool;
+they run through the photonic accelerator pipeline (cycle-true simulator +
+decomposed-VDP numerics) rather than the LM training stack.
+
+    from repro.configs.paper_cnns import CNN_CONFIGS, evaluate_cnn
+    evaluate_cnn("efficientnet_b7", accelerator="RMAM", br_gbps=1.0)
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+from ..cnn.models import MODEL_ZOO, PAPER_CNNS
+from ..core import simulator as sim
+from ..core import tpc
+
+#: arch-id -> layer-table builder (paper CNNs first, extras after).
+CNN_CONFIGS: Dict[str, object] = {name: MODEL_ZOO[name]
+                                  for name in MODEL_ZOO}
+
+
+def evaluate_cnn(arch: str, accelerator: str = "RMAM",
+                 br_gbps: float = 1.0, batch: int = 1) -> sim.InferenceReport:
+    """Cycle-true FPS / FPS/W for one CNN on one accelerator variant."""
+    layers = CNN_CONFIGS[arch]()
+    acc = tpc.build_accelerator(accelerator, br_gbps)
+    return sim.simulate(acc, layers, batch=batch)
+
+
+__all__ = ["CNN_CONFIGS", "PAPER_CNNS", "evaluate_cnn"]

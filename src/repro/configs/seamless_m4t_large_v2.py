@@ -1,0 +1,24 @@
+"""seamless-m4t-large-v2: enc-dec multimodal (audio frontend stub).
+
+[arXiv:2308.11596; hf]  24L d_model=1024 16H (GQA kv=16) d_ff=8192
+vocab=256206.  The speech frontend is a STUB: input_specs() provides
+precomputed frame embeddings for the encoder.
+"""
+from .base import ModelConfig, register
+
+CONFIG = register(ModelConfig(
+    arch_id="seamless-m4t-large-v2",
+    family="encdec",
+    n_layers=24,                 # decoder layers
+    n_encoder_layers=24,
+    d_model=1024,
+    n_heads=16,
+    n_kv_heads=16,
+    d_ff=8192,
+    vocab=256206,
+    mlp_act="gelu",
+    mlp_gated=False,             # classic transformer FFN
+    tie_embeddings=True,
+    notes=("Paper technique applies to the frontend's depthwise-separable "
+           "conv stack (stubbed) and to mixed enc/dec GEMM sizes."),
+))

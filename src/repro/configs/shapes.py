@@ -1,0 +1,39 @@
+"""Assigned input shapes and per-arch applicability rules."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+from .base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str          # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def applicable_shapes(cfg: ModelConfig) -> List[ShapeConfig]:
+    """All assigned shapes, minus long_500k for pure full-attention archs.
+
+    ``long_500k`` decodes one token against a 524288-token context; that is
+    only run for sub-quadratic-memory architectures (SSM, hybrid, SWA,
+    local/global alternating) per the assignment.  Every assigned arch here
+    is a decoder (seamless is enc-dec), so decode shapes always apply.
+    """
+    out = []
+    for s in SHAPES.values():
+        if s.name == "long_500k" and not cfg.supports_long_context:
+            continue
+        out.append(s)
+    return out

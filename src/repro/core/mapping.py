@@ -1,0 +1,208 @@
+"""DKV -> VDPE mapping: the paper's Cases 1/2/3 and Mode 1/2 selection (Sec. V-B).
+
+Given a layer's DKV size S and a TPC operating point (N, M, x, organization),
+this module slices the DKV matrix, selects the operating mode per slice, and
+produces a ``LayerMapping`` — a list of homogeneous ``PassGroup`` schedules
+plus exact utilization accounting — consumed by the cycle-true simulator
+(core/simulator.py) and the utilization study (Fig. 6).
+
+Slice/mode selection for reconfigurable VDPEs, y = (N >= 2x ? floor(N/x) : 0):
+
+    Case 1  S >= N   -> floor(S/N) Mode-1 slices of width N; the remainder
+                        slice (width < N) is re-aggregated per the Case-2/3
+                        rules below (the paper's F^1_(H,c) slice is itself a
+                        matrix of DKVs smaller than N, and the reconfigurable
+                        VDPE processes it in Mode 2 — this recovers the
+                        remainder waste the paper identifies in Scenario 2).
+    Case 2  x < S < N -> Mode-2 slices of width x plus a remainder c <= x;
+                        y lanes per VDPE carry y different kernels' slices.
+    Case 3  S <= x    -> one Mode-2 slice; y whole DKVs per VDPE in parallel.
+
+Non-reconfigurable TPCs (or y == 0) always slice by N in Mode 1.
+
+Dataflows (Section III-A structure dictates who parallelizes over what):
+
+* MAM family (HOLYLIGHT, RMAM) — **kernel-parallel**: ONE DIV element per
+  TPC; each cycle all M VDPEs see the same DIV and hold M different kernels
+  (x y Mode-2 lanes).  One pass streams the layer's positions.  Depthwise
+  convolutions tie kernel c to channel c's patches, so only one VDPE per MAM
+  TPC holds a distinct kernel; Mode-2 lanes recover y-way parallelism (the
+  shared DIV element imprints each lane's x wavelengths with a different
+  channel's patch).
+
+* AMM family (DEAP-CNN, RAMM, CROSSLIGHT) — **position-parallel**: private
+  DIV element per VDPE; ONE kernel is broadcast to all M DKV elements while
+  the M DIV elements carry M different input patches (DEAP-CNN's conv
+  mapping).  One pass streams ceil(P/M) position-groups and fetches M fresh
+  patches per cycle — the input-supply bound this creates, together with the
+  per-pass overheads paid once per kernel instead of once per M kernels, is
+  what the paper's evaluation shows as the AMM-family FPS gap.
+
+Independent TPCs additionally split a layer's *position stream*: when a
+layer needs fewer weight passes than there are TPCs, the surplus TPCs take
+disjoint position ranges of the same passes (every TPC has its own laser
+block and DIV path, so this needs no new hardware paths).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List
+
+from ..cnn.layers import LayerSpec
+from .photonics import REAGG_SIZE_X, num_comb_switch_pairs
+
+
+@dataclasses.dataclass(frozen=True)
+class TPCConfig:
+    """One TPC operating point."""
+    org: str                  # "MAM" | "AMM" (layout family)
+    n: int                    # VDPE size (wavelengths / MRRs per VDPE)
+    m: int                    # VDPEs per TPC (paper: M = N)
+    reconfigurable: bool
+    x: int = REAGG_SIZE_X
+
+    @property
+    def y(self) -> int:
+        return num_comb_switch_pairs(self.n, self.x) if self.reconfigurable else 0
+
+    @property
+    def shared_div(self) -> bool:
+        return self.org == "MAM"
+
+
+@dataclasses.dataclass(frozen=True)
+class PassGroup:
+    """A homogeneous group of weight-stationary passes."""
+    mode: int                 # 1 or 2
+    width: int                # slice width carried per lane
+    n_slices: int             # how many S-slices of this width
+    lanes: int                # lane-tiles per VDPE (1 or y)
+    passes: int               # total TPC passes for this group
+    stream_cycles: int        # DIV symbols streamed per pass
+    supply_points: int        # fresh DIV points fetched per stream cycle
+    active_vdpes: int         # VDPEs with live work per TPC per pass
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerMapping:
+    """Full schedule accounting for one layer on one accelerator."""
+    layer: LayerSpec
+    case: int                 # paper Case 1/2/3 (0 = fixed-N fallback)
+    groups: List[PassGroup]
+    used_mrr_cycles: int      # MRR-cycles doing useful pointwise products
+    active_mrr_cycles: int    # N * (VDPE-cycles of VDPEs holding live work)
+
+    @property
+    def utilization(self) -> float:
+        """Fig. 6 metric: utilized VDPE area / total active VDPE area."""
+        return self.used_mrr_cycles / max(self.active_mrr_cycles, 1)
+
+    @property
+    def n_chunks(self) -> int:
+        """psum fan-in per final VDP result."""
+        return sum(g.n_slices for g in self.groups)
+
+    @property
+    def modes(self) -> set:
+        return {g.mode for g in self.groups}
+
+
+def select_case(tpc: TPCConfig, s: int) -> int:
+    if tpc.y == 0:
+        return 0
+    if s >= tpc.n:
+        return 1
+    if s > tpc.x:
+        return 2
+    return 3
+
+
+def slice_plan(tpc: TPCConfig, s: int) -> List[tuple]:
+    """Decompose S into (mode, width, count) slice groups.
+
+    The paper advocates "selecting the most appropriate mapping and mode ...
+    that can maximize the MRR utilization and processing throughput"
+    (Section V-B), so for a sub-N residue r the planner compares the Mode-1
+    cost (1 pass-slot) against the Mode-2 cost (ceil(r/x) slices spread over
+    y lanes = ceil(r/x)/y pass-slots) and re-aggregates only when Mode 2 is
+    at least as cheap — e.g. r = 37 with (x=9, y=4) stays Mode 1 (5 slices >
+    4 lanes) while r = 25 re-aggregates (3 slices < 4 lanes).
+    """
+    plan: List[tuple] = []
+    rem = s
+    b = rem // tpc.n
+    if b:
+        plan.append((1, tpc.n, b))
+        rem -= b * tpc.n
+    if not rem:
+        return plan
+    if tpc.y > 0 and math.ceil(rem / tpc.x) <= tpc.y:
+        bx = rem // tpc.x
+        if bx:
+            plan.append((2, tpc.x, bx))
+            rem -= bx * tpc.x
+        if rem:
+            plan.append((2, rem, 1))
+    else:
+        plan.append((1, rem, 1))
+    return plan
+
+
+def map_layer(tpc: TPCConfig, layer: LayerSpec) -> LayerMapping:
+    s = layer.dkv_size
+    case = select_case(tpc, s)
+    ent = layer.n_entities
+    p = layer.n_positions
+    groups: List[PassGroup] = []
+    used = 0
+    active = 0
+
+    for mode, width, count in slice_plan(tpc, s):
+        lanes = 1 if mode == 1 else tpc.y
+        if tpc.shared_div:
+            # kernel-parallel: M VDPEs hold distinct kernels iff shared input
+            vdpes_eff = tpc.m if layer.shares_div else 1
+            kernels_per_pass = vdpes_eff * lanes
+            stream = p
+            if layer.shares_div:
+                supply = width            # one slice pattern for the TPC
+            else:
+                supply = lanes * width    # y distinct channel patches
+            passes = count * math.ceil(ent / kernels_per_pass)
+            # utilization accounting
+            full, r = divmod(ent, kernels_per_pass)
+            used += count * ent * width * stream
+            active += count * (full * vdpes_eff
+                               + math.ceil(r / lanes)) * tpc.n * stream
+        else:
+            # position-parallel: kernels broadcast, M positions in parallel
+            vdpes_eff = min(tpc.m, p)
+            kernels_per_pass = lanes
+            stream = math.ceil(p / tpc.m)
+            supply = vdpes_eff * width    # M fresh patches per cycle
+            passes = count * math.ceil(ent / kernels_per_pass)
+            used += count * ent * width * p
+            active += count * math.ceil(ent / lanes) * tpc.n * tpc.m * stream
+        groups.append(PassGroup(
+            mode=mode, width=width, n_slices=count, lanes=lanes,
+            passes=passes, stream_cycles=stream, supply_points=supply,
+            active_vdpes=vdpes_eff,
+        ))
+    return LayerMapping(layer=layer, case=case, groups=groups,
+                        used_mrr_cycles=used, active_mrr_cycles=active)
+
+
+def vdpe_utilization_for_s(tpc: TPCConfig, s: int) -> float:
+    """Fig. 6: per-VDPE MRR utilization for an isolated DKV of size ``s``.
+
+    Mode-2 lanes beyond a single entity are assumed filled by other entities
+    of the same size (the paper plots per-size utilization with packed lanes).
+    """
+    used = 0.0
+    slices = 0
+    for mode, width, count in slice_plan(tpc, s):
+        lanes = 1 if mode == 1 else tpc.y
+        used += count * lanes * width
+        slices += count
+    return used / (slices * tpc.n)

@@ -1,0 +1,88 @@
+"""Scalability analysis sweeps (paper Section III-B, Figs. 4-5, Table II).
+
+Sweeps bit precision × bit rate for the AMM / MAM organization families and
+reports the maximum supportable VDPE size ``N`` together with the optical
+power received at the photodetector — the two quantities plotted in the
+paper's Figs. 4 and 5.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence
+
+from . import photonics as ph
+
+#: Bit rates swept in the paper (Gbps).
+PAPER_BIT_RATES_GBPS: Sequence[float] = (1.0, 3.0, 5.0, 10.0)
+#: Bit precisions swept in the paper.
+PAPER_PRECISIONS: Sequence[int] = (1, 2, 3, 4, 5, 6, 7, 8)
+
+#: Paper Table II — VDPE size N at 4-bit precision (ground truth for tests).
+PAPER_TABLE_II: Dict[str, Dict[float, int]] = {
+    "RMAM": {1.0: 43, 3.0: 27, 5.0: 22, 10.0: 16},
+    "RAMM": {1.0: 31, 3.0: 20, 5.0: 16, 10.0: 12},
+    "MAM": {1.0: 44, 3.0: 28, 5.0: 22, 10.0: 16},
+    "AMM": {1.0: 31, 3.0: 20, 5.0: 16, 10.0: 12},
+}
+
+#: Paper Table IV — comb-switch designs (BR Gbps -> (N, CS_FSR nm, radius µm,
+#: number of CS pairs)).  Note the paper's Table IV quotes the *MAM* N values
+#: (44→43 rounds to 43/28/22) for the RMAM rows and AMM N values for RAMM.
+PAPER_TABLE_IV = {
+    "RAMM": {1.0: (31, 4.83, 18.17, 3), 3.0: (20, 5.00, 17.50, 2),
+             5.0: (16, None, None, 0)},
+    "RMAM": {1.0: (43, 4.65, 18.98, 4), 3.0: (28, 5.35, 16.20, 3),
+             5.0: (22, 4.54, 19.49, 2)},
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    arch: str
+    precision_bits: int
+    bit_rate_gbps: float
+    max_n: int
+    received_power_dbm: float  # at N = max_n (NaN-free: 0 when max_n == 0)
+
+
+def sweep(
+    arch_name: str,
+    precisions: Sequence[int] = PAPER_PRECISIONS,
+    bit_rates_gbps: Sequence[float] = PAPER_BIT_RATES_GBPS,
+    params: ph.PhotonicParams | None = None,
+) -> List[SweepPoint]:
+    """Figs. 4-5: max N and received optical power per (precision, BR)."""
+    p = params or ph.PhotonicParams()
+    arch = ph.ARCHS[arch_name]
+    out: List[SweepPoint] = []
+    for bits in precisions:
+        for br in bit_rates_gbps:
+            n = ph.max_vdpe_size(p, arch, bits, br * 1e9)
+            rx = ph.received_power_dbm(p, arch, max(n, 1), br * 1e9)
+            out.append(SweepPoint(arch_name, bits, br, n, rx))
+    return out
+
+
+def table2(params: ph.PhotonicParams | None = None) -> Dict[str, Dict[float, int]]:
+    """Reproduce Table II: N at 4-bit precision for all four organizations."""
+    p = params or ph.PhotonicParams()
+    out: Dict[str, Dict[float, int]] = {}
+    for name in PAPER_TABLE_II:
+        arch = ph.ARCHS[name]
+        out[name] = {br: ph.max_vdpe_size(p, arch, 4, br * 1e9)
+                     for br in PAPER_BIT_RATES_GBPS}
+    return out
+
+
+def table4() -> Dict[str, Dict[float, ph.CombSwitchDesign]]:
+    """Reproduce Table IV comb-switch designs from the Table-II N values."""
+    out: Dict[str, Dict[float, ph.CombSwitchDesign]] = {}
+    for name, rows in PAPER_TABLE_IV.items():
+        out[name] = {br: ph.design_comb_switch(n_ref[0])
+                     for br, n_ref in rows.items()}
+    return out
+
+
+def operating_n(arch_name: str, br_gbps: float) -> int:
+    """The N value an accelerator variant runs at (Table II, 4-bit)."""
+    return PAPER_TABLE_II["AMM" if arch_name == "CROSSLIGHT" else arch_name][br_gbps]

@@ -1,0 +1,163 @@
+"""Transaction-level, cycle-true simulator of CNN inference on MRR TPCs.
+
+Weight-stationary dataflow (Section VI-A).  Per layer, each ``PassGroup``
+from core/mapping.py is scheduled as:
+
+    rounds      = ceil(max(passes / n_tpc, 1))
+    overheads   = rounds x (ring retune + serial weight-DAC write + TIA fill)
+    stream time = max(compute-bound, input-supply-bound)
+        compute-bound = passes x stream_cycles / BR / n_tpc
+        supply-bound  = passes x stream_cycles x supply_points / B_supply
+
+``B_supply`` is the accelerator-wide input-delivery bandwidth (global memory
++ NoC mesh of Fig. 9) in fresh 4-bit input points per ns.  Kernel-parallel
+(MAM-family) TPCs amortize one DIV fetch over M kernels per cycle;
+position-parallel (AMM-family) TPCs fetch M fresh patches per cycle, so the
+supply bound is what separates the organizations once per-pass overheads are
+paid.  Calibrated so the RMAM reference at 1 Gbps streams at its line rate
+(12 TPCs x 43 points/ns; see EXPERIMENTS.md §Fidelity for the study).
+
+Energy: static power (lasers, weight DACs, SE chains, ADCs, periphery, DIV
+DAC idle floor) is charged for the full frame latency; DIV DAC switching is
+charged per imprinted sample (23.4 pJ), so a supply-starved organization's
+input DACs idle instead of burning full-rate power.  FPS/W == 1/energy-per-
+frame, matching the paper's static-amortization argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Iterable, List, Sequence
+
+from ..cnn.layers import LayerSpec
+from . import tpc as tpc_mod
+from .mapping import LayerMapping, map_layer
+from .tpc import (ACTIVATION_LATENCY, AcceleratorConfig,
+                  DIV_DAC_ENERGY_PER_SAMPLE_J, POOL_LATENCY,
+                  REDUCTION_LATENCY, TIA_LATENCY, build_accelerator)
+
+#: Accelerator-wide input-supply bandwidth, fresh 4-bit points per ns.
+#: = the RMAM@1Gbps line rate (12 TPCs x 43 pts/ns), the reference design's
+#: balanced operating point.
+SUPPLY_POINTS_PER_NS = 516.0
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerReport:
+    mapping: LayerMapping
+    rounds: int
+    time_s: float
+    div_samples: int          # DIV DAC sample writes for the layer
+    utilization: float
+
+
+@dataclasses.dataclass(frozen=True)
+class InferenceReport:
+    accelerator: AcceleratorConfig
+    layers: List[LayerReport]
+    batch: int
+
+    @property
+    def frame_latency_s(self) -> float:
+        return sum(l.time_s for l in self.layers) / self.batch
+
+    @property
+    def fps(self) -> float:
+        return 1.0 / self.frame_latency_s
+
+    @property
+    def energy_per_frame_j(self) -> float:
+        static = self.accelerator.power_static_w() * self.frame_latency_s
+        dyn = (sum(l.div_samples for l in self.layers)
+               * DIV_DAC_ENERGY_PER_SAMPLE_J / self.batch)
+        return static + dyn
+
+    @property
+    def power_w(self) -> float:
+        return self.energy_per_frame_j / self.frame_latency_s
+
+    @property
+    def fps_per_watt(self) -> float:
+        return 1.0 / self.energy_per_frame_j
+
+    @property
+    def mean_utilization(self) -> float:
+        used = sum(l.mapping.used_mrr_cycles for l in self.layers)
+        active = sum(l.mapping.active_mrr_cycles for l in self.layers)
+        return used / max(active, 1)
+
+
+def simulate_layer(acc: AcceleratorConfig, layer: LayerSpec,
+                   batch: int = 1,
+                   supply_points_per_ns: float = SUPPLY_POINTS_PER_NS,
+                   ) -> LayerReport:
+    mapping = map_layer(acc.tpc_config, layer)
+    overhead = acc.weight_load_latency_s + TIA_LATENCY
+    time_s = 0.0
+    rounds = 0
+    samples = 0
+    for g in mapping.groups:
+        g_rounds = math.ceil(max(g.passes / acc.n_tpc, 1.0))
+        cycles = g.passes * g.stream_cycles * batch
+        t_compute = cycles * acc.cycle_time_s / acc.n_tpc
+        t_supply = cycles * g.supply_points / supply_points_per_ns * 1e-9
+        time_s += g_rounds * overhead + max(t_compute, t_supply)
+        rounds += g_rounds
+        samples += cycles * g.supply_points
+    post = (REDUCTION_LATENCY * math.ceil(math.log2(max(mapping.n_chunks, 2)))
+            + ACTIVATION_LATENCY + POOL_LATENCY)
+    time_s += post
+    return LayerReport(mapping=mapping, rounds=rounds, time_s=time_s,
+                       div_samples=samples, utilization=mapping.utilization)
+
+
+def simulate(acc: AcceleratorConfig, layers: Sequence[LayerSpec],
+             batch: int = 1,
+             supply_points_per_ns: float = SUPPLY_POINTS_PER_NS,
+             ) -> InferenceReport:
+    reports = [simulate_layer(acc, l, batch, supply_points_per_ns)
+               for l in layers]
+    return InferenceReport(accelerator=acc, layers=reports, batch=batch)
+
+
+def gmean(values: Iterable[float]) -> float:
+    vals = list(values)
+    return math.exp(sum(math.log(v) for v in vals) / len(vals))
+
+
+def evaluate_suite(
+    cnn_tables: Dict[str, Sequence[LayerSpec]],
+    accelerators: Sequence[str] = tpc_mod.ACCELERATORS,
+    bit_rates: Sequence[float] = tpc_mod.PAPER_BIT_RATES,
+    batch: int = 1,
+) -> Dict[str, Dict[float, Dict[str, InferenceReport]]]:
+    """Figs. 10-11 sweep: accelerator x bit-rate x CNN -> report."""
+    out: Dict[str, Dict[float, Dict[str, InferenceReport]]] = {}
+    for name in accelerators:
+        out[name] = {}
+        for br in bit_rates:
+            acc = build_accelerator(name, br)
+            out[name][br] = {cnn: simulate(acc, layers, batch)
+                             for cnn, layers in cnn_tables.items()}
+    return out
+
+
+def normalized_fps(results, reference=("RMAM", 1.0)) -> Dict:
+    """Normalize FPS to the reference accelerator's per-CNN FPS (Fig. 10)."""
+    ref = results[reference[0]][reference[1]]
+    return {
+        name: {br: {cnn: rep.fps / ref[cnn].fps
+                    for cnn, rep in by_cnn.items()}
+               for br, by_cnn in by_br.items()}
+        for name, by_br in results.items()
+    }
+
+
+def normalized_fps_per_watt(results, reference=("RMAM", 1.0)) -> Dict:
+    ref = results[reference[0]][reference[1]]
+    return {
+        name: {br: {cnn: rep.fps_per_watt / ref[cnn].fps_per_watt
+                    for cnn, rep in by_cnn.items()}
+               for br, by_cnn in by_br.items()}
+        for name, by_br in results.items()
+    }

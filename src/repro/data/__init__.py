@@ -1,0 +1,1 @@
+from .pipeline import SyntheticTokenPipeline, make_global_batch  # noqa: F401

@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def vdpe_gemm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
+    """Mode-1 oracle: exact int32 GEMM."""
+    return jax.lax.dot_general(
+        lhs.astype(jnp.int32), rhs.astype(jnp.int32),
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+
+def vdpe_pack_gemm_ref(lhs: jax.Array, rhs_packed: jax.Array,
+                       y: int) -> jax.Array:
+    """Mode-2 oracle: replicate the DIV tile then dense int32 GEMM."""
+    a_rep = jnp.concatenate([lhs] * y, axis=1)
+    return vdpe_gemm_ref(a_rep, rhs_packed)
+
+
+def gemm_bf16_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
+    return jax.lax.dot_general(
+        lhs, rhs, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+def pack_block_diagonal_ref(dkvs: jax.Array, x: int, y: int) -> jax.Array:
+    """Oracle for ops.pack_mode2_weights: (F, s<=x) -> (y*x, F) packed.
+
+    Column f carries kernel f's weights in segment (f mod y).
+    """
+    f, s = dkvs.shape
+    assert s <= x
+    out = jnp.zeros((y * x, f), dkvs.dtype)
+    for i in range(f):
+        seg = i % y
+        out = out.at[seg * x:seg * x + s, i].set(dkvs[i])
+    return out
+
+
+def grouped_matmul_ref(tokens: jax.Array, weights: jax.Array,
+                       group_ids: jax.Array) -> jax.Array:
+    """Oracle for the MoE grouped GEMM: per-token expert matmul.
+
+    tokens: (T, D); weights: (E, D, H); group_ids: (T,) in [0, E).
+    Returns (T, H) with out[t] = tokens[t] @ weights[group_ids[t]].
+    """
+    gathered = weights[group_ids]            # (T, D, H)
+    return jnp.einsum("td,tdh->th", tokens, gathered)
+
+
+def flash_attention_ref(q, w_k, v, causal: bool = True):
+    """Oracle for the fused attention kernel: naive softmax attention.
+
+    q: (BH, S, hd); w_k/v: (BH, T, hd) -> (BH, S, hd).
+    """
+    import math
+    s = jnp.einsum("bsh,bth->bst", q.astype(jnp.float32),
+                   w_k.astype(jnp.float32)) / math.sqrt(q.shape[-1])
+    if causal:
+        sq, t = q.shape[1], w_k.shape[1]
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(t)[None, :]
+        s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bst,bth->bsh", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,161 @@
+"""Pallas TPU kernels for Mode-1 / Mode-2 VDPE GEMMs.
+
+Hardware adaptation (DESIGN.md §2): the photonic VDPE's fixed N optical
+lanes map onto the MXU's fixed 128-wide contraction lanes.  A small
+contraction (S << 128) wastes MXU lanes exactly the way S < N strands MRRs
+in the paper; Mode-2 re-aggregation maps onto *block-diagonal packing*: y
+small DKVs occupy disjoint row-segments of one 128-deep K block, and one
+MXU pass produces y independent dot products.
+
+Two kernels:
+
+* ``vdpe_gemm_kernel`` — Mode 1: K-blocked dense int8 x int8 -> int32 GEMM
+  (the S >= N slice path).  lhs (B, K), rhs (K, O), out (B, O); the K grid
+  axis is innermost and accumulates into the VMEM out block.
+
+* ``vdpe_pack_gemm_kernel`` — Mode 2: the DIV tile is loaded ONCE at its
+  natural width x and re-aggregated (replicated) across the y lane-segments
+  *inside VMEM*, mirroring the comb switches re-aggregating wavelengths
+  instead of regenerating signals.  HBM traffic for the input drops y-fold
+  versus materializing the replicated operand.
+
+Both kernels use explicit BlockSpec VMEM tiling with MXU-aligned block
+shapes (multiples of (32, 128) for int8 operands, (8, 128) for f32).
+Validated against kernels/ref.py in interpret mode (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+# MXU-aligned default tile sizes (int8 operands tile as (32, 128) in VMEM).
+BLOCK_B = 128
+BLOCK_O = 128
+BLOCK_K = 128
+
+
+def _gemm_kernel(lhs_ref, rhs_ref, out_ref, *, n_k: int):
+    """Mode-1 kernel body: K-accumulating int8 GEMM tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a = lhs_ref[...]
+    b = rhs_ref[...]
+    out_ref[...] += jax.lax.dot_general(
+        a, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o", "block_k",
+                                             "interpret"))
+def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
+              block_b: int = BLOCK_B, block_o: int = BLOCK_O,
+              block_k: int = BLOCK_K, interpret: bool = True) -> jax.Array:
+    """Mode-1 VDPE GEMM: (B, K) int8 x (K, O) int8 -> (B, O) int32.
+
+    B, K, O must be multiples of the block sizes (ops.py pads).
+    """
+    b, k = lhs.shape
+    k2, o = rhs.shape
+    assert k == k2 and b % block_b == 0 and o % block_o == 0 and k % block_k == 0
+    n_k = k // block_k
+    grid = (b // block_b, o // block_o, n_k)
+    return pl.pallas_call(
+        functools.partial(_gemm_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+        interpret=interpret,
+    )(lhs, rhs)
+
+
+def _pack_gemm_kernel(lhs_ref, rhs_ref, out_ref, *, y: int):
+    """Mode-2 kernel body: re-aggregate the DIV tile across y lane-segments.
+
+    lhs block: (block_b, x) — the small DIV tile, loaded once.
+    rhs block: (y * x, block_o) — block-diagonal packed DKVs.
+    out block: (block_b, block_o).
+    """
+    a = lhs_ref[...]                       # (bb, x)
+    # comb-switch re-aggregation: replicate the x-wide tile onto y segments
+    a_rep = jnp.concatenate([a] * y, axis=1)   # (bb, y*x) in VMEM/VREGs
+    b = rhs_ref[...]
+    out_ref[...] = jax.lax.dot_general(
+        a_rep, b, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("y", "block_b", "block_o",
+                                             "interpret"))
+def vdpe_pack_gemm(lhs: jax.Array, rhs_packed: jax.Array, y: int,
+                   block_b: int = BLOCK_B, block_o: int = BLOCK_O,
+                   interpret: bool = True) -> jax.Array:
+    """Mode-2 VDPE GEMM: (B, x) int8 x (y*x, O) packed int8 -> (B, O) int32.
+
+    ``rhs_packed`` holds y independent DKV segments along its K dimension
+    (column f non-zero only inside its segment); the kernel replicates the
+    (B, x) DIV tile y times inside VMEM, so HBM reads of the input are y
+    times smaller than the equivalent dense GEMM.
+    """
+    b, x = lhs.shape
+    k, o = rhs_packed.shape
+    assert k == y * x, (k, y, x)
+    assert b % block_b == 0 and o % block_o == 0
+    grid = (b // block_b, o // block_o)
+    return pl.pallas_call(
+        functools.partial(_pack_gemm_kernel, y=y),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, x), lambda i, j: (i, 0)),
+            pl.BlockSpec((y * x, block_o), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+        interpret=interpret,
+    )(lhs, rhs_packed)
+
+
+def _gemm_bf16_kernel(lhs_ref, rhs_ref, out_ref):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += jax.lax.dot_general(
+        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o", "block_k",
+                                             "interpret"))
+def gemm_bf16(lhs: jax.Array, rhs: jax.Array,
+              block_b: int = BLOCK_B, block_o: int = BLOCK_O,
+              block_k: int = BLOCK_K, interpret: bool = True) -> jax.Array:
+    """bf16 GEMM with f32 accumulation — the framework's dense tile path."""
+    b, k = lhs.shape
+    _, o = rhs.shape
+    assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
+    grid = (b // block_b, o // block_o, k // block_k)
+    return pl.pallas_call(
+        _gemm_bf16_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        interpret=interpret,
+    )(lhs, rhs)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count at first init).  For each cell this script:
+
+    1. builds the production mesh (16x16, or 2x16x16 with --multi-pod),
+    2. assembles ShapeDtypeStruct inputs with NamedShardings (specs.py),
+    3. jit-lowers the cell's step function (train_step / prefill / decode),
+    4. compiles, and records memory_analysis() + cost_analysis() + the
+       HLO collective-byte census into experiments/dryrun/<cell>.json.
+
+Any sharding mismatch, unsupported collective, or compile failure is a
+bug in the framework — the sweep (--all) is the acceptance gate.
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Any, Dict, Optional  # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from ..configs import get_config, load_all  # noqa: E402
+from ..configs.shapes import SHAPES, applicable_shapes  # noqa: E402
+from ..models import build_model  # noqa: E402
+from ..optim.optimizer import AdamWConfig, make_schedule  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .roofline import collective_bytes_from_hlo, roofline_terms  # noqa: E402
+from .specs import batch_specs, decode_specs, make_shardings, \
+    model_state_specs  # noqa: E402
+from .train import make_train_step  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+#: Hillclimb variants (EXPERIMENTS.md §Perf): name -> (cfg_overrides,
+#: sharding_overrides).  Baseline = ({}, {}).
+VARIANTS = {
+    "baseline": ({}, {}),
+    # inference weights TP-only: no per-token FSDP weight gather
+    "tp_infer": ({}, {"fsdp": False}),
+    # bf16 attention scores: halves score read/write traffic
+    "bf16_scores": ({"attn_scores_dtype": "bfloat16"}, {}),
+    # bf16 SSD intra-chunk tensors
+    "ssm_bf16": ({"ssm_intra_dtype": "bfloat16"}, {}),
+    # both activations levers
+    "bf16_all": ({"attn_scores_dtype": "bfloat16",
+                  "ssm_intra_dtype": "bfloat16"}, {}),
+    # expert-parallel over the pod axis (multi-pod MoE)
+    "ep_pod": ({}, {"ep_pod": True}),
+    # context-sharded KV cache (kills the per-step cache re-layout)
+    "kv_ctx": ({}, {"kv_ctx": True}),
+    # full serving config: TP-only weights + context-sharded cache
+    "serve_opt": ({}, {"fsdp": False, "kv_ctx": True}),
+    # pad q-heads to the model-axis multiple (zero-output dummy heads):
+    # removes the score-tensor psum for heads % 16 != 0 archs at ~14%
+    # extra attention compute (resolved per-arch in lower_cell)
+    "pad_heads": ({}, {}),
+}
+
+
+def _pad_heads_cfg(cfg, model_axis: int = 16):
+    nq = (cfg.n_heads + model_axis - 1) // model_axis * model_axis
+    if nq == cfg.n_heads:
+        return cfg
+    if nq % cfg.n_kv_heads:
+        raise ValueError(
+            f"pad_heads: padded n_heads {nq} not a multiple of "
+            f"n_kv_heads {cfg.n_kv_heads} for {cfg.arch_id}")
+    return dataclasses.replace(cfg, n_heads=nq,
+                               head_dim=cfg.resolved_head_dim)
+
+
+def _lower_step(cfg, shape, mesh, sh_overrides=None):
+    """Lower + compile the cell's step function for ``cfg``."""
+    sh = make_shardings(mesh, cfg, shape.global_batch)
+    if sh_overrides:
+        sh = dataclasses.replace(sh, **sh_overrides)
+    model = build_model(cfg, sh=sh)
+    with mesh:
+        if shape.kind == "train":
+            params, opt, _ = model_state_specs(cfg, sh, with_opt=True)
+            batch = batch_specs(cfg, shape, sh)
+            opt_cfg = AdamWConfig(quantized=cfg.opt_state_dtype == "int8")
+            schedule = make_schedule("wsd" if cfg.wsd_schedule else "cosine",
+                                     3e-4, 100, 10000)
+            step = make_train_step(model, opt_cfg, schedule)
+            fn = jax.jit(step, donate_argnums=(0, 1))
+            lowered = fn.lower(params, opt, batch)
+        elif shape.kind == "prefill":
+            params, _, _ = model_state_specs(cfg, sh, with_opt=False)
+            batch = batch_specs(cfg, shape, sh)
+            fn = jax.jit(model.prefill_fn)
+            lowered = fn.lower(params, batch)
+        else:  # decode
+            params, _, _ = model_state_specs(cfg, sh, with_opt=False)
+            batch, cache = decode_specs(cfg, shape, sh)
+            fn = jax.jit(model.decode_fn, donate_argnums=(2,))
+            lowered = fn.lower(params, batch, cache, jnp.int32(0))
+        return lowered, lowered.compile()
+
+
+def _cost_of(compiled) -> Dict[str, float]:
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    coll = collective_bytes_from_hlo(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(coll["total_bytes"]),
+            "coll": coll}
+
+
+def _audit_cfg(cfg, n_layers: int):
+    return dataclasses.replace(
+        cfg, n_layers=n_layers,
+        n_encoder_layers=(n_layers if cfg.n_encoder_layers else 0),
+        scan_unroll=True)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               variant: str = "baseline"):
+    """Lower + compile one cell; returns the result record.
+
+    XLA's cost analysis counts a while-loop body ONCE regardless of trip
+    count, so the scanned layer stack's cost is invisible in the full
+    module.  The audit pass lowers L=1 and L=2 variants with the scan
+    fully unrolled; the L2-L1 delta is the exact per-layer cost and
+
+        corrected(m) = m(L1) + delta(m) * (L_full - 1)
+
+    recovers totals for FLOPs, bytes and collective bytes.  The full-depth
+    module is still what's compiled and memory-analyzed (that is the
+    artifact that proves the production program builds and fits).
+    """
+    cfg = get_config(arch)
+    cfg_over, sh_over = VARIANTS[variant]
+    if cfg_over:
+        cfg = dataclasses.replace(cfg, **cfg_over)
+    if variant == "pad_heads":
+        cfg = _pad_heads_cfg(cfg)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.monotonic()
+    lowered, compiled = _lower_step(cfg, shape, mesh, sh_over)
+    t_compile = time.monotonic() - t0
+
+    mem = compiled.memory_analysis()
+    raw = _cost_of(compiled)
+    # ---- unrolled audit at L=1 and L=2 ----
+    a1 = _cost_of(_lower_step(_audit_cfg(cfg, 1), shape, mesh, sh_over)[1])
+    a2 = _cost_of(_lower_step(_audit_cfg(cfg, 2), shape, mesh, sh_over)[1])
+    L = cfg.n_layers
+    corr = {k: a1[k] + (a2[k] - a1[k]) * (L - 1)
+            for k in ("flops", "bytes", "coll_bytes")}
+
+    n_chips = 512 if multi_pod else 256
+    record: Dict[str, Any] = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "variant": variant,
+        "n_chips": n_chips,
+        "kind": shape.kind,
+        "compile_s": round(t_compile, 2),
+        "flops": corr["flops"],
+        "bytes_accessed": corr["bytes"],
+        "collectives": {**a2["coll"], "total_bytes": corr["coll_bytes"]},
+        "raw_module": {"flops": raw["flops"], "bytes": raw["bytes"],
+                       "coll_bytes": raw["coll_bytes"]},
+        "per_layer": {k: a2[k] - a1[k]
+                      for k in ("flops", "bytes", "coll_bytes")},
+        "memory": {
+            "argument_bytes": int(getattr(mem, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(mem, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(mem, "temp_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(mem, "generated_code_size_in_bytes", 0)),
+        },
+    }
+    record["roofline"] = roofline_terms(record, cfg, shape)
+    return record
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             verbose: bool = True,
+             variant: str = "baseline") -> Optional[Dict[str, Any]]:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    tag = f"{arch}_{shape_name}_{'2x16x16' if multi_pod else '16x16'}"
+    if variant != "baseline":
+        tag += f"_{variant}"
+    try:
+        rec = lower_cell(arch, shape_name, multi_pod, variant)
+    except Exception as e:  # noqa: BLE001 — sweep must report, not die
+        rec = {"arch": arch, "shape": shape_name, "variant": variant,
+               "mesh": "2x16x16" if multi_pod else "16x16",
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-2000:]}
+        if verbose:
+            print(f"[FAIL] {tag}: {rec['error'][:200]}")
+    else:
+        if verbose:
+            r = rec["roofline"]
+            per_dev = (rec["memory"]["argument_bytes"]
+                       + rec["memory"]["temp_bytes"]) / rec["n_chips"]
+            print(f"[ ok ] {tag}: compile={rec['compile_s']:.0f}s "
+                  f"flops={rec['flops']:.3g} "
+                  f"compute={r['compute_s']:.2e}s "
+                  f"memory={r['memory_s']:.2e}s "
+                  f"collective={r['collective_s']:.2e}s "
+                  f"bound={r['bound']}")
+    with open(os.path.join(OUT_DIR, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main() -> None:
+    load_all()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--variant", default="baseline", choices=VARIANTS)
+    args = ap.parse_args()
+
+    meshes = [False, True] if (args.both_meshes or args.all) \
+        else [args.multi_pod]
+    if args.all:
+        archs = list(load_all().keys())
+    else:
+        archs = [args.arch]
+    failures = 0
+    for arch in archs:
+        cfg = get_config(arch)
+        shapes = ([SHAPES[args.shape]] if args.shape
+                  else applicable_shapes(cfg))
+        for shape in shapes:
+            for mp in meshes:
+                rec = run_cell(arch, shape.name, mp, variant=args.variant)
+                failures += 1 if "error" in rec else 0
+    print(f"dry-run complete: failures={failures}")
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Aggregate dry-run JSON artifacts into EXPERIMENTS.md tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                          "experiments", "dryrun")
+HBM_PER_CHIP = 16 * 2 ** 30          # v5e
+
+
+def load_records(pattern: str = "*.json") -> List[Dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b: float) -> str:
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs: List[Dict]) -> str:
+    rows = ["| arch | shape | mesh | compile | args/dev | temp/dev | "
+            "collective ops |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "error" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                        f"FAIL | - | - | {r['error'][:60]} |")
+            continue
+        m = r["memory"]
+        args_dev = m["argument_bytes"]
+        temp_dev = m["temp_bytes"]
+        cc = r["collectives"]
+        kinds = ", ".join(f"{k}:{v['count']}" for k, v in cc.items()
+                          if isinstance(v, dict) and v["count"])
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']:.0f}s | {fmt_bytes(args_dev)} | "
+            f"{fmt_bytes(temp_dev)} | {kinds or 'none'} |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: List[Dict], mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | compute (s) | memory (s) | collective (s) | "
+            "bound | useful/HLO FLOPs | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if "error" in r or r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {rf['compute_s']:.3e} | "
+            f"{rf['memory_s']:.3e} | {rf['collective_s']:.3e} | "
+            f"{rf['bound']} | {rf['useful_flops_ratio']:.3f} | "
+            f"{rf['roofline_fraction']:.3f} |")
+    return "\n".join(rows)
+
+
+def summarize(recs: List[Dict]) -> str:
+    ok = [r for r in recs if "error" not in r]
+    fail = [r for r in recs if "error" in r]
+    per_mesh: Dict[str, int] = {}
+    for r in ok:
+        per_mesh[r["mesh"]] = per_mesh.get(r["mesh"], 0) + 1
+    return (f"{len(ok)} cells compiled, {len(fail)} failed "
+            f"({per_mesh})")
+
+
+if __name__ == "__main__":
+    recs = load_records()
+    print(summarize(recs))
+    print()
+    print(dryrun_table(recs))
+    print()
+    print(roofline_table(recs))

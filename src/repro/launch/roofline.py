@@ -1,0 +1,103 @@
+"""Roofline analysis from compiled dry-run artifacts (TPU v5e targets).
+
+    compute term    = HLO_FLOPs / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes / (chips x 819 GB/s HBM)
+    collective term = collective_bytes / (chips x 50 GB/s/link ICI)
+
+cost_analysis() provides FLOPs and bytes; collective bytes come from a
+census of the compiled HLO text (all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute result sizes).  MODEL_FLOPS uses the
+6·N·D (train) / 2·N·D (forward) convention with N = active params.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BITS = {
+    "pred": 8, "s4": 4, "u4": 4, "s8": 8, "u8": 8, "s16": 16, "u16": 16,
+    "s32": 32, "u32": 32, "s64": 64, "u64": 64, "bf16": 16, "f16": 16,
+    "f32": 32, "f64": 64, "c64": 64, "c128": 128, "f8e4m3fn": 8,
+    "f8e5m2": 8,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s("
+    + "|".join(_COLLECTIVES) + r")\(")
+
+
+def _bytes_of(dtype: str, dims: str) -> int:
+    bits = _DTYPE_BITS.get(dtype, 32)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * bits // 8
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, Any]:
+    """Census of collective ops: count + result bytes per op kind."""
+    out: Dict[str, Any] = {k: {"count": 0, "bytes": 0} for k in _COLLECTIVES}
+    for m in _SHAPE_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        out[kind]["count"] += 1
+        out[kind]["bytes"] += _bytes_of(dtype, dims)
+    # tuple-result collectives (grouped all-reduce): coarse fallback count
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D (train) / 2·N·D (forward) with N = active params."""
+    n = cfg.n_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch          # decode: one token/seq
+
+
+def roofline_terms(record: Dict[str, Any], cfg: ModelConfig,
+                   shape: ShapeConfig) -> Dict[str, Any]:
+    """Three roofline terms in seconds.
+
+    The compiled module is the per-device SPMD program, so cost_analysis
+    FLOPs/bytes and the HLO collective census are already per-chip — the
+    denominators are single-chip rates (equivalent to global values over
+    chips x rate).  MODEL_FLOPS (6·N·D convention, global) is divided by
+    the chip count for the useful-compute ratio.
+    """
+    chips = record["n_chips"]
+    compute_s = record["flops"] / PEAK_FLOPS
+    memory_s = record["bytes_accessed"] / HBM_BW
+    coll_b = record["collectives"]["total_bytes"]
+    collective_s = coll_b / LINK_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    bound = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / chips
+    return {
+        **terms,
+        "bound": bound.replace("_s", ""),
+        "model_flops_global": mf,
+        "model_flops_per_device": mf_dev,
+        "useful_flops_ratio": (mf_dev / record["flops"]
+                               if record["flops"] else 0.0),
+        "roofline_fraction": compute_s / max(max(terms.values()), 1e-30),
+    }

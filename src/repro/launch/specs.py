@@ -1,0 +1,102 @@
+"""ShapeDtypeStruct input specs for every (arch x shape) dry-run cell.
+
+Shannon-style: weak-type-correct, shardable, zero allocation.  Every model
+input (tokens, labels, frontend-stub embeddings, decode caches) gets a
+ShapeDtypeStruct carrying its NamedSharding, so ``jit(...).lower(**specs)``
+fully determines the distributed program.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..configs.shapes import ShapeConfig
+from ..models import build_model
+from ..models.sharding import Shardings, opt_state_specs, param_specs
+from ..optim.optimizer import AdamWConfig, adamw_init
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def make_shardings(mesh: Mesh, cfg: ModelConfig, batch: int) -> Shardings:
+    return Shardings(mesh=mesh, cfg=cfg, batch=batch)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, sh: Shardings,
+                ) -> Dict[str, Any]:
+    """Train/prefill batch ShapeDtypeStructs."""
+    mesh = sh.mesh
+    b, s = shape.global_batch, shape.seq_len
+    tok = NamedSharding(mesh, sh.tokens())
+    emb3 = NamedSharding(mesh, P(sh.batch_spec, None, None))
+    batch = {"tokens": _sds((b, s), jnp.int32, tok),
+             "labels": _sds((b, s), jnp.int32, tok)}
+    if cfg.n_encoder_layers:
+        batch["enc_embeds"] = _sds((b, s, cfg.d_model), jnp.float32, emb3)
+    if cfg.prefix_len and shape.kind != "decode":
+        batch["prefix_embeds"] = _sds((b, cfg.prefix_len, cfg.d_model),
+                                      jnp.float32, emb3)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig, sh: Shardings,
+                 ) -> Tuple[Dict[str, Any], Dict[str, Any]]:
+    """(decode batch, cache) ShapeDtypeStructs for serve_step cells."""
+    mesh = sh.mesh
+    b, ctx = shape.global_batch, shape.seq_len
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    tok = NamedSharding(mesh, sh.tokens())
+    batch = {"tokens": _sds((b, 1), jnp.int32, tok)}
+    cache: Dict[str, Any] = {}
+    kind_has_attn = cfg.family != "ssm"
+    if kind_has_attn:
+        kv_sh = NamedSharding(mesh, sh.kv_cache(nkv, hd))
+        shape_kv = (cfg.n_layers, b, ctx, nkv, hd)
+        cache["k"] = _sds(shape_kv, cfg.dtype, kv_sh)
+        cache["v"] = _sds(shape_kv, cfg.dtype, kv_sh)
+    if cfg.family in ("ssm", "hybrid"):
+        from ..models.ssm import ssm_dims
+        dm = ssm_dims(cfg)
+        st_sh = NamedSharding(mesh, sh.ssm_state(dm.n_heads))
+        cache["ssm"] = _sds((cfg.n_layers, b, dm.n_heads, dm.head_dim,
+                             dm.d_state), jnp.float32, st_sh)
+        conv_sh = NamedSharding(
+            mesh, P(None, sh.batch_spec, None,
+                    "model" if dm.conv_dim % sh.model_size == 0 else None))
+        cache["conv"] = _sds((cfg.n_layers, b, dm.conv_width - 1,
+                              dm.conv_dim), jnp.float32, conv_sh)
+    if cfg.n_encoder_layers:
+        kv_sh = NamedSharding(mesh, sh.kv_cache(nkv, hd))
+        batch["cross_k"] = _sds((cfg.n_layers, b, ctx, nkv, hd), cfg.dtype,
+                                kv_sh)
+        batch["cross_v"] = _sds((cfg.n_layers, b, ctx, nkv, hd), cfg.dtype,
+                                kv_sh)
+    return batch, cache
+
+
+def model_state_specs(cfg: ModelConfig, sh: Shardings,
+                      with_opt: bool = True):
+    """(params, opt_state) ShapeDtypeStructs with shardings attached."""
+    model = build_model(cfg, sh)
+    p_shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_spec = param_specs(p_shapes, sh)
+
+    def attach(sd, spec):
+        return _sds(sd.shape, sd.dtype, NamedSharding(sh.mesh, spec))
+
+    params = jax.tree.map(attach, p_shapes, p_spec)
+    if not with_opt:
+        return params, None, p_spec
+    quantized = cfg.opt_state_dtype == "int8"
+    o_shapes = jax.eval_shape(
+        lambda p: adamw_init(p, quantized=quantized), p_shapes)
+    o_spec = opt_state_specs(o_shapes, p_spec, sh)
+    opt = jax.tree.map(attach, o_shapes, o_spec,
+                       is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return params, opt, p_spec

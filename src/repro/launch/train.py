@@ -1,0 +1,125 @@
+"""Training driver: sharded train step + checkpoint/restart + elasticity.
+
+``make_train_step`` builds the jitted step used both by the real driver
+(``main`` below, runnable on CPU with reduced configs) and by the dry-run
+(lowered against ShapeDtypeStructs on the production mesh).
+"""
+from __future__ import annotations
+
+import argparse
+import functools
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..checkpoint import CheckpointManager
+from ..configs import get_config, load_all
+from ..data.pipeline import SyntheticTokenPipeline
+from ..models import build_model
+from ..models.sharding import Shardings
+from ..optim.compression import compress_gradients, compression_init
+from ..optim.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                               clip_by_global_norm, make_schedule)
+from ..runtime.fault_tolerance import StragglerDetector
+from .mesh import make_host_mesh
+
+
+def make_train_step(model, opt_cfg: AdamWConfig,
+                    schedule: Callable[[jax.Array], jax.Array],
+                    use_compression: bool = False):
+    """Returns step(params, opt_state, [comp_state,] batch) -> updated."""
+
+    def train_step(params, opt_state, batch, comp_state=None):
+        loss, grads = jax.value_and_grad(model.loss_fn)(params, batch)
+        grads, gnorm = clip_by_global_norm(grads, 1.0)
+        new_comp = comp_state
+        if use_compression and comp_state is not None:
+            grads, new_comp = compress_gradients(grads, comp_state)
+        lr = schedule(opt_state.step.astype(jnp.float32))
+        new_params, new_opt = adamw_update(opt_cfg, grads, opt_state,
+                                           params, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr}
+        return new_params, new_opt, new_comp, metrics
+
+    return train_step
+
+
+def train_loop(arch: str, steps: int = 50, batch: int = 8, seq: int = 128,
+               ckpt_dir: Optional[str] = None, save_every: int = 20,
+               use_compression: bool = False, reduced: bool = True,
+               log_every: int = 10) -> Dict[str, float]:
+    """End-to-end training on the local device(s); returns final metrics."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    mesh = make_host_mesh()
+    sh = Shardings(mesh=mesh, cfg=cfg, batch=batch)
+    model = build_model(cfg, sh=None)        # single-device: no constraints
+    params = model.init(jax.random.PRNGKey(0))
+    quantized = cfg.opt_state_dtype == "int8"
+    opt_state = adamw_init(params, quantized=quantized)
+    comp_state = compression_init(params) if use_compression else None
+    opt_cfg = AdamWConfig(quantized=quantized)
+    schedule = make_schedule("wsd" if cfg.wsd_schedule else "cosine",
+                             peak_lr=3e-4, warmup=max(steps // 10, 1),
+                             total=steps)
+    step_fn = jax.jit(make_train_step(model, opt_cfg, schedule,
+                                      use_compression))
+
+    from jax.sharding import PartitionSpec as P
+    pipe = SyntheticTokenPipeline(cfg=cfg, mesh=mesh, batch_spec=P(None),
+                                  global_batch=batch, seq_len=seq)
+    mgr = CheckpointManager(ckpt_dir, save_every=save_every) \
+        if ckpt_dir else None
+    start = 0
+    if mgr is not None:
+        resumed, state = mgr.resume({"params": params, "opt": opt_state})
+        if resumed is not None:
+            start = resumed
+            params, opt_state = state["params"], state["opt"]
+    straggle = StragglerDetector()
+    history = []
+    for step in range(start, steps):
+        t0 = time.monotonic()
+        b = pipe.batch_at(step)
+        params, opt_state, comp_state, metrics = step_fn(
+            params, opt_state, b, comp_state)
+        loss = float(metrics["loss"])
+        straggle.record(jax.process_index(), time.monotonic() - t0)
+        history.append(loss)
+        if mgr is not None:
+            mgr.maybe_save(step + 1, {"params": params, "opt": opt_state})
+        if step % log_every == 0:
+            print(f"step {step:5d}  loss {loss:8.4f}  "
+                  f"lr {float(metrics['lr']):.2e}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+    if mgr is not None:
+        mgr.wait()
+    return {"first_loss": history[0], "final_loss": history[-1],
+            "steps": len(history)}
+
+
+def main() -> None:
+    load_all()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compression", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="full config (not reduced) — needs real hardware")
+    args = ap.parse_args()
+    out = train_loop(args.arch, steps=args.steps, batch=args.batch,
+                     seq=args.seq, ckpt_dir=args.ckpt_dir,
+                     use_compression=args.compression,
+                     reduced=not args.full)
+    print(f"loss {out['first_loss']:.4f} -> {out['final_loss']:.4f} "
+          f"over {out['steps']} steps")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Unified LM substrate for the 10 assigned architectures."""
+from .transformer import Model, build_model  # noqa: F401
+from .sharding import Shardings  # noqa: F401

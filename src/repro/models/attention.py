@@ -1,0 +1,169 @@
+"""GQA attention: full / sliding-window / local-global, softcap, KV cache.
+
+One implementation serves training (causal prefix), prefill, and
+single-token decode against a cache.  Masks are built from absolute
+positions, so the same code path handles SWA ring semantics and gemma2's
+alternating local/global layers (the per-layer window is a scanned input).
+
+Sharding: when a ``Shardings`` object is provided, the (B, n_kv, groups,
+S, T) score tensor is constrained to shard its query-sequence dim over
+"model" (softmax stays local); for single-token decode the key dim shards
+instead when the context length divides.  This bounds the per-chip score
+footprint for the 4k-train cells (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from .layers import apply_rope, softcap
+from .sharding import Shardings
+
+
+def attn_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    nq, nkv = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": (jax.random.normal(ks[0], (d, nq * hd)) * s).astype(cfg.dtype),
+        "wk": (jax.random.normal(ks[1], (d, nkv * hd)) * s).astype(cfg.dtype),
+        "wv": (jax.random.normal(ks[2], (d, nkv * hd)) * s).astype(cfg.dtype),
+        "wo": (jax.random.normal(ks[3], (nq * hd, d))
+               * (1.0 / math.sqrt(nq * hd))).astype(cfg.dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((nq * hd,), cfg.dtype)
+        p["bk"] = jnp.zeros((nkv * hd,), cfg.dtype)
+        p["bv"] = jnp.zeros((nkv * hd,), cfg.dtype)
+    return p
+
+
+# NOTE (§Perf iteration log): two attention re-sharding strategies were
+# tried for heads % model != 0 archs and REFUTED by measurement:
+#   (a) constraining the score tensor directly -> involuntary full SPMD
+#       rematerialization (mixtral collective term 5.2x worse);
+#   (b) sequence-sharding q with replicated k/v -> backward re-shards blew
+#       the llava collective term up 109s -> 297s.
+# The adopted fix is head PADDING (pad_heads variant): round n_heads up to
+# the model-axis multiple with zero-output dummy heads, giving conflict-
+# free Megatron head sharding at ~14% extra attention compute.
+
+
+def _constrain_decode_scores(scores: jax.Array,
+                             sh: Optional[Shardings]) -> jax.Array:
+    """Single-token decode: shard the key/context dim of the scores."""
+    if sh is None or scores.shape[-1] % sh.model_size:
+        return scores
+    spec = P(sh.batch_spec, None, None, None, "model")
+    return jax.lax.with_sharding_constraint(
+        scores, NamedSharding(sh.mesh, spec))
+
+
+def attention(params: dict, x: jax.Array, positions: jax.Array,
+              cfg: ModelConfig, *,
+              kv_cache: Optional[Tuple[jax.Array, jax.Array]] = None,
+              cache_index: Optional[jax.Array] = None,
+              window: Optional[jax.Array] = None,
+              mask: Optional[jax.Array] = None,
+              bidirectional: bool = False,
+              sh: Optional[Shardings] = None,
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """x: (B, S, D), positions: (B, S) -> ((B, S, D), updated kv cache).
+
+    Training/prefill: ``kv_cache`` None — keys are this call's tokens.
+    Decode: ``kv_cache = (k, v)`` each (B, S_ctx, n_kv, hd); this call's
+    k/v are written at ``cache_index`` and attention runs over the whole
+    cache with position masking (stale slots have positions > q, masked).
+    """
+    b, s, d = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, nq, hd)
+    k = k.reshape(b, s, nkv, hd)
+    v = v.reshape(b, s, nkv, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice_in_dim(
+            ck, k.astype(ck.dtype), cache_index, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(
+            cv, v.astype(cv.dtype), cache_index, axis=1)
+        k_use, v_use = ck, cv
+        k_pos = jnp.broadcast_to(
+            jnp.arange(ck.shape[1], dtype=positions.dtype)[None, :],
+            (b, ck.shape[1]))
+        new_cache = (ck, cv)
+    else:
+        k_use, v_use, k_pos = k, v, positions
+        new_cache = None
+
+    groups = nq // nkv
+    qg = q.reshape(b, s, nkv, groups, hd)
+    sdt = (jnp.bfloat16 if cfg.attn_scores_dtype == "bfloat16"
+           else jnp.float32)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg.astype(sdt),
+                        k_use.astype(sdt),
+                        preferred_element_type=sdt) / math.sqrt(hd)
+    scores = softcap(scores, cfg.attn_logit_softcap)
+    if kv_cache is not None:
+        scores = _constrain_decode_scores(scores, sh)
+    if mask is None:
+        # fallback: per-call mask (precomputing it once outside the layer
+        # scan saves ~2 (B,S,T) int32 broadcasts per layer — see §Perf)
+        if bidirectional:
+            mask = jnp.ones((b, s, k_pos.shape[1]), bool)   # encoder
+        else:
+            mask = k_pos[:, None, :] <= positions[:, :, None]   # causal
+            if window is not None:
+                mask &= k_pos[:, None, :] > (positions[:, :, None] - window)
+    neg = jnp.asarray(-1e30 if sdt == jnp.float32 else -3e38, sdt)
+    scores = jnp.where(mask[:, None, None, :, :], scores, neg)
+    probs = jax.nn.softmax(scores, axis=-1)      # f32 path keeps exactness;
+    probs = probs.astype(sdt)                    # bf16 path trades 8 mantissa
+    # contract in score layout, then reorder the (100x smaller) output —
+    # asking the einsum for 'bsngh' directly makes XLA transpose the
+    # (B,n,g,S,T) operand instead (§Perf: 609 GiB of layout copies on
+    # llava-train before this change).
+    out = jnp.einsum("bngst,btnh->bngsh", probs, v_use.astype(sdt),
+                     preferred_element_type=jnp.float32)
+    out = jnp.moveaxis(out, 3, 1)                # (b, s, n, g, h)
+    out = out.reshape(b, s, nq * hd).astype(x.dtype)
+    return out @ params["wo"], new_cache
+
+
+def cross_attention(params: dict, x: jax.Array,
+                    enc_kv: Tuple[jax.Array, jax.Array],
+                    cfg: ModelConfig) -> jax.Array:
+    """Decoder cross-attention over pre-projected encoder keys/values."""
+    b, s, _ = x.shape
+    hd, nq, nkv = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ params["wq"]).reshape(b, s, nq, hd)
+    k, v = enc_kv                                   # (B, T, n_kv, hd)
+    groups = nq // nkv
+    qg = q.reshape(b, s, nkv, groups, hd)
+    scores = jnp.einsum("bsngh,btnh->bngst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bngst,btnh->bsngh", probs, v.astype(jnp.float32))
+    return out.reshape(b, s, nq * hd).astype(x.dtype) @ params["wo"]
+
+
+def project_enc_kv(params: dict, enc_out: jax.Array,
+                   cfg: ModelConfig) -> Tuple[jax.Array, jax.Array]:
+    b, t, _ = enc_out.shape
+    hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+    k = (enc_out @ params["wk"]).reshape(b, t, nkv, hd)
+    v = (enc_out @ params["wv"]).reshape(b, t, nkv, hd)
+    return k, v

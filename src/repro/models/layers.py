@@ -1,0 +1,100 @@
+"""Transformer primitives: RMSNorm, RoPE, gated MLP, embeddings, softcap."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], -1)
+    return out.astype(x.dtype)
+
+
+def mlp_apply(params: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+    a = jax.nn.silu if act == "silu" else (
+        lambda v: jax.nn.gelu(v, approximate=True))
+    if gated:
+        return (a(x @ params["w1"]) * (x @ params["w3"])) @ params["w2"]
+    return a(x @ params["w1"]) @ params["w2"]
+
+
+def mlp_init(key: jax.Array, d: int, ff: int, gated: bool,
+             dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = 1.0 / math.sqrt(d)
+    s_out = 1.0 / math.sqrt(ff)
+    p = {
+        "w1": (jax.random.normal(k1, (d, ff)) * s_in).astype(dtype),
+        "w2": (jax.random.normal(k2, (ff, d)) * s_out).astype(dtype),
+    }
+    if gated:
+        p["w3"] = (jax.random.normal(k3, (d, ff)) * s_in).astype(dtype)
+    return p
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) / math.sqrt(d)).astype(dtype)
+
+
+@jax.custom_vjp
+def grad_cast_bf16(x: jax.Array) -> jax.Array:
+    """Identity whose COTANGENT is cast to bf16.
+
+    The f32 loss/logits boundary otherwise propagates f32 cotangents
+    through the entire layer scan (double activation-gradient bytes and
+    f32 collectives — measured 2x collective volume on mixtral-train,
+    EXPERIMENTS.md §Perf)."""
+    return x
+
+
+def _gc_fwd(x):
+    return x, None
+
+
+def _gc_bwd(_, g):
+    return (g.astype(jnp.bfloat16).astype(g.dtype)
+            if g.dtype == jnp.float32 else g,)
+
+
+grad_cast_bf16.defvjp(_gc_fwd, _gc_bwd)
+
+
+def cross_entropy_loss(logits: jax.Array, labels: jax.Array,
+                       vocab: int) -> jax.Array:
+    """Mean next-token loss; labels < 0 are masked (padding)."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    nll = -jnp.take_along_axis(logp, safe[..., None], axis=-1)[..., 0]
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)

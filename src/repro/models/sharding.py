@@ -1,0 +1,254 @@
+"""Partition rules: logical tensor roles -> mesh PartitionSpecs.
+
+Mesh axes (launch/mesh.py): ("data", "model") single-pod or
+("pod", "data", "model") multi-pod.  Strategy (DESIGN.md §5):
+
+* weights:      d_model dim  -> "data"   (FSDP-style; XLA all-gathers
+                                          per-layer inside the scan)
+                d_ff / heads -> "model"  (tensor parallel)
+                vocab        -> "model"
+* activations:  batch        -> ("pod", "data")
+                d_model      -> "model"  (saved scan carries stay sharded;
+                                          blocks gather what they need)
+* KV cache:     batch        -> dp axes when batch >= dp size,
+                else sequence -> "data"  (long-context decode, batch 1)
+* heads:        -> "model" when divisible, else shard head_dim.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class Shardings:
+    mesh: Mesh
+    cfg: ModelConfig
+    batch: int
+    #: FSDP weight sharding (d_model over "data"). Train cells want it for
+    #: optimizer-state capacity; decode cells pay a per-token weight gather
+    #: for it (see EXPERIMENTS.md §Perf) — TP-only inference disables it.
+    fsdp: bool = True
+    #: Expert-parallel over the "pod" axis (multi-pod MoE variant): experts
+    #: shard over pods, batch keeps to "data" so the axes don't collide.
+    ep_pod: bool = False
+    #: Shard the KV-cache CONTEXT dim over "model" instead of kv-heads/hd.
+    #: With n_kv < model-axis size, head_dim sharding forces a per-step
+    #: cache re-layout (~GB/layer); context sharding makes the score einsum
+    #: fully local and reduces the PV psum to (B, H, hd) — see §Perf.
+    kv_ctx: bool = False
+
+    @property
+    def dp_axes(self) -> Tuple[str, ...]:
+        if self.ep_pod:
+            return ("data",) if "data" in self.mesh.axis_names else ()
+        return tuple(a for a in ("pod", "data") if a in self.mesh.axis_names)
+
+    @property
+    def dp_size(self) -> int:
+        size = 1
+        for a in self.dp_axes:
+            size *= self.mesh.shape[a]
+        return size
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape["model"]
+
+    def _div(self, n: int, axis: str = "model") -> bool:
+        return n % self.mesh.shape[axis] == 0
+
+    @property
+    def batch_spec(self):
+        """Batch axis sharding — None when batch < dp size (e.g. long_500k)."""
+        return self.dp_axes if self.batch % max(self.dp_size, 1) == 0 else None
+
+    # ---- data ----
+    def tokens(self) -> P:
+        return P(self.batch_spec, None)
+
+    def activations(self) -> P:
+        d_ok = self._div(self.cfg.d_model)
+        return P(self.batch_spec, None, "model" if d_ok else None)
+
+    def logits(self) -> P:
+        return P(self.batch_spec, None, "model")
+
+    def _fsdp_axis(self):
+        ok = self.fsdp and self._div(self.cfg.d_model, "data")
+        return "data" if ok else None
+
+    # ---- weights ----
+    def w_in(self) -> P:          # (d_model, out): mlp w1/w3, wq/wk/wv
+        return P(self._fsdp_axis(), "model")
+
+    def w_out(self) -> P:         # (in, d_model): mlp w2, wo
+        return P("model", self._fsdp_axis())
+
+    def _expert_axis(self):
+        if (self.ep_pod and "pod" in self.mesh.axis_names
+                and self.cfg.moe
+                and self.cfg.moe.n_experts % self.mesh.shape["pod"] == 0):
+            return "pod"
+        return None
+
+    def w_expert_in(self) -> P:   # (E, d_model, d_ff)
+        return P(self._expert_axis(), self._fsdp_axis(), "model")
+
+    def w_expert_out(self) -> P:  # (E, d_ff, d_model)
+        return P(self._expert_axis(), "model", self._fsdp_axis())
+
+    def embedding(self) -> P:     # (V, d_model)
+        return P("model", self._fsdp_axis())
+
+    def scalar(self) -> P:        # norms, biases, A/D ssm params
+        return P(None)
+
+    # ---- attention internals ----
+    def heads(self, n_heads: int, head_dim: int) -> P:
+        """(B, S, H, hd) activation sharding."""
+        if self._div(n_heads):
+            return P(self.batch_spec, None, "model", None)
+        if self._div(head_dim):
+            return P(self.batch_spec, None, None, "model")
+        return P(self.batch_spec, None, None, None)
+
+    def kv_cache(self, n_kv: int, head_dim: int) -> P:
+        """(L, B, S_ctx, n_kv, hd) cache sharding."""
+        if self.batch_spec is not None:
+            seq = None
+            b = self.batch_spec
+        else:                      # batch 1: shard the context instead
+            seq = "data"
+            b = None
+        if self.kv_ctx and seq is None:
+            return P(None, b, "model", None, None)
+        if self._div(n_kv):
+            return P(None, b, seq, "model", None)
+        if self._div(head_dim):
+            return P(None, b, seq, None, "model")
+        return P(None, b, seq, None, None)
+
+    def ssm_state(self, n_ssm_heads: int) -> P:
+        """(L, B, H_ssm, head_dim, d_state) decode state."""
+        h = "model" if self._div(n_ssm_heads) else None
+        return P(None, self.batch_spec, h, None, None)
+
+    def named(self, spec: P) -> NamedSharding:
+        return NamedSharding(self.mesh, spec)
+
+
+def constrain(x, spec: P):
+    """with_sharding_constraint that is a no-op outside a mesh context."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# parameter / optimizer-state spec trees
+# ---------------------------------------------------------------------------
+
+#: leaf-name -> (axes for the trailing dims); layer stacks get a leading None.
+_IN_NAMES = ("wq", "wk", "wv", "w1", "w3", "in_proj")
+_OUT_NAMES = ("wo", "w2", "out_proj")
+
+
+def _fit(shape, axes, mesh) -> P:
+    """Drop sharding on any dim the mesh axis does not divide."""
+    spec = []
+    for dim, ax in zip(shape, axes):
+        if ax is None:
+            spec.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        spec.append(ax if dim % size == 0 else None)
+    return P(*spec)
+
+
+def param_specs(shapes_tree, sh: "Shardings"):
+    """PartitionSpec tree mirroring an eval_shape'd parameter tree.
+
+    Consults ``sh.fsdp`` (weight d_model over "data") and ``sh.ep_pod``
+    (MoE expert axis over "pod") so sharding variants flow through to the
+    argument specs.
+    """
+    mesh = sh.mesh
+    fsdp = sh._fsdp_axis()
+    e_ax = sh._expert_axis()
+
+    def rule(path, leaf):
+        names = [str(getattr(p, "key", getattr(p, "name", p)))
+                 for p in path]
+        name = names[-1]
+        nd = len(leaf.shape)
+        stacked = "layers" in names or "enc_layers" in names
+        lead = (None,) if stacked else ()
+        body = leaf.shape[1:] if stacked else leaf.shape
+        if name in ("embed", "lm_head"):
+            return _fit(leaf.shape, ("model", fsdp), mesh)
+        if name == "router":
+            return _fit(leaf.shape, lead + (fsdp, None), mesh)
+        if name in _IN_NAMES:
+            if len(body) == 3:         # MoE experts (E, d, ff)
+                return _fit(leaf.shape, lead + (e_ax, fsdp, "model"), mesh)
+            return _fit(leaf.shape, lead + (fsdp, "model"), mesh)
+        if name in _OUT_NAMES:
+            if len(body) == 3:
+                return _fit(leaf.shape, lead + (e_ax, "model", fsdp), mesh)
+            return _fit(leaf.shape, lead + ("model", fsdp), mesh)
+        if name in ("bq", "bk", "bv"):
+            return _fit(leaf.shape, lead + ("model",), mesh)
+        if name == "conv_w":
+            return _fit(leaf.shape, lead + (None, "model"), mesh)
+        if name in ("conv_b", "norm"):
+            return _fit(leaf.shape, lead + ("model",), mesh)
+        return P(*((None,) * nd))      # norms, scalars, A/D/dt_bias
+
+    return jax.tree_util.tree_map_with_path(rule, shapes_tree)
+
+
+def opt_state_specs(opt_shapes, param_spec_tree, sh: "Shardings"):
+    """Specs for AdamWState: moments mirror their parameters.
+
+    Quantized moments keep the parameter's shape (int8 store, last dim
+    padded to the 128 block; scale drops the last dim to n_blocks), so the
+    parameter's own spec applies — the moment update then needs NO
+    resharding against the gradient.
+    """
+    mesh = sh.mesh
+    flat_p, _ = jax.tree_util.tree_flatten(param_spec_tree)
+
+    def _refit(spec: P, shape) -> P:
+        """Param spec re-checked against a (possibly padded) shape."""
+        axes = tuple(spec) + (None,) * (len(shape) - len(spec))
+        return _fit(shape, axes, mesh)
+
+    def moments(tree):
+        # a moment tree mirrors the param tree: one leaf (or one (q, scale)
+        # tuple) per parameter, in identical flatten order
+        leaves, tdef = jax.tree_util.tree_flatten(
+            tree, is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+            and hasattr(x[0], "shape"))
+        assert len(leaves) == len(flat_p), (len(leaves), len(flat_p))
+        out = []
+        for i, leaf in enumerate(leaves):
+            if isinstance(leaf, tuple):    # (q ~param shape, scale -1 dim)
+                q_spec = _refit(flat_p[i], leaf[0].shape)
+                s_spec = _refit(P(*tuple(flat_p[i])[:-1]), leaf[1].shape)
+                out.append((q_spec, s_spec))
+            else:
+                out.append(flat_p[i])
+        return jax.tree_util.tree_unflatten(tdef, out)
+
+    from ..optim.optimizer import AdamWState
+    return AdamWState(step=P(), m=moments(opt_shapes.m),
+                      v=moments(opt_shapes.v))

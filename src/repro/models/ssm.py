@@ -1,0 +1,229 @@
+"""Mamba-2 SSD (state-space duality) block: chunked train scan + decode step.
+
+Implements the SSD formulation of arXiv:2405.21060: per head h with state
+size N and head dim P,
+
+    h_t = exp(A dt_t) h_{t-1} + dt_t * B_t  x_t^T          (P x N state)
+    y_t = C_t h_t^T + D x_t
+
+Training uses the chunked algorithm (intra-chunk quadratic term + inter-
+chunk state carry, lax.scan over chunks); decode is the single-step
+recurrence.  A causal depthwise conv (width 4) precedes the SSD as in the
+reference model; its tail is carried as decode state.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, SSMConfig
+from .layers import rms_norm
+
+
+class SSMDims(NamedTuple):
+    d_inner: int
+    n_heads: int
+    n_groups: int
+    d_state: int
+    head_dim: int
+    conv_dim: int          # d_inner + 2 * n_groups * d_state
+    conv_width: int
+
+
+def ssm_dims(cfg: ModelConfig) -> SSMDims:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = d_inner // s.head_dim
+    conv_dim = d_inner + 2 * s.n_groups * s.d_state
+    return SSMDims(d_inner, n_heads, s.n_groups, s.d_state, s.head_dim,
+                   conv_dim, s.conv_width)
+
+
+def ssm_init(key: jax.Array, cfg: ModelConfig) -> dict:
+    dm = ssm_dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 4)
+    s_in = 1.0 / math.sqrt(d)
+    in_dim = 2 * dm.d_inner + 2 * dm.n_groups * dm.d_state + dm.n_heads
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, in_dim)) * s_in
+                    ).astype(cfg.dtype),
+        "conv_w": (jax.random.normal(ks[1], (dm.conv_width, dm.conv_dim))
+                   * 0.1).astype(cfg.dtype),
+        "conv_b": jnp.zeros((dm.conv_dim,), cfg.dtype),
+        "a_log": jnp.zeros((dm.n_heads,), jnp.float32),
+        "d_skip": jnp.ones((dm.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((dm.n_heads,), jnp.float32),
+        "norm": jnp.zeros((dm.d_inner,), cfg.dtype),
+        "out_proj": (jax.random.normal(ks[2], (dm.d_inner, d))
+                     * (1.0 / math.sqrt(dm.d_inner))).astype(cfg.dtype),
+    }
+
+
+def _split_in(proj: jax.Array, dm: SSMDims):
+    """Split in_proj output into (z, x, B, C, dt)."""
+    gn = dm.n_groups * dm.d_state
+    z, x, b, c, dt = jnp.split(
+        proj, [dm.d_inner, 2 * dm.d_inner, 2 * dm.d_inner + gn,
+               2 * dm.d_inner + 2 * gn], axis=-1)
+    return z, x, b, c, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: Optional[jax.Array] = None) -> jax.Array:
+    """Depthwise causal conv along S. xbc: (B, S, C); w: (W, C)."""
+    width = w.shape[0]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+              for i in range(width))
+    return jax.nn.silu(out + b)
+
+
+def _chunk_scan(x: jax.Array, dt: jax.Array, a: jax.Array,
+                bmat: jax.Array, cmat: jax.Array, dm: SSMDims,
+                chunk: int, intra_dtype=jnp.float32,
+                sh=None) -> jax.Array:
+    """Chunked SSD. x:(B,S,H,P) dt:(B,S,H) a:(H,) b/c:(B,S,G,N)."""
+    bsz, s, h, p = x.shape
+    n = dm.d_state
+    reps = h // dm.n_groups
+    nq = s // chunk
+    # expand groups to heads
+    bh = jnp.repeat(bmat, reps, axis=2)               # (B,S,H,N)
+    ch = jnp.repeat(cmat, reps, axis=2)
+
+    def resh(t, extra):
+        return t.reshape((bsz, nq, chunk) + extra)
+
+    def cstr_q(t):
+        """Shard the chunk dim of the O(L^2) intra tensors over 'model'."""
+        if sh is None or nq % sh.model_size:
+            return t
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        spec = P(sh.batch_spec, "model", *([None] * (t.ndim - 2)))
+        return jax.lax.with_sharding_constraint(
+            t, NamedSharding(sh.mesh, spec))
+
+    xq = resh(x, (h, p))
+    dtq = resh(dt, (h,))
+    bq = resh(bh, (h, n))
+    cq = resh(ch, (h, n))
+    adt = dtq * a[None, None, None, :]                # (B,Q,L,H)
+    cum = jnp.cumsum(adt, axis=2)                     # within-chunk cumsum
+
+    # intra-chunk: Y[i] = sum_{j<=i} (C_i.B_j) exp(cum_i - cum_j) dt_j x_j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,Q,Li,Lj,H)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    decay = jnp.where(tri[None, None, :, :, None], jnp.exp(li),
+                      0.0).astype(intra_dtype)
+    cb = jnp.einsum("bqihn,bqjhn->bqijh", cq.astype(intra_dtype),
+                    bq.astype(intra_dtype),
+                    preferred_element_type=intra_dtype)
+    att = cstr_q(cb * decay * dtq[:, :, None, :, :].astype(intra_dtype))
+    y_intra = jnp.einsum("bqijh,bqjhp->bqihp", att,
+                         xq.astype(intra_dtype),
+                         preferred_element_type=jnp.float32)
+
+    # inter-chunk state carry
+    chunk_decay = jnp.exp(cum[:, :, -1, :])           # (B,Q,H)
+    # state contribution of each chunk: sum_j exp(cum_L - cum_j) dt_j B_j x_j
+    w = jnp.exp(cum[:, :, -1:, :] - cum) * dtq        # (B,Q,L,H)
+    s_chunk = jnp.einsum("bqlh,bqlhn,bqlhp->bqhpn", w, bq, xq)
+
+    def step(h_state, inp):
+        s_c, dec = inp                                 # (B,H,P,N), (B,H)
+        h_next = h_state * dec[:, :, None, None] + s_c
+        return h_next, h_state                         # emit state BEFORE chunk
+
+    h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, h_before = jax.lax.scan(
+        step, h0, (jnp.moveaxis(s_chunk, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_before = jnp.moveaxis(h_before, 0, 1)            # (B,Q,H,P,N)
+
+    y_inter = jnp.einsum("bqlhn,bqhpn->bqlhp",
+                         cq * jnp.exp(cum)[..., None], h_before)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)
+    return y
+
+
+def ssm_apply(params: dict, x: jax.Array, cfg: ModelConfig,
+              state: Optional[Tuple[jax.Array, jax.Array]] = None,
+              sh=None,
+              ) -> Tuple[jax.Array, Optional[Tuple[jax.Array, jax.Array]]]:
+    """x: (B, S, D) -> (B, S, D).
+
+    Training/prefill: state None, chunked scan over the sequence.
+    Decode: state = (ssd_state (B,H,P,N), conv_tail (B,W-1,conv_dim));
+    S must be 1 and the updated state is returned.
+    """
+    dm = ssm_dims(cfg)
+    bsz, s, _ = x.shape
+    proj = x @ params["in_proj"]
+    z, xs, bmat, cmat, dt = _split_in(proj, dm)
+    a = -jnp.exp(params["a_log"])                      # (H,)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"][None, None, :])
+
+    xbc = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    if state is None:
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+        new_state = None
+    else:
+        ssd_state, conv_tail = state
+        full = jnp.concatenate([conv_tail.astype(xbc.dtype), xbc], axis=1)
+        xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"],
+                           tail=conv_tail)
+        new_tail = full[:, -(dm.conv_width - 1):, :]
+    xs = xbc[..., :dm.d_inner]
+    gn = dm.n_groups * dm.d_state
+    bmat = xbc[..., dm.d_inner:dm.d_inner + gn]
+    cmat = xbc[..., dm.d_inner + gn:]
+
+    xh = xs.reshape(bsz, s, dm.n_heads, dm.head_dim).astype(jnp.float32)
+    bg = bmat.reshape(bsz, s, dm.n_groups, dm.d_state).astype(jnp.float32)
+    cg = cmat.reshape(bsz, s, dm.n_groups, dm.d_state).astype(jnp.float32)
+
+    if state is None:
+        chunk = min(cfg.ssm.chunk, s)
+        if s % chunk:                                  # pad to chunk multiple
+            pad = chunk - s % chunk
+            xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            bg = jnp.pad(bg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            cg = jnp.pad(cg, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        intra = (jnp.bfloat16 if cfg.ssm_intra_dtype == "bfloat16"
+                 else jnp.float32)
+        y = _chunk_scan(xh, dt, a, bg, cg, dm, chunk,
+                        intra_dtype=intra, sh=sh)[:, :s]
+    else:
+        # single-step recurrence
+        reps = dm.n_heads // dm.n_groups
+        bh = jnp.repeat(bg[:, 0], reps, axis=1)        # (B,H,N)
+        chh = jnp.repeat(cg[:, 0], reps, axis=1)
+        dt0 = dt[:, 0]                                 # (B,H)
+        dec = jnp.exp(dt0 * a[None, :])
+        upd = (dt0[:, :, None, None] * xh[:, 0][..., None]
+               * bh[:, :, None, :])
+        ssd_state = ssd_state * dec[:, :, None, None] + upd
+        y = jnp.einsum("bhpn,bhn->bhp", ssd_state, chh)[:, None]
+        new_state = (ssd_state, new_tail)
+
+    y = y + params["d_skip"][None, None, :, None] * xh[:, :s]
+    y = y.reshape(bsz, s, dm.d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm"])
+    return y @ params["out_proj"], new_state
+
+
+def init_ssm_state(cfg: ModelConfig, batch: int, dtype=jnp.float32,
+                   ) -> Tuple[jax.Array, jax.Array]:
+    dm = ssm_dims(cfg)
+    return (jnp.zeros((batch, dm.n_heads, dm.head_dim, dm.d_state), dtype),
+            jnp.zeros((batch, dm.conv_width - 1, dm.conv_dim), dtype))

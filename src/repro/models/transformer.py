@@ -1,0 +1,362 @@
+"""Unified model stack: dense / MoE / SSM / hybrid / enc-dec / VLM-audio.
+
+One block implementation per family, stacked with lax.scan over layers
+(keeps HLO size O(1) in depth — essential for the 95-layer dry-run cells)
+under jax.checkpoint so only per-layer boundaries are saved; boundary
+activations are sharded (d_model over "model") so the saved-carry footprint
+divides across the mesh (DESIGN.md §5).
+
+Public API (build_model):
+    init(key)                      -> params (small configs only)
+    loss_fn(params, batch)         -> scalar loss      (train shapes)
+    prefill_fn(params, batch)      -> (logits, cache)  (prefill shapes)
+    decode_fn(params, batch, cache, index) -> (logits, cache)  (decode)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from . import attention as attn_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .layers import (cross_entropy_loss, embed_init, mlp_apply, mlp_init,
+                     rms_norm, softcap)
+from .sharding import Shardings
+
+#: "infinite" window sentinel for global-attention layers in scanned stacks.
+GLOBAL_WINDOW = jnp.int32(2 ** 30)
+
+
+# ---------------------------------------------------------------------------
+# per-layer parameter init
+# ---------------------------------------------------------------------------
+
+def _layer_init(key: jax.Array, cfg: ModelConfig, kind: str) -> Dict:
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p: Dict[str, Any] = {"ln1": jnp.zeros((d,), cfg.dtype)}
+    if kind in ("dense", "moe", "hybrid", "encdec_dec", "encdec_enc"):
+        p["attn"] = attn_mod.attn_init(ks[0], cfg)
+        p["ln2"] = jnp.zeros((d,), cfg.dtype)
+    if kind in ("dense", "encdec_enc", "encdec_dec"):
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_gated, cfg.dtype)
+    if kind == "moe":
+        p["moe"] = moe_mod.moe_init(ks[1], cfg)
+    if kind == "hybrid":
+        p["ssm"] = ssm_mod.ssm_init(ks[2], cfg)
+        p["mlp"] = mlp_init(ks[1], d, cfg.d_ff, cfg.mlp_gated, cfg.dtype)
+    if kind == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(ks[2], cfg)
+    if kind == "encdec_dec":
+        p["ln_cross"] = jnp.zeros((d,), cfg.dtype)
+        p["cross"] = attn_mod.attn_init(ks[3], cfg)
+    return p
+
+
+def _block_kind(cfg: ModelConfig) -> str:
+    return {"dense": "dense", "vlm": "dense", "audio": "dense",
+            "moe": "moe", "ssm": "ssm", "hybrid": "hybrid",
+            "encdec": "encdec_dec"}[cfg.family]
+
+
+def layer_windows(cfg: ModelConfig) -> jax.Array:
+    """(L,) per-layer attention window (GLOBAL_WINDOW = full causal)."""
+    if cfg.local_global_period:
+        idx = jnp.arange(cfg.n_layers)
+        local = (idx % cfg.local_global_period) == 0
+        return jnp.where(local, jnp.int32(cfg.sliding_window), GLOBAL_WINDOW)
+    if cfg.sliding_window:
+        return jnp.full((cfg.n_layers,), cfg.sliding_window, jnp.int32)
+    return jnp.full((cfg.n_layers,), GLOBAL_WINDOW, jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# block forward (one layer)
+# ---------------------------------------------------------------------------
+
+def _block(cfg: ModelConfig, kind: str, sh: Optional[Shardings],
+           params: Dict, x: jax.Array, positions: jax.Array,
+           window: jax.Array,
+           cache: Optional[Dict] = None, cache_index=None,
+           enc_kv=None, mask=None,
+           ) -> Tuple[jax.Array, Optional[Dict], jax.Array]:
+    """Returns (x_out, updated_cache, aux_loss)."""
+    aux = jnp.float32(0.0)
+    new_cache: Dict[str, Any] = {}
+    if kind in ("dense", "moe", "hybrid", "encdec_dec", "encdec_enc"):
+        h = rms_norm(x, params["ln1"])
+        kv = (cache["k"], cache["v"]) if cache is not None else None
+        a_out, new_kv = attn_mod.attention(
+            params["attn"], h, positions, cfg, kv_cache=kv,
+            cache_index=cache_index,
+            window=None if mask is not None else window, mask=mask,
+            bidirectional=(kind == "encdec_enc"), sh=sh)
+        if kind == "hybrid":
+            s_state = ((cache["ssm"], cache["conv"])
+                       if cache is not None else None)
+            s_out, new_state = ssm_mod.ssm_apply(params["ssm"], h, cfg,
+                                                 state=s_state, sh=sh)
+            a_out = (a_out + s_out) * 0.5        # parallel heads (hymba)
+            if new_state is not None:
+                new_cache["ssm"], new_cache["conv"] = new_state
+        x = x + a_out
+        if new_kv is not None:
+            new_cache["k"], new_cache["v"] = new_kv
+        if kind == "encdec_dec" and enc_kv is not None:
+            h = rms_norm(x, params["ln_cross"])
+            x = x + attn_mod.cross_attention(params["cross"], h, enc_kv, cfg)
+        h = rms_norm(x, params["ln2"])
+        if kind == "moe":
+            m_out, aux = moe_mod.moe_apply(params["moe"], h, cfg, sh=sh)
+        else:
+            m_out = mlp_apply(params["mlp"], h, cfg.mlp_act, cfg.mlp_gated)
+        x = x + m_out
+    else:                                        # pure SSM (mamba2)
+        h = rms_norm(x, params["ln1"])
+        s_state = ((cache["ssm"], cache["conv"])
+                   if cache is not None else None)
+        s_out, new_state = ssm_mod.ssm_apply(params["ssm"], h, cfg,
+                                             state=s_state, sh=sh)
+        if new_state is not None:
+            new_cache["ssm"], new_cache["conv"] = new_state
+        x = x + s_out
+    return x, (new_cache if cache is not None else None), aux
+
+
+# ---------------------------------------------------------------------------
+# stacks
+# ---------------------------------------------------------------------------
+
+def _constrain_act(x: jax.Array, sh: Optional[Shardings]) -> jax.Array:
+    if sh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(sh.mesh, sh.activations()))
+
+
+def _uses_windows(cfg: ModelConfig) -> bool:
+    return (cfg.sliding_window is not None
+            or cfg.local_global_period is not None)
+
+
+def _scan_stack(cfg: ModelConfig, kind: str, sh, layers_params, x,
+                positions, windows, caches=None, cache_index=None,
+                enc_kv=None, mask=None):
+    """lax.scan over the L stacked layers with rematerialization."""
+
+    def body(carry, xs):
+        x, aux_sum = carry
+        if caches is not None and enc_kv is not None:
+            lp, w, cache, ekv = xs
+        elif caches is not None:
+            lp, w, cache = xs
+            ekv = None
+        elif enc_kv is not None:
+            lp, w, ekv = xs
+            cache = None
+        else:
+            lp, w = xs
+            cache, ekv = None, None
+        x = _constrain_act(x, sh)
+        x, new_cache, aux = _block(cfg, kind, sh, lp, x, positions, w,
+                                   cache=cache, cache_index=cache_index,
+                                   enc_kv=ekv, mask=mask)
+        return (x, aux_sum + aux), new_cache
+
+    xs: Tuple = (layers_params, windows)
+    if caches is not None:
+        xs = xs + (caches,)
+    if enc_kv is not None:
+        xs = xs + (enc_kv,)
+    body_fn = jax.checkpoint(
+        body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), new_caches = jax.lax.scan(body_fn, (x, jnp.float32(0.0)), xs,
+                                        unroll=True if cfg.scan_unroll
+                                        else 1)
+    return _constrain_act(x, sh), aux, (new_caches if caches is not None
+                                        else None)
+
+
+# ---------------------------------------------------------------------------
+# model assembly
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Model:
+    cfg: ModelConfig
+    sh: Optional[Shardings] = None
+
+    # -- init --------------------------------------------------------------
+    def init(self, key: jax.Array) -> Dict:
+        cfg = self.cfg
+        kind = _block_kind(cfg)
+        k_emb, k_layers, k_enc, k_head = jax.random.split(key, 4)
+        layer_keys = jax.random.split(k_layers, cfg.n_layers)
+        params: Dict[str, Any] = {
+            "embed": embed_init(k_emb, cfg.vocab_padded, cfg.d_model,
+                                cfg.dtype),
+            "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+            "layers": jax.vmap(
+                lambda k: _layer_init(k, cfg, kind))(layer_keys),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(k_head, cfg.vocab_padded,
+                                           cfg.d_model, cfg.dtype)
+        if cfg.n_encoder_layers:
+            enc_keys = jax.random.split(k_enc, cfg.n_encoder_layers)
+            params["enc_layers"] = jax.vmap(
+                lambda k: _layer_init(k, cfg, "encdec_enc"))(enc_keys)
+            params["enc_norm"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+        return params
+
+    # -- helpers -----------------------------------------------------------
+    def _embed(self, params, tokens, prefix_embeds=None):
+        cfg = self.cfg
+        x = params["embed"][jnp.clip(tokens, 0, cfg.vocab_padded - 1)]
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+        if prefix_embeds is not None:
+            x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+        return x
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = rms_norm(x, params["final_norm"])
+        head = params.get("lm_head", params["embed"])
+        logits = x @ head.T.astype(x.dtype)
+        logits = softcap(logits.astype(jnp.float32),
+                         cfg.final_logit_softcap)
+        if self.sh is not None:
+            logits = jax.lax.with_sharding_constraint(
+                logits, NamedSharding(self.sh.mesh, self.sh.logits()))
+        return logits
+
+    def _encode(self, params, enc_embeds):
+        """Encoder stack over precomputed frame embeddings (audio stub)."""
+        cfg = self.cfg
+        b, t, _ = enc_embeds.shape
+        positions = jnp.broadcast_to(jnp.arange(t, dtype=jnp.int32)[None],
+                                     (b, t))
+        windows = jnp.full((cfg.n_encoder_layers,), GLOBAL_WINDOW)
+        mask = jnp.ones((b, t, t), bool)
+        x, _, _ = _scan_stack(cfg, "encdec_enc", self.sh,
+                              params["enc_layers"],
+                              enc_embeds.astype(cfg.dtype), positions,
+                              windows, mask=mask)
+        return rms_norm(x, params["enc_norm"])
+
+    def _cross_kv(self, params, enc_out):
+        cfg = self.cfg
+
+        def per_layer(lp):
+            return attn_mod.project_enc_kv(lp["cross"], enc_out, cfg)
+
+        return jax.vmap(per_layer, in_axes=0)(params["layers"])
+
+    # -- training ----------------------------------------------------------
+    def loss_fn(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        labels = batch["labels"]
+        prefix = batch.get("prefix_embeds")
+        x = self._embed(params, tokens, prefix)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        windows = layer_windows(cfg)
+        mask = None
+        if not _uses_windows(cfg):        # one causal mask for all layers
+            mask = (jnp.arange(s, dtype=jnp.int32)[None, None, :]
+                    <= positions[:, :, None])
+        enc_kv = None
+        if cfg.n_encoder_layers:
+            enc_out = self._encode(params, batch["enc_embeds"])
+            enc_kv = self._cross_kv(params, enc_out)
+        x, aux, _ = _scan_stack(cfg, _block_kind(cfg), self.sh,
+                                params["layers"], x, positions, windows,
+                                enc_kv=enc_kv, mask=mask)
+        logits = self._logits(params, x)
+        if prefix is not None:
+            logits = logits[:, prefix.shape[1]:]
+        return cross_entropy_loss(logits[:, :-1], labels[:, 1:],
+                                  cfg.vocab_padded) + aux
+
+    # -- serving -----------------------------------------------------------
+    def init_cache(self, batch: int, ctx_len: int) -> Dict:
+        """Abstract/zero decode cache for the whole stack."""
+        cfg = self.cfg
+        kind = _block_kind(cfg)
+        hd, nkv = cfg.resolved_head_dim, cfg.n_kv_heads
+        cache: Dict[str, Any] = {}
+        if kind in ("dense", "moe", "hybrid", "encdec_dec"):
+            shape = (cfg.n_layers, batch, ctx_len, nkv, hd)
+            cache["k"] = jnp.zeros(shape, cfg.dtype)
+            cache["v"] = jnp.zeros(shape, cfg.dtype)
+        if kind in ("ssm", "hybrid"):
+            dm = ssm_mod.ssm_dims(cfg)
+            cache["ssm"] = jnp.zeros(
+                (cfg.n_layers, batch, dm.n_heads, dm.head_dim, dm.d_state),
+                jnp.float32)
+            cache["conv"] = jnp.zeros(
+                (cfg.n_layers, batch, dm.conv_width - 1, dm.conv_dim),
+                jnp.float32)
+        return cache
+
+    def decode_fn(self, params, batch, cache, index) -> Tuple[jax.Array, Dict]:
+        """One-token decode step against a populated cache.
+
+        batch: {"tokens": (B, 1)}; index: scalar int32 cache write slot
+        (== current absolute position).
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        b = x.shape[0]
+        positions = jnp.full((b, 1), index, jnp.int32)
+        windows = layer_windows(cfg)
+        enc_kv = None
+        if cfg.n_encoder_layers:
+            enc_kv = (batch["cross_k"], batch["cross_v"])
+        x, _, new_cache = _scan_stack(cfg, _block_kind(cfg), self.sh,
+                                      params["layers"], x, positions,
+                                      windows, caches=cache,
+                                      cache_index=index, enc_kv=enc_kv)
+        return self._logits(params, x), new_cache
+
+    def prefill_fn(self, params, batch) -> jax.Array:
+        """Full-sequence forward returning last-position logits.
+
+        (The dry-run prefill cell measures the forward pass; cache
+        population reuses the same compute graph.)
+        """
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        prefix = batch.get("prefix_embeds")
+        x = self._embed(params, tokens, prefix)
+        b, s, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                     (b, s))
+        windows = layer_windows(cfg)
+        mask = None
+        if not _uses_windows(cfg):
+            mask = (jnp.arange(s, dtype=jnp.int32)[None, None, :]
+                    <= positions[:, :, None])
+        enc_kv = None
+        if cfg.n_encoder_layers:
+            enc_out = self._encode(params, batch["enc_embeds"])
+            enc_kv = self._cross_kv(params, enc_out)
+        x, _, _ = _scan_stack(cfg, _block_kind(cfg), self.sh,
+                              params["layers"], x, positions, windows,
+                              enc_kv=enc_kv, mask=mask)
+        return self._logits(params, x[:, -1:])
+
+
+def build_model(cfg: ModelConfig, sh: Optional[Shardings] = None) -> Model:
+    return Model(cfg=cfg, sh=sh)

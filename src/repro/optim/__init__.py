@@ -1,0 +1,4 @@
+"""Optimizer substrate: AdamW, schedules, quantized moments, compression."""
+from .optimizer import (AdamWState, adamw_init, adamw_update,  # noqa: F401
+                        clip_by_global_norm, make_schedule)
+from .compression import CompressionState, compress_gradients  # noqa: F401

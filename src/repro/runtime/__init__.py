@@ -1,0 +1,3 @@
+from .fault_tolerance import (ElasticPlan, HeartbeatMonitor,  # noqa: F401
+                              StragglerDetector, plan_elastic_remesh,
+                              run_with_restarts)

@@ -1,0 +1,111 @@
+"""Fault tolerance & elasticity: heartbeats, stragglers, restart, re-mesh.
+
+1000+-node posture (DESIGN.md §5):
+
+* HeartbeatMonitor — every worker appends (host, step, t) beats; the
+  controller flags hosts silent for > timeout as suspected-dead.
+* StragglerDetector — per-step wall-time EMA; a host whose step time
+  exceeds median x threshold is flagged so the controller can hot-swap it
+  (on TPU pods, slow HBM / thermal throttle shows up exactly this way).
+* run_with_restarts — wraps the train loop: on failure, restore from the
+  newest checkpoint and continue (bounded retries).
+* plan_elastic_remesh — on permanent node loss, shrink the data axis to
+  the largest feasible size, keep the model axis intact (TP topology is
+  wiring-constrained; DP is not), and return the re-layout plan; the
+  deterministic data pipeline replays the same stream onto the new mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+
+class HeartbeatMonitor:
+    def __init__(self, timeout_s: float = 60.0):
+        self.timeout_s = timeout_s
+        self.beats: Dict[int, float] = {}
+
+    def beat(self, host: int, now: Optional[float] = None):
+        self.beats[host] = time.monotonic() if now is None else now
+
+    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
+        t = time.monotonic() if now is None else now
+        return [h for h, last in self.beats.items()
+                if t - last > self.timeout_s]
+
+
+class StragglerDetector:
+    """Flags hosts whose step time exceeds median x threshold."""
+
+    def __init__(self, threshold: float = 2.0, window: int = 20):
+        self.threshold = threshold
+        self.window = window
+        self.times: Dict[int, List[float]] = {}
+
+    def record(self, host: int, step_time_s: float):
+        self.times.setdefault(host, []).append(step_time_s)
+        self.times[host] = self.times[host][-self.window:]
+
+    def stragglers(self) -> List[int]:
+        if len(self.times) < 2:
+            return []
+        medians = {h: statistics.median(v) for h, v in self.times.items()}
+        fleet = statistics.median(medians.values())
+        return [h for h, m in medians.items()
+                if m > self.threshold * fleet]
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    dropped_hosts: Tuple[int, ...]
+    global_batch_scale: float      # keep per-chip batch constant
+
+
+def plan_elastic_remesh(axes: Tuple[str, ...], shape: Tuple[int, ...],
+                        healthy_chips: int) -> ElasticPlan:
+    """Shrink the data axis to the largest size that fits healthy chips.
+
+    The model (and pod) axes are preserved: tensor-parallel sharding is
+    ICI-topology-bound, while the data axis only carries gradient
+    all-reduces, so dropping DP replicas is the cheap direction.
+    """
+    shape = tuple(shape)
+    data_ix = axes.index("data")
+    other = 1
+    for i, s in enumerate(shape):
+        if i != data_ix:
+            other *= s
+    new_data = max(1, healthy_chips // other)
+    # keep power-of-two DP groups for clean psum radix
+    while new_data & (new_data - 1):
+        new_data -= 1
+    new_shape = tuple(new_data if i == data_ix else s
+                      for i, s in enumerate(shape))
+    return ElasticPlan(
+        old_shape=shape, new_shape=new_shape, axes=axes,
+        dropped_hosts=(),
+        global_batch_scale=new_data / shape[data_ix])
+
+
+def run_with_restarts(step_fn: Callable[[int], None], start_step: int,
+                      num_steps: int,
+                      restore_fn: Callable[[], int],
+                      max_restarts: int = 3) -> int:
+    """Drive step_fn with restore-on-failure. Returns last completed step."""
+    restarts = 0
+    step = start_step
+    while step < num_steps:
+        try:
+            step_fn(step)
+            step += 1
+        except Exception:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            step = restore_fn()
+    return step

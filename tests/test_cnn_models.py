@@ -1,0 +1,71 @@
+"""CNN model-zoo tests: paper Table III census + published MAC counts."""
+import pytest
+
+from repro.cnn.layers import dkv_census, total_macs
+from repro.cnn.models import (MODEL_ZOO, PAPER_CNNS, efficientnet,
+                              mobilenet_v1, resnet50)
+
+#: Paper Table III — (kind, S) -> total kernel count F for EfficientNet-B7.
+TABLE_III = {
+    ("DC", 9): 25024, ("DC", 25): 45216,
+    ("PC", 8): 288, ("PC", 12): 2016, ("PC", 16): 64, ("PC", 20): 3360,
+    ("PC", 32): 312, ("PC", 40): 9600, ("PC", 48): 2016, ("PC", 56): 13440,
+    ("PC", 64): 48, ("PC", 80): 3360, ("PC", 96): 29952, ("PC", 160): 21120,
+    ("PC", 192): 56, ("PC", 224): 13440, ("PC", 288): 452, ("PC", 384): 29952,
+    ("PC", 480): 780, ("PC", 640): 14080, ("PC", 960): 2064,
+    ("PC", 1344): 2960, ("PC", 2304): 6496, ("PC", 3840): 2400,
+    ("SC", 27): 64,
+}
+
+
+def test_table3_exact():
+    """Our EfficientNet-B7 generator reproduces Table III exactly."""
+    census = dkv_census(efficientnet("B7"))
+    ours = {(kind, s): f for kind, _, f, s in census if kind != "FC"}
+    assert ours == TABLE_III
+
+
+def test_table3_fc_row():
+    """Table III's FC row: S = 2560 (head width)."""
+    fc = [l for l in efficientnet("B7") if l.kind.value == "FC"]
+    assert len(fc) == 1 and fc[0].dkv_size == 2560
+
+
+@pytest.mark.parametrize("name,ref_gmacs,tol", [
+    ("efficientnet_b7", 37.0, 0.05),   # published 37 GFLOPs (MAC convention)
+    ("xception", 8.4, 0.05),
+    ("shufflenet_v2", 0.146, 0.05),
+    ("nasnet_mobile", 0.564, 0.15),    # cell-census approximation
+    ("mobilenet_v1", 0.569, 0.05),
+    ("resnet50", 3.86, 0.05),
+])
+def test_published_mac_counts(name, ref_gmacs, tol):
+    gmacs = total_macs(MODEL_ZOO[name]()) / 1e9
+    assert gmacs == pytest.approx(ref_gmacs, rel=tol)
+
+
+def test_efficientnet_b0_macs():
+    assert total_macs(efficientnet("B0")) / 1e9 == pytest.approx(0.39, rel=0.05)
+
+
+@pytest.mark.parametrize("name", list(MODEL_ZOO))
+def test_layer_tables_wellformed(name):
+    layers = MODEL_ZOO[name]()
+    assert layers, name
+    for l in layers:
+        assert l.dkv_size >= 1
+        assert l.f >= 1
+        assert l.n_positions >= 1
+        assert l.macs == l.f * l.n_positions * l.dkv_size
+        if l.kind.value == "DC":
+            assert l.d == 1          # one 2-D kernel per channel
+        if l.kind.value == "PC":
+            assert l.k == 1
+
+
+def test_paper_cnns_have_mixed_tensors():
+    """The paper's premise: the four CNNs mix small DCs with large PCs."""
+    for name in PAPER_CNNS:
+        sizes = {l.dkv_size for l in MODEL_ZOO[name]()}
+        assert min(sizes) <= 25
+        assert max(sizes) >= 464

@@ -1,0 +1,150 @@
+"""Launch-layer tests: roofline parsing, specs, mesh, train/serve loops."""
+import json
+import os
+import subprocess
+import sys
+import tempfile
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, load_all
+from repro.configs.shapes import SHAPES, applicable_shapes
+from repro.launch import roofline
+
+jax.config.update("jax_platform_name", "cpu")
+load_all()
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+# ---------------------------------------------------------------------------
+# roofline unit tests
+# ---------------------------------------------------------------------------
+
+SAMPLE_HLO = """
+  %ag = bf16[8,4096,1024]{2,1,0} all-gather(%p0), replica_groups={...}
+  %ar.1 = f32[256,128]{1,0} all-reduce(%x), to_apply=%add
+  %rs = f32[16]{0} reduce-scatter(%y), dimensions={0}
+  %cp = bf16[2,2]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+"""
+
+
+def test_collective_census_parses_hlo():
+    out = roofline.collective_bytes_from_hlo(SAMPLE_HLO)
+    assert out["all-gather"]["count"] == 1
+    assert out["all-gather"]["bytes"] == 8 * 4096 * 1024 * 2
+    assert out["all-reduce"]["bytes"] == 256 * 128 * 4
+    assert out["reduce-scatter"]["count"] == 1
+    assert out["collective-permute"]["bytes"] == 2 * 2 * 2
+    assert out["total_count"] == 4
+
+
+def test_model_flops_conventions():
+    cfg = get_config("qwen1.5-0.5b")
+    tr = roofline.model_flops(cfg, SHAPES["train_4k"])
+    pf = roofline.model_flops(cfg, SHAPES["prefill_32k"])
+    dc = roofline.model_flops(cfg, SHAPES["decode_32k"])
+    assert tr == pytest.approx(6 * cfg.n_active_params() * 256 * 4096)
+    assert pf == pytest.approx(2 * cfg.n_active_params() * 32 * 32768)
+    assert dc == pytest.approx(2 * cfg.n_active_params() * 128)
+    # MoE: active < total
+    grok = get_config("grok-1-314b")
+    assert (roofline.model_flops(grok, SHAPES["train_4k"])
+            < 6 * grok.n_params() * 256 * 4096)
+
+
+def test_roofline_terms_bound_selection():
+    rec = {"n_chips": 256, "flops": 197e12, "bytes_accessed": 819e9 * 2,
+           "collectives": {"total_bytes": 50e9 * 0.5}}
+    cfg = get_config("qwen1.5-0.5b")
+    out = roofline.roofline_terms(rec, cfg, SHAPES["train_4k"])
+    assert out["compute_s"] == pytest.approx(1.0)
+    assert out["memory_s"] == pytest.approx(2.0)
+    assert out["collective_s"] == pytest.approx(0.5)
+    assert out["bound"] == "memory"
+    assert out["roofline_fraction"] == pytest.approx(0.5)
+
+
+def test_applicable_shapes_long_context_rule():
+    long_ok = {a for a in load_all()
+               if any(s.name == "long_500k"
+                      for s in applicable_shapes(get_config(a)))}
+    assert long_ok == {"mamba2-2.7b", "hymba-1.5b", "mixtral-8x7b",
+                       "gemma2-2b"}
+
+
+def test_total_cell_count():
+    """40 assigned cells; full-attention archs skip long_500k."""
+    cells = sum(len(applicable_shapes(get_config(a))) for a in load_all())
+    assert cells == 4 * 10 - 6      # 34 runnable of the 40 (6 skips noted)
+
+
+# ---------------------------------------------------------------------------
+# mesh + dryrun integration (subprocess: needs 512 forced host devices)
+# ---------------------------------------------------------------------------
+
+def test_production_mesh_shapes_subprocess():
+    code = (
+        "import os; os.environ['XLA_FLAGS']="
+        "'--xla_force_host_platform_device_count=512'\n"
+        "from repro.launch.mesh import make_production_mesh\n"
+        "m1 = make_production_mesh();"
+        "assert dict(m1.shape) == {'data': 16, 'model': 16}, m1.shape\n"
+        "m2 = make_production_mesh(multi_pod=True);"
+        "assert dict(m2.shape) == {'pod': 2, 'data': 16, 'model': 16}\n"
+        "print('MESH_OK')\n")
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=300)
+    assert "MESH_OK" in out.stdout, out.stderr[-2000:]
+
+
+@pytest.mark.slow
+def test_dryrun_single_cell_subprocess():
+    """One full dry-run cell end-to-end (decode: fastest to compile)."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun",
+         "--arch", "qwen1.5-0.5b", "--shape", "decode_32k"],
+        env=env, capture_output=True, text=True, timeout=900, cwd=REPO)
+    assert "failures=0" in out.stdout, out.stdout + out.stderr[-2000:]
+    path = os.path.join(REPO, "experiments", "dryrun",
+                        "qwen1.5-0.5b_decode_32k_16x16.json")
+    rec = json.load(open(path))
+    assert rec["flops"] > 0
+    assert rec["roofline"]["bound"] in ("compute", "memory", "collective")
+
+
+# ---------------------------------------------------------------------------
+# train / serve loops (reduced configs, real execution)
+# ---------------------------------------------------------------------------
+
+def test_train_loop_improves_and_resumes():
+    from repro.launch.train import train_loop
+    with tempfile.TemporaryDirectory() as d:
+        out = train_loop("qwen1.5-0.5b", steps=6, batch=2, seq=32,
+                         ckpt_dir=d, save_every=2, log_every=100)
+        assert out["final_loss"] < out["first_loss"] + 1.0
+        # resume continues from the checkpoint, not from scratch
+        out2 = train_loop("qwen1.5-0.5b", steps=8, batch=2, seq=32,
+                          ckpt_dir=d, save_every=2, log_every=100)
+        assert out2["steps"] == 2           # only steps 6..7 remain
+
+
+def test_train_loop_with_compression():
+    from repro.launch.train import train_loop
+    out = train_loop("qwen1.5-0.5b", steps=4, batch=2, seq=32,
+                     use_compression=True, log_every=100)
+    assert np.isfinite(out["final_loss"])
+
+
+def test_batched_server_serves_requests():
+    from repro.launch.serve import BatchedServer
+    srv = BatchedServer("qwen1.5-0.5b", batch=2, ctx=64)
+    rids = [srv.submit([5, 6, 7], max_tokens=4) for _ in range(3)]
+    outs = srv.run_until_done()
+    assert set(rids) == set(outs)
+    assert all(len(v) == 4 for v in outs.values())

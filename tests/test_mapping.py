@@ -1,0 +1,119 @@
+"""Mapping tests: Cases 1/2/3, slice plans, utilization — incl. property tests."""
+import math
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.cnn.layers import dc, fc, pc, sc
+from repro.core.mapping import (TPCConfig, map_layer, select_case, slice_plan,
+                                vdpe_utilization_for_s)
+
+RMAM = TPCConfig("MAM", 43, 43, True)
+RAMM = TPCConfig("AMM", 31, 31, True)
+MAM = TPCConfig("MAM", 44, 44, False)
+AMM = TPCConfig("AMM", 31, 31, False)
+RAMM_5G = TPCConfig("AMM", 16, 16, True)     # y = 0: no reconfiguration
+
+
+def test_mode_selection_cases():
+    assert select_case(RMAM, 100) == 1      # S > N
+    assert select_case(RMAM, 43) == 1       # S == N
+    assert select_case(RMAM, 20) == 2       # x < S < N
+    assert select_case(RMAM, 9) == 3        # S <= x
+    assert select_case(MAM, 20) == 0        # fixed-N fallback
+    assert select_case(RAMM_5G, 9) == 0     # y == 0 behaves fixed
+
+
+@given(s=st.integers(1, 5000))
+def test_slice_plan_covers_s(s):
+    for tpc in (RMAM, RAMM, MAM, AMM, RAMM_5G):
+        plan = slice_plan(tpc, s)
+        assert sum(w * c for _, w, c in plan) == s
+        for mode, w, c in plan:
+            assert c >= 1
+            assert 1 <= w <= tpc.n
+            if mode == 2:
+                assert w <= tpc.x and tpc.y > 0
+            if tpc.y == 0:
+                assert mode == 1
+
+
+@given(s=st.integers(1, 5000))
+def test_utilization_bounds(s):
+    for tpc in (RMAM, RAMM, MAM, AMM):
+        u = vdpe_utilization_for_s(tpc, s)
+        assert 0.0 < u <= 1.0
+
+
+@given(s=st.integers(1, 42))
+def test_reconfigurable_beats_fixed_utilization_small_s(s):
+    """Mode 2 never reduces per-VDPE utilization for sub-N DKVs."""
+    u_r = vdpe_utilization_for_s(RMAM, s)
+    u_f = vdpe_utilization_for_s(TPCConfig("MAM", 43, 43, False), s)
+    assert u_r >= u_f - 1e-12
+
+
+def test_paper_utilization_endpoints():
+    """Fig. 6 anchor points: baselines strand MRRs at small S."""
+    assert vdpe_utilization_for_s(MAM, 9) == pytest.approx(9 / 44)
+    assert vdpe_utilization_for_s(AMM, 9) == pytest.approx(9 / 31)
+    # RMAM Mode 2 on S=9: y=4 lanes x 9 of 43 rings
+    assert vdpe_utilization_for_s(RMAM, 9) == pytest.approx(36 / 43)
+    assert vdpe_utilization_for_s(RAMM, 9) == pytest.approx(27 / 31)
+
+
+@settings(max_examples=60)
+@given(s=st.integers(1, 4000), f=st.integers(1, 512), p=st.integers(1, 1024))
+def test_mapping_work_conservation(s, f, p):
+    """used MRR-cycles == total pointwise products; active >= used."""
+    side = max(1, int(math.isqrt(p)))
+    layer = pc("l", s, f, side, side)
+    for tpc in (RMAM, RAMM, MAM, AMM):
+        m = map_layer(tpc, layer)
+        assert m.used_mrr_cycles == layer.macs
+        assert m.active_mrr_cycles >= m.used_mrr_cycles
+        assert sum(g.width * g.n_slices for g in m.groups) == s
+        for g in m.groups:
+            assert g.passes >= 1
+            assert g.stream_cycles >= 1
+            assert g.supply_points >= 1
+
+
+def test_dc_on_mam_single_vdpe():
+    """Depthwise on MAM: shared DIV leaves one distinct-kernel VDPE (Mode 1)."""
+    layer = dc("d", 5, 64, 14, 14)          # S=25, 64 channels
+    m_fixed = map_layer(MAM, layer)
+    (g,) = m_fixed.groups
+    assert g.passes == 64                    # one pass per channel
+    # Mode 2 on RMAM recovers y-way channel parallelism
+    m_rec = map_layer(RMAM, layer)
+    total = sum(g.passes for g in m_rec.groups)
+    assert total < 64                        # 25 -> 2x9+7: ceil(64/4)*3 = 48
+
+
+def test_case1_remainder_reaggregation():
+    """S > N remainder slices run in Mode 2 on reconfigurable VDPEs."""
+    layer = pc("p", 96, 128, 7, 7)           # S=96 = 2*43 + 10 on RMAM
+    m = map_layer(RMAM, layer)
+    modes = [g.mode for g in m.groups]
+    assert 1 in modes and 2 in modes
+    m_fixed = map_layer(MAM, layer)
+    assert all(g.mode == 1 for g in m_fixed.groups)
+
+
+def test_position_parallel_stream():
+    """AMM family streams ceil(P/M) position groups per pass."""
+    layer = sc("s", 3, 64, 128, 28, 28)      # P = 784
+    m = map_layer(AMM, layer)
+    assert all(g.stream_cycles == math.ceil(784 / 31) for g in m.groups)
+    # kernel-parallel MAM streams every position
+    m2 = map_layer(MAM, layer)
+    assert all(g.stream_cycles == 784 for g in m2.groups)
+
+
+def test_fc_layer_maps():
+    layer = fc("fc", 2560, 1000)
+    for tpc in (RMAM, RAMM, MAM, AMM):
+        m = map_layer(tpc, layer)
+        assert m.used_mrr_cycles == layer.macs

@@ -1,0 +1,162 @@
+"""LM substrate tests: per-arch smoke + numerics equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import load_all, get_config
+from repro.models import build_model
+from repro.models import ssm as ssm_mod
+from repro.models.transformer import layer_windows, GLOBAL_WINDOW
+
+jax.config.update("jax_platform_name", "cpu")
+
+ARCHS = list(load_all().keys())
+
+
+def _train_batch(r, b=2, s=32):
+    batch = {"tokens": jnp.ones((b, s), jnp.int32),
+             "labels": jnp.ones((b, s), jnp.int32)}
+    if r.n_encoder_layers:
+        batch["enc_embeds"] = jnp.full((b, s, r.d_model), 0.01, jnp.float32)
+    if r.prefix_len:
+        batch["prefix_embeds"] = jnp.full((b, r.prefix_len, r.d_model),
+                                          0.01, jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """Reduced config: one forward + backward, finite, right shapes."""
+    r = get_config(arch).reduced()
+    m = build_model(r)
+    params = m.init(jax.random.PRNGKey(0))
+    batch = _train_batch(r)
+    loss, grads = jax.jit(jax.value_and_grad(m.loss_fn))(params, batch)
+    assert np.isfinite(float(loss))
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(np.isfinite(np.asarray(l, np.float32)).all() for l in leaves)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    r = get_config(arch).reduced()
+    m = build_model(r)
+    params = m.init(jax.random.PRNGKey(0))
+    b, ctx = 2, 64
+    cache = m.init_cache(b, ctx)
+    dbatch = {"tokens": jnp.ones((b, 1), jnp.int32)}
+    if r.n_encoder_layers:
+        hd, nkv = r.resolved_head_dim, r.n_kv_heads
+        dbatch["cross_k"] = jnp.zeros((r.n_layers, b, 16, nkv, hd), r.dtype)
+        dbatch["cross_v"] = jnp.zeros((r.n_layers, b, 16, nkv, hd), r.dtype)
+    logits, cache2 = jax.jit(m.decode_fn)(params, dbatch, cache,
+                                          jnp.int32(3))
+    assert logits.shape == (b, 1, r.vocab_padded)
+    assert np.isfinite(np.asarray(logits)).all()
+    # cache was written at slot 3
+    if "k" in cache2:
+        assert not np.allclose(np.asarray(cache2["k"][:, :, 3]), 0.0)
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-2.7b",
+                                  "hymba-1.5b", "gemma2-2b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the parallel forward's logits."""
+    r = get_config(arch).reduced()
+    m = build_model(r)
+    params = m.init(jax.random.PRNGKey(1))
+    b, s = 1, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (b, s), 0, r.vocab)
+    full = m.prefill_fn(params, {"tokens": tokens})      # last-pos logits
+    cache = m.init_cache(b, s)
+    decode = jax.jit(m.decode_fn)
+    for t in range(s):
+        logits, cache = decode(params, {"tokens": tokens[:, t:t + 1]},
+                               cache, jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_ssd_chunked_equals_recurrence():
+    """Chunked SSD scan == step-by-step recurrence (the SSD identity)."""
+    r = get_config("mamba2-2.7b").reduced()
+    m = build_model(r)
+    params = m.init(jax.random.PRNGKey(3))
+    lp = jax.tree.map(lambda p: p[0], params["layers"])   # layer 0
+    b, s = 2, 24
+    x = jax.random.normal(jax.random.PRNGKey(4), (b, s, r.d_model),
+                          jnp.float32) * 0.3
+    y_par, _ = ssm_mod.ssm_apply(lp["ssm"], x, r, state=None)
+    state = ssm_mod.init_ssm_state(r, b)
+    ys = []
+    for t in range(s):
+        y_t, state = ssm_mod.ssm_apply(lp["ssm"], x[:, t:t + 1], r,
+                                       state=state)
+        ys.append(y_t)
+    y_seq = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(np.asarray(y_par, np.float32),
+                               np.asarray(y_seq, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
+def test_layer_windows_gemma2_alternation():
+    cfg = get_config("gemma2-2b")
+    w = np.asarray(layer_windows(cfg))
+    assert (w[0::2] == cfg.sliding_window).all()
+    assert (w[1::2] == int(GLOBAL_WINDOW)).all()
+
+
+def test_sliding_window_restricts_attention():
+    """A token beyond the window cannot influence the output (mixtral)."""
+    r = get_config("mixtral-8x7b").reduced()      # window 16
+    m = build_model(r)
+    params = m.init(jax.random.PRNGKey(5))
+    s = 24
+    t1 = jax.random.randint(jax.random.PRNGKey(6), (1, s), 0, r.vocab)
+    t2 = t1.at[0, 0].set((t1[0, 0] + 1) % r.vocab)   # perturb pos 0
+    l1 = m.prefill_fn(params, {"tokens": t1})
+    l2 = m.prefill_fn(params, {"tokens": t2})
+    # last position (23) only sees (7, 23]; pos 0 is outside every layer's
+    # window in this 2-layer reduced model's receptive field? NO — depth
+    # widens the receptive field (2 layers x window 16 covers pos 0), so
+    # instead check a 1-layer slice: rerun with n_layers=1.
+    import dataclasses
+    r1 = dataclasses.replace(r, n_layers=1)
+    m1 = build_model(r1)
+    p1 = m1.init(jax.random.PRNGKey(5))
+    l1 = m1.prefill_fn(p1, {"tokens": t1})
+    l2 = m1.prefill_fn(p1, {"tokens": t2})
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_qwen_qkv_bias_present():
+    r = get_config("qwen1.5-0.5b").reduced()
+    m = build_model(r)
+    params = m.init(jax.random.PRNGKey(0))
+    assert "bq" in params["layers"]["attn"]
+
+
+def test_moe_aux_loss_nonzero():
+    r = get_config("mixtral-8x7b").reduced()
+    m = build_model(r)
+    params = m.init(jax.random.PRNGKey(0))
+    loss_with = m.loss_fn(params, _train_batch(r))
+    assert np.isfinite(float(loss_with))
+
+
+def test_param_count_formula_matches_init():
+    """Analytic n_params() agrees with abstract init sizes (FULL configs).
+
+    jax.eval_shape materializes nothing, so this checks the real 314B-param
+    structures too.
+    """
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        m = build_model(cfg)
+        shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+        actual = sum(int(np.prod(l.shape)) for l in
+                     jax.tree_util.tree_leaves(shapes))
+        assert actual == pytest.approx(cfg.n_params(), rel=0.02), arch

@@ -1,0 +1,221 @@
+"""Runtime substrate tests: optimizer, compression, checkpoint, FT, data."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+from repro.optim.compression import compress_gradients, compression_init
+from repro.optim.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   clip_by_global_norm, dequantize_moment,
+                                   make_schedule, quantize_moment)
+from repro.runtime.fault_tolerance import (HeartbeatMonitor,
+                                           StragglerDetector,
+                                           plan_elastic_remesh,
+                                           run_with_restarts)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def _params():
+    k = jax.random.PRNGKey(0)
+    return {"w": jax.random.normal(k, (64, 32)),
+            "b": jnp.zeros((32,))}
+
+
+def test_adamw_reduces_quadratic_loss():
+    params = {"w": jnp.asarray([2.0, -3.0, 1.5])}
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    state = adamw_init(params)
+    loss = lambda p: jnp.sum(p["w"] ** 2)  # noqa: E731
+    for _ in range(200):
+        g = jax.grad(loss)(params)
+        params, state = adamw_update(cfg, g, state, params,
+                                     jnp.float32(0.05))
+    assert float(loss(params)) < 1e-3
+
+
+def test_quantized_adamw_tracks_float():
+    """int8-moment AdamW stays close to the f32 version."""
+    p0 = _params()
+    cfg_f = AdamWConfig(weight_decay=0.0)
+    cfg_q = AdamWConfig(weight_decay=0.0, quantized=True)
+    sf, sq = adamw_init(p0), adamw_init(p0, quantized=True)
+    pf = pq = p0
+    loss = lambda p: jnp.sum((p["w"] @ jnp.ones((32,)) - 1.0) ** 2)  # noqa
+    for _ in range(30):
+        gf = jax.grad(loss)(pf)
+        gq = jax.grad(loss)(pq)
+        pf, sf = adamw_update(cfg_f, gf, sf, pf, jnp.float32(1e-3))
+        pq, sq = adamw_update(cfg_q, gq, sq, pq, jnp.float32(1e-3))
+    rel = (np.abs(np.asarray(pf["w"]) - np.asarray(pq["w"])).max()
+           / np.abs(np.asarray(pf["w"])).max())
+    assert rel < 0.05
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 1000), n=st.integers(1, 500),
+       lead=st.integers(1, 3))
+def test_moment_quantization_roundtrip(seed, n, lead):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.normal(size=(lead, n)) * rng.uniform(0.01, 100))
+    q, s = quantize_moment(x)
+    assert q.shape[:-1] == x.shape[:-1]           # param-shaped int8 store
+    assert q.shape[-1] % 128 == 0
+    back = dequantize_moment(q, s, x.shape)
+    assert back.shape == x.shape
+    err = np.abs(np.asarray(back) - np.asarray(x))
+    scale_per_elem = np.repeat(np.asarray(s), 128, axis=-1)[..., :n]
+    assert (err <= scale_per_elem / 2 + 1e-9).all()
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((10,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(np.sqrt(1000), rel=1e-5)
+    n2 = float(jnp.linalg.norm(clipped["a"]))
+    assert n2 == pytest.approx(1.0, rel=1e-5)
+
+
+def test_schedules():
+    cos = make_schedule("cosine", 1.0, warmup=10, total=100)
+    wsd = make_schedule("wsd", 1.0, warmup=10, total=100)
+    assert float(cos(jnp.float32(0))) == 0.0
+    assert float(cos(jnp.float32(10))) == pytest.approx(1.0)
+    assert float(cos(jnp.float32(100))) == pytest.approx(0.0, abs=1e-6)
+    assert float(wsd(jnp.float32(50))) == pytest.approx(1.0)   # stable
+    assert float(wsd(jnp.float32(100))) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_gradient_compression_error_feedback():
+    """EF residual makes the compressed stream unbiased over steps."""
+    params = {"w": jnp.ones((256,))}
+    state = compression_init(params)
+    true_g = {"w": jnp.asarray(np.random.default_rng(0).normal(size=256)
+                               * 1e-3)}
+    acc = jnp.zeros((256,))
+    for _ in range(50):
+        cg, state = compress_gradients(true_g, state)
+        acc = acc + cg["w"]
+    avg = np.asarray(acc) / 50
+    np.testing.assert_allclose(avg, np.asarray(true_g["w"]),
+                               atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip():
+    tree = {"params": {"w": jnp.arange(12.0).reshape(3, 4)},
+            "step": jnp.int32(7)}
+    with tempfile.TemporaryDirectory() as d:
+        save_checkpoint(d, 5, tree, process_index=0)
+        assert latest_step(d) == 5
+        back = restore_checkpoint(d, 5, tree, process_index=0)
+        np.testing.assert_array_equal(np.asarray(back["params"]["w"]),
+                                      np.asarray(tree["params"]["w"]))
+
+
+def test_checkpoint_manager_auto_resume_and_gc():
+    tree = {"w": jnp.zeros((4,))}
+    with tempfile.TemporaryDirectory() as d:
+        mgr = CheckpointManager(d, keep=2, save_every=1)
+        for step in range(1, 6):
+            mgr.maybe_save(step, {"w": jnp.full((4,), float(step))},
+                           blocking=True)
+        step, restored = mgr.resume(tree)
+        assert step == 5
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.full((4,), 5.0))
+        kept = [n for n in os.listdir(d) if n.startswith("step_")]
+        assert len(kept) == 2
+
+
+def test_checkpoint_atomicity_no_partial_dirs():
+    with tempfile.TemporaryDirectory() as d:
+        # a stale tmp dir must be invisible to latest_step
+        os.makedirs(os.path.join(d, "step_00000009.tmp_dead"))
+        save_checkpoint(d, 3, {"w": jnp.zeros(2)}, process_index=0)
+        assert latest_step(d) == 3
+
+
+# ---------------------------------------------------------------------------
+# fault tolerance
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_monitor():
+    hb = HeartbeatMonitor(timeout_s=10.0)
+    hb.beat(0, now=100.0)
+    hb.beat(1, now=105.0)
+    assert hb.dead_hosts(now=108.0) == []
+    assert hb.dead_hosts(now=112.0) == [0]
+
+
+def test_straggler_detector():
+    sd = StragglerDetector(threshold=2.0)
+    for _ in range(10):
+        for host in range(4):
+            sd.record(host, 1.0 if host != 2 else 3.5)
+    assert sd.stragglers() == [2]
+
+
+def test_elastic_remesh_shrinks_data_axis_only():
+    plan = plan_elastic_remesh(("pod", "data", "model"), (2, 16, 16),
+                               healthy_chips=480)
+    assert plan.new_shape == (2, 8, 16)      # largest pow2 data that fits
+    assert plan.global_batch_scale == 0.5
+    plan2 = plan_elastic_remesh(("data", "model"), (16, 16),
+                                healthy_chips=255)
+    assert plan2.new_shape == (8, 16)
+
+
+def test_run_with_restarts_recovers():
+    calls = {"n": 0, "restores": 0}
+
+    def step(i):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("chip lost")
+
+    def restore():
+        calls["restores"] += 1
+        return 0
+
+    last = run_with_restarts(step, 0, 5, restore, max_restarts=2)
+    assert last == 5
+    assert calls["restores"] == 1
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_pipeline_determinism_and_restart():
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config, load_all
+    from repro.data.pipeline import SyntheticTokenPipeline
+    from repro.launch.mesh import make_host_mesh
+    load_all()
+    cfg = get_config("qwen1.5-0.5b").reduced()
+    mesh = make_host_mesh()
+    pipe = SyntheticTokenPipeline(cfg=cfg, mesh=mesh, batch_spec=P(None),
+                                  global_batch=4, seq_len=16, seed=1)
+    b1 = pipe.batch_at(3)
+    b2 = pipe.batch_at(3)       # replay after "restart"
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(b2["tokens"]))
+    b3 = pipe.batch_at(4)
+    assert not np.array_equal(np.asarray(b1["tokens"]),
+                              np.asarray(b3["tokens"]))
+    assert np.asarray(b1["tokens"]).max() < cfg.vocab

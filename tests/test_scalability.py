@@ -1,0 +1,114 @@
+"""Scalability analysis tests: paper Table II / Table IV / Figs. 4-5."""
+import math
+
+import pytest
+
+from repro.core import photonics as ph
+from repro.core import scalability as sc
+
+
+def test_table2_exact():
+    """The calibrated solver reproduces every Table II cell exactly."""
+    got = sc.table2()
+    assert got == sc.PAPER_TABLE_II
+
+
+@pytest.mark.parametrize("arch", ["MAM", "AMM", "RMAM", "RAMM"])
+def test_n_monotone_decreasing_in_precision(arch):
+    p = ph.PhotonicParams()
+    a = ph.ARCHS[arch]
+    ns = [ph.max_vdpe_size(p, a, bits, 5e9) for bits in range(1, 9)]
+    assert all(n1 >= n2 for n1, n2 in zip(ns, ns[1:]))
+
+
+@pytest.mark.parametrize("arch", ["MAM", "AMM"])
+def test_n_monotone_decreasing_in_bitrate(arch):
+    p = ph.PhotonicParams()
+    a = ph.ARCHS[arch]
+    ns = [ph.max_vdpe_size(p, a, 4, br * 1e9) for br in (1, 3, 5, 10)]
+    assert all(n1 >= n2 for n1, n2 in zip(ns, ns[1:]))
+
+
+def test_8bit_unsupportable():
+    """Paper: AMM and MAM TPCs cannot support a useful N at 8-bit."""
+    p = ph.PhotonicParams()
+    for arch in ("MAM", "AMM"):
+        assert ph.max_vdpe_size(p, ph.ARCHS[arch], 8, 10e9) == 0
+        assert ph.max_vdpe_size(p, ph.ARCHS[arch], 8, 1e9) <= 1
+
+
+def test_amm_supports_less_than_mam():
+    """AMM's longer waveguides + penalty always cost it VDPE size."""
+    p = ph.PhotonicParams()
+    for bits in (1, 2, 3, 4, 5):
+        for br in (1e9, 3e9, 5e9, 10e9):
+            assert (ph.max_vdpe_size(p, ph.AMM, bits, br)
+                    <= ph.max_vdpe_size(p, ph.MAM, bits, br))
+
+
+def test_pd_power_inverts_eq9():
+    p = ph.PhotonicParams()
+    for bits in (1, 4, 6):
+        for br in (1e9, 10e9):
+            pw = ph.pd_power_for_precision(p, bits, br)
+            assert pw is not None
+            assert ph.achievable_bits(p, pw, br) >= bits
+            assert ph.achievable_bits(p, pw * 0.98, br) < bits
+
+
+def test_comb_switch_pairs_formula():
+    """y = N >= 2x ? floor(N/x) : 0 — Table IV's CS-pair counts."""
+    assert ph.num_comb_switch_pairs(43) == 4
+    assert ph.num_comb_switch_pairs(31) == 3
+    assert ph.num_comb_switch_pairs(28) == 3
+    assert ph.num_comb_switch_pairs(22) == 2
+    assert ph.num_comb_switch_pairs(20) == 2
+    assert ph.num_comb_switch_pairs(16) == 0   # 16 < 2x = 18
+    assert ph.num_comb_switch_pairs(12) == 0
+
+
+def test_table4_radii_and_fsr():
+    """CS designs reproduce Table IV FSR/radius within 15%.
+
+    The modulator FSR implied by Table IV's rows varies between 42.7 and
+    49.9 nm (the paper designed each row separately in Lumerical); our fixed
+    FSR_MOD = 44.8 nm reproduces every row within 15% and the radius-vs-FSR
+    law R = lambda^2/(2 pi n_g FSR) with n_g = 4.36 within 3% when fed the
+    paper's own FSR values (test below).
+    """
+    for rows in sc.PAPER_TABLE_IV.values():
+        for br, (n, fsr_ref, radius_ref, y_ref) in rows.items():
+            d = ph.design_comb_switch(n)
+            assert d.y == y_ref
+            if fsr_ref is None:
+                continue
+            assert d.cs_fsr_nm == pytest.approx(fsr_ref, rel=0.15)
+            assert d.radius_um == pytest.approx(radius_ref, rel=0.15)
+
+
+def test_table4_radius_law_exact():
+    """R = lambda^2/(2 pi n_g FSR) reproduces Table IV radii from its FSRs."""
+    for rows in sc.PAPER_TABLE_IV.values():
+        for br, (n, fsr_ref, radius_ref, y_ref) in rows.items():
+            if fsr_ref is None:
+                continue
+            assert ph.comb_switch_radius_um(fsr_ref) == pytest.approx(
+                radius_ref, rel=0.03)
+
+
+def test_channel_spacing_eq12():
+    n = 43
+    delta = ph.channel_spacing_nm(n)
+    assert delta == pytest.approx(ph.FSR_MOD_NM / (n + 1))
+    assert ph.comb_switch_fsr_nm(n) == pytest.approx(n * delta / 9)
+
+
+def test_sweep_shapes():
+    pts = sc.sweep("MAM")
+    assert len(pts) == 8 * 4
+    by = {(p.precision_bits, p.bit_rate_gbps): p for p in pts}
+    assert by[(4, 1.0)].max_n == 44
+    # received power at max N stays above PD sensitivity headroom floor
+    for p in pts:
+        if p.max_n > 0:
+            assert p.received_power_dbm > -35.0

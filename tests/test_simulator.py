@@ -1,0 +1,131 @@
+"""Cycle-true simulator tests: Figs. 10-11 headline claims + invariants."""
+import math
+
+import pytest
+
+from repro.cnn.models import MODEL_ZOO, PAPER_CNNS
+from repro.core import simulator as sim
+from repro.core import tpc
+from repro.core.mapping import map_layer
+
+
+@pytest.fixture(scope="module")
+def results():
+    tables = {name: MODEL_ZOO[name]() for name in PAPER_CNNS}
+    return sim.evaluate_suite(tables)
+
+
+def _g(nf, name, br):
+    return sim.gmean(nf[name][br].values())
+
+
+def test_rmam_beats_all_at_every_bitrate(results):
+    """Fig. 10: RMAM has the best FPS of all accelerators at each BR."""
+    for br in tpc.PAPER_BIT_RATES:
+        for cnn in PAPER_CNNS:
+            best = results["RMAM"][br][cnn].fps
+            for other in ("MAM", "AMM", "CROSSLIGHT"):
+                assert best > results[other][br][cnn].fps
+
+
+def test_fig10_headline_ratios(results):
+    """RMAM@1G vs baselines (gmean): 1.8x / 17.1x / 65x in the paper.
+
+    Our mechanistic simulator reproduces the ordering and magnitudes within
+    the documented fidelity band (EXPERIMENTS.md §Fidelity): MAM ratio within
+    15%, AMM within ~2x, CROSSLIGHT within ~2x.
+    """
+    nf = sim.normalized_fps(results)
+    assert _g(nf, "MAM", 1.0) == pytest.approx(1 / 1.8, rel=0.15)
+    assert 17.1 / 2.0 < 1 / _g(nf, "AMM", 1.0) < 17.1 * 2.0
+    assert 65 / 2.0 < 1 / _g(nf, "CROSSLIGHT", 1.0) < 65 * 2.0
+
+
+def test_fig11_headline_ratios(results):
+    """FPS/W @1G (gmean): 1.5x / 27.2x / 171x in the paper."""
+    nw = sim.normalized_fps_per_watt(results)
+    assert _g(nw, "MAM", 1.0) == pytest.approx(1 / 1.5, rel=0.20)
+    assert 27.2 / 2.0 < 1 / _g(nw, "AMM", 1.0) < 27.2 * 2.0
+    assert 1 / _g(nw, "CROSSLIGHT", 1.0) == pytest.approx(171, rel=0.25)
+
+
+def test_ramm_crosslight_fps_per_watt(results):
+    """Paper: RAMM achieves 9.7x better FPS/W than CROSSLIGHT at 1 Gbps."""
+    nw = sim.normalized_fps_per_watt(results)
+    ratio = _g(nw, "RAMM", 1.0) / _g(nw, "CROSSLIGHT", 1.0)
+    assert ratio == pytest.approx(9.7, rel=0.25)
+
+
+def test_ramm_identical_mapping_to_amm_at_5g():
+    """Paper: at 5 Gbps RAMM's y = 0, so it degenerates to AMM exactly."""
+    ramm = tpc.build_accelerator("RAMM", 5.0)
+    amm = tpc.build_accelerator("AMM", 5.0)
+    assert ramm.y == 0
+    for layer in MODEL_ZOO["shufflenet_v2"]():
+        m1 = map_layer(ramm.tpc_config, layer)
+        m2 = map_layer(amm.tpc_config, layer)
+        assert m1.groups == m2.groups
+
+
+def test_reconfiguration_improves_mean_utilization(results):
+    for br in (1.0, 3.0):
+        for cnn in PAPER_CNNS:
+            assert (results["RMAM"][br][cnn].mean_utilization
+                    > results["MAM"][br][cnn].mean_utilization)
+
+
+def test_crosslight_to_tuning_dominates(results):
+    """CROSSLIGHT's 4 us thermo-optic retune makes it the slowest design."""
+    for br in tpc.PAPER_BIT_RATES:
+        for cnn in PAPER_CNNS:
+            slowest = min(results[a][br][cnn].fps for a in tpc.ACCELERATORS)
+            assert results["CROSSLIGHT"][br][cnn].fps == slowest
+
+
+def test_energy_accounting(results):
+    rep = results["RMAM"][1.0]["xception"]
+    assert rep.energy_per_frame_j > 0
+    assert rep.power_w >= rep.accelerator.power_static_w() * 0.999
+    assert rep.power_w <= rep.accelerator.power_w() * 1.001
+    assert rep.fps_per_watt == pytest.approx(1 / rep.energy_per_frame_j)
+
+
+def test_batching_amortizes_overheads():
+    layers = MODEL_ZOO["shufflenet_v2"]()
+    acc = tpc.build_accelerator("RMAM", 1.0)
+    fps1 = sim.simulate(acc, layers, batch=1).fps
+    fps8 = sim.simulate(acc, layers, batch=8).fps
+    assert fps8 > fps1
+
+
+def test_area_proportionate_counts_close_to_table8():
+    """Our transparent area model lands near Table VIII at 1 Gbps.
+
+    At 3/5 Gbps the paper's counts barely move (568 -> 547) even though its
+    own Table V ADC area grows 50x, so the paper's area spreadsheet weights
+    ADCs differently than a straight per-SE accounting; we assert the 1 Gbps
+    agreement (+-25%) and the within-family orderings, and report the full
+    model table in benchmarks/table8_bench (EXPERIMENTS.md documents the
+    residual).  The simulator itself always uses the paper's counts.
+    """
+    ours = tpc.area_proportionate_counts(1.0)
+    for name, ref in tpc.PAPER_TABLE_VIII.items():
+        if name == "CROSSLIGHT":
+            continue
+        assert ours[name] == pytest.approx(ref[1.0], rel=0.25), name
+    for br in tpc.PAPER_BIT_RATES:
+        o = tpc.area_proportionate_counts(br)
+        # reconfiguration hardware costs VDPE count at equal area (RAMM@5G
+        # has y = 0 comb switches, i.e. it *is* AMM -> equal counts)
+        ramm_y = tpc.build_accelerator("RAMM", br).y
+        assert o["RAMM"] < o["AMM"] if ramm_y else o["RAMM"] == o["AMM"]
+        assert o["RMAM"] < o["MAM"]
+
+
+def test_power_hierarchy():
+    """AMM-family provisions M x N input DACs -> higher provisioned power."""
+    for br in tpc.PAPER_BIT_RATES:
+        mam = tpc.build_accelerator("MAM", br)
+        amm = tpc.build_accelerator("AMM", br)
+        rmam = tpc.build_accelerator("RMAM", br)
+        assert amm.power_w() > rmam.power_w() > mam.power_w()

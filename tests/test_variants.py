@@ -1,0 +1,53 @@
+"""Sharding-variant tests: the §Perf levers stay wired up."""
+import jax
+import pytest
+
+from repro.configs import get_config, load_all
+from repro.launch.dryrun import VARIANTS, _pad_heads_cfg
+
+jax.config.update("jax_platform_name", "cpu")
+load_all()
+
+
+def test_variants_registry():
+    assert "baseline" in VARIANTS
+    for name in ("tp_infer", "serve_opt", "kv_ctx", "bf16_scores",
+                 "ep_pod", "pad_heads"):
+        assert name in VARIANTS
+
+
+def test_pad_heads_llava():
+    cfg = _pad_heads_cfg(get_config("llava-next-34b"))
+    assert cfg.n_heads == 64
+    assert cfg.resolved_head_dim == 128          # pinned, not 7168/64
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+
+
+def test_pad_heads_gemma2():
+    cfg = _pad_heads_cfg(get_config("gemma2-2b"))
+    assert cfg.n_heads == 16 and cfg.resolved_head_dim == 256
+
+
+def test_pad_heads_noop_when_divisible():
+    cfg = get_config("deepseek-67b")
+    assert _pad_heads_cfg(cfg) is cfg
+
+
+def test_pad_heads_rejects_gqa_mismatch():
+    with pytest.raises(ValueError):
+        _pad_heads_cfg(get_config("hymba-1.5b"))   # 25 -> 32 % kv=5 != 0
+
+
+def test_shardings_flags():
+    import dataclasses
+    from jax.sharding import PartitionSpec as P
+    from repro.launch.mesh import make_host_mesh
+    from repro.models.sharding import Shardings
+    cfg = get_config("deepseek-67b")
+    sh = Shardings(mesh=make_host_mesh(), cfg=cfg, batch=8)
+    tp = dataclasses.replace(sh, fsdp=False)
+    assert sh.w_in()[0] is not None or sh.mesh.shape["data"] == 1
+    assert tp.w_in() == P(None, "model")
+    kv = dataclasses.replace(sh, kv_ctx=True)
+    spec = kv.kv_cache(8, 128)
+    assert spec[2] == "model"                    # context dim sharded

@@ -1,0 +1,96 @@
+"""VDP numerics: slicing + psum reduction is bit-identical to direct GEMM."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.mapping import TPCConfig
+from repro.core import vdp
+
+RMAM = TPCConfig("MAM", 43, 43, True)
+RAMM = TPCConfig("AMM", 31, 31, True)
+MAM = TPCConfig("MAM", 44, 44, False)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@settings(max_examples=25, deadline=None)
+@given(s=st.integers(1, 300), p=st.integers(1, 32), f=st.integers(1, 24),
+       seed=st.integers(0, 2**31 - 1))
+def test_sliced_equals_direct(s, p, f, seed):
+    """Integer psum accumulation is exact for every slice plan."""
+    rng = np.random.default_rng(seed)
+    divs_q = jnp.asarray(rng.integers(-7, 8, (p, s)), jnp.int8)
+    dkvs_q = jnp.asarray(rng.integers(-7, 8, (f, s)), jnp.int8)
+    ref = vdp.direct_quantized_gemm(divs_q, dkvs_q)
+    for tpc in (RMAM, RAMM, MAM):
+        got = vdp.sliced_vdp_gemm(divs_q, dkvs_q, tpc)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.integers(1, 9), p=st.integers(1, 16), seed=st.integers(0, 2**31 - 1))
+def test_mode2_packing_matches_unpacked(s, p, seed):
+    """Case-3 block-diagonal packing returns each small DKV's exact VDP."""
+    y, x, n = 4, 9, 43
+    rng = np.random.default_rng(seed)
+    divs_q = jnp.asarray(rng.integers(-7, 8, (p, s)), jnp.int8)
+    dkvs_q = jnp.asarray(rng.integers(-7, 8, (y, s)), jnp.int8)
+    packed = vdp.mode2_packed_vdp(divs_q, dkvs_q, x=x, y=y, n=n)
+    ref = vdp.direct_quantized_gemm(divs_q, dkvs_q)
+    np.testing.assert_array_equal(np.asarray(packed), np.asarray(ref))
+
+
+@pytest.mark.parametrize("k,stride,padding", [(3, 1, "SAME"), (3, 2, "SAME"),
+                                              (1, 1, "SAME"), (5, 1, "VALID")])
+def test_im2col_matches_lax_conv(k, stride, padding):
+    """patch . flattened-kernel == lax conv output (float, un-quantized)."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(12, 12, 5)), jnp.float32)
+    kernels = jnp.asarray(rng.normal(size=(7, k, k, 5)), jnp.float32)
+    divs = vdp.im2col(x, k, stride, padding)
+    dkvs = vdp.dkv_matrix(kernels)
+    ours = (divs @ dkvs.T)
+    ref = vdp.conv2d_direct(x, kernels, stride, padding).reshape(-1, 7)
+    np.testing.assert_allclose(np.asarray(ours), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_vdp_exact_equivalence():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(8, 8, 16)), jnp.float32)
+    kernels = jnp.asarray(rng.normal(size=(12, 3, 3, 16)), jnp.float32)
+    for tpc in (RMAM, RAMM, MAM):
+        out_vdp, out_ref = vdp.conv2d_vdp(x, kernels, tpc)
+        np.testing.assert_array_equal(np.asarray(out_vdp), np.asarray(out_ref))
+
+
+def test_depthwise_vdp_exact_equivalence():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(8, 8, 6)), jnp.float32)
+    kernels = jnp.asarray(rng.normal(size=(6, 3, 3)), jnp.float32)
+    out_vdp, out_ref = vdp.depthwise_conv2d_vdp(x, kernels, RMAM)
+    np.testing.assert_array_equal(np.asarray(out_vdp), np.asarray(out_ref))
+
+
+def test_quantization_error_bounded():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(64, 100)), jnp.float32)
+    q, scale = vdp.quantize_symmetric(x, bits=4)
+    err = np.abs(np.asarray(q, np.float32) * np.asarray(scale) - np.asarray(x))
+    assert err.max() <= np.asarray(scale) / 2 + 1e-6
+    assert np.asarray(q).max() <= 7 and np.asarray(q).min() >= -7
+
+
+def test_noisy_vdp_statistics():
+    """Analog SE noise perturbs psums by O(1 LSB) at the design point."""
+    rng = np.random.default_rng(4)
+    divs_q = jnp.asarray(rng.integers(-7, 8, (64, 43)), jnp.int8)
+    dkvs_q = jnp.asarray(rng.integers(-7, 8, (8, 43)), jnp.int8)
+    clean = vdp.sliced_vdp_gemm(divs_q, dkvs_q, RMAM)
+    noisy = vdp.noisy_vdp_gemm(jax.random.PRNGKey(0), divs_q, dkvs_q, RMAM)
+    diff = np.abs(np.asarray(noisy) - np.asarray(clean))
+    assert diff.mean() < 4.0          # a few integer LSBs at the 4-bit point
+    assert (diff > 0).any()           # noise actually injected
