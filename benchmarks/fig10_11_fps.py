@@ -1,7 +1,23 @@
-"""Paper Figs. 10-11: area-proportionate FPS and FPS/W (normalized)."""
+"""Paper Figs. 10-11: area-proportionate FPS and FPS/W (normalized).
+
+Also times the full evaluate_suite sweep (4 paper CNNs x 5 accelerators x
+paper bit rates) cold and warm — the memoized map_layer/simulate_layer
+caches are what make the warm pass cheap — and records both in
+``BENCH_fps.json`` (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
 from repro.cnn.models import MODEL_ZOO, PAPER_CNNS
+from repro.core import mapping
 from repro.core import simulator as sim
 from repro.core import tpc
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_fps.json"
 
 PAPER_GMEANS = {  # RMAM@1G vs X@1G: (FPS ratio, FPS/W ratio)
     "MAM": (1.8, 1.5), "AMM": (17.1, 27.2), "CROSSLIGHT": (65.0, 171.0),
@@ -10,7 +26,19 @@ PAPER_GMEANS = {  # RMAM@1G vs X@1G: (FPS ratio, FPS/W ratio)
 
 def run() -> None:
     tables = {n: MODEL_ZOO[n]() for n in PAPER_CNNS}
+    # cold: no memoized mappings/schedules at all
+    mapping.map_layer.cache_clear()
+    sim.simulate_layer.cache_clear()
+    t0 = time.perf_counter()
     res = sim.evaluate_suite(tables)
+    cold_s = time.perf_counter() - t0
+    map_info = mapping.map_layer.cache_info()
+    layer_info = sim.simulate_layer.cache_info()
+    # warm: every (accelerator, layer) schedule is already cached
+    t0 = time.perf_counter()
+    sim.evaluate_suite(tables)
+    warm_s = time.perf_counter() - t0
+
     nf = sim.normalized_fps(res)
     nw = sim.normalized_fps_per_watt(res)
     for name in tpc.ACCELERATORS:
@@ -19,12 +47,32 @@ def run() -> None:
                 print(f"fig10,{name}@{br:g}Gbps,{cnn},"
                       f"norm_fps={nf[name][br][cnn]:.4f},"
                       f"norm_fps_w={nw[name][br][cnn]:.4f}")
+    gmeans = {}
     for other, (f_ref, w_ref) in PAPER_GMEANS.items():
         f = 1 / sim.gmean(nf[other][1.0].values())
         w = 1 / sim.gmean(nw[other][1.0].values())
+        gmeans[other] = {"fps_ratio": f, "fps_ratio_paper": f_ref,
+                         "fpsw_ratio": w, "fpsw_ratio_paper": w_ref}
         print(f"fig10_gmean,RMAM_vs_{other}@1Gbps,"
               f"fps_ratio={f:.2f}(paper {f_ref}),"
               f"fpsw_ratio={w:.2f}(paper {w_ref})")
     ra_f = sim.gmean(nf["RAMM"][1.0].values()) / sim.gmean(
         nf["AMM"][1.0].values())
     print(f"fig10_gmean,RAMM_vs_AMM@1Gbps,fps_ratio={ra_f:.2f}(paper 1.54)")
+
+    OUT_PATH.write_text(json.dumps({
+        "suite": {"cnns": list(PAPER_CNNS),
+                  "accelerators": list(tpc.ACCELERATORS),
+                  "bit_rates": list(tpc.PAPER_BIT_RATES)},
+        "evaluate_suite_cold_s": cold_s,
+        "evaluate_suite_warm_s": warm_s,
+        "map_layer_cache": {"hits": map_info.hits,
+                            "misses": map_info.misses},
+        "simulate_layer_cache": {"hits": layer_info.hits,
+                                 "misses": layer_info.misses},
+        "gmeans_vs_rmam_1g": gmeans,
+        "ramm_vs_amm_fps_ratio_1g": ra_f,
+    }, indent=2) + "\n")
+    print(f"fig10_11,eval_suite_cold_s,{cold_s:.3f}")
+    print(f"fig10_11,eval_suite_warm_s,{warm_s:.3f}")
+    print(f"fig10_11,json,{OUT_PATH}")

@@ -1,38 +1,102 @@
 """Pallas kernel micro-bench (interpret mode on CPU): Mode 1 vs Mode 2.
 
 Wall-times in interpret mode are NOT TPU times — the derived metric that
-matters is the MXU-pass and HBM-traffic model: Mode-2 packing turns y
-small-S contractions into one 128-lane pass and divides input HBM reads
-by y (EXPERIMENTS.md §Perf discusses the structural win).
+matters is the MXU-pass and HBM-traffic model: the zero-skipping Mode-2
+kernel contracts x deep instead of y*x deep and holds 1/y of the RHS
+(EXPERIMENTS.md §Perf discusses the structural win and the measurement
+method).  Timings take a warmup iteration first (trace+compile excluded)
+and block_until_ready around every measured call; results land in
+``BENCH_kernels.json`` at the repo root as the measured-perf trajectory.
 """
+from __future__ import annotations
+
+import json
 import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels import ops
+from repro.kernels import ops, ref
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_kernels.json"
+
+WARMUP = 1
+ITERS = 5
+
+
+def _time(fn, *args, **kwargs) -> float:
+    """Best-of-ITERS wall seconds, post-warmup, synchronized."""
+    for _ in range(WARMUP):
+        jax.block_until_ready(fn(*args, **kwargs))
+    best = float("inf")
+    for _ in range(ITERS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def run() -> None:
     rng = np.random.default_rng(0)
-    p, f = 256, 128
+    # large enough that contraction work (not interpret-loop overhead)
+    # dominates: the zero-skipping win is the x vs y*x contraction depth
+    p, f = 1024, 512
+    y = ops.N_TPU // ops.X_TPU
+    results: dict = {"p": p, "f": f, "x": ops.X_TPU, "y": y, "shapes": {}}
     for s in (9, 25, 32):
         divs = jnp.asarray(rng.integers(-7, 8, (p, s)), jnp.int8)
         dkvs = jnp.asarray(rng.integers(-7, 8, (f, s)), jnp.int8)
-        y = ops.N_TPU // ops.X_TPU
         # structural model: MXU passes and HBM bytes per output tile
         passes_m1 = -(-s // ops.N_TPU) * f
         passes_m2 = -(-s // ops.X_TPU) * -(-f // y)
         bytes_m1 = p * ops.N_TPU            # padded dense lhs reads
         bytes_m2 = p * ops.X_TPU            # packed lhs read once
-        t0 = time.monotonic()
-        out2 = ops.mode2_gemm(divs, dkvs, ops.X_TPU, y, interpret=True)
-        t2 = time.monotonic() - t0
-        t0 = time.monotonic()
-        out1 = ops.mode1_gemm(divs, dkvs, interpret=True)
-        t1 = time.monotonic() - t0
-        assert np.array_equal(np.asarray(out1), np.asarray(out2))
-        print(f"kernel,S={s},mxu_pass_ratio={passes_m1 / passes_m2:.2f},"
-              f"lhs_hbm_ratio={bytes_m1 / bytes_m2:.2f},"
-              f"interp_s_mode1={t1:.3f},interp_s_mode2={t2:.3f}")
+
+        # the pre-PR block-diagonal kernel (now the oracle in ref.py)
+        pp = -(-p // 128) * 128
+        lhs_pad = jnp.pad(divs, ((0, pp - p), (0, ops.X_TPU - s)))
+        rhs_bd = ops.pack_mode2_weights(dkvs, ops.X_TPU, y)  # f=128 aligned
+        t_bd = _time(ref.vdpe_pack_gemm_blockdiag, lhs_pad, rhs_bd, y,
+                     interpret=True)
+        t_zs = _time(ops.mode2_gemm, divs, dkvs, ops.X_TPU, y,
+                     interpret=True)
+        t_m1 = _time(ops.mode1_gemm, divs, dkvs, interpret=True)
+        # fused epilogue vs unfused + separate dequant/bias/relu
+        scale = jnp.float32(0.01)
+        bias = jnp.asarray(rng.normal(size=(f,)), jnp.float32)
+        t_fused = _time(ops.mode2_gemm, divs, dkvs, ops.X_TPU, y,
+                        interpret=True, scale=scale, bias=bias, act="relu")
+
+        def unfused(divs, dkvs, scale, bias):
+            acc = ops.mode2_gemm(divs, dkvs, ops.X_TPU, y, interpret=True)
+            return ref.epilogue_ref(acc, scale, bias[None, :], "relu")
+
+        t_unfused = _time(unfused, divs, dkvs, scale, bias)
+
+        out_zs = ops.mode2_gemm(divs, dkvs, ops.X_TPU, y, interpret=True)
+        out_bd = ref.vdpe_pack_gemm_blockdiag(lhs_pad, rhs_bd, y,
+                                              interpret=True)[:p, :f]
+        assert np.array_equal(np.asarray(out_zs), np.asarray(out_bd))
+
+        row = {
+            "mxu_pass_ratio": passes_m1 / passes_m2,
+            "lhs_hbm_ratio": bytes_m1 / bytes_m2,
+            "contraction_depth_zs": ops.X_TPU,
+            "contraction_depth_blockdiag": y * ops.X_TPU,
+            "mode2_zs_s": t_zs,
+            "mode2_blockdiag_s": t_bd,
+            "mode1_s": t_m1,
+            "mode2_fused_epilogue_s": t_fused,
+            "mode2_unfused_epilogue_s": t_unfused,
+        }
+        results["shapes"][f"S={s}"] = row
+        print(f"kernel,S={s},mxu_pass_ratio={row['mxu_pass_ratio']:.2f},"
+              f"lhs_hbm_ratio={row['lhs_hbm_ratio']:.2f},"
+              f"zs_s={t_zs:.4f},blockdiag_s={t_bd:.4f},mode1_s={t_m1:.4f},"
+              f"fused_s={t_fused:.4f},unfused_s={t_unfused:.4f},"
+              f"zs_speedup_vs_blockdiag={t_bd / t_zs:.2f}x")
+    OUT_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    print(f"kernel_bench,json,{OUT_PATH}")

@@ -2,7 +2,11 @@
 decomposed-VDP numerics AND the cycle-true accelerator model.
 
 Functional path: 4-bit quantize -> im2col DIVs -> sliced VDPs on the RMAM
-TPC -> psum reduction (bit-exact vs direct quantized conv); performance
+TPC -> psum reduction (bit-exact vs direct quantized conv); then the same
+network through the weight-stationary engine (repro.engine): weights are
+quantized + packed ONCE into a cached plan — the paper's one-time DKV
+imprint — and forward runs the Pallas kernels with the dequant/ReLU
+epilogue fused, producing bit-identical outputs.  Finally the performance
 path: the same layers scheduled on the area-proportionate accelerators.
 
 Run:  PYTHONPATH=src python examples/photonic_cnn_inference.py
@@ -15,6 +19,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
+from repro.cnn.layers import ConvKind
 from repro.cnn.layers import dc as dc_spec, pc as pc_spec, sc as sc_spec
 from repro.core import simulator as sim
 from repro.core import tpc, vdp
@@ -44,6 +50,22 @@ out, ref = vdp.conv2d_vdp(h, pw, RMAM_TPC)
 assert jnp.array_equal(out, ref)
 h = jax.nn.relu(out)
 print(f"  PC        1x1x8 x16  -> {h.shape}, bit-exact: True")
+
+print("\n== weight-stationary engine: pack once, fused epilogue ==")
+layer_defs = [
+    engine.LayerDef("stem", ConvKind.SC, stem, act="relu"),
+    engine.LayerDef("dc1", ConvKind.DC, dw, act="relu"),
+    engine.LayerDef("pc1", ConvKind.PC, pw, act="relu"),
+]
+plan = engine.get_plan("micro_cnn", layer_defs)
+out_engine = engine.forward(plan, x)
+assert jnp.array_equal(out_engine, h), "engine != eager VDP path"
+census = {"mode1": plan.mode_census.get(engine.MODE_DENSE, 0),
+          "mode2": plan.mode_census.get(engine.MODE_PACKED, 0),
+          "depthwise": plan.mode_census.get(engine.MODE_DEPTHWISE, 0)}
+print(f"  plan: {census}, bit-exact vs eager path: True")
+assert engine.get_plan("micro_cnn", layer_defs) is plan  # imprinted once
+print(f"  plan cache: {engine.plan_cache_info()}")
 
 print("\n== analog-noise ablation (Eq. 9/10 PD noise at the SEs) ==")
 divs = vdp.im2col(x, 3, 1, "SAME")

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+import functools
 from typing import Iterable, List
 
 
@@ -37,6 +38,16 @@ class LayerSpec:
     f: int            # number of kernel tensors F (output channels / units)
     h_out: int        # output height
     w_out: int        # output width
+
+    def canonical(self) -> "LayerSpec":
+        """Shape identity: this spec with the name dropped.
+
+        Two layers with equal (kind, K, D, F, H_out, W_out) map and
+        schedule identically; the mapping/simulator memo caches key on the
+        canonical spec so e.g. Xception's 8 identical middle-flow blocks
+        share one entry.
+        """
+        return _canonical_spec(self)
 
     @property
     def dkv_size(self) -> int:
@@ -71,6 +82,11 @@ class LayerSpec:
     def weight_points(self) -> int:
         """Eq. 1 / Eq. 3 weight memory footprint in points."""
         return self.f * self.dkv_size
+
+
+@functools.lru_cache(maxsize=65536)
+def _canonical_spec(spec: LayerSpec) -> LayerSpec:
+    return dataclasses.replace(spec, name="")
 
 
 def sc(name: str, k: int, d: int, f: int, h_out: int, w_out: int) -> LayerSpec:

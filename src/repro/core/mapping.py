@@ -46,6 +46,7 @@ block and DIV path, so this needs no new hardware paths).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import List
 
@@ -150,6 +151,19 @@ def slice_plan(tpc: TPCConfig, s: int) -> List[tuple]:
 
 
 def map_layer(tpc: TPCConfig, layer: LayerSpec) -> LayerMapping:
+    """Map one layer onto one TPC operating point.
+
+    Memoized on (TPCConfig, LayerSpec.canonical()): the mapping depends
+    only on the operating point and the layer's shape, and the Figs. 10-11
+    sweep re-maps identical pairs len(bit_rates) x len(repeated shapes)
+    times otherwise.  The returned LayerMapping is shared — treat it as
+    immutable (its embedded spec is the nameless canonical one).
+    """
+    return _map_layer_cached(tpc, layer.canonical())
+
+
+@functools.lru_cache(maxsize=65536)
+def _map_layer_cached(tpc: TPCConfig, layer: LayerSpec) -> LayerMapping:
     s = layer.dkv_size
     case = select_case(tpc, s)
     ent = layer.n_entities
@@ -191,6 +205,11 @@ def map_layer(tpc: TPCConfig, layer: LayerSpec) -> LayerMapping:
         ))
     return LayerMapping(layer=layer, case=case, groups=groups,
                         used_mrr_cycles=used, active_mrr_cycles=active)
+
+
+# cache controls surface on the public entry point
+map_layer.cache_info = _map_layer_cached.cache_info
+map_layer.cache_clear = _map_layer_cached.cache_clear
 
 
 def vdpe_utilization_for_s(tpc: TPCConfig, s: int) -> float:

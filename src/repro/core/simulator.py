@@ -26,8 +26,11 @@ frame, matching the paper's static-amortization argument.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict, Iterable, List, Sequence
+
+import numpy as np
 
 from ..cnn.layers import LayerSpec
 from . import tpc as tpc_mod
@@ -91,24 +94,45 @@ def simulate_layer(acc: AcceleratorConfig, layer: LayerSpec,
                    batch: int = 1,
                    supply_points_per_ns: float = SUPPLY_POINTS_PER_NS,
                    ) -> LayerReport:
+    """Schedule one layer's pass groups; vectorized over groups + memoized.
+
+    Memoized on (AcceleratorConfig, LayerSpec.canonical(), batch, supply):
+    the paper CNNs repeat layer shapes heavily (e.g. Xception's 8 identical
+    middle-flow blocks), so the Figs. 10-11 sweep hits this cache far more
+    often than it misses.  The returned LayerReport is shared — treat it as
+    immutable.
+    """
+    return _simulate_layer_cached(acc, layer.canonical(), batch,
+                                  supply_points_per_ns)
+
+
+@functools.lru_cache(maxsize=65536)
+def _simulate_layer_cached(acc: AcceleratorConfig, layer: LayerSpec,
+                           batch: int,
+                           supply_points_per_ns: float) -> LayerReport:
     mapping = map_layer(acc.tpc_config, layer)
     overhead = acc.weight_load_latency_s + TIA_LATENCY
-    time_s = 0.0
-    rounds = 0
-    samples = 0
-    for g in mapping.groups:
-        g_rounds = math.ceil(max(g.passes / acc.n_tpc, 1.0))
-        cycles = g.passes * g.stream_cycles * batch
-        t_compute = cycles * acc.cycle_time_s / acc.n_tpc
-        t_supply = cycles * g.supply_points / supply_points_per_ns * 1e-9
-        time_s += g_rounds * overhead + max(t_compute, t_supply)
-        rounds += g_rounds
-        samples += cycles * g.supply_points
+    groups = mapping.groups
+    passes = np.array([g.passes for g in groups], np.float64)
+    stream = np.array([g.stream_cycles for g in groups], np.float64)
+    supply = np.array([g.supply_points for g in groups], np.float64)
+    g_rounds = np.ceil(np.maximum(passes / acc.n_tpc, 1.0))
+    cycles = passes * stream * batch
+    t_compute = cycles * (acc.cycle_time_s / acc.n_tpc)
+    t_supply = cycles * supply / supply_points_per_ns * 1e-9
     post = (REDUCTION_LATENCY * math.ceil(math.log2(max(mapping.n_chunks, 2)))
             + ACTIVATION_LATENCY + POOL_LATENCY)
-    time_s += post
-    return LayerReport(mapping=mapping, rounds=rounds, time_s=time_s,
-                       div_samples=samples, utilization=mapping.utilization)
+    time_s = float((g_rounds * overhead
+                    + np.maximum(t_compute, t_supply)).sum()) + post
+    return LayerReport(mapping=mapping, rounds=int(g_rounds.sum()),
+                       time_s=time_s,
+                       div_samples=int((cycles * supply).sum()),
+                       utilization=mapping.utilization)
+
+
+# cache controls surface on the public entry point
+simulate_layer.cache_info = _simulate_layer_cached.cache_info
+simulate_layer.cache_clear = _simulate_layer_cached.cache_clear
 
 
 def simulate(acc: AcceleratorConfig, layers: Sequence[LayerSpec],

@@ -1,0 +1,11 @@
+"""Weight-stationary execution engine (the paper's pack-once DKV imprint).
+
+compile once (plan.py) -> run forever (executor.py), with the dequant/bias/
+activation epilogue fused into the Pallas kernels (kernels/vdpe_gemm.py;
+eager oracle: kernels/ref.epilogue_ref).
+"""
+from .executor import forward, forward_layer  # noqa: F401
+from .plan import (DEFAULT_POINT, EnginePoint, LayerDef, LayerPlan,  # noqa: F401
+                   MODE_DENSE, MODE_DEPTHWISE, MODE_PACKED, ModelPlan,
+                   compile_layer, compile_model, get_plan,
+                   plan_cache_clear, plan_cache_info)

@@ -1,0 +1,114 @@
+"""Forward execution of pre-packed weight-stationary plans.
+
+The per-call work is exactly what the hardware pays per frame: im2col the
+activations (the DIV stream), quantize them (the input DACs), and stream
+them against the resident DKV state.  Weight-side padding/packing happened
+once at plan compile time; the dequant-scale + bias + activation epilogue
+is fused into the Pallas kernels, so the int32 accumulators never
+round-trip HBM.
+
+Numerics: the integer accumulation is bit-identical to the eager oracle
+(quantize -> direct int32 GEMM) — the same invariant core/vdp.py
+establishes for the sliced VDP path — and the fused f32 epilogue matches
+the unfused reference exactly for bias-free layers, to one ulp otherwise
+(XLA contracts acc*scale + bias into an FMA inside the kernel).
+tests/test_engine.py checks this across the paper CNNs' layer shapes.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..cnn.layers import ConvKind
+from ..core import vdp
+from ..kernels import ops, ref
+from ..kernels import vdpe_gemm as kern
+from .plan import (LayerPlan, MODE_DENSE, MODE_DEPTHWISE, MODE_PACKED,
+                   ModelPlan)
+
+
+def _round_up(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+def _quantize_acts(x: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    return vdp.quantize_symmetric(x, bits)
+
+
+def _forward_depthwise(lp: LayerPlan, x: jax.Array, point,
+                       interpret: bool) -> jax.Array:
+    """Per-channel S=K*K contractions as ONE batched integer contraction.
+
+    Depthwise kernels pair channel c's patches with channel c's single DKV
+    row, so the GEMM degenerates to a (P, KK, D) x (D, KK) -> (P, D)
+    batched dot — the VPU path.  Quantization is per channel on both sides
+    (each channel is an independent VDP), matching
+    core/vdp.depthwise_conv2d_vdp bit-for-bit.
+    """
+    del interpret
+    h, w, d = x.shape
+    k = lp.k
+    qmax = 2 ** (point.bits - 1) - 1
+    divs = vdp.im2col(x, k, lp.stride, lp.padding)        # (P, K*K*D)
+    p = divs.shape[0]
+    divs = divs.reshape(p, k * k, d)
+    a_scale = jnp.maximum(jnp.max(jnp.abs(divs), axis=(0, 1)), 1e-12) / qmax
+    divs_q = jnp.clip(jnp.round(divs / a_scale[None, None, :]),
+                      -qmax, qmax).astype(jnp.int8)
+    acc = jnp.einsum("pkc,ck->pc", divs_q.astype(jnp.int32),
+                     lp.rhs.astype(jnp.int32))
+    r = ref.epilogue_ref(acc, (a_scale * lp.w_scale)[None, :],
+                         None if lp.bias is None else lp.bias[None, :],
+                         lp.act)
+    ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
+    return r.reshape(ho, wo, d)
+
+
+def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """One layer through its pre-packed kernel with the fused epilogue."""
+    if interpret is None:
+        interpret = ops.default_interpret()
+    point = plan.point
+    if lp.mode == MODE_DEPTHWISE:
+        return _forward_depthwise(lp, x, point, interpret)
+
+    if lp.kind is ConvKind.FC:
+        divs = x.reshape(1, -1) if x.ndim != 2 else x
+        spatial = None
+    else:
+        divs = vdp.im2col(x, lp.k, lp.stride, lp.padding)
+        spatial = vdp.out_hw(x.shape[0], x.shape[1], lp.k, lp.stride,
+                             lp.padding)
+    assert divs.shape[1] == lp.s, (divs.shape, lp.s)
+    divs_q, a_scale = _quantize_acts(divs, point.bits)
+    scale = a_scale * lp.w_scale
+    p = divs_q.shape[0]
+    pp = _round_up(p, point.block_b)
+    if lp.mode == MODE_PACKED:
+        lhs = jnp.pad(divs_q, ((0, pp - p), (0, point.x - lp.s)))
+        out = kern.vdpe_pack_gemm_zs(
+            lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
+            interpret=interpret, scale=scale, bias=lp.bias, act=lp.act)
+    else:
+        assert lp.mode == MODE_DENSE
+        ss = lp.rhs.shape[0]
+        lhs = jnp.pad(divs_q, ((0, pp - p), (0, ss - lp.s)))
+        out = kern.vdpe_gemm(
+            lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
+            block_k=point.block_k, interpret=interpret,
+            scale=scale, bias=lp.bias, act=lp.act)
+    out = out[:p, :lp.f]
+    if spatial is not None:
+        out = out.reshape(*spatial, lp.f)
+    return out
+
+
+def forward(plan: ModelPlan, x: jax.Array,
+            interpret: bool | None = None) -> jax.Array:
+    """Run activations through every layer of a compiled plan."""
+    for lp in plan.layers:
+        x = forward_layer(plan, lp, x, interpret=interpret)
+    return x

@@ -1,0 +1,224 @@
+"""Weight-stationary execution plans: compile a model ONCE, run it forever.
+
+The paper's core economics are weight-stationary: DKVs are imprinted onto
+the MRRs once and amortized over an entire position stream (Section VI-A).
+The eager kernel wrappers (kernels/ops.py) betray that — every
+`mixed_size_gemm` call re-pads the DKV matrix to MXU tiles or re-packs the
+Mode-2 operand from scratch.  This module is the one-time DKV imprint:
+
+    compile_model(name, layer_defs)  ->  ModelPlan
+
+quantizes each layer's weights, routes it to Mode 1 / Mode 2 / the
+depthwise VPU path, and materializes the *exact* operand the kernel wants
+(Mode-1 tiles padded to MXU blocks, Mode-2 segment-sum packs, padded f32
+bias rows).  Forward calls (engine/executor.py) never touch `jnp.pad` or
+`pack_mode2_weights` on the weight side again.
+
+Plans are memoized by (model key, operating point) in `get_plan`, mirroring
+how a deployed TPC keeps a model's DKVs resident across requests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..cnn.layers import ConvKind
+from ..kernels import ops
+from ..kernels import vdpe_gemm as kern
+from ..kernels.vdpe_gemm import ACTIVATIONS
+
+
+@dataclasses.dataclass(frozen=True)
+class EnginePoint:
+    """The TPU operating point a plan is compiled for (the paper's (N, x))."""
+    n: int = ops.N_TPU            # MXU contraction-lane budget
+    x: int = ops.X_TPU            # Mode-2 re-aggregation segment width
+    block_b: int = kern.BLOCK_B
+    block_o: int = kern.BLOCK_O
+    block_k: int = kern.BLOCK_K
+    bits: int = 4                 # paper Section III-B quantization
+
+
+DEFAULT_POINT = EnginePoint()
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerDef:
+    """One layer's weights + epilogue, the compiler's input.
+
+    weights: SC/PC (F, K, K, D) — K=1 for PC; FC (F, D); DC (D, K, K).
+    """
+    name: str
+    kind: ConvKind
+    weights: jax.Array
+    bias: Optional[jax.Array] = None
+    act: str = "none"
+    stride: int = 1
+    padding: str = "SAME"
+
+    def __post_init__(self) -> None:
+        assert self.act in ACTIVATIONS, self.act
+
+
+#: LayerPlan.mode values: paper Mode 1 / Mode 2, plus the depthwise VPU path
+#: (per-channel S=K*K contractions — one kernel row per channel, executed as
+#: a single batched integer contraction rather than F separate GEMMs).
+MODE_DENSE, MODE_PACKED, MODE_DEPTHWISE = 1, 2, 0
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerPlan:
+    """One layer, pre-packed for its kernel — the imprinted DKV state."""
+    name: str
+    kind: ConvKind
+    mode: int                 # MODE_DENSE | MODE_PACKED | MODE_DEPTHWISE
+    k: int                    # spatial kernel size (1 for PC/FC)
+    stride: int
+    padding: str
+    s: int                    # true contraction length S = K*K*D
+    f: int                    # true output channels/units
+    rhs: jax.Array            # packed int8 weights: mode1 (S_pad, F_pad),
+                              # mode2 (x, F_pad), depthwise (D, K*K)
+    w_scale: jax.Array        # () dequant scale; (D,) for depthwise
+    bias: Optional[jax.Array]  # (1, F_pad) f32; (D,) for depthwise
+    act: str
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelPlan:
+    name: str
+    point: EnginePoint
+    layers: Tuple[LayerPlan, ...]
+
+    @property
+    def mode_census(self) -> Dict[int, int]:
+        out: Dict[int, int] = {}
+        for l in self.layers:
+            out[l.mode] = out.get(l.mode, 0) + 1
+        return out
+
+
+def _round_up(v: int, mult: int) -> int:
+    return (v + mult - 1) // mult * mult
+
+
+def _quantize_rows(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    """Per-row symmetric quantization (depthwise: one scale per channel)."""
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-12) / qmax
+    q = jnp.clip(jnp.round(w / scale[:, None]), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def _quantize_tensor(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def compile_layer(ld: LayerDef, point: EnginePoint = DEFAULT_POINT,
+                  ) -> LayerPlan:
+    """Quantize + route + pack one layer (the per-layer DKV imprint)."""
+    if ld.kind is ConvKind.DC:
+        d, k, _ = ld.weights.shape
+        dkvs = ld.weights.reshape(d, k * k)
+        # per-channel scales: each channel is its own VDP with its own DAC
+        # swing, matching core/vdp.depthwise_conv2d_vdp bit-for-bit
+        dkvs_q, w_scale = _quantize_rows(dkvs, point.bits)
+        bias = None
+        if ld.bias is not None:
+            bias = jnp.asarray(ld.bias, jnp.float32).reshape(d)
+        return LayerPlan(name=ld.name, kind=ld.kind, mode=MODE_DEPTHWISE,
+                         k=k, stride=ld.stride, padding=ld.padding,
+                         s=k * k, f=d, rhs=dkvs_q, w_scale=w_scale,
+                         bias=bias, act=ld.act)
+
+    if ld.kind is ConvKind.FC:
+        f, s = ld.weights.shape
+        dkvs = ld.weights
+        k = 1
+    else:                                   # SC / PC: (F, K, K, D)
+        f = ld.weights.shape[0]
+        k = ld.weights.shape[1]
+        dkvs = ld.weights.reshape(f, -1)
+        s = dkvs.shape[1]
+    dkvs_q, w_scale = _quantize_tensor(dkvs, point.bits)
+    ff = _round_up(f, point.block_o)
+    bias = None
+    if ld.bias is not None:
+        bias = jnp.pad(jnp.asarray(ld.bias, jnp.float32).reshape(1, f),
+                       ((0, 0), (0, ff - f)))
+    if s <= point.x:
+        mode = MODE_PACKED
+        rhs = jnp.pad(ops.pack_mode2_segments(dkvs_q, point.x),
+                      ((0, 0), (0, ff - f)))
+    else:
+        mode = MODE_DENSE
+        ss = _round_up(s, point.block_k)
+        rhs = jnp.pad(dkvs_q.T, ((0, ss - s), (0, ff - f)))
+    return LayerPlan(name=ld.name, kind=ld.kind, mode=mode, k=k,
+                     stride=ld.stride, padding=ld.padding, s=s, f=f,
+                     rhs=rhs, w_scale=w_scale, bias=bias, act=ld.act)
+
+
+def compile_model(name: str, layer_defs: Sequence[LayerDef],
+                  point: EnginePoint = DEFAULT_POINT) -> ModelPlan:
+    """Compile a whole model's pack-once plan (no caching — see get_plan)."""
+    return ModelPlan(name=name, point=point,
+                     layers=tuple(compile_layer(ld, point)
+                                  for ld in layer_defs))
+
+
+# ---------------------------------------------------------------------------
+# Plan cache: one imprint per (model, operating point)
+# ---------------------------------------------------------------------------
+
+_PLAN_CACHE: Dict[Tuple[str, EnginePoint], Tuple[tuple, ModelPlan]] = {}
+_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _defs_fingerprint(layer_defs: Sequence[LayerDef]) -> tuple:
+    """Cheap structural identity of a model's defs (no weight hashing)."""
+    return tuple((ld.name, ld.kind, tuple(ld.weights.shape),
+                  ld.bias is not None, ld.act, ld.stride, ld.padding)
+                 for ld in layer_defs)
+
+
+def get_plan(name: str, layer_defs: Sequence[LayerDef],
+             point: EnginePoint = DEFAULT_POINT) -> ModelPlan:
+    """Memoized compile: same (model key, operating point) -> same plan.
+
+    ``name`` is the cache identity — callers must use distinct keys for
+    distinct weight sets, exactly as a serving runtime keys its loaded
+    checkpoints.  A structural fingerprint of the defs guards the obvious
+    misuse (same key, different architecture) — weight *values* are not
+    hashed, so reusing a key for retrained weights of identical shape is
+    still on the caller.
+    """
+    key = (name, point)
+    fp = _defs_fingerprint(layer_defs)
+    cached = _PLAN_CACHE.get(key)
+    if cached is not None:
+        cached_fp, plan = cached
+        assert cached_fp == fp, (
+            f"plan cache key {name!r} reused for a structurally different "
+            f"model; use a distinct model key per weight set")
+        _CACHE_STATS["hits"] += 1
+        return plan
+    _CACHE_STATS["misses"] += 1
+    plan = compile_model(name, layer_defs, point)
+    _PLAN_CACHE[key] = (fp, plan)
+    return plan
+
+
+def plan_cache_info() -> Dict[str, int]:
+    return dict(_CACHE_STATS, size=len(_PLAN_CACHE))
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+    _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0

@@ -2,10 +2,13 @@
 
 `mixed_size_gemm` is the public entry point the framework layers use: given
 a DIV matrix and a DKV matrix of arbitrary contraction size S, it routes to
-the Mode-1 K-blocked kernel (S >= the MXU lane budget) or the Mode-2
-block-diagonal packed kernel (small S), exactly mirroring the paper's
+the Mode-1 K-blocked kernel (S >= the MXU lane budget) or the zero-skipping
+Mode-2 segment-sum kernel (small S), exactly mirroring the paper's
 Case-1/2/3 selection with N = 128 lanes and x = the natural small-tensor
-width.  ref.py holds the pure-jnp oracles.
+width.  All paths take an optional fused epilogue (dequant scale, bias,
+ReLU/ReLU6).  ref.py holds the oracles, including the historical
+block-diagonal Mode-2 kernel.  For the pack-once weight-stationary path
+that skips the per-call padding/packing done here, see repro.engine.
 """
 from __future__ import annotations
 
@@ -60,31 +63,67 @@ def pack_mode2_weights(dkvs: jax.Array, x: int, y: int) -> jax.Array:
     return jnp.where(mask, vals, jnp.zeros_like(vals))
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+def pack_mode2_segments(dkvs: jax.Array, x: int) -> jax.Array:
+    """Pack (F, s<=x) small DKVs into the dense (x, F) segment-sum.
+
+    The zero-skipping Mode-2 operand: because `pack_mode2_weights` assigns
+    column f to lane-segment f mod y and segments are therefore
+    column-disjoint, summing the y row-segments of the block-diagonal pack
+    loses nothing — column f simply carries kernel f's weights at their
+    natural offset.  1/y the footprint, and the kernel contracts x deep
+    instead of y*x deep.
+    """
+    f, s = dkvs.shape
+    assert s <= x, (s, x)
+    return jnp.pad(dkvs, ((0, 0), (0, x - s))).T
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "act"))
 def mode1_gemm(divs_q: jax.Array, dkvs_q: jax.Array,
-               interpret: bool = True) -> jax.Array:
-    """Mode-1 path: (P, S) x (F, S) -> (P, F) int32, padded to MXU tiles."""
+               interpret: bool = True,
+               scale: jax.Array | None = None,
+               bias: jax.Array | None = None,
+               act: str = "none") -> jax.Array:
+    """Mode-1 path: (P, S) x (F, S) -> (P, F), padded to MXU tiles.
+
+    int32 without ``scale``; f32 with the fused `act(acc*scale+bias)`
+    epilogue.
+    """
     p, s = divs_q.shape
     f, _ = dkvs_q.shape
     pp, ss, ff = _round_up(p, k.BLOCK_B), _round_up(s, k.BLOCK_K), \
         _round_up(f, k.BLOCK_O)
     lhs = _pad_to(divs_q, pp, ss)
     rhs = _pad_to(dkvs_q.T, ss, ff)
-    out = k.vdpe_gemm(lhs, rhs, interpret=interpret)
+    if bias is not None:
+        bias = jnp.pad(bias.reshape(1, -1), ((0, 0), (0, ff - f)))
+    out = k.vdpe_gemm(lhs, rhs, interpret=interpret,
+                      scale=scale, bias=bias, act=act)
     return out[:p, :f]
 
 
-@functools.partial(jax.jit, static_argnames=("x", "y", "interpret"))
+@functools.partial(jax.jit, static_argnames=("x", "y", "interpret", "act"))
 def mode2_gemm(divs_q: jax.Array, dkvs_q: jax.Array, x: int, y: int,
-               interpret: bool = True) -> jax.Array:
-    """Mode-2 path: (P, s<=x) x (F, s) -> (P, F) int32 via packed kernel."""
+               interpret: bool = True,
+               scale: jax.Array | None = None,
+               bias: jax.Array | None = None,
+               act: str = "none") -> jax.Array:
+    """Mode-2 path: (P, s<=x) x (F, s) -> (P, F) via the zero-skipping kernel.
+
+    ``y`` is the hardware lane count (comb-switch pairs); it sizes the
+    perf model (ceil(F/y) passes per slice), not the computation — the
+    segment-sum operand already collapses the y lane-segments.
+    """
+    del y  # hardware lane count; see docstring
     p, s = divs_q.shape
     f, _ = dkvs_q.shape
     pp, ff = _round_up(p, k.BLOCK_B), _round_up(f, k.BLOCK_O)
     lhs = _pad_to(divs_q, pp, x)
-    rhs = pack_mode2_weights(dkvs_q, x, y)
-    rhs = _pad_to(rhs, y * x, ff)
-    out = k.vdpe_pack_gemm(lhs, rhs, y=y, interpret=interpret)
+    rhs = _pad_to(pack_mode2_segments(dkvs_q, x), x, ff)
+    if bias is not None:
+        bias = jnp.pad(bias.reshape(1, -1), ((0, 0), (0, ff - f)))
+    out = k.vdpe_pack_gemm_zs(lhs, rhs, interpret=interpret,
+                              scale=scale, bias=bias, act=act)
     return out[:p, :f]
 
 
@@ -97,22 +136,29 @@ X_TPU = 32
 
 
 def mixed_size_gemm(divs_q: jax.Array, dkvs_q: jax.Array,
-                    interpret: bool | None = None) -> jax.Array:
+                    interpret: bool | None = None,
+                    scale: jax.Array | None = None,
+                    bias: jax.Array | None = None,
+                    act: str = "none") -> jax.Array:
     """Route a (P, S) x (F, S) quantized contraction per the paper's cases.
 
     S >= N_TPU           -> Mode 1 (K-blocked dense kernel)
-    S <= X_TPU           -> Mode 2 (block-diagonal packed kernel)
+    S <= X_TPU           -> Mode 2 (zero-skipping segment-sum kernel)
     X_TPU < S < N_TPU    -> Mode 1 with a single padded K block (the MXU has
                             no sub-128 pass, so Case 2 re-aggregation only
                             pays above the segment width)
+
+    Optional fused epilogue (scale/bias/act) as in mode1_gemm/mode2_gemm.
     """
     if interpret is None:
         interpret = default_interpret()
     s = divs_q.shape[1]
     if s <= X_TPU:
         y = N_TPU // X_TPU
-        return mode2_gemm(divs_q, dkvs_q, X_TPU, y, interpret=interpret)
-    return mode1_gemm(divs_q, dkvs_q, interpret=interpret)
+        return mode2_gemm(divs_q, dkvs_q, X_TPU, y, interpret=interpret,
+                          scale=scale, bias=bias, act=act)
+    return mode1_gemm(divs_q, dkvs_q, interpret=interpret,
+                      scale=scale, bias=bias, act=act)
 
 
 def grouped_matmul(tokens: jax.Array, weights: jax.Array,
@@ -164,14 +210,18 @@ def grouped_matmul(tokens: jax.Array, weights: jax.Array,
 
 
 def gemm_bf16(lhs: jax.Array, rhs: jax.Array,
-              interpret: bool | None = None) -> jax.Array:
-    """Padded bf16 GEMM through the Pallas dense kernel."""
+              interpret: bool | None = None,
+              bias: jax.Array | None = None,
+              act: str = "none") -> jax.Array:
+    """Padded bf16 GEMM through the Pallas dense kernel (+fused bias/act)."""
     if interpret is None:
         interpret = default_interpret()
     b, s = lhs.shape
     _, o = rhs.shape
     bb, ss, oo = _round_up(b, k.BLOCK_B), _round_up(s, k.BLOCK_K), \
         _round_up(o, k.BLOCK_O)
+    if bias is not None:
+        bias = jnp.pad(bias.reshape(1, -1), ((0, 0), (0, oo - o)))
     out = k.gemm_bf16(_pad_to(lhs, bb, ss), _pad_to(rhs, ss, oo),
-                      interpret=interpret)
+                      interpret=interpret, bias=bias, act=act)
     return out[:b, :o]

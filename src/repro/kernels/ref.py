@@ -1,10 +1,18 @@
-"""Pure-jnp oracles for every Pallas kernel in this package."""
+"""Oracles for every Pallas kernel in this package.
+
+Mostly pure-jnp references; additionally holds the *historical*
+block-diagonal Mode-2 Pallas kernel (``vdpe_pack_gemm_blockdiag``), kept
+verbatim as the oracle + benchmark baseline for the zero-skipping kernel
+that replaced it in vdpe_gemm.py (EXPERIMENTS.md §Perf).
+"""
 from __future__ import annotations
 
+import functools
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+from jax.experimental import pallas as pl
 
 
 def vdpe_gemm_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:
@@ -19,6 +27,72 @@ def vdpe_pack_gemm_ref(lhs: jax.Array, rhs_packed: jax.Array,
     """Mode-2 oracle: replicate the DIV tile then dense int32 GEMM."""
     a_rep = jnp.concatenate([lhs] * y, axis=1)
     return vdpe_gemm_ref(a_rep, rhs_packed)
+
+
+def _pack_gemm_blockdiag_kernel(lhs_ref, rhs_ref, out_ref, *, y: int):
+    """Pre-zero-skipping Mode-2 body: replicate the DIV tile y times and
+    contract (y*x)-deep against the mostly-zero block-diagonal operand."""
+    a = lhs_ref[...]                           # (bb, x)
+    a_rep = jnp.concatenate([a] * y, axis=1)   # (bb, y*x) in VMEM/VREGs
+    out_ref[...] = jax.lax.dot_general(
+        a_rep, rhs_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("y", "block_b", "block_o",
+                                             "interpret"))
+def vdpe_pack_gemm_blockdiag(lhs: jax.Array, rhs_packed: jax.Array, y: int,
+                             block_b: int = 128, block_o: int = 128,
+                             interpret: bool = True) -> jax.Array:
+    """The original Mode-2 Pallas kernel: (B, x) x (y*x, O) packed -> (B, O).
+
+    ``rhs_packed`` is block-diagonal (ops.pack_mode2_weights): column f is
+    non-zero only inside lane-segment f mod y, so (y-1)/y of the operand —
+    and of the MXU contraction depth — is zeros.  Kept as the oracle and
+    benchmark baseline for vdpe_gemm.vdpe_pack_gemm_zs.
+    """
+    b, x = lhs.shape
+    k, o = rhs_packed.shape
+    assert k == y * x, (k, y, x)
+    assert b % block_b == 0 and o % block_o == 0
+    grid = (b // block_b, o // block_o)
+    return pl.pallas_call(
+        functools.partial(_pack_gemm_blockdiag_kernel, y=y),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, x), lambda i, j: (i, 0)),
+            pl.BlockSpec((y * x, block_o), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+        interpret=interpret,
+    )(lhs, rhs_packed)
+
+
+def pack_mode2_segments_ref(dkvs: jax.Array, x: int, y: int) -> jax.Array:
+    """Oracle for ops.pack_mode2_segments: the dense segment-sum (x, F).
+
+    Derived independently of the implementation: build the block-diagonal
+    pack (pack_block_diagonal_ref) and sum its y row-segments — lossless
+    because segments are column-disjoint.
+    """
+    f, _ = dkvs.shape
+    bd = pack_block_diagonal_ref(dkvs, x, y).astype(jnp.int32)
+    return bd.reshape(y, x, f).sum(axis=0).astype(dkvs.dtype)
+
+
+def epilogue_ref(acc: jax.Array, scale, bias, act: str) -> jax.Array:
+    """Oracle for the fused GEMM epilogue: act(acc * scale + bias)."""
+    r = acc.astype(jnp.float32) * jnp.asarray(scale, jnp.float32)
+    if bias is not None:
+        r = r + bias
+    if act == "relu":
+        r = jnp.maximum(r, 0.0)
+    elif act == "relu6":
+        r = jnp.clip(r, 0.0, 6.0)
+    else:
+        assert act == "none", act
+    return r
 
 
 def gemm_bf16_ref(lhs: jax.Array, rhs: jax.Array) -> jax.Array:

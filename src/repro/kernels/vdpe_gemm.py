@@ -1,27 +1,38 @@
 """Pallas TPU kernels for Mode-1 / Mode-2 VDPE GEMMs.
 
-Hardware adaptation (DESIGN.md §2): the photonic VDPE's fixed N optical
-lanes map onto the MXU's fixed 128-wide contraction lanes.  A small
+Hardware adaptation (EXPERIMENTS.md §Perf): the photonic VDPE's fixed N
+optical lanes map onto the MXU's fixed 128-wide contraction lanes.  A small
 contraction (S << 128) wastes MXU lanes exactly the way S < N strands MRRs
-in the paper; Mode-2 re-aggregation maps onto *block-diagonal packing*: y
-small DKVs occupy disjoint row-segments of one 128-deep K block, and one
-MXU pass produces y independent dot products.
+in the paper; Mode-2 re-aggregation maps onto *segment packing*: y small
+DKVs occupy disjoint row-segments of one 128-deep K block, and one MXU pass
+produces y independent dot products.
 
-Two kernels:
+Kernels:
 
-* ``vdpe_gemm_kernel`` — Mode 1: K-blocked dense int8 x int8 -> int32 GEMM
+* ``vdpe_gemm`` — Mode 1: K-blocked dense int8 x int8 -> int32 GEMM
   (the S >= N slice path).  lhs (B, K), rhs (K, O), out (B, O); the K grid
   axis is innermost and accumulates into the VMEM out block.
 
-* ``vdpe_pack_gemm_kernel`` — Mode 2: the DIV tile is loaded ONCE at its
-  natural width x and re-aggregated (replicated) across the y lane-segments
-  *inside VMEM*, mirroring the comb switches re-aggregating wavelengths
-  instead of regenerating signals.  HBM traffic for the input drops y-fold
-  versus materializing the replicated operand.
+* ``vdpe_pack_gemm_zs`` — Mode 2, zero-skipping: because Mode-2 lane
+  segments are *column-disjoint* (kernel f lives only in segment f mod y),
+  the block-diagonal (y*x, O) operand collapses losslessly to its dense
+  segment-sum (x, O).  The kernel therefore issues a single x-deep
+  contraction per output tile instead of a (y*x)-deep one against an
+  operand that is (y-1)/y zeros — cutting both the y-fold zero-FLOPs and
+  the y× RHS VMEM/HBM footprint.  The historical block-diagonal kernel
+  lives in kernels/ref.py (``vdpe_pack_gemm_blockdiag``) as the oracle.
+
+* ``gemm_bf16`` — bf16 GEMM with f32 accumulation (dense tile path).
+
+All three take an optional fused epilogue (dequant scale, bias add,
+ReLU/ReLU6) so integer accumulators never round-trip HBM between the GEMM
+and the activation: ``scale`` rides in SMEM, ``bias`` is blocked over O,
+and the activation is a compile-time branch.
 
 Both kernels use explicit BlockSpec VMEM tiling with MXU-aligned block
 shapes (multiples of (32, 128) for int8 operands, (8, 128) for f32).
-Validated against kernels/ref.py in interpret mode (tests/test_kernels.py).
+Validated against kernels/ref.py in interpret mode (tests/test_kernels.py,
+tests/test_engine.py).
 """
 from __future__ import annotations
 
@@ -30,6 +41,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 # MXU-aligned default tile sizes (int8 operands tile as (32, 128) in VMEM).
@@ -37,8 +49,25 @@ BLOCK_B = 128
 BLOCK_O = 128
 BLOCK_K = 128
 
+#: Fused-epilogue activations supported by every GEMM kernel here.
+ACTIVATIONS = ("none", "relu", "relu6")
 
-def _gemm_kernel(lhs_ref, rhs_ref, out_ref, *, n_k: int):
+
+def _apply_act(r: jax.Array, act: str) -> jax.Array:
+    """Compile-time activation branch of the fused epilogue."""
+    if act == "relu":
+        return jnp.maximum(r, 0.0)
+    if act == "relu6":
+        return jnp.clip(r, 0.0, 6.0)
+    assert act == "none", act
+    return r
+
+
+# ---------------------------------------------------------------------------
+# Mode 1: K-blocked dense int8 GEMM
+# ---------------------------------------------------------------------------
+
+def _gemm_kernel(lhs_ref, rhs_ref, out_ref):
     """Mode-1 kernel body: K-accumulating int8 GEMM tile."""
     k = pl.program_id(2)
 
@@ -46,85 +75,173 @@ def _gemm_kernel(lhs_ref, rhs_ref, out_ref, *, n_k: int):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    a = lhs_ref[...]
-    b = rhs_ref[...]
     out_ref[...] += jax.lax.dot_general(
-        a, b, (((1,), (0,)), ((), ())),
+        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
 
 
+def _gemm_epilogue_kernel(scale_ref, lhs_ref, rhs_ref, bias_ref, out_ref,
+                          acc_ref, *, n_k: int, act: str):
+    """Mode-1 fused kernel: int32 VMEM accumulator, f32 epilogue at last K.
+
+    The int32 partial sums live only in the ``acc_ref`` scratch; the HBM
+    output is the already-dequantized, biased, activated f32 tile.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        r = acc_ref[...].astype(jnp.float32) * scale_ref[0, 0] + bias_ref[...]
+        out_ref[...] = _apply_act(r, act)
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_o", "block_k",
-                                             "interpret"))
+                                             "interpret", "act"))
 def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
               block_b: int = BLOCK_B, block_o: int = BLOCK_O,
-              block_k: int = BLOCK_K, interpret: bool = True) -> jax.Array:
-    """Mode-1 VDPE GEMM: (B, K) int8 x (K, O) int8 -> (B, O) int32.
+              block_k: int = BLOCK_K, interpret: bool = True,
+              scale: jax.Array | None = None,
+              bias: jax.Array | None = None,
+              act: str = "none") -> jax.Array:
+    """Mode-1 VDPE GEMM: (B, K) int8 x (K, O) int8 -> (B, O).
 
-    B, K, O must be multiples of the block sizes (ops.py pads).
+    B, K, O must be multiples of the block sizes (ops.py / engine pad).
+    Without ``scale`` the result is the raw int32 accumulator; with it the
+    epilogue ``act(acc * scale + bias)`` is fused and the result is f32.
     """
     b, k = lhs.shape
     k2, o = rhs.shape
     assert k == k2 and b % block_b == 0 and o % block_o == 0 and k % block_k == 0
     n_k = k // block_k
     grid = (b // block_b, o // block_o, n_k)
+    lhs_spec = pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk))
+    rhs_spec = pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j))
+    out_spec = pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j))
+    if scale is None:
+        assert bias is None and act == "none", "epilogue requires a scale"
+        return pl.pallas_call(
+            _gemm_kernel,
+            grid=grid,
+            in_specs=[lhs_spec, rhs_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+            interpret=interpret,
+        )(lhs, rhs)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    if bias is None:
+        bias = jnp.zeros((1, o), jnp.float32)
     return pl.pallas_call(
-        functools.partial(_gemm_kernel, n_k=n_k),
+        functools.partial(_gemm_epilogue_kernel, n_k=n_k, act=act),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 1), lambda i, j, kk: (0, 0),
+                         memory_space=pltpu.SMEM),
+            lhs_spec, rhs_spec,
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
         interpret=interpret,
-    )(lhs, rhs)
+    )(scale, lhs, rhs, bias)
 
 
-def _pack_gemm_kernel(lhs_ref, rhs_ref, out_ref, *, y: int):
-    """Mode-2 kernel body: re-aggregate the DIV tile across y lane-segments.
+# ---------------------------------------------------------------------------
+# Mode 2: zero-skipping segment-sum GEMM
+# ---------------------------------------------------------------------------
 
-    lhs block: (block_b, x) — the small DIV tile, loaded once.
-    rhs block: (y * x, block_o) — block-diagonal packed DKVs.
-    out block: (block_b, block_o).
+def zs_block_shapes(x: int, block_b: int = BLOCK_B,
+                    block_o: int = BLOCK_O) -> tuple:
+    """(lhs, rhs, out) block shapes of the zero-skipping Mode-2 kernel.
+
+    Single source of truth for the kernel's BlockSpecs — the engine tests
+    assert the rhs block (and therefore the contraction issued per output
+    tile) is x deep, not y*x deep.
     """
-    a = lhs_ref[...]                       # (bb, x)
-    # comb-switch re-aggregation: replicate the x-wide tile onto y segments
-    a_rep = jnp.concatenate([a] * y, axis=1)   # (bb, y*x) in VMEM/VREGs
-    b = rhs_ref[...]
+    return (block_b, x), (x, block_o), (block_b, block_o)
+
+
+def _pack_gemm_zs_kernel(lhs_ref, rhs_ref, out_ref):
+    """Zero-skipping Mode-2 body: one x-deep dot per output tile."""
     out_ref[...] = jax.lax.dot_general(
-        a_rep, b, (((1,), (0,)), ((), ())),
+        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("y", "block_b", "block_o",
-                                             "interpret"))
-def vdpe_pack_gemm(lhs: jax.Array, rhs_packed: jax.Array, y: int,
-                   block_b: int = BLOCK_B, block_o: int = BLOCK_O,
-                   interpret: bool = True) -> jax.Array:
-    """Mode-2 VDPE GEMM: (B, x) int8 x (y*x, O) packed int8 -> (B, O) int32.
+def _pack_gemm_zs_epilogue_kernel(scale_ref, lhs_ref, rhs_ref, bias_ref,
+                                  out_ref, *, act: str):
+    acc = jax.lax.dot_general(
+        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    r = acc.astype(jnp.float32) * scale_ref[0, 0] + bias_ref[...]
+    out_ref[...] = _apply_act(r, act)
 
-    ``rhs_packed`` holds y independent DKV segments along its K dimension
-    (column f non-zero only inside its segment); the kernel replicates the
-    (B, x) DIV tile y times inside VMEM, so HBM reads of the input are y
-    times smaller than the equivalent dense GEMM.
+
+@functools.partial(jax.jit, static_argnames=("block_b", "block_o",
+                                             "interpret", "act"))
+def vdpe_pack_gemm_zs(lhs: jax.Array, rhs_seg: jax.Array,
+                      block_b: int = BLOCK_B, block_o: int = BLOCK_O,
+                      interpret: bool = True,
+                      scale: jax.Array | None = None,
+                      bias: jax.Array | None = None,
+                      act: str = "none") -> jax.Array:
+    """Zero-skipping Mode-2 GEMM: (B, x) int8 x (x, O) int8 -> (B, O).
+
+    ``rhs_seg`` is the dense *segment-sum* of the block-diagonal packed
+    operand (ops.pack_mode2_segments): column f holds kernel f's weights at
+    their natural offset.  Because lane segments are column-disjoint the
+    result is bit-identical to the (y*x)-deep block-diagonal oracle
+    (ref.vdpe_pack_gemm_blockdiag) while issuing only an x-deep contraction
+    and reading/holding 1/y of the RHS bytes.
     """
     b, x = lhs.shape
-    k, o = rhs_packed.shape
-    assert k == y * x, (k, y, x)
+    x2, o = rhs_seg.shape
+    assert x == x2, (x, x2)  # structurally cannot issue a (y*x)-deep pass
     assert b % block_b == 0 and o % block_o == 0
     grid = (b // block_b, o // block_o)
+    lhs_shape, rhs_shape, out_shape = zs_block_shapes(x, block_b, block_o)
+    lhs_spec = pl.BlockSpec(lhs_shape, lambda i, j: (i, 0))
+    rhs_spec = pl.BlockSpec(rhs_shape, lambda i, j: (0, j))
+    out_spec = pl.BlockSpec(out_shape, lambda i, j: (i, j))
+    if scale is None:
+        assert bias is None and act == "none", "epilogue requires a scale"
+        return pl.pallas_call(
+            _pack_gemm_zs_kernel,
+            grid=grid,
+            in_specs=[lhs_spec, rhs_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+            interpret=interpret,
+        )(lhs, rhs_seg)
+    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    if bias is None:
+        bias = jnp.zeros((1, o), jnp.float32)
     return pl.pallas_call(
-        functools.partial(_pack_gemm_kernel, y=y),
+        functools.partial(_pack_gemm_zs_epilogue_kernel, act=act),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, x), lambda i, j: (i, 0)),
-            pl.BlockSpec((y * x, block_o), lambda i, j: (0, j)),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            lhs_spec, rhs_spec,
+            pl.BlockSpec((1, block_o), lambda i, j: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
         interpret=interpret,
-    )(lhs, rhs_packed)
+    )(scale, lhs, rhs_seg, bias)
 
+
+# ---------------------------------------------------------------------------
+# Dense bf16 tile path
+# ---------------------------------------------------------------------------
 
 def _gemm_bf16_kernel(lhs_ref, rhs_ref, out_ref):
     k = pl.program_id(2)
@@ -138,24 +255,63 @@ def _gemm_bf16_kernel(lhs_ref, rhs_ref, out_ref):
         preferred_element_type=jnp.float32)
 
 
+def _gemm_bf16_epilogue_kernel(lhs_ref, rhs_ref, bias_ref, out_ref, acc_ref,
+                               *, n_k: int, act: str):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        out_ref[...] = _apply_act(acc_ref[...] + bias_ref[...], act)
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_o", "block_k",
-                                             "interpret"))
+                                             "interpret", "act"))
 def gemm_bf16(lhs: jax.Array, rhs: jax.Array,
               block_b: int = BLOCK_B, block_o: int = BLOCK_O,
-              block_k: int = BLOCK_K, interpret: bool = True) -> jax.Array:
-    """bf16 GEMM with f32 accumulation — the framework's dense tile path."""
+              block_k: int = BLOCK_K, interpret: bool = True,
+              bias: jax.Array | None = None,
+              act: str = "none") -> jax.Array:
+    """bf16 GEMM with f32 accumulation — the framework's dense tile path.
+
+    With ``bias``/``act`` the epilogue fuses into the last K step (no
+    dequant scale: the operands are already real-valued).
+    """
     b, k = lhs.shape
     _, o = rhs.shape
     assert b % block_b == 0 and o % block_o == 0 and k % block_k == 0
-    grid = (b // block_b, o // block_o, k // block_k)
+    n_k = k // block_k
+    grid = (b // block_b, o // block_o, n_k)
+    lhs_spec = pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk))
+    rhs_spec = pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j))
+    out_spec = pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j))
+    if bias is None and act == "none":
+        return pl.pallas_call(
+            _gemm_bf16_kernel,
+            grid=grid,
+            in_specs=[lhs_spec, rhs_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+            interpret=interpret,
+        )(lhs, rhs)
+    if bias is None:
+        bias = jnp.zeros((1, o), jnp.float32)
     return pl.pallas_call(
-        _gemm_bf16_kernel,
+        functools.partial(_gemm_bf16_epilogue_kernel, n_k=n_k, act=act),
         grid=grid,
         in_specs=[
-            pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j)),
+            lhs_spec, rhs_spec,
+            pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
         ],
-        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j)),
+        out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.float32)],
         interpret=interpret,
-    )(lhs, rhs)
+    )(lhs, rhs, bias)

@@ -8,17 +8,24 @@ from __future__ import annotations
 import jax
 
 
-def _auto(n: int):
-    return (jax.sharding.AxisType.Auto,) * n
+def _mesh(shape, axes):
+    """jax.make_mesh across jax versions: ``axis_types`` (and
+    jax.sharding.AxisType) only exist on newer releases; Auto is the
+    default there, so omitting it is equivalent."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 single pod (256 chips) or 2x16x16 (2 pods, 512 chips)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _mesh(shape, axes)
 
 
 def make_host_mesh():
     """1x1 mesh over the single local device (CPU smoke tests)."""
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return _mesh((1, 1), ("data", "model"))

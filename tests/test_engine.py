@@ -1,0 +1,311 @@
+"""Weight-stationary engine tests: zero-skipping kernel vs the block-
+diagonal oracle, fused epilogues, plan-vs-eager equivalence over the paper
+CNNs' layer shapes, and the memoization caches."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.cnn.layers import ConvKind
+from repro.cnn.models import MODEL_ZOO, PAPER_CNNS
+from repro.core import vdp
+from repro.core.mapping import TPCConfig, map_layer
+from repro.cnn.layers import pc as pc_spec
+from repro.kernels import ops, ref
+from repro.kernels import vdpe_gemm as kern
+
+jax.config.update("jax_platform_name", "cpu")
+
+Y = ops.N_TPU // ops.X_TPU
+
+
+def _rand_int8(rng, shape, lo=-7, hi=8):
+    return jnp.asarray(rng.integers(lo, hi, shape), jnp.int8)
+
+
+
+def _assert_epilogue_equal(got, want, exact: bool):
+    """Fused-epilogue comparison.
+
+    Without a bias the fused kernel's act(acc*scale) is bit-identical to
+    the eager oracle.  With a bias, XLA contracts the kernel's
+    ``acc*scale + bias`` into an FMA (one rounding) while the eager oracle
+    rounds the multiply first — a <=1-ulp difference, so compare to float32
+    ulp tolerance instead.
+    """
+    if exact:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Zero-skipping Mode-2 kernel vs the block-diagonal oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s", [9, 25, 32])
+def test_zs_kernel_matches_blockdiag_oracle(s):
+    """Bit-identical to the (y*x)-deep block-diagonal kernel it replaced."""
+    rng = np.random.default_rng(s)
+    p, f = 128, 256
+    divs = _rand_int8(rng, (p, s))
+    dkvs = _rand_int8(rng, (f, s))
+    lhs = jnp.pad(divs, ((0, 0), (0, ops.X_TPU - s)))
+    rhs_bd = ops.pack_mode2_weights(dkvs, ops.X_TPU, Y)
+    rhs_zs = ops.pack_mode2_segments(dkvs, ops.X_TPU)
+    got = kern.vdpe_pack_gemm_zs(lhs, rhs_zs, interpret=True)
+    want_pallas = ref.vdpe_pack_gemm_blockdiag(lhs, rhs_bd, Y, interpret=True)
+    want_jnp = ref.vdpe_pack_gemm_ref(lhs, rhs_bd, Y)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_pallas))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want_jnp))
+
+
+def test_zs_kernel_issues_x_deep_contraction():
+    """Pass-count/block-shape check: the zs kernel contracts x deep per
+    output tile — never y*x — and structurally cannot take the y*x operand."""
+    lhs_shape, rhs_shape, _ = kern.zs_block_shapes(ops.X_TPU)
+    assert lhs_shape[1] == ops.X_TPU
+    assert rhs_shape[0] == ops.X_TPU
+    assert rhs_shape[0] != Y * ops.X_TPU
+    rng = np.random.default_rng(0)
+    lhs = _rand_int8(rng, (128, ops.X_TPU))
+    rhs_bd = _rand_int8(rng, (Y * ops.X_TPU, 128))   # block-diagonal shape
+    with pytest.raises(AssertionError):
+        kern.vdpe_pack_gemm_zs(lhs, rhs_bd, interpret=True)
+
+
+def test_segment_sum_collapses_block_diagonal():
+    """pack_mode2_segments == the y row-segments of the block-diagonal pack
+    summed (segments are column-disjoint, so nothing is lost)."""
+    rng = np.random.default_rng(1)
+    dkvs = _rand_int8(rng, (24, 25))
+    bd = ops.pack_mode2_weights(dkvs, ops.X_TPU, Y)
+    seg = ops.pack_mode2_segments(dkvs, ops.X_TPU)
+    collapsed = np.asarray(bd, np.int32).reshape(Y, ops.X_TPU, 24).sum(0)
+    np.testing.assert_array_equal(collapsed, np.asarray(seg, np.int32))
+    np.testing.assert_array_equal(
+        np.asarray(seg),
+        np.asarray(ref.pack_mode2_segments_ref(dkvs, ops.X_TPU, Y)))
+
+
+# ---------------------------------------------------------------------------
+# Fused epilogues
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act", ["none", "relu", "relu6"])
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_mode1_epilogue_fusion(act, with_bias):
+    rng = np.random.default_rng(7)
+    p, s, f = 100, 300, 77
+    divs = _rand_int8(rng, (p, s))
+    dkvs = _rand_int8(rng, (f, s))
+    scale = jnp.float32(0.031)
+    bias = (jnp.asarray(rng.normal(size=(f,)), jnp.float32)
+            if with_bias else None)
+    got = ops.mode1_gemm(divs, dkvs, interpret=True,
+                         scale=scale, bias=bias, act=act)
+    acc = ops.mode1_gemm(divs, dkvs, interpret=True)
+    want = ref.epilogue_ref(acc, scale,
+                            None if bias is None else bias[None, :], act)
+    assert got.dtype == jnp.float32
+    _assert_epilogue_equal(got, want, exact=bias is None)
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "relu6"])
+@pytest.mark.parametrize("with_bias", [False, True])
+def test_mode2_epilogue_fusion(act, with_bias):
+    rng = np.random.default_rng(8)
+    p, s, f = 40, 25, 33
+    divs = _rand_int8(rng, (p, s))
+    dkvs = _rand_int8(rng, (f, s))
+    scale = jnp.float32(0.008)
+    bias = (jnp.asarray(rng.normal(size=(f,)), jnp.float32)
+            if with_bias else None)
+    got = ops.mode2_gemm(divs, dkvs, ops.X_TPU, Y, interpret=True,
+                         scale=scale, bias=bias, act=act)
+    acc = ops.mode2_gemm(divs, dkvs, ops.X_TPU, Y, interpret=True)
+    want = ref.epilogue_ref(acc, scale,
+                            None if bias is None else bias[None, :], act)
+    _assert_epilogue_equal(got, want, exact=bias is None)
+
+
+@pytest.mark.parametrize("act", ["relu", "relu6"])
+def test_bf16_epilogue_fusion(act):
+    rng = np.random.default_rng(9)
+    b, s, o = 64, 300, 77
+    lhs = jnp.asarray(rng.normal(size=(b, s)), jnp.float32)
+    rhs = jnp.asarray(rng.normal(size=(s, o)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(o,)), jnp.float32)
+    got = ops.gemm_bf16(lhs, rhs, interpret=True, bias=bias, act=act)
+    acc = ops.gemm_bf16(lhs, rhs, interpret=True)
+    want = ref.epilogue_ref(acc, 1.0, bias[None, :], act)
+    _assert_epilogue_equal(got, want, exact=False)
+
+
+# ---------------------------------------------------------------------------
+# Plan-vs-eager equivalence across the paper CNNs' layer shapes
+# ---------------------------------------------------------------------------
+
+def _paper_gemm_sizes():
+    """Every distinct GEMM contraction size in the 4 paper CNNs."""
+    sizes = set()
+    for name in PAPER_CNNS:
+        for l in MODEL_ZOO[name]():
+            if l.kind is not ConvKind.DC:
+                sizes.add(l.dkv_size)
+    return sorted(sizes)
+
+
+def _paper_dc_kernels():
+    ks = set()
+    for name in PAPER_CNNS:
+        for l in MODEL_ZOO[name]():
+            if l.kind is ConvKind.DC:
+                ks.add(l.k)
+    return sorted(ks)
+
+
+@pytest.mark.parametrize("s", _paper_gemm_sizes())
+def test_plan_vs_eager_gemm_shapes(s):
+    """Engine forward == the eager quantize->GEMM->dequant->act oracle for
+    every distinct contraction size the four paper CNNs produce."""
+    rng = np.random.default_rng(s)
+    f = 3
+    w = jnp.asarray(rng.normal(size=(f, 1, 1, s)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(f,)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(4, 4, s)), jnp.float32)
+    plan = engine.compile_model(
+        f"shape_s{s}", [engine.LayerDef("l", ConvKind.PC, w,
+                                        bias=bias, act="relu")])
+    (lp,) = plan.layers
+    assert lp.mode == (engine.MODE_PACKED if s <= ops.X_TPU
+                      else engine.MODE_DENSE)
+    got = engine.forward(plan, x, interpret=True)
+
+    divs = vdp.im2col(x, 1, 1, "SAME")
+    divs_q, sa = vdp.quantize_symmetric(divs)
+    dkvs_q, sb = vdp.quantize_symmetric(w.reshape(f, -1))
+    acc = vdp.direct_quantized_gemm(divs_q, dkvs_q)
+    want = ref.epilogue_ref(acc, sa * sb, bias[None, :], "relu")
+    _assert_epilogue_equal(jnp.asarray(np.asarray(got).reshape(-1, f)),
+                           want, exact=False)
+
+
+@pytest.mark.parametrize("k", _paper_dc_kernels())
+def test_plan_vs_eager_depthwise(k):
+    """Engine depthwise path == core/vdp.depthwise_conv2d_vdp + relu."""
+    rng = np.random.default_rng(k)
+    d = 6
+    w = jnp.asarray(rng.normal(size=(d, k, k)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(10, 10, d)), jnp.float32)
+    plan = engine.compile_model(
+        f"dw_k{k}", [engine.LayerDef("dw", ConvKind.DC, w, act="relu")])
+    got = engine.forward(plan, x, interpret=True)
+    out, ref_out = vdp.depthwise_conv2d_vdp(x, w, TPCConfig("MAM", 43, 43, True))
+    assert jnp.array_equal(out, ref_out)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(jax.nn.relu(out)))
+
+
+def test_engine_micro_cnn_end_to_end():
+    """SC -> DC -> PC -> FC chain: engine == layer-by-layer eager path,
+    spanning Mode-1, Mode-2 and depthwise routing in one plan."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8, 8, 3)), jnp.float32)
+    stem = jnp.asarray(rng.normal(size=(8, 3, 3, 3)), jnp.float32)   # S=27
+    dw = jnp.asarray(rng.normal(size=(8, 3, 3)), jnp.float32)
+    pw = jnp.asarray(rng.normal(size=(40, 1, 1, 8)), jnp.float32)    # S=8
+    fcw = jnp.asarray(rng.normal(size=(10, 8 * 8 * 40)), jnp.float32)  # S big
+    plan = engine.compile_model("micro_e2e", [
+        engine.LayerDef("stem", ConvKind.SC, stem, act="relu"),
+        engine.LayerDef("dw", ConvKind.DC, dw, act="relu6"),
+        engine.LayerDef("pw", ConvKind.PC, pw, act="relu"),
+        engine.LayerDef("fc", ConvKind.FC, fcw),
+    ])
+    modes = [lp.mode for lp in plan.layers]
+    assert modes == [engine.MODE_PACKED, engine.MODE_DEPTHWISE,
+                     engine.MODE_PACKED, engine.MODE_DENSE]
+    got = engine.forward(plan, x, interpret=True)
+
+    rmam = TPCConfig("MAM", 43, 43, True)
+    h, _ = vdp.conv2d_vdp(x, stem, rmam)
+    h = jax.nn.relu(h)
+    h2, _ = vdp.depthwise_conv2d_vdp(h, dw, rmam)
+    h = jnp.clip(h2, 0.0, 6.0)
+    h3, _ = vdp.conv2d_vdp(h, pw, rmam)
+    h = jax.nn.relu(h3)
+    divs = h.reshape(1, -1)
+    divs_q, sa = vdp.quantize_symmetric(divs)
+    fc_q, sb = vdp.quantize_symmetric(fcw)
+    want = ref.epilogue_ref(vdp.direct_quantized_gemm(divs_q, fc_q),
+                            sa * sb, None, "none")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_forward_never_repacks_weights(monkeypatch):
+    """Pack-once: forward must not touch the weight-side packers."""
+    rng = np.random.default_rng(4)
+    w = jnp.asarray(rng.normal(size=(8, 1, 1, 9)), jnp.float32)
+    plan = engine.compile_model(
+        "no_repack", [engine.LayerDef("pc", ConvKind.PC, w, act="relu")])
+
+    def _boom(*a, **k):
+        raise AssertionError("weights repacked during forward")
+
+    monkeypatch.setattr(ops, "pack_mode2_weights", _boom)
+    monkeypatch.setattr(ops, "pack_mode2_segments", _boom)
+    x = jnp.asarray(rng.normal(size=(4, 4, 9)), jnp.float32)
+    engine.forward(plan, x, interpret=True)  # must not raise
+
+
+# ---------------------------------------------------------------------------
+# Memoization caches
+# ---------------------------------------------------------------------------
+
+def test_map_layer_cache_hits():
+    """Same shape under different names, and the same layer at another bit
+    rate's identical operating point, share one cache entry."""
+    map_layer.cache_clear()
+    tpc = TPCConfig("MAM", 43, 43, True)
+    a = pc_spec("conv_a", 64, 128, 14, 14)
+    b = pc_spec("conv_b", 64, 128, 14, 14)     # same shape, different name
+    m1 = map_layer(tpc, a)
+    info = map_layer.cache_info()
+    assert (info.hits, info.misses) == (0, 1)
+    m2 = map_layer(tpc, b)
+    info = map_layer.cache_info()
+    assert (info.hits, info.misses) == (1, 1)
+    assert m1 is m2
+    map_layer(tpc, a)
+    assert map_layer.cache_info().hits == 2
+
+
+def test_simulate_layer_cache_hits():
+    from repro.core import simulator as sim
+    from repro.core import tpc as tpc_mod
+    sim.simulate_layer.cache_clear()
+    acc = tpc_mod.build_accelerator("RMAM", 1.0)
+    a = pc_spec("conv_a", 64, 128, 14, 14)
+    b = pc_spec("conv_b", 64, 128, 14, 14)
+    r1 = sim.simulate_layer(acc, a)
+    r2 = sim.simulate_layer(acc, b)
+    assert r1 is r2
+    info = sim.simulate_layer.cache_info()
+    assert (info.hits, info.misses) == (1, 1)
+
+
+def test_plan_cache_keyed_on_model_and_point():
+    engine.plan_cache_clear()
+    rng = np.random.default_rng(5)
+    w = jnp.asarray(rng.normal(size=(4, 1, 1, 9)), jnp.float32)
+    defs = [engine.LayerDef("pc", ConvKind.PC, w)]
+    p1 = engine.get_plan("m", defs)
+    p2 = engine.get_plan("m", defs)
+    assert p1 is p2
+    other_point = engine.EnginePoint(bits=8)
+    p3 = engine.get_plan("m", defs, other_point)
+    assert p3 is not p1
+    info = engine.plan_cache_info()
+    assert info["hits"] == 1 and info["misses"] == 2 and info["size"] == 2

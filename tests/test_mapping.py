@@ -2,6 +2,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # optional dev dep (requirements-dev.txt)
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
