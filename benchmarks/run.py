@@ -10,7 +10,7 @@ import sys
 import time
 
 from . import (fig4_5_scalability, fig6_utilization, fig10_11_fps,
-               kernel_bench, noise_ablation, table2_vdpe_size,
+               kernel_bench, noise_ablation, serve_bench, table2_vdpe_size,
                table3_dkv_census, table4_comb_switch,
                table8_area_proportionate)
 
@@ -24,6 +24,7 @@ BENCHES = {
     "fig10_11_fps": fig10_11_fps.run,
     "kernel_bench": kernel_bench.run,
     "noise_ablation": noise_ablation.run,
+    "serve_bench": serve_bench.run,     # smoke settings by default
 }
 
 

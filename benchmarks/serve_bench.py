@@ -1,0 +1,185 @@
+"""Trace-driven closed-loop serving benchmark: Poisson arrivals, mixed CNNs.
+
+Two measurements, both recorded in ``BENCH_serve.json``:
+
+* ``batch_sweep`` — sustained engine throughput at batch 1 vs batch 8 on
+  this host (the weight-stationary amortization claim, wall clock), plus
+  the cycle-true simulator's modeled photonic FPS / FPS-per-W at the same
+  batch sizes and paper-scale layer tables.  Batch 8 must sustain strictly
+  higher images/s than batch 1.
+
+* ``closed_loop`` — a Poisson arrival trace over the mixed
+  EfficientNet/Xception/ShuffleNet serving zoo replayed in wall clock
+  against a CNNServer (dynamic batcher, LRU plan registry): p50/p99
+  request latency, sustained images/s, per-model splits, and the modeled
+  hardware metrics for every served batch.
+
+Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine, serve
+from repro.core import simulator as sim
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_serve.json"
+
+MODELS = tuple(serve.SERVING_MODELS)
+
+
+def _inputs(model: str, n: int, rng: np.random.Generator) -> np.ndarray:
+    shape = serve.serving_input_shape(model)
+    return rng.normal(size=(n, *shape)).astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# batch sweep: wall-clock + modeled amortization
+# ---------------------------------------------------------------------------
+
+def batch_sweep(model: str, sizes: Tuple[int, ...] = (1, 8),
+                reps: int = 5, seed: int = 0) -> Dict:
+    reg = serve.paper_cnn_registry()
+    entry = reg.get(model)
+    rng = np.random.default_rng(seed)
+    wall: Dict[str, float] = {}
+    for bs in sizes:
+        xb = jnp.asarray(_inputs(model, bs, rng))
+        jax.block_until_ready(engine.forward(entry.plan, xb))   # warmup/trace
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            jax.block_until_ready(engine.forward(entry.plan, xb))
+        dt = time.perf_counter() - t0
+        wall[str(bs)] = bs * reps / dt
+        print(f"serve_bench,batch_sweep_wall,b{bs},{wall[str(bs)]:.2f} img/s")
+    modeled: Dict[str, Dict[str, Dict[str, float]]] = {}
+    for p in serve.DEFAULT_HW_POINTS:
+        acc = serve.telemetry.build_accelerator(p.accelerator,
+                                               p.bit_rate_gbps)
+        modeled[p.label] = {}
+        for bs in sizes:
+            rep = sim.simulate(acc, entry.sim_specs, batch=bs)
+            modeled[p.label][str(bs)] = {
+                "fps": rep.fps, "fps_per_watt": rep.fps_per_watt}
+            print(f"serve_bench,batch_sweep_model,{p.label},b{bs},"
+                  f"fps={rep.fps:.1f},fps_w={rep.fps_per_watt:.2f}")
+    return {"model": model, "reps": reps, "wall_images_per_s": wall,
+            "modeled": modeled,
+            "batch8_speedup_wall": (wall[str(sizes[-1])]
+                                    / wall[str(sizes[0])])}
+
+
+# ---------------------------------------------------------------------------
+# closed loop: Poisson trace replayed against the server
+# ---------------------------------------------------------------------------
+
+def make_trace(n_requests: int, rate_per_s: float, seed: int,
+               ) -> List[Tuple[float, str, np.ndarray]]:
+    """Poisson arrivals, models drawn uniformly over the serving zoo."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(1.0 / rate_per_s, size=n_requests)
+    t_arr = np.cumsum(gaps)
+    trace = []
+    for i in range(n_requests):
+        model = MODELS[int(rng.integers(len(MODELS)))]
+        trace.append((float(t_arr[i]), model,
+                      _inputs(model, 1, rng)[0]))
+    return trace
+
+
+def closed_loop(n_requests: int, rate_per_s: float, max_batch: int,
+                max_wait_s: float, seed: int, warm_sizes: bool) -> Dict:
+    reg = serve.paper_cnn_registry(capacity=len(MODELS))
+    srv = serve.CNNServer(reg, max_batch=max_batch, max_wait_s=max_wait_s)
+    if warm_sizes:
+        # trace every (model, batch size) jit shape up front so the timed
+        # loop measures serving, not tracing
+        rng = np.random.default_rng(1234)
+        for model in MODELS:
+            entry = reg.get(model)
+            for bs in range(1, max_batch + 1):
+                xb = jnp.asarray(_inputs(model, bs, rng))
+                jax.block_until_ready(engine.forward(entry.plan, xb))
+    trace = make_trace(n_requests, rate_per_s, seed)
+    t_start = time.monotonic()
+    i = 0
+    while i < len(trace) or srv.pending():
+        rel = time.monotonic() - t_start
+        while i < len(trace) and trace[i][0] <= rel:
+            t_arr, model, x = trace[i]
+            srv.submit(model, x, now=t_start + t_arr)
+            i += 1
+        served = srv.step(force=(i == len(trace)))
+        if served == 0 and i < len(trace):
+            time.sleep(min(0.0005, max(trace[i][0] - rel, 0.0)))
+    summary = srv.telemetry.summary()
+    summary["trace"] = {"n_requests": n_requests,
+                        "rate_per_s": rate_per_s,
+                        "max_batch": max_batch,
+                        "max_wait_s": max_wait_s, "seed": seed}
+    summary["registry"] = reg.stats()
+    print(f"serve_bench,closed_loop,requests={summary['requests']},"
+          f"img_per_s={summary['images_per_s_wall']:.2f},"
+          f"p50={summary['latency_p50_s'] * 1e3:.1f}ms,"
+          f"p99={summary['latency_p99_s'] * 1e3:.1f}ms")
+    for model, m in summary["models"].items():
+        print(f"serve_bench,closed_loop_model,{model},"
+              f"requests={m['requests']},"
+              f"mean_batch={m['mean_batch_size']:.2f},"
+              f"p99={m['latency_p99_s'] * 1e3:.1f}ms")
+    return summary
+
+
+def run(smoke: bool = True, n_requests: int | None = None,
+        rate_per_s: float | None = None, max_batch: int | None = None,
+        max_wait_ms: float = 20.0, seed: int = 0) -> Dict:
+    if smoke:
+        n_requests = n_requests or 18
+        rate_per_s = rate_per_s or 30.0
+        max_batch = max_batch or 4
+    else:
+        n_requests = n_requests or 96
+        rate_per_s = rate_per_s or 40.0
+        max_batch = max_batch or 8
+    sweep = batch_sweep(MODELS[0], sizes=(1, 8), reps=3 if smoke else 8,
+                        seed=seed)
+    loop = closed_loop(n_requests, rate_per_s, max_batch,
+                       max_wait_ms / 1e3, seed, warm_sizes=True)
+    out = {"smoke": smoke, "batch_sweep": sweep, "closed_loop": loop}
+    OUT_PATH.write_text(json.dumps(out, indent=2, default=float) + "\n")
+    print(f"serve_bench,batch8_speedup_wall,"
+          f"{sweep['batch8_speedup_wall']:.2f}x")
+    print(f"serve_bench,json,{OUT_PATH}")
+    if sweep["batch8_speedup_wall"] <= 1.0:
+        raise RuntimeError(
+            f"batch 8 did not beat batch 1: {sweep['batch8_speedup_wall']}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small trace for CI")
+    ap.add_argument("--requests", type=int, default=None)
+    ap.add_argument("--rate", type=float, default=None,
+                    help="Poisson arrival rate (req/s)")
+    ap.add_argument("--max-batch", type=int, default=None)
+    ap.add_argument("--max-wait-ms", type=float, default=20.0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, n_requests=args.requests, rate_per_s=args.rate,
+        max_batch=args.max_batch, max_wait_ms=args.max_wait_ms,
+        seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -146,6 +146,8 @@ def simulate(acc: AcceleratorConfig, layers: Sequence[LayerSpec],
 
 def gmean(values: Iterable[float]) -> float:
     vals = list(values)
+    if not vals:
+        raise ValueError("gmean of an empty sequence is undefined")
     return math.exp(sum(math.log(v) for v in vals) / len(vals))
 
 

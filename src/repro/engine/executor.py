@@ -7,6 +7,21 @@ once at plan compile time; the dequant-scale + bias + activation epilogue
 is fused into the Pallas kernels, so the int32 accumulators never
 round-trip HBM.
 
+Batching (the serving runtime's path): `forward`/`forward_layer` accept a
+single image (H, W, D) or an NHWC batch (B, H, W, D).  A batch folds the
+per-image position streams into ONE GEMM — im2col over the batch
+concatenates DIV streams, which is precisely how a weight-stationary
+accelerator amortizes a resident DKV imprint over many frames (paper
+Section VI-A).  No new kernels: the position axis simply grows B-fold.
+Quantization stays *per image* (each frame gets its own input-DAC swing,
+as in the per-image loop), so the fused epilogue takes a per-row dequant
+scale for B > 1 (kernels/vdpe_gemm.py); a batch of one keeps the scalar
+SMEM epilogue.  Batched outputs are bit-identical to the per-image loop:
+the int32 accumulators are exact regardless of the fold, and both
+epilogue variants apply the identical elementwise f32 ops to identical
+inputs (asserted bitwise across all layer kinds and both GEMM modes in
+tests/test_engine.py).
+
 Numerics: the integer accumulation is bit-identical to the eager oracle
 (quantize -> direct int32 GEMM) — the same invariant core/vdp.py
 establishes for the sliced VDP path — and the fused f32 epilogue matches
@@ -33,82 +48,131 @@ def _round_up(v: int, mult: int) -> int:
     return (v + mult - 1) // mult * mult
 
 
-def _quantize_acts(x: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
-    return vdp.quantize_symmetric(x, bits)
+def _im2col_batch(x4: jax.Array, k: int, stride: int,
+                  padding: str) -> jax.Array:
+    """(B, H, W, D) -> (B, P, K*K*D): per-image DIV streams, stacked."""
+    return jax.vmap(lambda im: vdp.im2col(im, k, stride, padding))(x4)
 
 
-def _forward_depthwise(lp: LayerPlan, x: jax.Array, point,
-                       interpret: bool) -> jax.Array:
+def _quantize_per_image(divs: jax.Array, bits: int,
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Per-image symmetric quantization of (B, P, S) DIV streams.
+
+    Each image keeps its own input-DAC swing — identical to running
+    vdp.quantize_symmetric on every image separately (max is exact, the
+    divide/round/clip are elementwise), which is what makes the folded
+    batch bit-identical to the per-image loop.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(divs), axis=(1, 2)), 1e-12) / qmax
+    q = jnp.clip(jnp.round(divs / scale[:, None, None]),
+                 -qmax, qmax).astype(jnp.int8)
+    return q, scale
+
+
+def _forward_depthwise(lp: LayerPlan, x4: jax.Array, point) -> jax.Array:
     """Per-channel S=K*K contractions as ONE batched integer contraction.
 
     Depthwise kernels pair channel c's patches with channel c's single DKV
-    row, so the GEMM degenerates to a (P, KK, D) x (D, KK) -> (P, D)
-    batched dot — the VPU path.  Quantization is per channel on both sides
-    (each channel is an independent VDP), matching
-    core/vdp.depthwise_conv2d_vdp bit-for-bit.
+    row, so the GEMM degenerates to a (B, P, KK, D) x (D, KK) -> (B, P, D)
+    batched dot — the VPU path.  Quantization is per image AND per channel
+    on the activation side (each channel of each frame is an independent
+    VDP), matching core/vdp.depthwise_conv2d_vdp bit-for-bit.
     """
-    del interpret
-    h, w, d = x.shape
+    b, h, w, d = x4.shape
     k = lp.k
     qmax = 2 ** (point.bits - 1) - 1
-    divs = vdp.im2col(x, k, lp.stride, lp.padding)        # (P, K*K*D)
-    p = divs.shape[0]
-    divs = divs.reshape(p, k * k, d)
-    a_scale = jnp.maximum(jnp.max(jnp.abs(divs), axis=(0, 1)), 1e-12) / qmax
-    divs_q = jnp.clip(jnp.round(divs / a_scale[None, None, :]),
+    divs = _im2col_batch(x4, k, lp.stride, lp.padding)    # (B, P, K*K*D)
+    p = divs.shape[1]
+    divs = divs.reshape(b, p, k * k, d)
+    a_scale = jnp.maximum(jnp.max(jnp.abs(divs), axis=(1, 2)),
+                          1e-12) / qmax                    # (B, D)
+    divs_q = jnp.clip(jnp.round(divs / a_scale[:, None, None, :]),
                       -qmax, qmax).astype(jnp.int8)
-    acc = jnp.einsum("pkc,ck->pc", divs_q.astype(jnp.int32),
+    acc = jnp.einsum("bpkc,ck->bpc", divs_q.astype(jnp.int32),
                      lp.rhs.astype(jnp.int32))
-    r = ref.epilogue_ref(acc, (a_scale * lp.w_scale)[None, :],
-                         None if lp.bias is None else lp.bias[None, :],
+    r = ref.epilogue_ref(acc, (a_scale * lp.w_scale[None, :])[:, None, :],
+                         None if lp.bias is None else lp.bias[None, None, :],
                          lp.act)
     ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
-    return r.reshape(ho, wo, d)
+    return r.reshape(b, ho, wo, d)
 
 
 def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
                   interpret: bool | None = None) -> jax.Array:
-    """One layer through its pre-packed kernel with the fused epilogue."""
+    """One layer through its pre-packed kernel with the fused epilogue.
+
+    x: (H, W, D) or batched (B, H, W, D) for conv layers; a flat feature
+    vector, (H, W, D) map, batched rows (B, S) or batched maps for FC.
+    Batched inputs return batched outputs; the computation is the folded
+    position stream described in the module docstring.
+    """
     if interpret is None:
         interpret = ops.default_interpret()
     point = plan.point
-    if lp.mode == MODE_DEPTHWISE:
-        return _forward_depthwise(lp, x, point, interpret)
 
     if lp.kind is ConvKind.FC:
-        divs = x.reshape(1, -1) if x.ndim != 2 else x
-        spatial = None
+        if x.ndim == 4:                       # batched feature maps
+            flat = x.reshape(x.shape[0], -1)
+        elif x.ndim == 2:                     # rows are already the batch
+            flat = x
+        else:                                 # single map / vector -> (1, S)
+            flat = x.reshape(1, -1)
+        divs = flat[:, None, :]               # (B, 1, S)
+        spatial = None                        # FC output is (B, F) either way
     else:
-        divs = vdp.im2col(x, lp.k, lp.stride, lp.padding)
-        spatial = vdp.out_hw(x.shape[0], x.shape[1], lp.k, lp.stride,
+        batched = x.ndim == 4
+        x4 = x if batched else x[None]
+        if lp.mode == MODE_DEPTHWISE:
+            out = _forward_depthwise(lp, x4, point)
+            return out if batched else out[0]
+        divs = _im2col_batch(x4, lp.k, lp.stride, lp.padding)  # (B, P, S)
+        spatial = vdp.out_hw(x4.shape[1], x4.shape[2], lp.k, lp.stride,
                              lp.padding)
-    assert divs.shape[1] == lp.s, (divs.shape, lp.s)
-    divs_q, a_scale = _quantize_acts(divs, point.bits)
+    if divs.shape[2] != lp.s:
+        raise ValueError(f"layer {lp.name!r} expects contraction {lp.s}, "
+                         f"got input stream of width {divs.shape[2]}")
+    b, p, _ = divs.shape
+    divs_q, a_scale = _quantize_per_image(divs, point.bits)
+    lhs = divs_q.reshape(b * p, lp.s)
+    bp = b * p
+    pp = _round_up(bp, point.block_b)
+    # fold the batch into the position stream; each image's rows carry its
+    # own dequant scale into the fused epilogue.  One image has one scale,
+    # so it rides the cheaper scalar-SMEM epilogue path.
     scale = a_scale * lp.w_scale
-    p = divs_q.shape[0]
-    pp = _round_up(p, point.block_b)
+    if b == 1:
+        scale_rows = scale[0]
+    else:
+        scale_rows = jnp.pad(jnp.repeat(scale, p), (0, pp - bp))
     if lp.mode == MODE_PACKED:
-        lhs = jnp.pad(divs_q, ((0, pp - p), (0, point.x - lp.s)))
+        lhs = jnp.pad(lhs, ((0, pp - bp), (0, point.x - lp.s)))
         out = kern.vdpe_pack_gemm_zs(
             lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
-            interpret=interpret, scale=scale, bias=lp.bias, act=lp.act)
+            interpret=interpret, scale=scale_rows, bias=lp.bias, act=lp.act)
     else:
         assert lp.mode == MODE_DENSE
         ss = lp.rhs.shape[0]
-        lhs = jnp.pad(divs_q, ((0, pp - p), (0, ss - lp.s)))
+        lhs = jnp.pad(lhs, ((0, pp - bp), (0, ss - lp.s)))
         out = kern.vdpe_gemm(
             lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
             block_k=point.block_k, interpret=interpret,
-            scale=scale, bias=lp.bias, act=lp.act)
-    out = out[:p, :lp.f]
+            scale=scale_rows, bias=lp.bias, act=lp.act)
+    out = out[:bp, :lp.f]
     if spatial is not None:
-        out = out.reshape(*spatial, lp.f)
-    return out
+        out = out.reshape(b, *spatial, lp.f)
+        return out if batched else out[0]
+    out = out.reshape(b, lp.f)
+    return out                                # FC single image stays (1, F)
 
 
 def forward(plan: ModelPlan, x: jax.Array,
             interpret: bool | None = None) -> jax.Array:
-    """Run activations through every layer of a compiled plan."""
+    """Run activations through every layer of a compiled plan.
+
+    Accepts one image (H, W, D) or an NHWC batch (B, H, W, D); batched
+    outputs are bit-identical to looping `forward` over the images.
+    """
     for lp in plan.layers:
         x = forward_layer(plan, lp, x, interpret=interpret)
     return x

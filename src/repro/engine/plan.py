@@ -204,9 +204,10 @@ def get_plan(name: str, layer_defs: Sequence[LayerDef],
     cached = _PLAN_CACHE.get(key)
     if cached is not None:
         cached_fp, plan = cached
-        assert cached_fp == fp, (
-            f"plan cache key {name!r} reused for a structurally different "
-            f"model; use a distinct model key per weight set")
+        if cached_fp != fp:
+            raise ValueError(
+                f"plan cache key {name!r} reused for a structurally "
+                f"different model; use a distinct model key per weight set")
         _CACHE_STATS["hits"] += 1
         return plan
     _CACHE_STATS["misses"] += 1

@@ -26,8 +26,13 @@ Kernels:
 
 All three take an optional fused epilogue (dequant scale, bias add,
 ReLU/ReLU6) so integer accumulators never round-trip HBM between the GEMM
-and the activation: ``scale`` rides in SMEM, ``bias`` is blocked over O,
-and the activation is a compile-time branch.
+and the activation: a scalar ``scale`` rides in SMEM, ``bias`` is blocked
+over O, and the activation is a compile-time branch.  The int8 GEMMs also
+accept a *per-row* scale (shape (B,) or (B, 1)): the batched engine folds
+many images' DIV streams into one GEMM, and each image keeps its own
+activation-DAC quantization scale, so the dequant scale varies along B.
+Per-row scales ride as a (block_b, 1) VMEM column blocked over the B grid
+axis and broadcast across the O lanes.
 
 Both kernels use explicit BlockSpec VMEM tiling with MXU-aligned block
 shapes (multiples of (32, 128) for int8 operands, (8, 128) for f32).
@@ -103,6 +108,32 @@ def _gemm_epilogue_kernel(scale_ref, lhs_ref, rhs_ref, bias_ref, out_ref,
         out_ref[...] = _apply_act(r, act)
 
 
+def _gemm_epilogue_rows_kernel(lhs_ref, rhs_ref, scale_ref, bias_ref,
+                               out_ref, acc_ref, *, n_k: int, act: str):
+    """Mode-1 fused kernel with a per-row dequant scale column in VMEM.
+
+    The (block_b, 1) scale block is a narrow f32 block (lane dim < 128),
+    the row-wise twin of the (1, block_o) bias block every epilogue here
+    already uses; Mosaic pads narrow blocks to the native tile.  Validated
+    in interpret mode (CI is CPU-only) — first real-TPU run of the batched
+    path should confirm the lowering like any other kernel change.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jax.lax.dot_general(
+        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        r = acc_ref[...].astype(jnp.float32) * scale_ref[...] + bias_ref[...]
+        out_ref[...] = _apply_act(r, act)
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_o", "block_k",
                                              "interpret", "act"))
 def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
@@ -116,6 +147,8 @@ def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
     B, K, O must be multiples of the block sizes (ops.py / engine pad).
     Without ``scale`` the result is the raw int32 accumulator; with it the
     epilogue ``act(acc * scale + bias)`` is fused and the result is f32.
+    ``scale`` may be a scalar (one dequant scale for the whole stream) or a
+    (B,) / (B, 1) per-row vector (the batched engine's per-image scales).
     """
     b, k = lhs.shape
     k2, o = rhs.shape
@@ -135,9 +168,28 @@ def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
             out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
             interpret=interpret,
         )(lhs, rhs)
-    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    scale = jnp.asarray(scale, jnp.float32)
     if bias is None:
         bias = jnp.zeros((1, o), jnp.float32)
+    if scale.size != 1:
+        if scale.size != b:
+            raise ValueError(
+                f"per-row scale must have one entry per lhs row "
+                f"({b}, block-padded), got shape {scale.shape}")
+        return pl.pallas_call(
+            functools.partial(_gemm_epilogue_rows_kernel, n_k=n_k, act=act),
+            grid=grid,
+            in_specs=[
+                lhs_spec, rhs_spec,
+                pl.BlockSpec((block_b, 1), lambda i, j, kk: (i, 0)),
+                pl.BlockSpec((1, block_o), lambda i, j, kk: (0, j)),
+            ],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+            scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
+            interpret=interpret,
+        )(lhs, rhs, scale.reshape(b, 1), bias)
+    scale = scale.reshape(1, 1)
     return pl.pallas_call(
         functools.partial(_gemm_epilogue_kernel, n_k=n_k, act=act),
         grid=grid,
@@ -185,6 +237,16 @@ def _pack_gemm_zs_epilogue_kernel(scale_ref, lhs_ref, rhs_ref, bias_ref,
     out_ref[...] = _apply_act(r, act)
 
 
+def _pack_gemm_zs_epilogue_rows_kernel(lhs_ref, rhs_ref, scale_ref, bias_ref,
+                                       out_ref, *, act: str):
+    """Zero-skipping Mode-2 body with a per-row dequant scale column."""
+    acc = jax.lax.dot_general(
+        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    r = acc.astype(jnp.float32) * scale_ref[...] + bias_ref[...]
+    out_ref[...] = _apply_act(r, act)
+
+
 @functools.partial(jax.jit, static_argnames=("block_b", "block_o",
                                              "interpret", "act"))
 def vdpe_pack_gemm_zs(lhs: jax.Array, rhs_seg: jax.Array,
@@ -201,6 +263,9 @@ def vdpe_pack_gemm_zs(lhs: jax.Array, rhs_seg: jax.Array,
     result is bit-identical to the (y*x)-deep block-diagonal oracle
     (ref.vdpe_pack_gemm_blockdiag) while issuing only an x-deep contraction
     and reading/holding 1/y of the RHS bytes.
+
+    ``scale`` follows the vdpe_gemm convention: scalar, or per-row (B,) /
+    (B, 1) for the batched engine's folded multi-image streams.
     """
     b, x = lhs.shape
     x2, o = rhs_seg.shape
@@ -221,9 +286,27 @@ def vdpe_pack_gemm_zs(lhs: jax.Array, rhs_seg: jax.Array,
             out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
             interpret=interpret,
         )(lhs, rhs_seg)
-    scale = jnp.asarray(scale, jnp.float32).reshape(1, 1)
+    scale = jnp.asarray(scale, jnp.float32)
     if bias is None:
         bias = jnp.zeros((1, o), jnp.float32)
+    if scale.size != 1:
+        if scale.size != b:
+            raise ValueError(
+                f"per-row scale must have one entry per lhs row "
+                f"({b}, block-padded), got shape {scale.shape}")
+        return pl.pallas_call(
+            functools.partial(_pack_gemm_zs_epilogue_rows_kernel, act=act),
+            grid=grid,
+            in_specs=[
+                lhs_spec, rhs_spec,
+                pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+                pl.BlockSpec((1, block_o), lambda i, j: (0, j)),
+            ],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+            interpret=interpret,
+        )(lhs, rhs_seg, scale.reshape(b, 1), bias)
+    scale = scale.reshape(1, 1)
     return pl.pallas_call(
         functools.partial(_pack_gemm_zs_epilogue_kernel, act=act),
         grid=grid,

@@ -18,10 +18,14 @@ from ..models import build_model
 
 
 class BatchedServer:
-    """Fixed-batch decode server with slot recycling (continuous batching).
+    """Multi-slot decode server with slot recycling (continuous batching).
 
     Requests occupy slots; finished requests free their slot for queued
-    ones — the decode step always runs at full batch with per-slot masks.
+    ones.  Each slot owns its own batch-1 KV cache: ``decode_fn`` writes
+    *every* batch row's k/v at the scalar cache index, so stepping one
+    slot of a shared multi-row cache would overwrite the other slots'
+    history at that position with garbage — per-slot caches keep each
+    request's context isolated (and all slots share one jitted trace).
     """
 
     def __init__(self, arch: str, batch: int = 4, ctx: int = 128,
@@ -34,14 +38,14 @@ class BatchedServer:
         self.ctx = ctx
         self.model = build_model(cfg)
         self.params = self.model.init(jax.random.PRNGKey(seed))
-        self.cache = self.model.init_cache(batch, ctx)
-        self.tokens = jnp.zeros((batch, 1), jnp.int32)
+        self.caches = [self.model.init_cache(1, ctx) for _ in range(batch)]
         self.positions = np.zeros(batch, np.int32)     # per-slot next pos
         self.active = np.zeros(batch, bool)
         self.outputs: Dict[int, List[int]] = {}
         self.queue: List[Dict] = []
         self._decode = jax.jit(self.model.decode_fn)
         self._next_id = 0
+        self._slot_req: Dict[int, Dict] = {}
 
     def submit(self, prompt: List[int], max_tokens: int = 16) -> int:
         rid = self._next_id
@@ -56,18 +60,20 @@ class BatchedServer:
             if self.active[slot] or not self.queue:
                 continue
             req = self.queue.pop(0)
-            # prefill the prompt token-by-token (teacher-forced)
-            for t, tok in enumerate(req["prompt"]):
+            # prefill all but the last prompt token (teacher-forced); the
+            # last one is fed by the first decode step, which produces the
+            # first output logits — no position is ever fed twice
+            for t, tok in enumerate(req["prompt"][:-1]):
                 self._step_slot(slot, tok, t)
-            self.positions[slot] = len(req["prompt"])
+            self.positions[slot] = len(req["prompt"]) - 1
             self.active[slot] = True
-            self._slot_req = getattr(self, "_slot_req", {})
             self._slot_req[slot] = req
 
     def _step_slot(self, slot: int, token: int, pos: int):
-        toks = self.tokens.at[slot, 0].set(token)
-        logits, self.cache = self._decode(
-            self.params, {"tokens": toks}, self.cache, jnp.int32(pos))
+        toks = jnp.full((1, 1), token, jnp.int32)
+        logits, self.caches[slot] = self._decode(
+            self.params, {"tokens": toks}, self.caches[slot],
+            jnp.int32(pos))
         self._last_logits = logits
 
     def step(self) -> int:
@@ -81,8 +87,8 @@ class BatchedServer:
             pos = int(self.positions[slot])
             last = self.outputs[req["id"]][-1] if self.outputs[req["id"]] \
                 else req["prompt"][-1]
-            self._step_slot(slot, last, pos - 1)
-            nxt = int(jnp.argmax(self._last_logits[slot, 0, :self.cfg.vocab]))
+            self._step_slot(slot, last, pos)
+            nxt = int(jnp.argmax(self._last_logits[0, 0, :self.cfg.vocab]))
             self.outputs[req["id"]].append(nxt)
             self.positions[slot] += 1
             req["remaining"] -= 1

@@ -1,0 +1,29 @@
+"""CNN inference serving runtime on the weight-stationary engine.
+
+The paper's economics are throughput economics: one DKV imprint amortized
+over a stream of frames (Section VI-A), evaluated as sustained FPS and
+FPS/W (Figs. 10-11).  This package is the request-serving subsystem that
+realizes that stream:
+
+* registry.py  — multi-model plan registry: compile-once ModelPlans with
+                 LRU eviction and per-model weight factories
+* batcher.py   — dynamic batcher: per-model queues, max-batch + max-wait
+                 admission, mixed-model round-robin dispatch
+* server.py    — CNNServer: forms batches, runs them through the batched
+                 engine forward (engine/executor.py), splits results
+* telemetry.py — hardware-time telemetry: every served batch is also
+                 costed through core/simulator.simulate, so the server
+                 reports wall-clock images/s AND modeled photonic FPS and
+                 FPS/W per accelerator operating point
+* models.py    — serving model zoo: executable mini variants of the paper
+                 CNNs plus their paper-scale simulator layer tables
+
+Closed-loop benchmark: benchmarks/serve_bench.py.
+"""
+from .batcher import DynamicBatcher, FormedBatch, Request  # noqa: F401
+from .models import (SERVING_MODELS, serving_defs,  # noqa: F401
+                     serving_input_shape, specs_for_defs)
+from .registry import PlanRegistry, ServingModel, paper_cnn_registry  # noqa: F401
+from .server import CNNServer  # noqa: F401
+from .telemetry import (DEFAULT_HW_POINTS, BatchRecord,  # noqa: F401
+                        HardwarePoint, TelemetryLog)

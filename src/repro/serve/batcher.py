@@ -1,0 +1,88 @@
+"""Dynamic batcher: per-model queues, max-batch/max-wait, round-robin.
+
+Requests for the same model queue together (a batch must share one DKV
+imprint); a queue becomes dispatchable when it can fill ``max_batch``
+frames or its oldest request has waited ``max_wait_s`` — the standard
+latency/throughput knob of serving batchers.  Across models, dispatch is
+round-robin over dispatchable queues so one hot model cannot starve the
+others' imprints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Any, Deque, Dict, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    rid: int
+    model: str
+    x: Any                  # (H, W, D) input image
+    t_submit: float
+
+
+@dataclasses.dataclass(frozen=True)
+class FormedBatch:
+    model: str
+    requests: tuple          # Tuple[Request, ...]
+    t_formed: float
+
+    @property
+    def size(self) -> int:
+        return len(self.requests)
+
+    def queue_waits(self) -> List[float]:
+        return [self.t_formed - r.t_submit for r in self.requests]
+
+
+class DynamicBatcher:
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.005):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self._queues: Dict[str, Deque[Request]] = {}
+        self._rr: List[str] = []     # model rotation, first-submission order
+        self._rr_next = 0
+        self._next_rid = 0
+
+    def submit(self, model: str, x: Any, now: float) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        if model not in self._queues:
+            self._queues[model] = deque()
+            self._rr.append(model)
+        self._queues[model].append(Request(rid, model, x, now))
+        return rid
+
+    def pending(self, model: Optional[str] = None) -> int:
+        if model is not None:
+            return len(self._queues.get(model, ()))
+        return sum(len(q) for q in self._queues.values())
+
+    def _dispatchable(self, model: str, now: float, force: bool) -> bool:
+        q = self._queues[model]
+        if not q:
+            return False
+        return (force or len(q) >= self.max_batch
+                or now - q[0].t_submit >= self.max_wait_s)
+
+    def pop_batch(self, now: float, force: bool = False,
+                  ) -> Optional[FormedBatch]:
+        """Form the next batch, or None if no queue is dispatchable.
+
+        ``force`` admits any non-empty queue regardless of fill/wait —
+        the drain path at end of trace (ragged final batches).
+        """
+        n = len(self._rr)
+        for i in range(n):
+            model = self._rr[(self._rr_next + i) % n]
+            if not self._dispatchable(model, now, force):
+                continue
+            q = self._queues[model]
+            reqs = tuple(q.popleft()
+                         for _ in range(min(self.max_batch, len(q))))
+            self._rr_next = (self._rr_next + i + 1) % n
+            return FormedBatch(model=model, requests=reqs, t_formed=now)
+        return None

@@ -1,0 +1,143 @@
+"""Serving model zoo: executable mini variants of the paper CNNs.
+
+The analytic model zoo (cnn/models.py) describes the paper's CNNs as flat
+LayerSpec *censuses* — residual branches, SE blocks and concats appear as
+standalone rows — which is exactly what the mapping study and simulator
+need, but such a table is not a sequentially executable network.  For the
+functional serving path each paper CNN therefore gets a small *sequential*
+stand-in here that preserves its architectural signature (EfficientNet's
+expand/depthwise/SE-ish/project MBConv shape, Xception's separable-conv
+chains, ShuffleNetV2's pointwise/depthwise/pointwise units), spans both
+paper GEMM modes (Mode-2 small-S contractions AND Mode-1 dense ones) plus
+the depthwise VPU path, and is cheap enough to run through the Pallas
+kernels in interpret mode on a CPU host.
+
+Weight factories are deterministic in (model, seed): the registry can
+evict a plan and re-imprint bit-identical DKVs later.
+
+Hardware-time telemetry does NOT use these minis: the simulator costs the
+*paper-scale* layer tables (PAPER_SCALE_SPECS — the full EfficientNetB7 /
+Xception / ShuffleNetV2 censuses), modeling the real CNN the mini stands
+in for.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..cnn.layers import ConvKind, LayerSpec, dc, fc, pc, sc
+from ..cnn.models import MODEL_ZOO
+from ..core import vdp
+from ..engine import LayerDef
+
+
+def _w(rng: np.random.Generator, shape: Tuple[int, ...]) -> jnp.ndarray:
+    return jnp.asarray(rng.normal(size=shape) * 0.5, jnp.float32)
+
+
+def _b(rng: np.random.Generator, n: int) -> jnp.ndarray:
+    return jnp.asarray(rng.normal(size=(n,)) * 0.1, jnp.float32)
+
+
+def efficientnet_mini(seed: int = 0) -> List[LayerDef]:
+    """MBConv-shaped stand-in: stem SC, expand PC, DC, project PC, head, FC."""
+    rng = np.random.default_rng((seed, 0xEFF))
+    return [
+        LayerDef("stem", ConvKind.SC, _w(rng, (8, 3, 3, 3)),
+                 act="relu", stride=2),
+        LayerDef("expand", ConvKind.PC, _w(rng, (24, 1, 1, 8)),
+                 bias=_b(rng, 24), act="relu6"),
+        LayerDef("dwconv", ConvKind.DC, _w(rng, (24, 3, 3)),
+                 act="relu6", stride=2),
+        LayerDef("project", ConvKind.PC, _w(rng, (16, 1, 1, 24))),
+        LayerDef("head", ConvKind.PC, _w(rng, (32, 1, 1, 16)),
+                 bias=_b(rng, 32), act="relu"),
+        LayerDef("predictions", ConvKind.FC, _w(rng, (10, 4 * 4 * 32))),
+    ]
+
+
+def xception_mini(seed: int = 0) -> List[LayerDef]:
+    """Separable-conv-chain stand-in: entry SC then two dw+pw sepconvs."""
+    rng = np.random.default_rng((seed, 0xCEB))
+    return [
+        LayerDef("conv1", ConvKind.SC, _w(rng, (16, 3, 3, 3)),
+                 act="relu", stride=2),
+        LayerDef("sep1_dw", ConvKind.DC, _w(rng, (16, 3, 3)), act="relu"),
+        LayerDef("sep1_pw", ConvKind.PC, _w(rng, (32, 1, 1, 16)),
+                 bias=_b(rng, 32), act="relu"),
+        LayerDef("sep2_dw", ConvKind.DC, _w(rng, (32, 3, 3)),
+                 act="relu", stride=2),
+        # S = 32 rides Mode 2; the exit 1x1 below (S = 48) needs Mode 1
+        LayerDef("sep2_pw", ConvKind.PC, _w(rng, (48, 1, 1, 32)), act="relu"),
+        LayerDef("exit_pw", ConvKind.PC, _w(rng, (64, 1, 1, 48)), act="relu"),
+        LayerDef("predictions", ConvKind.FC, _w(rng, (10, 4 * 4 * 64))),
+    ]
+
+
+def shufflenet_mini(seed: int = 0) -> List[LayerDef]:
+    """ShuffleNetV2-unit stand-in: stem SC, pw/dw/pw unit, conv5, FC."""
+    rng = np.random.default_rng((seed, 0x5F7))
+    return [
+        LayerDef("conv1", ConvKind.SC, _w(rng, (12, 3, 3, 3)),
+                 act="relu", stride=2),
+        LayerDef("unit_pw1", ConvKind.PC, _w(rng, (24, 1, 1, 12)),
+                 act="relu"),
+        LayerDef("unit_dw", ConvKind.DC, _w(rng, (24, 3, 3)), stride=2),
+        LayerDef("unit_pw2", ConvKind.PC, _w(rng, (24, 1, 1, 24)),
+                 bias=_b(rng, 24), act="relu"),
+        LayerDef("conv5", ConvKind.PC, _w(rng, (48, 1, 1, 24)), act="relu"),
+        LayerDef("predictions", ConvKind.FC, _w(rng, (10, 4 * 4 * 48))),
+    ]
+
+
+#: name -> (weight factory, input shape HWC, paper-scale simulator table)
+SERVING_MODELS: Dict[str, Tuple[Callable[[int], List[LayerDef]],
+                                Tuple[int, int, int], str]] = {
+    "efficientnet_mini": (efficientnet_mini, (16, 16, 3), "efficientnet_b7"),
+    "xception_mini": (xception_mini, (16, 16, 3), "xception"),
+    "shufflenet_mini": (shufflenet_mini, (16, 16, 3), "shufflenet_v2"),
+}
+
+
+def serving_defs(name: str, seed: int = 0) -> List[LayerDef]:
+    return SERVING_MODELS[name][0](seed)
+
+
+def serving_input_shape(name: str) -> Tuple[int, int, int]:
+    return SERVING_MODELS[name][1]
+
+
+def paper_scale_specs(name: str) -> List[LayerSpec]:
+    """The full paper-CNN layer table this serving model stands in for."""
+    return MODEL_ZOO[SERVING_MODELS[name][2]]()
+
+
+def specs_for_defs(defs: Sequence[LayerDef],
+                   input_shape: Tuple[int, int, int]) -> List[LayerSpec]:
+    """Derive the analytic LayerSpec table of an executable LayerDef chain.
+
+    Walks the chain tracking spatial shape exactly as the executor does
+    (vdp.out_hw), so ``simulate(acc, specs_for_defs(defs, shape), batch)``
+    models precisely the tensor products the engine will run.
+    """
+    h, w, _ = input_shape
+    specs: List[LayerSpec] = []
+    for ld in defs:
+        if ld.kind is ConvKind.FC:
+            f, s = ld.weights.shape
+            specs.append(fc(ld.name, s, f))
+            continue
+        if ld.kind is ConvKind.DC:
+            d, k, _ = ld.weights.shape
+            h, w = vdp.out_hw(h, w, k, ld.stride, ld.padding)
+            specs.append(dc(ld.name, k, d, h, w))
+            continue
+        f, k, _, d = ld.weights.shape
+        h, w = vdp.out_hw(h, w, k, ld.stride, ld.padding)
+        if ld.kind is ConvKind.PC:
+            specs.append(pc(ld.name, d, f, h, w))
+        else:
+            specs.append(sc(ld.name, k, d, f, h, w))
+    return specs

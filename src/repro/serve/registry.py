@@ -1,0 +1,142 @@
+"""Multi-model plan registry: compile-once DKV imprints with LRU eviction.
+
+A deployed photonic accelerator keeps a bounded number of models' DKVs
+resident (MRR imprints are the scarce resource); loading another model
+evicts the least-recently-served one.  The registry mirrors that: it is
+keyed like ``engine.plan.get_plan`` — (model name, EnginePoint) identifies
+a compiled ``ModelPlan`` — but owns its own bounded cache so eviction
+actually frees the imprint, and re-loads through the registered *weight
+factory* (deterministic in (model, seed)), re-imprinting bit-identical
+DKVs on demand.
+
+Structural misuse (re-registering a name with a different architecture,
+or a factory that changes shape between loads) raises ``ValueError``, the
+same guard ``get_plan`` applies to its cache keys.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from ..cnn.layers import LayerSpec
+from ..engine import DEFAULT_POINT, EnginePoint, LayerDef, ModelPlan
+from ..engine import compile_model
+from ..engine.plan import _defs_fingerprint
+from . import models as zoo
+
+
+@dataclasses.dataclass(frozen=True)
+class ServingModel:
+    """A loaded model: the compiled plan plus its simulator layer tables."""
+    name: str
+    plan: ModelPlan
+    input_shape: Tuple[int, int, int]
+    exec_specs: Tuple[LayerSpec, ...]   # what the engine actually runs
+    sim_specs: Tuple[LayerSpec, ...]    # what the hardware model costs
+
+
+@dataclasses.dataclass
+class _Registration:
+    factory: Callable[[], List[LayerDef]]
+    input_shape: Tuple[int, int, int]
+    sim_specs: Optional[Tuple[LayerSpec, ...]]
+    fingerprint: Optional[tuple] = None  # set on first load
+
+
+class PlanRegistry:
+    """LRU-evicting registry of compiled ModelPlans, one per model name.
+
+    ``capacity`` bounds how many plans are resident at once; every loaded
+    plan shares this registry's ``EnginePoint`` (one accelerator operating
+    point per registry, as on real hardware).
+    """
+
+    def __init__(self, capacity: int = 4,
+                 point: EnginePoint = DEFAULT_POINT):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.point = point
+        self._registered: Dict[str, _Registration] = {}
+        self._loaded: "OrderedDict[str, ServingModel]" = OrderedDict()
+        self._stats = {"hits": 0, "misses": 0, "evictions": 0}
+
+    def register(self, name: str, factory: Callable[[], List[LayerDef]],
+                 input_shape: Tuple[int, int, int],
+                 sim_specs: Optional[Sequence[LayerSpec]] = None) -> None:
+        """Declare a servable model; compilation is lazy (first `get`)."""
+        if name in self._registered:
+            raise ValueError(f"model {name!r} already registered")
+        self._registered[name] = _Registration(
+            factory=factory, input_shape=tuple(input_shape),
+            sim_specs=None if sim_specs is None else tuple(sim_specs))
+
+    @property
+    def registered(self) -> List[str]:
+        return list(self._registered)
+
+    def input_shape(self, name: str) -> Tuple[int, int, int]:
+        return self._registered[name].input_shape
+
+    @property
+    def loaded(self) -> List[str]:
+        """Currently resident plans, least-recently-used first."""
+        return list(self._loaded)
+
+    def stats(self) -> Dict[str, int]:
+        return dict(self._stats, resident=len(self._loaded))
+
+    def get(self, name: str) -> ServingModel:
+        """Fetch a model's plan, compiling (and possibly evicting) on miss."""
+        if name in self._loaded:
+            self._loaded.move_to_end(name)
+            self._stats["hits"] += 1
+            return self._loaded[name]
+        try:
+            reg = self._registered[name]
+        except KeyError:
+            raise KeyError(
+                f"model {name!r} not registered "
+                f"(registered: {sorted(self._registered)})") from None
+        self._stats["misses"] += 1
+        defs = reg.factory()
+        fp = _defs_fingerprint(defs)
+        if reg.fingerprint is None:
+            reg.fingerprint = fp
+        elif reg.fingerprint != fp:
+            raise ValueError(
+                f"weight factory for {name!r} produced a structurally "
+                f"different model than its first load; factories must be "
+                f"deterministic per model key")
+        plan = compile_model(name, defs, self.point)
+        exec_specs = tuple(zoo.specs_for_defs(defs, reg.input_shape))
+        entry = ServingModel(
+            name=name, plan=plan, input_shape=reg.input_shape,
+            exec_specs=exec_specs,
+            sim_specs=(reg.sim_specs if reg.sim_specs is not None
+                       else exec_specs))
+        while len(self._loaded) >= self.capacity:
+            self._loaded.popitem(last=False)
+            self._stats["evictions"] += 1
+        self._loaded[name] = entry
+        return entry
+
+
+def paper_cnn_registry(capacity: int = 3,
+                       point: EnginePoint = DEFAULT_POINT,
+                       seed: int = 0) -> PlanRegistry:
+    """Registry pre-loaded with the serving zoo's paper-CNN stand-ins.
+
+    Each mini executes functionally through the engine while its telemetry
+    is costed at paper scale (the full EfficientNetB7 / Xception /
+    ShuffleNetV2 layer tables from cnn/models.py).
+    """
+    reg = PlanRegistry(capacity=capacity, point=point)
+    for name in zoo.SERVING_MODELS:
+        reg.register(
+            name,
+            factory=(lambda n=name: zoo.serving_defs(n, seed)),
+            input_shape=zoo.serving_input_shape(name),
+            sim_specs=zoo.paper_scale_specs(name))
+    return reg

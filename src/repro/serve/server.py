@@ -1,0 +1,124 @@
+"""CNNServer: the serving loop tying registry + batcher + engine together.
+
+One `step()` forms at most one batch (dynamic batcher policy), fetches the
+model's resident plan (registry, LRU), stacks the requests into an NHWC
+batch, runs it through the batched engine forward — ONE folded position
+stream against the resident DKV imprint — and splits the outputs back to
+their requests.  Wall-clock and modeled-hardware telemetry is recorded per
+batch (telemetry.py).
+
+The clock is injectable (``time_fn``) so tests and trace replays can drive
+a virtual clock; by default everything is wall time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .. import engine
+from .batcher import DynamicBatcher
+from .registry import PlanRegistry
+from .telemetry import DEFAULT_HW_POINTS, HardwarePoint, TelemetryLog
+
+
+class CNNServer:
+    def __init__(self, registry: PlanRegistry, max_batch: int = 8,
+                 max_wait_s: float = 0.005,
+                 hw_points: Sequence[HardwarePoint] = DEFAULT_HW_POINTS,
+                 interpret: Optional[bool] = None,
+                 time_fn: Callable[[], float] = time.monotonic):
+        self.registry = registry
+        self.batcher = DynamicBatcher(max_batch=max_batch,
+                                      max_wait_s=max_wait_s)
+        self.telemetry = TelemetryLog(hw_points)
+        self.interpret = interpret
+        self._time = time_fn
+        self.results: Dict[int, np.ndarray] = {}
+
+    def _now(self, now: Optional[float]) -> float:
+        return self._time() if now is None else now
+
+    def submit(self, model: str, x: Any,
+               now: Optional[float] = None) -> int:
+        """Queue one image for ``model``; returns the request id.
+
+        Shape is validated here, at the door: a malformed image must not
+        reach a formed batch, where it would fail the whole batch's stack
+        after its requests have already left the queue.
+        """
+        if model not in self.registry.registered:
+            raise KeyError(f"model {model!r} not registered "
+                           f"(registered: {sorted(self.registry.registered)})")
+        expect = self.registry.input_shape(model)
+        got = np.shape(x)
+        if got != expect:
+            raise ValueError(f"model {model!r} expects input shape "
+                             f"{expect}, got {got}")
+        return self.batcher.submit(model, x, self._now(now))
+
+    def pending(self) -> int:
+        return self.batcher.pending()
+
+    def reset(self) -> None:
+        """Drop accumulated results and telemetry (start a fresh trace).
+
+        ``results`` and the telemetry records otherwise grow for the
+        server's lifetime — callers running multiple traces against one
+        server (or consuming results incrementally) should reset between
+        traces, after harvesting what they need.
+        """
+        if self.batcher.pending():
+            raise RuntimeError(
+                f"{self.batcher.pending()} requests still queued; drain "
+                f"before resetting")
+        self.results.clear()
+        self.telemetry.records.clear()
+
+    def step(self, now: Optional[float] = None, force: bool = False) -> int:
+        """Serve at most one batch; returns the number of requests served.
+
+        The recorded per-batch ``exec_s`` is full service time: plan fetch
+        (a registry miss pays compile/LRU-reload here, where the requester
+        actually waits), batch stacking, and kernel execution.  Request
+        latencies are taken on the server's own clock (``time_fn``), so a
+        virtual-clock replay stays in one unit system; on the default wall
+        clock they include the compile stall too.
+        """
+        now = self._now(now)
+        fb = self.batcher.pop_batch(now, force=force)
+        if fb is None:
+            return 0
+        t0 = time.perf_counter()
+        entry = self.registry.get(fb.model)
+        xb = jnp.stack([jnp.asarray(r.x, jnp.float32) for r in fb.requests])
+        out = engine.forward(entry.plan, xb, interpret=self.interpret)
+        out = jax.block_until_ready(out)
+        exec_s = time.perf_counter() - t0
+        done = self._now(None)
+        out_np = np.asarray(out)
+        lats = []
+        for i, req in enumerate(fb.requests):
+            self.results[req.rid] = out_np[i]
+            lats.append(done - req.t_submit)
+        self.telemetry.record_batch(
+            model=fb.model, sim_specs=entry.sim_specs, batch_size=fb.size,
+            t_formed=now, exec_s=exec_s, queue_waits_s=fb.queue_waits(),
+            latencies_s=lats)
+        return fb.size
+
+    def run_until_drained(self, max_steps: int = 100_000,
+                          ) -> Dict[int, np.ndarray]:
+        """Serve everything queued (force-flushing ragged final batches).
+
+        Returns ``self.results`` — the server's *cumulative* rid->output
+        map, including requests served before this call; use ``reset()``
+        between traces for per-trace results.
+        """
+        for _ in range(max_steps):
+            if self.step(force=True) == 0 and self.batcher.pending() == 0:
+                break
+        return self.results

@@ -1,0 +1,168 @@
+"""Hardware-time telemetry: wall clock AND modeled photonic time per batch.
+
+Every served batch is costed twice: the wall-clock execution time of the
+Pallas kernels on the host, and — through core/simulator.simulate — the
+cycle-true time/energy the batch would take on each configured photonic
+accelerator operating point (accelerator family x bit rate).  The paper's
+headline metrics (FPS, FPS/W, Figs. 10-11) therefore fall out of serving
+telemetry directly, amortization over the batch included: ``simulate``
+spreads per-round overheads (retune + weight-DAC writes + TIA fill) over
+the batch's frames exactly as Section VI-A describes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from ..cnn.layers import LayerSpec
+from ..core import simulator as sim
+from ..core.tpc import AcceleratorConfig, build_accelerator
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwarePoint:
+    """One modeled operating point: accelerator family x DAC bit rate."""
+    accelerator: str = "RMAM"
+    bit_rate_gbps: float = 1.0
+
+    @property
+    def label(self) -> str:
+        return f"{self.accelerator}@{self.bit_rate_gbps:g}G"
+
+
+DEFAULT_HW_POINTS: Tuple[HardwarePoint, ...] = (
+    HardwarePoint("RMAM", 1.0),
+    HardwarePoint("MAM", 1.0),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class HwCost:
+    """Modeled per-frame cost of one served batch at one operating point."""
+    fps: float
+    fps_per_watt: float
+    frame_latency_s: float
+    energy_per_frame_j: float
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchRecord:
+    model: str
+    batch_size: int
+    t_formed: float
+    exec_s: float                       # wall-clock kernel time
+    queue_waits_s: Tuple[float, ...]    # per request
+    latencies_s: Tuple[float, ...]      # submit -> results ready, per request
+    hw: Dict[str, HwCost]               # point label -> modeled cost
+
+
+class TelemetryLog:
+    def __init__(self, points: Sequence[HardwarePoint] = DEFAULT_HW_POINTS):
+        self.points = tuple(points)
+        self._acc: Dict[str, AcceleratorConfig] = {
+            p.label: build_accelerator(p.accelerator, p.bit_rate_gbps)
+            for p in self.points}
+        self.records: List[BatchRecord] = []
+        # (model, batch_size, point label) fully determines the modeled
+        # cost (a model's sim_specs are fixed); memo so the serving loop
+        # never re-walks a paper-scale layer table for a repeat batch shape
+        self._hw_memo: Dict[Tuple[str, int, str], HwCost] = {}
+        self._model_specs: Dict[str, Tuple[LayerSpec, ...]] = {}
+
+    def _hw_cost(self, model: str, sim_specs: Sequence[LayerSpec],
+                 batch_size: int, label: str) -> HwCost:
+        specs = tuple(sim_specs)
+        seen = self._model_specs.setdefault(model, specs)
+        if seen != specs:
+            raise ValueError(
+                f"model {model!r} recorded with a different sim_specs "
+                f"table than before; one spec table per model name")
+        key = (model, batch_size, label)
+        cost = self._hw_memo.get(key)
+        if cost is None:
+            rep = sim.simulate(self._acc[label], sim_specs, batch=batch_size)
+            cost = HwCost(fps=rep.fps, fps_per_watt=rep.fps_per_watt,
+                          frame_latency_s=rep.frame_latency_s,
+                          energy_per_frame_j=rep.energy_per_frame_j)
+            self._hw_memo[key] = cost
+        return cost
+
+    def record_batch(self, model: str, sim_specs: Sequence[LayerSpec],
+                     batch_size: int, t_formed: float, exec_s: float,
+                     queue_waits_s: Sequence[float],
+                     latencies_s: Sequence[float]) -> BatchRecord:
+        hw = {p.label: self._hw_cost(model, sim_specs, batch_size, p.label)
+              for p in self.points}
+        rec = BatchRecord(model=model, batch_size=batch_size,
+                          t_formed=t_formed, exec_s=exec_s,
+                          queue_waits_s=tuple(queue_waits_s),
+                          latencies_s=tuple(latencies_s), hw=dict(hw))
+        self.records.append(rec)
+        return rec
+
+    # -- aggregation ------------------------------------------------------
+
+    def _latencies(self, model: Optional[str] = None) -> List[float]:
+        return [lat for r in self.records
+                if model is None or r.model == model
+                for lat in r.latencies_s]
+
+    def latency_percentile(self, q: float,
+                           model: Optional[str] = None) -> float:
+        lats = self._latencies(model)
+        if not lats:
+            raise ValueError("no served requests to take a percentile of")
+        return float(np.percentile(np.asarray(lats), q))
+
+    def _hw_summary(self, records: List[BatchRecord]) -> Dict[str, Dict]:
+        """Frame-weighted modeled metrics per operating point."""
+        out: Dict[str, Dict] = {}
+        for p in self.points:
+            frames = sum(r.batch_size for r in records)
+            if frames == 0:
+                continue
+            fps = sum(r.hw[p.label].fps * r.batch_size
+                      for r in records) / frames
+            fpw = sum(r.hw[p.label].fps_per_watt * r.batch_size
+                      for r in records) / frames
+            out[p.label] = {"modeled_fps": fps, "modeled_fps_per_watt": fpw}
+        return out
+
+    def summary(self) -> Dict:
+        """Serving report: wall-clock throughput/latency + modeled hardware.
+
+        ``images_per_s_wall`` is sustained throughput over the serving span
+        (first batch formed -> last batch done); per-model blocks carry the
+        same metrics restricted to that model's batches.
+        """
+        if not self.records:
+            return {"requests": 0, "batches": 0}
+        n_req = sum(r.batch_size for r in self.records)
+        t0 = min(r.t_formed for r in self.records)
+        t1 = max(r.t_formed + r.exec_s for r in self.records)
+        span = max(t1 - t0, 1e-9)
+        out = {
+            "requests": n_req,
+            "batches": len(self.records),
+            "mean_batch_size": n_req / len(self.records),
+            "span_s": span,
+            "images_per_s_wall": n_req / span,
+            "latency_p50_s": self.latency_percentile(50),
+            "latency_p99_s": self.latency_percentile(99),
+            "hardware": self._hw_summary(self.records),
+            "models": {},
+        }
+        for model in sorted({r.model for r in self.records}):
+            recs = [r for r in self.records if r.model == model]
+            imgs = sum(r.batch_size for r in recs)
+            out["models"][model] = {
+                "requests": imgs,
+                "batches": len(recs),
+                "mean_batch_size": imgs / len(recs),
+                "latency_p50_s": self.latency_percentile(50, model),
+                "latency_p99_s": self.latency_percentile(99, model),
+                "hardware": self._hw_summary(recs),
+            }
+        return out

@@ -261,6 +261,90 @@ def test_forward_never_repacks_weights(monkeypatch):
 
 
 # ---------------------------------------------------------------------------
+# Batched executor path (the serving runtime's folded position streams)
+# ---------------------------------------------------------------------------
+
+def _micro_plan():
+    """SC -> DC(bias) -> PC(bias) -> FC: all four kinds, both GEMM modes."""
+    rng = np.random.default_rng(11)
+    stem = jnp.asarray(rng.normal(size=(8, 3, 3, 3)), jnp.float32)   # Mode 2
+    dw = jnp.asarray(rng.normal(size=(8, 3, 3)), jnp.float32)
+    pw = jnp.asarray(rng.normal(size=(40, 1, 1, 8)), jnp.float32)    # Mode 2
+    fcw = jnp.asarray(rng.normal(size=(10, 8 * 8 * 40)), jnp.float32)  # M. 1
+    return engine.compile_model("batched_micro", [
+        engine.LayerDef("stem", ConvKind.SC, stem, act="relu"),
+        engine.LayerDef("dw", ConvKind.DC, dw,
+                        bias=jnp.asarray(rng.normal(size=(8,)), jnp.float32),
+                        act="relu6"),
+        engine.LayerDef("pw", ConvKind.PC, pw,
+                        bias=jnp.asarray(rng.normal(size=(40,)), jnp.float32),
+                        act="relu"),
+        engine.LayerDef("fc", ConvKind.FC, fcw),
+    ])
+
+
+@pytest.mark.parametrize("b", [1, 3, 5])
+def test_batched_forward_bit_identical_to_per_image_loop(b):
+    """NHWC batches fold into one position stream, bit-identical to looping
+    the per-image forward — across SC/DC/PC/FC and both Pallas modes,
+    including ragged (non-power-of-two, non-block-multiple) batch sizes."""
+    plan = _micro_plan()
+    rng = np.random.default_rng(b)
+    xb = jnp.asarray(rng.normal(size=(b, 8, 8, 3)), jnp.float32)
+    got = engine.forward(plan, xb, interpret=True)
+    want = jnp.concatenate([engine.forward(plan, xb[i], interpret=True)
+                            for i in range(b)], axis=0)
+    assert got.shape == (b, 10)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("s", [25, 144])        # Mode 2 / Mode 1
+def test_batched_forward_layer_both_modes(s):
+    """Single conv layer, batched vs per-image, spatial output preserved."""
+    rng = np.random.default_rng(s)
+    f = 7
+    w = jnp.asarray(rng.normal(size=(f, 1, 1, s)), jnp.float32)
+    bias = jnp.asarray(rng.normal(size=(f,)), jnp.float32)
+    plan = engine.compile_model(
+        f"batched_s{s}",
+        [engine.LayerDef("pc", ConvKind.PC, w, bias=bias, act="relu6")])
+    (lp,) = plan.layers
+    assert lp.mode == (engine.MODE_PACKED if s <= ops.X_TPU
+                       else engine.MODE_DENSE)
+    xb = jnp.asarray(rng.normal(size=(4, 5, 5, s)), jnp.float32)
+    got = engine.forward_layer(plan, lp, xb, interpret=True)
+    assert got.shape == (4, 5, 5, f)
+    for i in range(4):
+        want = engine.forward_layer(plan, lp, xb[i], interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[i]), np.asarray(want))
+
+
+def test_batched_fc_accepts_row_batches():
+    """FC treats 2-D input as batched rows, each with its own DAC scale."""
+    rng = np.random.default_rng(6)
+    w = jnp.asarray(rng.normal(size=(5, 64)), jnp.float32)
+    plan = engine.compile_model(
+        "batched_fc", [engine.LayerDef("fc", ConvKind.FC, w)])
+    xb = jnp.asarray(rng.normal(size=(3, 64)), jnp.float32)
+    got = engine.forward(plan, xb, interpret=True)
+    assert got.shape == (3, 5)
+    for i in range(3):
+        want = engine.forward(plan, xb[i:i + 1], interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[i:i + 1]),
+                                      np.asarray(want))
+
+
+def test_batched_forward_rejects_wrong_width():
+    rng = np.random.default_rng(8)
+    w = jnp.asarray(rng.normal(size=(4, 1, 1, 9)), jnp.float32)
+    plan = engine.compile_model(
+        "bad_width", [engine.LayerDef("pc", ConvKind.PC, w)])
+    x = jnp.zeros((2, 4, 4, 7), jnp.float32)    # D=7, layer expects 9
+    with pytest.raises(ValueError, match="contraction"):
+        engine.forward(plan, x, interpret=True)
+
+
+# ---------------------------------------------------------------------------
 # Memoization caches
 # ---------------------------------------------------------------------------
 

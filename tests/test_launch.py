@@ -148,3 +148,59 @@ def test_batched_server_serves_requests():
     outs = srv.run_until_done()
     assert set(rids) == set(outs)
     assert all(len(v) == 4 for v in outs.values())
+
+
+def test_batched_server_slot_recycling_keys_outputs():
+    """More requests than slots: slots recycle and every request's output
+    lands under its own id at full length."""
+    from repro.launch.serve import BatchedServer
+    srv = BatchedServer("qwen1.5-0.5b", batch=2, ctx=64)
+    rids = [srv.submit([3 + i, 11, 7 + i], max_tokens=3) for i in range(5)]
+    outs = srv.run_until_done()
+    assert sorted(outs) == sorted(rids)
+    assert all(len(outs[r]) == 3 for r in rids)
+
+
+def test_slots_do_not_corrupt_each_others_context():
+    """Regression: decode_fn writes every batch row's k/v at the scalar
+    cache index, so a shared multi-row cache let one slot's step clobber
+    the others' history.  With per-slot caches, a request served while
+    another slot is busy must decode exactly what it decodes alone."""
+    from repro.launch.serve import BatchedServer
+    prompts = [[5, 6, 7], [42, 43, 44, 45]]
+    busy = BatchedServer("qwen1.5-0.5b", batch=2, ctx=64)
+    rids = [busy.submit(p, max_tokens=4) for p in prompts]
+    got = busy.run_until_done()
+    for prompt, rid in zip(prompts, rids):
+        solo = BatchedServer("qwen1.5-0.5b", batch=1, ctx=64)
+        srid = solo.submit(prompt, max_tokens=4)
+        want = solo.run_until_done()[srid]
+        assert got[rid] == want, (prompt, got[rid], want)
+
+
+def test_decode_never_replays_prefilled_positions(monkeypatch):
+    """Regression: the decode loop used to re-feed the last prompt token at
+    pos-1, replaying an already-prefilled cache position.  Every (slot,
+    position) sequence must be strictly increasing within one request's
+    occupancy (resets mark slot recycling)."""
+    from repro.launch.serve import BatchedServer
+    srv = BatchedServer("qwen1.5-0.5b", batch=2, ctx=64)
+    fed = []
+    orig = srv._step_slot
+
+    def spy(slot, token, pos):
+        fed.append((slot, int(pos)))
+        return orig(slot, token, pos)
+
+    monkeypatch.setattr(srv, "_step_slot", spy)
+    for i in range(4):
+        srv.submit([5, 6, 7 + i], max_tokens=3)
+    srv.run_until_done()
+    per_slot = {}
+    for slot, pos in fed:
+        per_slot.setdefault(slot, []).append(pos)
+    for slot, positions in per_slot.items():
+        for prev, nxt in zip(positions, positions[1:]):
+            # strictly increasing within a request; a drop back to 0 is the
+            # next request being prefilled into the recycled slot
+            assert nxt > prev or nxt == 0, (slot, positions)

@@ -98,6 +98,34 @@ def test_batching_amortizes_overheads():
     assert fps8 > fps1
 
 
+def test_batching_per_frame_accounting():
+    """Batch>1: DIV-DAC samples scale linearly (same fresh points per
+    frame), so per-frame dynamic energy is constant, while per-frame
+    latency amortizes the per-round overheads (retune + weight DACs)."""
+    layers = MODEL_ZOO["shufflenet_v2"]()
+    acc = tpc.build_accelerator("RMAM", 1.0)
+    r1 = sim.simulate(acc, layers, batch=1)
+    r8 = sim.simulate(acc, layers, batch=8)
+    for l1, l8 in zip(r1.layers, r8.layers):
+        assert l8.div_samples == 8 * l1.div_samples
+        # overheads are per round, streams are per frame: a layer's total
+        # time grows strictly sub-linearly in batch
+        assert l1.time_s < l8.time_s < 8 * l1.time_s
+    # per-frame DIV work identical -> identical per-frame dynamic energy
+    assert (sum(l.div_samples for l in r8.layers) / 8
+            == sum(l.div_samples for l in r1.layers))
+    # per-frame latency and energy amortize; FPS/W strictly improves
+    assert r8.frame_latency_s < r1.frame_latency_s
+    assert r8.energy_per_frame_j < r1.energy_per_frame_j
+    assert r8.fps_per_watt > r1.fps_per_watt
+
+
+def test_gmean_empty_raises():
+    with pytest.raises(ValueError, match="empty"):
+        sim.gmean([])
+    assert sim.gmean([2.0, 8.0]) == pytest.approx(4.0)
+
+
 def test_area_proportionate_counts_close_to_table8():
     """Our transparent area model lands near Table VIII at 1 Gbps.
 
