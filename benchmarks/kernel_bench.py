@@ -1,24 +1,50 @@
-"""Pallas kernel micro-bench (interpret mode on CPU): Mode 1 vs Mode 2.
+"""Pallas kernel micro-bench (interpret mode on CPU).
 
-Wall-times in interpret mode are NOT TPU times — the derived metric that
-matters is the MXU-pass and HBM-traffic model: the zero-skipping Mode-2
-kernel contracts x deep instead of y*x deep and holds 1/y of the RHS
-(EXPERIMENTS.md §Perf discusses the structural win and the measurement
-method).  Timings take a warmup iteration first (trace+compile excluded)
-and block_until_ready around every measured call; results land in
-``BENCH_kernels.json`` at the repo root as the measured-perf trajectory.
+Two sections, both landing in ``BENCH_kernels.json`` at the repo root as
+the measured-perf trajectory:
+
+* ``shapes`` — Mode 1 vs Mode 2 GEMM: the zero-skipping kernel contracts
+  x deep instead of y*x deep and holds 1/y of the RHS; fused vs unfused
+  epilogue.
+
+* ``implicit_conv`` — implicit-GEMM conv vs the materialized im2col->GEMM
+  oracle over every conv layer of the serving-zoo paper-CNN stand-ins,
+  with the per-shape peak activation-stream HBM estimate: im2col holds a
+  (B, P, K*K*D) DIV matrix, the implicit path only the (B, Hp, Wp, D)
+  padded activation — a K^2-ish footprint ratio for K>1 (EXPERIMENTS.md
+  §Perf "Dispatch & memory").
+
+Wall-times in interpret mode are NOT TPU times — the derived structural
+metrics (MXU passes, HBM bytes) are machine-independent; wall times are
+tracked as a trajectory (same machine, same method).  Timings take warmup
+iterations first (trace+compile excluded) and block_until_ready around
+every measured call.
+
+``python -m benchmarks.kernel_bench --smoke`` runs the CI smoke: tiny
+shapes, asserts the implicit-GEMM path is actually selected for every
+serving-zoo conv layer and bitwise-matches the im2col oracle (and the
+whole-model jitted pipeline matches the eager loop), without touching the
+JSON artifact.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import time
 from pathlib import Path
+from typing import Dict, List, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import engine
+from repro.cnn.layers import ConvKind
+from repro.core import vdp
+from repro.engine import executor as ex
 from repro.kernels import ops, ref
+from repro.kernels.vdpe_conv import conv_window_bounds
+from repro.serve import models as zoo
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
 OUT_PATH = REPO_ROOT / "BENCH_kernels.json"
@@ -27,19 +53,30 @@ WARMUP = 1
 ITERS = 5
 
 
-def _time(fn, *args, **kwargs) -> float:
-    """Best-of-ITERS wall seconds, post-warmup, synchronized."""
+def _check(ok: bool, msg: str) -> None:
+    """Benchmark/smoke invariant — a real raise, not a bare ``assert``
+    (the CI gate must fail under ``python -O`` too)."""
+    if not ok:
+        raise RuntimeError(msg)
+
+
+def _time(fn, *args, iters: int = ITERS, **kwargs) -> float:
+    """Best-of-iters wall seconds, post-warmup, synchronized."""
     for _ in range(WARMUP):
         jax.block_until_ready(fn(*args, **kwargs))
     best = float("inf")
-    for _ in range(ITERS):
+    for _ in range(iters):
         t0 = time.perf_counter()
         jax.block_until_ready(fn(*args, **kwargs))
         best = min(best, time.perf_counter() - t0)
     return best
 
 
-def run() -> None:
+# ---------------------------------------------------------------------------
+# Mode-1 vs Mode-2 GEMM section
+# ---------------------------------------------------------------------------
+
+def gemm_section() -> Dict:
     rng = np.random.default_rng(0)
     # large enough that contraction work (not interpret-loop overhead)
     # dominates: the zero-skipping win is the x vs y*x contraction depth
@@ -79,7 +116,9 @@ def run() -> None:
         out_zs = ops.mode2_gemm(divs, dkvs, ops.X_TPU, y, interpret=True)
         out_bd = ref.vdpe_pack_gemm_blockdiag(lhs_pad, rhs_bd, y,
                                               interpret=True)[:p, :f]
-        assert np.array_equal(np.asarray(out_zs), np.asarray(out_bd))
+        _check(np.array_equal(np.asarray(out_zs), np.asarray(out_bd)),
+               f"zero-skipping kernel diverged from block-diagonal "
+               f"oracle at S={s}")
 
         row = {
             "mxu_pass_ratio": passes_m1 / passes_m2,
@@ -98,5 +137,162 @@ def run() -> None:
               f"zs_s={t_zs:.4f},blockdiag_s={t_bd:.4f},mode1_s={t_m1:.4f},"
               f"fused_s={t_fused:.4f},unfused_s={t_unfused:.4f},"
               f"zs_speedup_vs_blockdiag={t_bd / t_zs:.2f}x")
+    return results
+
+
+# ---------------------------------------------------------------------------
+# Implicit-GEMM conv vs im2col+GEMM section
+# ---------------------------------------------------------------------------
+
+def conv_cases() -> List[Tuple[str, object, Tuple[int, int, int]]]:
+    """(model, LayerPlan, input HWC) for every serving-zoo conv layer."""
+    _build_plans()
+    cases = []
+    for name in zoo.SERVING_MODELS:
+        plan = _PLAN_BY_MODEL[name]
+        h, w, d = zoo.serving_input_shape(name)
+        for lp in plan.layers:
+            if lp.kind is ConvKind.FC:
+                break                       # spatial structure ends here
+            cases.append((name, lp, (h, w, d)))
+            h, w = vdp.out_hw(h, w, lp.k, lp.stride, lp.padding)
+            d = lp.f
+    return cases
+
+
+def _stream_bytes(lp, in_shape, batch: int) -> Tuple[int, int]:
+    """(im2col, implicit) peak activation-stream bytes for one layer.
+
+    im2col materializes the int8 (B, P, K*K*D) DIV matrix; the implicit
+    path streams the int8 padded activation (B, Hp, Wp, D) straight into
+    the kernel.
+    """
+    h, w, d = in_shape
+    ho, wo = vdp.out_hw(h, w, lp.k, lp.stride, lp.padding)
+    if lp.padding == "SAME":
+        hp, wp = conv_window_bounds(lp.k, lp.stride, ho, wo)
+        hp, wp = max(hp, h), max(wp, w)
+    else:
+        hp, wp = h, w
+    im2col = batch * ho * wo * lp.k * lp.k * d
+    implicit = batch * hp * wp * d
+    return im2col, implicit
+
+
+def conv_section(batch: int = 4, iters: int = ITERS,
+                 seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    results: Dict = {"batch": batch, "layers": {}}
+    peak_im2col: Dict[str, int] = {}
+    peak_implicit: Dict[str, int] = {}
+    for model, lp, in_shape in conv_cases():
+        x = jnp.asarray(rng.normal(size=(batch, *in_shape)), jnp.float32)
+        plan = _PLAN_BY_MODEL[model]
+        t_imp = _time(ex.forward_layer, plan, lp, x,
+                      iters=iters, interpret=True)
+        t_i2c = _time(ex.forward_layer_im2col, plan, lp, x,
+                      iters=iters, interpret=True)
+        # a benchmark that silently drifts from the oracle is worse than a
+        # slow one — every timed shape re-checks bitwise equality
+        a = ex.forward_layer(plan, lp, x, interpret=True)
+        b = ex.forward_layer_im2col(plan, lp, x, interpret=True)
+        _check(np.array_equal(np.asarray(a), np.asarray(b)),
+               f"implicit conv diverged from im2col oracle at "
+               f"{model}/{lp.name}")
+        by_i2c, by_imp = _stream_bytes(lp, in_shape, batch)
+        peak_im2col[model] = max(peak_im2col.get(model, 0), by_i2c)
+        peak_implicit[model] = max(peak_implicit.get(model, 0), by_imp)
+        key = f"{model}/{lp.name}"
+        results["layers"][key] = {
+            "kind": lp.kind.value, "k": lp.k, "stride": lp.stride,
+            "route": engine.layer_route(lp),
+            "implicit_s": t_imp, "im2col_s": t_i2c,
+            "implicit_speedup": t_i2c / t_imp,
+            "im2col_stream_bytes": by_i2c,
+            "implicit_stream_bytes": by_imp,
+            "stream_bytes_ratio": by_i2c / by_imp,
+        }
+        print(f"implicit_conv,{key},{lp.kind.value},k={lp.k},"
+              f"implicit_s={t_imp:.4f},im2col_s={t_i2c:.4f},"
+              f"speedup={t_i2c / t_imp:.2f}x,"
+              f"stream_ratio={by_i2c / by_imp:.2f}x")
+    results["peak_stream_bytes"] = {
+        m: {"im2col": peak_im2col[m], "implicit": peak_implicit[m],
+            "ratio": peak_im2col[m] / peak_implicit[m]}
+        for m in peak_im2col}
+    for m, row in results["peak_stream_bytes"].items():
+        print(f"implicit_conv,peak_stream,{m},im2col={row['im2col']},"
+              f"implicit={row['implicit']},ratio={row['ratio']:.2f}x")
+    return results
+
+
+_PLAN_BY_MODEL: Dict[str, engine.ModelPlan] = {}
+
+
+def _build_plans() -> None:
+    for name in zoo.SERVING_MODELS:
+        if name not in _PLAN_BY_MODEL:
+            _PLAN_BY_MODEL[name] = engine.compile_model(
+                f"kbench_{name}", zoo.serving_defs(name, 0))
+
+
+def run() -> None:
+    results = gemm_section()
+    results["implicit_conv"] = conv_section()
     OUT_PATH.write_text(json.dumps(results, indent=2) + "\n")
     print(f"kernel_bench,json,{OUT_PATH}")
+
+
+def smoke() -> None:
+    """CI smoke: route + bitwise assertions on tiny shapes, no JSON.
+
+    Fails loudly if a regression knocks conv layers off the implicit path
+    or breaks its bitwise agreement with the im2col oracle — instead of
+    only skewing the BENCH_*.json artifacts.
+    """
+    rng = np.random.default_rng(0)
+    n_conv = 0
+    for model, lp, in_shape in conv_cases():
+        route = engine.layer_route(lp)
+        _check(route in (ex.ROUTE_CONV_M1, ex.ROUTE_CONV_ZS,
+                         ex.ROUTE_DEPTHWISE),
+               f"{model}/{lp.name} fell off the implicit path: {route}")
+        if route != ex.ROUTE_DEPTHWISE:
+            n_conv += 1
+        x = jnp.asarray(rng.normal(size=(2, *in_shape)), jnp.float32)
+        plan = _PLAN_BY_MODEL[model]
+        a = ex.forward_layer(plan, lp, x, interpret=True)
+        b = ex.forward_layer_im2col(plan, lp, x, interpret=True)
+        _check(np.array_equal(np.asarray(a), np.asarray(b)),
+               f"implicit conv diverged from im2col oracle at "
+               f"{model}/{lp.name}")
+        print(f"smoke,layer,{model}/{lp.name},{route},bitwise=ok")
+    _check(n_conv > 0, "no conv layer routed to the implicit kernels")
+    # whole-model jitted pipeline == eager loop
+    engine.pipeline_cache_clear()
+    for model, plan in _PLAN_BY_MODEL.items():
+        shape = zoo.serving_input_shape(model)
+        x = jnp.asarray(rng.normal(size=(3, *shape)), jnp.float32)
+        got = engine.forward_jit(plan, x, interpret=True)
+        want = engine.forward(plan, x, interpret=True)
+        _check(np.array_equal(np.asarray(got), np.asarray(want)),
+               f"whole-model jit diverged from the eager loop for {model}")
+        print(f"smoke,pipeline,{model},bitwise=ok")
+    _check(engine.pipeline_cache_info()["compiles"] == len(_PLAN_BY_MODEL),
+           "pipeline compiled more than once per (plan, bucket)")
+    print("smoke,PASS")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI assertions (no JSON artifact)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        run()
+
+
+if __name__ == "__main__":
+    main()

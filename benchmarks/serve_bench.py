@@ -1,18 +1,23 @@
 """Trace-driven closed-loop serving benchmark: Poisson arrivals, mixed CNNs.
 
-Two measurements, both recorded in ``BENCH_serve.json``:
+Three measurements, all recorded in ``BENCH_serve.json``:
 
 * ``batch_sweep`` — sustained engine throughput at batch 1 vs batch 8 on
-  this host (the weight-stationary amortization claim, wall clock), plus
-  the cycle-true simulator's modeled photonic FPS / FPS-per-W at the same
-  batch sizes and paper-scale layer tables.  Batch 8 must sustain strictly
-  higher images/s than batch 1.
+  this host (the weight-stationary amortization claim, wall clock), for
+  BOTH execution paths: the per-layer Python dispatch loop
+  (``engine.forward``, the before) and the whole-model jitted pipeline
+  (``engine.forward_jit``, the after) — plus the cycle-true simulator's
+  modeled photonic FPS / FPS-per-W at the same batch sizes and
+  paper-scale layer tables.  Batch 8 must sustain strictly higher
+  images/s than batch 1, and the jitted pipeline must beat the layer
+  loop at every batch size (``jit_speedup``).
 
 * ``closed_loop`` — a Poisson arrival trace over the mixed
   EfficientNet/Xception/ShuffleNet serving zoo replayed in wall clock
-  against a CNNServer (dynamic batcher, LRU plan registry): p50/p99
-  request latency, sustained images/s, per-model splits, and the modeled
-  hardware metrics for every served batch.
+  against a CNNServer (dynamic batcher, LRU plan registry, whole-model
+  jitted dispatch): p50/p99 request latency, sustained images/s,
+  per-model splits, pipeline compile stalls, and the modeled hardware
+  metrics for every served batch.
 
 Usage:  PYTHONPATH=src python -m benchmarks.serve_bench [--smoke] [...]
 """
@@ -51,16 +56,26 @@ def batch_sweep(model: str, sizes: Tuple[int, ...] = (1, 8),
     reg = serve.paper_cnn_registry()
     entry = reg.get(model)
     rng = np.random.default_rng(seed)
-    wall: Dict[str, float] = {}
+    wall: Dict[str, float] = {}             # jitted pipeline (the after)
+    wall_loop: Dict[str, float] = {}        # per-layer loop (the before)
+    jit_speedup: Dict[str, float] = {}
     for bs in sizes:
         xb = jnp.asarray(_inputs(model, bs, rng))
-        jax.block_until_ready(engine.forward(entry.plan, xb))   # warmup/trace
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            jax.block_until_ready(engine.forward(entry.plan, xb))
-        dt = time.perf_counter() - t0
-        wall[str(bs)] = bs * reps / dt
-        print(f"serve_bench,batch_sweep_wall,b{bs},{wall[str(bs)]:.2f} img/s")
+
+        def _img_per_s(fn) -> float:
+            jax.block_until_ready(fn(entry.plan, xb))   # warmup/trace
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                jax.block_until_ready(fn(entry.plan, xb))
+            return bs * reps / (time.perf_counter() - t0)
+
+        wall_loop[str(bs)] = _img_per_s(engine.forward)
+        wall[str(bs)] = _img_per_s(engine.forward_jit)
+        jit_speedup[str(bs)] = wall[str(bs)] / wall_loop[str(bs)]
+        print(f"serve_bench,batch_sweep_wall,b{bs},"
+              f"layer_loop={wall_loop[str(bs)]:.2f} img/s,"
+              f"whole_model_jit={wall[str(bs)]:.2f} img/s,"
+              f"jit_speedup={jit_speedup[str(bs)]:.2f}x")
     modeled: Dict[str, Dict[str, Dict[str, float]]] = {}
     for p in serve.DEFAULT_HW_POINTS:
         acc = serve.telemetry.build_accelerator(p.accelerator,
@@ -73,6 +88,8 @@ def batch_sweep(model: str, sizes: Tuple[int, ...] = (1, 8),
             print(f"serve_bench,batch_sweep_model,{p.label},b{bs},"
                   f"fps={rep.fps:.1f},fps_w={rep.fps_per_watt:.2f}")
     return {"model": model, "reps": reps, "wall_images_per_s": wall,
+            "wall_images_per_s_layer_loop": wall_loop,
+            "jit_speedup": jit_speedup,
             "modeled": modeled,
             "batch8_speedup_wall": (wall[str(sizes[-1])]
                                     / wall[str(sizes[0])])}
@@ -101,14 +118,10 @@ def closed_loop(n_requests: int, rate_per_s: float, max_batch: int,
     reg = serve.paper_cnn_registry(capacity=len(MODELS))
     srv = serve.CNNServer(reg, max_batch=max_batch, max_wait_s=max_wait_s)
     if warm_sizes:
-        # trace every (model, batch size) jit shape up front so the timed
-        # loop measures serving, not tracing
-        rng = np.random.default_rng(1234)
+        # compile every (model, batch bucket) pipeline up front so the
+        # timed loop measures serving, not tracing
         for model in MODELS:
-            entry = reg.get(model)
-            for bs in range(1, max_batch + 1):
-                xb = jnp.asarray(_inputs(model, bs, rng))
-                jax.block_until_ready(engine.forward(entry.plan, xb))
+            reg.warm_pipelines(model, max_batch)
     trace = make_trace(n_requests, rate_per_s, seed)
     t_start = time.monotonic()
     i = 0
@@ -127,6 +140,7 @@ def closed_loop(n_requests: int, rate_per_s: float, max_batch: int,
                         "max_batch": max_batch,
                         "max_wait_s": max_wait_s, "seed": seed}
     summary["registry"] = reg.stats()
+    summary["pipeline_compile_stalls"] = srv.pipeline_compiles
     print(f"serve_bench,closed_loop,requests={summary['requests']},"
           f"img_per_s={summary['images_per_s_wall']:.2f},"
           f"p50={summary['latency_p50_s'] * 1e3:.1f}ms,"
@@ -162,6 +176,10 @@ def run(smoke: bool = True, n_requests: int | None = None,
     if sweep["batch8_speedup_wall"] <= 1.0:
         raise RuntimeError(
             f"batch 8 did not beat batch 1: {sweep['batch8_speedup_wall']}")
+    slow = {b: s for b, s in sweep["jit_speedup"].items() if s <= 1.0}
+    if slow:
+        raise RuntimeError(
+            f"whole-model jit did not beat the layer loop at: {slow}")
     return out
 
 

@@ -34,13 +34,27 @@ from . import photonics as ph
 # 4-bit symmetric quantization
 # ---------------------------------------------------------------------------
 
+def inv_qmax(bits: int) -> jnp.float32:
+    """1/qmax as an explicit f32 constant multiplier.
+
+    The DAC scale is max|x| / qmax; written as a *division by the literal
+    qmax* it is regime-unstable — XLA's simplifier rewrites division by a
+    compile-time constant into a reciprocal multiply under jit, so an
+    eagerly computed scale and a whole-model-jitted one differ by 1 ulp,
+    which the quantizer's round() amplifies into integer flips.  Doing the
+    reciprocal multiply explicitly makes eager, per-kernel-jit and
+    whole-model-jit (engine/pipeline.py) produce bit-identical scales.
+    """
+    return jnp.float32(1.0 / (2 ** (bits - 1) - 1))
+
+
 def quantize_symmetric(x: jax.Array, bits: int = 4) -> Tuple[jax.Array, jax.Array]:
     """Symmetric per-tensor quantization to ``bits`` signed levels.
 
     Returns (q, scale) with q int8-valued in [-(2^(b-1)-1), 2^(b-1)-1].
     """
     qmax = 2 ** (bits - 1) - 1
-    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / qmax
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) * inv_qmax(bits)
     q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int8)
     return q, scale
 

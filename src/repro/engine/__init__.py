@@ -1,10 +1,16 @@
 """Weight-stationary execution engine (the paper's pack-once DKV imprint).
 
 compile once (plan.py) -> run forever (executor.py), with the dequant/bias/
-activation epilogue fused into the Pallas kernels (kernels/vdpe_gemm.py;
-eager oracle: kernels/ref.epilogue_ref).
+activation epilogue fused into the Pallas kernels (kernels/vdpe_gemm.py,
+kernels/vdpe_conv.py; eager oracle: kernels/ref.epilogue_ref).  Conv layers
+run implicit-GEMM kernels (no materialized im2col); the serving hot path
+serves whole batches through one jitted dispatch (pipeline.forward_jit).
 """
-from .executor import forward, forward_layer  # noqa: F401
+from .executor import (forward, forward_im2col, forward_layer,  # noqa: F401
+                       forward_layer_im2col, layer_route)
+from .pipeline import (batch_bucket, forward_jit, get_pipeline,  # noqa: F401
+                       pipeline_cache_clear, pipeline_cache_info)
+from .pipeline import evict as pipeline_evict  # noqa: F401
 from .plan import (DEFAULT_POINT, EnginePoint, LayerDef, LayerPlan,  # noqa: F401
                    MODE_DENSE, MODE_DEPTHWISE, MODE_PACKED, ModelPlan,
                    compile_layer, compile_model, get_plan,

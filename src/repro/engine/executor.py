@@ -1,33 +1,44 @@
 """Forward execution of pre-packed weight-stationary plans.
 
-The per-call work is exactly what the hardware pays per frame: im2col the
-activations (the DIV stream), quantize them (the input DACs), and stream
-them against the resident DKV state.  Weight-side padding/packing happened
-once at plan compile time; the dequant-scale + bias + activation epilogue
-is fused into the Pallas kernels, so the int32 accumulators never
-round-trip HBM.
+The per-call work is exactly what the hardware pays per frame: quantize the
+activations (the input DACs) and stream their DIV patches against the
+resident DKV state.  Weight-side padding/packing happened once at plan
+compile time; the dequant-scale + bias + activation epilogue is fused into
+the Pallas kernels, so the int32 accumulators never round-trip HBM.
 
-Batching (the serving runtime's path): `forward`/`forward_layer` accept a
-single image (H, W, D) or an NHWC batch (B, H, W, D).  A batch folds the
-per-image position streams into ONE GEMM — im2col over the batch
-concatenates DIV streams, which is precisely how a weight-stationary
-accelerator amortizes a resident DKV imprint over many frames (paper
-Section VI-A).  No new kernels: the position axis simply grows B-fold.
-Quantization stays *per image* (each frame gets its own input-DAC swing,
-as in the per-image loop), so the fused epilogue takes a per-row dequant
-scale for B > 1 (kernels/vdpe_gemm.py); a batch of one keeps the scalar
-SMEM epilogue.  Batched outputs are bit-identical to the per-image loop:
-the int32 accumulators are exact regardless of the fold, and both
-epilogue variants apply the identical elementwise f32 ops to identical
-inputs (asserted bitwise across all layer kinds and both GEMM modes in
-tests/test_engine.py).
+Two execution paths, one numerics contract:
 
-Numerics: the integer accumulation is bit-identical to the eager oracle
-(quantize -> direct int32 GEMM) — the same invariant core/vdp.py
-establishes for the sliced VDP path — and the fused f32 epilogue matches
-the unfused reference exactly for bias-free layers, to one ulp otherwise
-(XLA contracts acc*scale + bias into an FMA inside the kernel).
-tests/test_engine.py checks this across the paper CNNs' layer shapes.
+* **Implicit-GEMM (default, the serving hot path).**  ``forward`` /
+  ``forward_layer`` route SC/PC conv layers to the implicit-GEMM Pallas
+  kernels (kernels/vdpe_conv.py): the quantized NHWC activation goes to
+  the kernel at its natural (B, Hp, Wp, D) size and the K*K patch taps are
+  gathered *inside* the kernel — the (B, P, K*K*D) im2col DIV matrix never
+  exists in HBM (a K^2x peak-activation saving for K>1).  Depthwise layers
+  run the same windowed gather as a per-channel VPU contraction in plain
+  jnp; FC layers have no spatial structure and fall through to the GEMM
+  path.  ``layer_route`` reports the routing per layer.
+
+* **im2col -> GEMM (the bitwise oracle).**  ``forward_im2col`` /
+  ``forward_layer_im2col`` keep the historical materialized-DIV path next
+  to kernels/ref.py's oracles; tests/test_implicit_conv.py asserts the two
+  paths are bit-identical across all layer kinds, strides, paddings and
+  batch shapes, and benchmarks/kernel_bench.py tracks their wall-clock and
+  peak-HBM gap.
+
+Bitwise identity holds because every step matches elementwise: the
+per-image quantization scale is the max |activation| over exactly the
+patch-covered window set (computed windowed here, equal to the im2col
+matrix max — SAME-padding zeros never raise a max), integer tap-sum
+accumulation is associative, and both fused epilogues apply the identical
+``act(acc * scale + bias)`` expression (kernels/common.apply_act).
+
+Batching (the serving runtime's path): both paths accept a single image
+(H, W, D) or an NHWC batch (B, H, W, D).  Quantization stays *per image*
+(each frame gets its own input-DAC swing); the implicit-conv kernels take
+the per-image scales through a grid-indexed SMEM epilogue, the GEMM path
+through per-row scale columns (kernels/vdpe_gemm.py).  For the whole-model
+jitted pipeline that chases the per-layer Python dispatch out of this
+loop, see engine/pipeline.py.
 """
 from __future__ import annotations
 
@@ -39,13 +50,76 @@ import jax.numpy as jnp
 from ..cnn.layers import ConvKind
 from ..core import vdp
 from ..kernels import ops, ref
+from ..kernels import vdpe_conv as kconv
 from ..kernels import vdpe_gemm as kern
+from ..kernels.common import round_up as _round_up
 from .plan import (LayerPlan, MODE_DENSE, MODE_DEPTHWISE, MODE_PACKED,
                    ModelPlan)
 
+#: layer_route values, in routing-priority order.
+ROUTE_FC_GEMM = "fc_gemm"
+ROUTE_DEPTHWISE = "depthwise_vpu"
+ROUTE_CONV_ZS = "conv_implicit_mode2_zs"
+ROUTE_CONV_M1 = "conv_implicit_mode1"
 
-def _round_up(v: int, mult: int) -> int:
-    return (v + mult - 1) // mult * mult
+
+def layer_route(lp: LayerPlan) -> str:
+    """Which execution path ``forward_layer`` takes for this layer."""
+    if lp.kind is ConvKind.FC:
+        return ROUTE_FC_GEMM
+    if lp.mode == MODE_DEPTHWISE:
+        return ROUTE_DEPTHWISE
+    return ROUTE_CONV_ZS if lp.mode == MODE_PACKED else ROUTE_CONV_M1
+
+
+# ---------------------------------------------------------------------------
+# Shared activation-side helpers
+# ---------------------------------------------------------------------------
+
+def _stable_scale(x: jax.Array) -> jax.Array:
+    """Pin a DAC scale against XLA algebraic reassociation.
+
+    The per-image scale is ``absmax * (1/qmax)`` with 1/qmax a compile-time
+    constant; under the whole-model jit XLA's simplifier reassociates its
+    later multiply by the weight scale — ``(m * c) * w -> m * (c * w)`` —
+    which shifts the epilogue scale by 1 ulp and lets the next layer's
+    quantizer round() amplify that into integer flips.  Eager execution
+    never reassociates, so the two regimes would disagree bitwise.  An
+    optimization barrier freezes the association on both sides.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _pad_spatial(x4: jax.Array, k: int, stride: int,
+                 padding: str) -> jax.Array:
+    """SAME/VALID spatial zero-padding, split exactly as vdp.im2col does."""
+    if padding != "SAME":
+        return x4
+    _, h, w, _ = x4.shape
+    ho, wo = vdp.out_hw(h, w, k, stride, padding)
+    pad_h = max((ho - 1) * stride + k - h, 0)
+    pad_w = max((wo - 1) * stride + k - w, 0)
+    return jnp.pad(x4, ((0, 0), (pad_h // 2, pad_h - pad_h // 2),
+                        (pad_w // 2, pad_w - pad_w // 2), (0, 0)))
+
+
+def _window_absmax(x4p: jax.Array, k: int, stride: int, ho: int, wo: int,
+                   per_channel: bool) -> jax.Array:
+    """max |x| over the patch-covered pixel set, per image (and channel).
+
+    Identical to the im2col-matrix max: the taps enumerate exactly the
+    pixels the DIV matrix replicates (a strided layer can leave border
+    pixels uncovered, so the whole-image max would be *wrong* — the
+    covered-set max is what keeps this path bitwise-equal to the oracle).
+    """
+    axes = (1, 2) if per_channel else (1, 2, 3)
+    m = None
+    for kk in range(k * k):
+        di, dj = divmod(kk, k)
+        win = jnp.abs(kconv.tap_window(x4p, di, dj, stride, ho, wo))
+        wm = jnp.max(win, axis=axes)
+        m = wm if m is None else jnp.maximum(m, wm)
+    return m                      # (B,) or (B, D)
 
 
 def _im2col_batch(x4: jax.Array, k: int, stride: int,
@@ -64,29 +138,176 @@ def _quantize_per_image(divs: jax.Array, bits: int,
     batch bit-identical to the per-image loop.
     """
     qmax = 2 ** (bits - 1) - 1
-    scale = jnp.maximum(jnp.max(jnp.abs(divs), axis=(1, 2)), 1e-12) / qmax
+    scale = _stable_scale(jnp.maximum(jnp.max(jnp.abs(divs), axis=(1, 2)),
+                                      1e-12) * vdp.inv_qmax(bits))
     q = jnp.clip(jnp.round(divs / scale[:, None, None]),
                  -qmax, qmax).astype(jnp.int8)
     return q, scale
 
 
+# ---------------------------------------------------------------------------
+# Implicit-GEMM conv path (no materialized im2col)
+# ---------------------------------------------------------------------------
+
+def _forward_conv_implicit(lp: LayerPlan, x4: jax.Array, point,
+                           interpret: bool) -> jax.Array:
+    """SC/PC layer through the implicit-GEMM kernels (Mode 1 or 2)."""
+    b, h, w, din = x4.shape
+    k = lp.k
+    d = lp.s // (k * k)
+    if d != din:
+        raise ValueError(f"layer {lp.name!r} expects contraction {lp.s}, "
+                         f"got input stream of width {k * k * din}")
+    ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
+    x4p = _pad_spatial(x4, k, lp.stride, lp.padding)
+    qmax = 2 ** (point.bits - 1) - 1
+    a_scale = _stable_scale(
+        jnp.maximum(_window_absmax(x4p, k, lp.stride, ho, wo,
+                                   per_channel=False),
+                    1e-12) * vdp.inv_qmax(point.bits))           # (B,)
+    x_q = jnp.clip(jnp.round(x4p / a_scale[:, None, None, None]),
+                   -qmax, qmax).astype(jnp.int8)
+    scale = a_scale * lp.w_scale
+    # one image rides the scalar-SMEM epilogue; a batch carries per-image
+    # scales through the grid-indexed SMEM variant
+    scale_arg = scale[0] if b == 1 else scale
+    if lp.mode == MODE_PACKED:
+        out = kconv.vdpe_pack_conv_zs(
+            x_q, lp.rhs, k, lp.stride, ho, wo, x=point.x,
+            block_o=point.block_o, interpret=interpret,
+            scale=scale_arg, bias=lp.bias, act=lp.act)
+    else:
+        assert lp.mode == MODE_DENSE
+        out = kconv.vdpe_conv(
+            x_q, lp.rhs, k, lp.stride, ho, wo, block_o=point.block_o,
+            interpret=interpret, scale=scale_arg, bias=lp.bias, act=lp.act)
+    return out[:, :, :lp.f].reshape(b, ho, wo, lp.f)
+
+
 def _forward_depthwise(lp: LayerPlan, x4: jax.Array, point) -> jax.Array:
-    """Per-channel S=K*K contractions as ONE batched integer contraction.
+    """Per-channel VPU path, windowed — no materialized (B, P, K*K, D).
 
     Depthwise kernels pair channel c's patches with channel c's single DKV
-    row, so the GEMM degenerates to a (B, P, KK, D) x (D, KK) -> (B, P, D)
-    batched dot — the VPU path.  Quantization is per image AND per channel
-    on the activation side (each channel of each frame is an independent
-    VDP), matching core/vdp.depthwise_conv2d_vdp bit-for-bit.
+    row, so the contraction degenerates to K*K tap-wise multiply-adds over
+    the strided windows.  Quantization is per image AND per channel (each
+    channel of each frame is an independent VDP), matching
+    core/vdp.depthwise_conv2d_vdp bit-for-bit: same covered-set max, and
+    the integer tap sum equals the einsum's contraction exactly.
     """
+    b, h, w, d = x4.shape
+    k = lp.k
+    ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
+    x4p = _pad_spatial(x4, k, lp.stride, lp.padding)
+    qmax = 2 ** (point.bits - 1) - 1
+    a_scale = _stable_scale(
+        jnp.maximum(_window_absmax(x4p, k, lp.stride, ho, wo,
+                                   per_channel=True),
+                    1e-12) * vdp.inv_qmax(point.bits))           # (B, D)
+    x_q = jnp.clip(jnp.round(x4p / a_scale[:, None, None, :]),
+                   -qmax, qmax).astype(jnp.int32)
+    acc = jnp.zeros((b, ho, wo, d), jnp.int32)
+    for kk in range(k * k):
+        di, dj = divmod(kk, k)
+        win = kconv.tap_window(x_q, di, dj, lp.stride, ho, wo)
+        acc = acc + win * lp.rhs[:, kk].astype(jnp.int32)[None, None, None]
+    return ref.epilogue_ref(
+        acc, (a_scale * lp.w_scale[None, :])[:, None, None, :],
+        None if lp.bias is None else lp.bias[None, None, None, :],
+        lp.act)
+
+
+def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                  interpret: bool | None = None) -> jax.Array:
+    """One layer through its pre-packed kernel with the fused epilogue.
+
+    x: (H, W, D) or batched (B, H, W, D) for conv layers; a flat feature
+    vector, (H, W, D) map, batched rows (B, S) or batched maps for FC.
+    Conv layers run the implicit-GEMM path (module docstring); FC falls
+    through to the GEMM path.  Batched outputs are bit-identical to the
+    per-image loop AND to forward_layer_im2col.
+    """
+    if interpret is None:
+        interpret = ops.default_interpret()
+    point = plan.point
+    if lp.kind is not ConvKind.FC:
+        batched = x.ndim == 4
+        x4 = x if batched else x[None]
+        if lp.mode == MODE_DEPTHWISE:
+            out = _forward_depthwise(lp, x4, point)
+        else:
+            out = _forward_conv_implicit(lp, x4, point, interpret)
+        return out if batched else out[0]
+    return _forward_fc(plan, lp, x, interpret)
+
+
+def _forward_fc(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                interpret: bool) -> jax.Array:
+    """FC layer: flatten to (B, S) rows and run the GEMM path."""
+    point = plan.point
+    if x.ndim == 4:                       # batched feature maps
+        flat = x.reshape(x.shape[0], -1)
+    elif x.ndim == 2:                     # rows are already the batch
+        flat = x
+    else:                                 # single map / vector -> (1, S)
+        flat = x.reshape(1, -1)
+    if flat.shape[1] != lp.s:
+        raise ValueError(f"layer {lp.name!r} expects contraction {lp.s}, "
+                         f"got input stream of width {flat.shape[1]}")
+    divs_q, a_scale = _quantize_per_image(flat[:, None, :], point.bits)
+    b = flat.shape[0]
+    lhs = divs_q.reshape(b, lp.s)
+    bp = _round_up(b, point.block_b)
+    scale = a_scale * lp.w_scale
+    if b == 1:
+        scale_rows = scale[0]
+    else:
+        scale_rows = jnp.pad(scale, (0, bp - b))
+    if lp.mode == MODE_PACKED:
+        lhs = jnp.pad(lhs, ((0, bp - b), (0, point.x - lp.s)))
+        out = kern.vdpe_pack_gemm_zs(
+            lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
+            interpret=interpret, scale=scale_rows, bias=lp.bias, act=lp.act)
+    else:
+        assert lp.mode == MODE_DENSE
+        ss = lp.rhs.shape[0]
+        lhs = jnp.pad(lhs, ((0, bp - b), (0, ss - lp.s)))
+        out = kern.vdpe_gemm(
+            lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
+            block_k=point.block_k, interpret=interpret,
+            scale=scale_rows, bias=lp.bias, act=lp.act)
+    return out[:b, :lp.f]                 # FC single image stays (1, F)
+
+
+def forward(plan: ModelPlan, x: jax.Array,
+            interpret: bool | None = None) -> jax.Array:
+    """Run activations through every layer of a compiled plan (eager loop).
+
+    Accepts one image (H, W, D) or an NHWC batch (B, H, W, D); batched
+    outputs are bit-identical to looping `forward` over the images.  This
+    is one Python dispatch per layer — the serving hot path uses the
+    whole-model jitted pipeline instead (engine.forward_jit).
+    """
+    for lp in plan.layers:
+        x = forward_layer(plan, lp, x, interpret=interpret)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# im2col -> GEMM path: the historical bitwise oracle
+# ---------------------------------------------------------------------------
+
+def _forward_depthwise_im2col(lp: LayerPlan, x4: jax.Array,
+                              point) -> jax.Array:
+    """Depthwise oracle: materialized (B, P, K*K, D) + einsum contraction."""
     b, h, w, d = x4.shape
     k = lp.k
     qmax = 2 ** (point.bits - 1) - 1
     divs = _im2col_batch(x4, k, lp.stride, lp.padding)    # (B, P, K*K*D)
     p = divs.shape[1]
     divs = divs.reshape(b, p, k * k, d)
-    a_scale = jnp.maximum(jnp.max(jnp.abs(divs), axis=(1, 2)),
-                          1e-12) / qmax                    # (B, D)
+    a_scale = _stable_scale(jnp.maximum(jnp.max(jnp.abs(divs), axis=(1, 2)),
+                                        1e-12)
+                            * vdp.inv_qmax(point.bits))      # (B, D)
     divs_q = jnp.clip(jnp.round(divs / a_scale[:, None, None, :]),
                       -qmax, qmax).astype(jnp.int8)
     acc = jnp.einsum("bpkc,ck->bpc", divs_q.astype(jnp.int32),
@@ -98,37 +319,29 @@ def _forward_depthwise(lp: LayerPlan, x4: jax.Array, point) -> jax.Array:
     return r.reshape(b, ho, wo, d)
 
 
-def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
-                  interpret: bool | None = None) -> jax.Array:
-    """One layer through its pre-packed kernel with the fused epilogue.
+def forward_layer_im2col(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                         interpret: bool | None = None) -> jax.Array:
+    """One layer through the materialized im2col -> GEMM path.
 
-    x: (H, W, D) or batched (B, H, W, D) for conv layers; a flat feature
-    vector, (H, W, D) map, batched rows (B, S) or batched maps for FC.
-    Batched inputs return batched outputs; the computation is the folded
-    position stream described in the module docstring.
+    The pre-implicit-GEMM execution path, kept verbatim as the bitwise
+    oracle (and kernel_bench baseline) for forward_layer: it builds the
+    full (B, P, K*K*D) DIV matrix in HBM and folds the batch into one GEMM
+    position stream with per-row dequant scales.
     """
     if interpret is None:
         interpret = ops.default_interpret()
     point = plan.point
 
     if lp.kind is ConvKind.FC:
-        if x.ndim == 4:                       # batched feature maps
-            flat = x.reshape(x.shape[0], -1)
-        elif x.ndim == 2:                     # rows are already the batch
-            flat = x
-        else:                                 # single map / vector -> (1, S)
-            flat = x.reshape(1, -1)
-        divs = flat[:, None, :]               # (B, 1, S)
-        spatial = None                        # FC output is (B, F) either way
-    else:
-        batched = x.ndim == 4
-        x4 = x if batched else x[None]
-        if lp.mode == MODE_DEPTHWISE:
-            out = _forward_depthwise(lp, x4, point)
-            return out if batched else out[0]
-        divs = _im2col_batch(x4, lp.k, lp.stride, lp.padding)  # (B, P, S)
-        spatial = vdp.out_hw(x4.shape[1], x4.shape[2], lp.k, lp.stride,
-                             lp.padding)
+        return _forward_fc(plan, lp, x, interpret)
+    batched = x.ndim == 4
+    x4 = x if batched else x[None]
+    if lp.mode == MODE_DEPTHWISE:
+        out = _forward_depthwise_im2col(lp, x4, point)
+        return out if batched else out[0]
+    divs = _im2col_batch(x4, lp.k, lp.stride, lp.padding)  # (B, P, S)
+    spatial = vdp.out_hw(x4.shape[1], x4.shape[2], lp.k, lp.stride,
+                         lp.padding)
     if divs.shape[2] != lp.s:
         raise ValueError(f"layer {lp.name!r} expects contraction {lp.s}, "
                          f"got input stream of width {divs.shape[2]}")
@@ -158,21 +371,13 @@ def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
             lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
             block_k=point.block_k, interpret=interpret,
             scale=scale_rows, bias=lp.bias, act=lp.act)
-    out = out[:bp, :lp.f]
-    if spatial is not None:
-        out = out.reshape(b, *spatial, lp.f)
-        return out if batched else out[0]
-    out = out.reshape(b, lp.f)
-    return out                                # FC single image stays (1, F)
+    out = out[:bp, :lp.f].reshape(b, *spatial, lp.f)
+    return out if batched else out[0]
 
 
-def forward(plan: ModelPlan, x: jax.Array,
-            interpret: bool | None = None) -> jax.Array:
-    """Run activations through every layer of a compiled plan.
-
-    Accepts one image (H, W, D) or an NHWC batch (B, H, W, D); batched
-    outputs are bit-identical to looping `forward` over the images.
-    """
+def forward_im2col(plan: ModelPlan, x: jax.Array,
+                   interpret: bool | None = None) -> jax.Array:
+    """Whole-model oracle loop over forward_layer_im2col."""
     for lp in plan.layers:
-        x = forward_layer(plan, lp, x, interpret=interpret)
+        x = forward_layer_im2col(plan, lp, x, interpret=interpret)
     return x

@@ -1,0 +1,160 @@
+"""Whole-model jitted pipeline: one XLA dispatch per served batch.
+
+``engine.forward`` walks a plan's layers in a Python loop — one kernel
+dispatch plus quantize round-trip per layer, ~L host round-trips per
+served batch.  The hardware analogue pays none of that: once DKVs are
+imprinted, DIV streams flow through the layer sequence with no dead time.
+This module closes the gap on the serving hot path:
+
+    forward_jit(plan, xb)  ->  one jitted callable per (plan, batch bucket)
+
+The callable traces the *entire* layer chain — per-image quantization,
+implicit-GEMM conv kernels, depthwise VPU path, FC GEMM, fused epilogues —
+into a single XLA program, so a served batch is one dispatch instead of ~L.
+Inter-layer activations are XLA temporaries (never returned to the host),
+and on accelerator backends the input batch buffer is donated to the
+computation; the CPU backend ignores donation, so it is gated off there to
+keep test logs clean.
+
+Batch sizes are bucketed to the next power of two: the dynamic batcher
+produces ragged final batches, and compiling per exact size would turn
+every straggler into a compile stall.  Padding images are all-zero; since
+quantization is per image and GEMM rows/grid instances are per image, the
+real images' outputs are bit-identical to the unbucketed call (asserted in
+tests/test_implicit_conv.py).
+
+The pipeline cache is memoized on the plan object (like plan.get_plan's
+pack cache, but keyed by identity — a plan's arrays are the identity of
+its imprint), and ``_STATS["compiles"]`` counts actual retraces: a
+(plan, bucket) pair compiles exactly once, every later batch in that
+bucket reuses the executable.  The serving registry evicts a plan's
+pipelines with its imprint (``evict``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops
+from . import executor
+from .plan import ModelPlan
+
+#: Resident pipeline bound: beyond this many plans the least-recently-used
+#: entry (its strong plan reference AND its compiled executables) is
+#: dropped, so code that compiles plans outside a PlanRegistry — tests,
+#: benchmarks, notebooks — cannot pin every imprint it ever served for
+#: process lifetime.  Generous next to any registry capacity.
+CACHE_CAPACITY = 16
+
+# id(plan) -> (plan, interpret -> jitted fn), LRU-ordered; the strong plan
+# reference pins the id for the entry's lifetime (no reuse-after-free key
+# aliasing).
+_PIPELINES: "OrderedDict[int, Tuple[ModelPlan, Dict[bool, Callable]]]" = \
+    OrderedDict()
+_STATS = {"hits": 0, "misses": 0, "compiles": 0, "evictions": 0}
+
+
+def batch_bucket(b: int) -> int:
+    """Smallest power of two >= b (the compile-shape bucket)."""
+    assert b >= 1, b
+    bucket = 1
+    while bucket < b:
+        bucket *= 2
+    return bucket
+
+
+def _layer_params(plan: ModelPlan) -> tuple:
+    """The plan's device arrays, passed as jit arguments (not baked into
+    the executable as constants — the imprint stays a buffer, the traced
+    program stays small)."""
+    return tuple((lp.rhs, lp.w_scale, lp.bias) for lp in plan.layers)
+
+
+def _build(plan: ModelPlan, interpret: bool) -> Callable:
+    def run(params, xb):
+        _STATS["compiles"] += 1   # trace-time side effect: counts retraces
+        x = xb
+        for lp, (rhs, w_scale, bias) in zip(plan.layers, params):
+            lp = dataclasses.replace(lp, rhs=rhs, w_scale=w_scale,
+                                     bias=bias)
+            x = executor.forward_layer(plan, lp, x, interpret=interpret)
+        return x
+
+    donate = () if jax.default_backend() == "cpu" else (1,)
+    return jax.jit(run, donate_argnums=donate)
+
+
+def get_pipeline(plan: ModelPlan, interpret: bool | None = None) -> Callable:
+    """The plan's jitted whole-model callable (built once per plan).
+
+    jit's own shape cache provides the per-bucket memo: the first batch in
+    a bucket traces+compiles (``pipeline_cache_info()["compiles"]`` ticks),
+    every later one reuses the executable.
+    """
+    if interpret is None:
+        interpret = ops.default_interpret()
+    entry = _PIPELINES.get(id(plan))
+    if entry is not None and entry[0] is plan:
+        _PIPELINES.move_to_end(id(plan))
+        fns = entry[1]
+        if interpret in fns:
+            _STATS["hits"] += 1
+            return fns[interpret]
+    else:
+        fns = {}
+        _PIPELINES[id(plan)] = (plan, fns)
+        while len(_PIPELINES) > CACHE_CAPACITY:
+            _PIPELINES.popitem(last=False)
+            _STATS["evictions"] += 1
+    _STATS["misses"] += 1
+    fns[interpret] = _build(plan, interpret)
+    return fns[interpret]
+
+
+def forward_jit(plan: ModelPlan, x: jax.Array,
+                interpret: bool | None = None) -> jax.Array:
+    """Serve a batch through the whole-model jitted pipeline.
+
+    x: NHWC batch (B, H, W, D), or (B, S) rows for FC-first plans.  The
+    batch is zero-padded to its power-of-two bucket and the pad rows are
+    sliced away after the single dispatch; outputs for the real images are
+    bit-identical to ``forward`` (and therefore to the im2col oracle).
+    """
+    if x.ndim not in (2, 4):
+        raise ValueError(
+            f"forward_jit serves batches: expected (B, H, W, D) or (B, S), "
+            f"got shape {tuple(x.shape)}")
+    fn = get_pipeline(plan, interpret)
+    b = x.shape[0]
+    bucket = batch_bucket(b)
+    if bucket != b:
+        pad = [(0, bucket - b)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, pad)                   # fresh buffer: safe to donate
+    elif jax.default_backend() != "cpu":
+        # donation consumes the argument buffer; an exact-bucket batch
+        # would hand the CALLER's array to XLA, so keep theirs alive and
+        # donate a copy instead (the pad path above already owns its
+        # buffer; the CPU backend ignores donation entirely)
+        x = jnp.array(x, copy=True)
+    out = fn(_layer_params(plan), x)
+    return out[:b]
+
+
+def evict(plan: ModelPlan) -> None:
+    """Drop a plan's compiled pipelines (the registry's LRU eviction hook —
+    without it the pipeline cache would pin evicted imprints forever)."""
+    _PIPELINES.pop(id(plan), None)
+
+
+def pipeline_cache_info() -> Dict[str, int]:
+    return dict(_STATS, size=len(_PIPELINES))
+
+
+def pipeline_cache_clear() -> None:
+    _PIPELINES.clear()
+    for k in _STATS:
+        _STATS[k] = 0

@@ -26,9 +26,10 @@ import jax
 import jax.numpy as jnp
 
 from ..cnn.layers import ConvKind
+from ..core import vdp
 from ..kernels import ops
 from ..kernels import vdpe_gemm as kern
-from ..kernels.vdpe_gemm import ACTIVATIONS
+from ..kernels.common import ACTIVATIONS, round_up as _round_up
 
 
 @dataclasses.dataclass(frozen=True)
@@ -101,21 +102,23 @@ class ModelPlan:
         return out
 
 
-def _round_up(v: int, mult: int) -> int:
-    return (v + mult - 1) // mult * mult
-
-
 def _quantize_rows(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
-    """Per-row symmetric quantization (depthwise: one scale per channel)."""
+    """Per-row symmetric quantization (depthwise: one scale per channel).
+
+    Scales use the same explicit reciprocal multiply as
+    vdp.quantize_symmetric (see vdp.inv_qmax) so plan-side weight scales
+    stay bit-identical to the eager oracle's.
+    """
     qmax = 2 ** (bits - 1) - 1
-    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=1), 1e-12) / qmax
+    scale = jnp.maximum(jnp.max(jnp.abs(w), axis=1),
+                        1e-12) * vdp.inv_qmax(bits)
     q = jnp.clip(jnp.round(w / scale[:, None]), -qmax, qmax).astype(jnp.int8)
     return q, scale
 
 
 def _quantize_tensor(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
     qmax = 2 ** (bits - 1) - 1
-    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) / qmax
+    scale = jnp.maximum(jnp.max(jnp.abs(w)), 1e-12) * vdp.inv_qmax(bits)
     q = jnp.clip(jnp.round(w / scale), -qmax, qmax).astype(jnp.int8)
     return q, scale
 

@@ -1,0 +1,36 @@
+"""Shared kernel-side helpers: MXU alignment and the fused-epilogue branch.
+
+Single home for the ``round_up``/``pad_to`` alignment arithmetic that was
+copy-pasted across kernels/ops.py, engine/plan.py and engine/executor.py,
+and for the compile-time activation branch every fused epilogue shares —
+the GEMM kernels (vdpe_gemm.py) and the implicit-GEMM conv kernels
+(vdpe_conv.py) apply the identical ``act(acc * scale + bias)`` expression,
+which is what keeps the two paths bitwise-comparable.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+#: Fused-epilogue activations supported by every kernel in this package.
+ACTIVATIONS = ("none", "relu", "relu6")
+
+
+def round_up(v: int, mult: int) -> int:
+    """Smallest multiple of ``mult`` >= ``v``."""
+    return (v + mult - 1) // mult * mult
+
+
+def pad_to(a: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2-D array up to (rows, cols)."""
+    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
+
+
+def apply_act(r: jax.Array, act: str) -> jax.Array:
+    """Compile-time activation branch of the fused epilogue."""
+    if act == "relu":
+        return jnp.maximum(r, 0.0)
+    if act == "relu6":
+        return jnp.clip(r, 0.0, 6.0)
+    assert act == "none", act
+    return r

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import vdpe_gemm as k
+from .common import pad_to as _pad_to, round_up as _round_up
 
 
 def _is_tpu() -> bool:
@@ -32,14 +33,6 @@ def _is_tpu() -> bool:
 def default_interpret() -> bool:
     """interpret=True everywhere except on real TPU backends."""
     return not _is_tpu()
-
-
-def _pad_to(a: jax.Array, rows: int, cols: int) -> jax.Array:
-    return jnp.pad(a, ((0, rows - a.shape[0]), (0, cols - a.shape[1])))
-
-
-def _round_up(v: int, mult: int) -> int:
-    return (v + mult - 1) // mult * mult
 
 
 def pack_mode2_weights(dkvs: jax.Array, x: int, y: int) -> jax.Array:

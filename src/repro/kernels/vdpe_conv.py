@@ -1,0 +1,216 @@
+"""Implicit-GEMM convolution Pallas kernels: no im2col matrix in HBM.
+
+The im2col -> GEMM path materializes the full (B, P, K*K*D) DIV matrix in
+HBM — a K^2x blow-up of the activation footprint — before the GEMM reads
+it back.  The photonic accelerator never pays that: DIV streams are formed
+on the fly from the activation map as they enter the VDPE lanes.  These
+kernels are the software analogue: the quantized NHWC activation rides to
+VMEM *once* at its natural size, and each kernel instance gathers its K*K
+patch taps with in-kernel strided loads, contracting each tap's (P, D)
+window D-deep against the matching D-row band of the resident packed DKV
+operand.  The K*K-tap loop is unrolled at trace time (K is static), so the
+full S = K*K*D contraction accumulates in registers/VMEM and the DIV
+matrix never exists anywhere.
+
+Kernels:
+
+* ``vdpe_conv`` — Mode 1 (dense S): rhs is the plan's (S_pad, F_pad)
+  MXU-tiled operand; only the first K*K*D rows are read, as D-row bands.
+
+* ``vdpe_pack_conv_zs`` — Mode 2, zero-skipping: rhs is the (x, F_pad)
+  dense segment-sum pack (ops.pack_mode2_segments), never the (y*x, F)
+  block-diagonal — asserted structurally, like vdpe_pack_gemm_zs.  The
+  contraction is S-deep (S <= x), so the kernel keeps both wins at once:
+  no im2col blow-up AND no (y-1)/y zero-FLOPs.
+
+Both carry the fused dequant/bias/ReLU(6) epilogue from the GEMM kernels
+(kernels/common.apply_act): a scalar ``scale`` rides SMEM; the batched
+engine's per-image dequant scales ride SMEM too, one (1, 1) block indexed
+by the image grid axis — per-image is the conv twin of the GEMM kernels'
+per-row scale, because every position of image b shares b's input-DAC
+swing.  ``bias`` is blocked over the output-channel axis.
+
+Grid: (B, F_pad / block_o).  Per instance, VMEM holds one image's padded
+activation map (Hp, Wp, D) int8 plus one (S_rows, block_o) weight block —
+for the paper CNNs' conv shapes that is far below the ~16 MB VMEM budget
+(the largest, 112x112x64 int8, is ~0.8 MB).  Validated in interpret mode
+(CI is CPU-only) against the im2col oracle; a first real-TPU run should
+confirm the Mosaic lowering of the strided window loads like any other
+kernel change.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .common import apply_act
+from .vdpe_gemm import BLOCK_O
+
+
+def conv_window_bounds(k: int, stride: int, ho: int, wo: int) -> tuple:
+    """(min Hp, min Wp) the padded activation must satisfy for the taps.
+
+    Tap (di, dj) reads rows di, di+stride, ..., di+stride*(ho-1); with
+    di <= k-1 the last read is at stride*(ho-1) + k - 1.  Shared with the
+    executor's spatial padding and the tests' structural checks.
+    """
+    return stride * (ho - 1) + k, stride * (wo - 1) + k
+
+
+def tap_window(x: jax.Array, di: int, dj: int, stride: int,
+               ho: int, wo: int) -> jax.Array:
+    """Tap (di, dj)'s strided window: (..., Hp, Wp, D) -> (..., ho, wo, D).
+
+    THE tap-geometry definition: the executor's covered-set quantization
+    max and depthwise taps and this kernel's gather must enumerate exactly
+    the same pixels for the bitwise contract with the im2col oracle to
+    hold, so they all slice through this one helper.
+    """
+    return x[..., di:di + stride * (ho - 1) + 1:stride,
+             dj:dj + stride * (wo - 1) + 1:stride, :]
+
+
+def _gather_tap(xb: jax.Array, di: int, dj: int, stride: int,
+                ho: int, wo: int, d: int) -> jax.Array:
+    """One tap's (ho*wo, D) window, strided-loaded from the VMEM image."""
+    return tap_window(xb, di, dj, stride, ho, wo).reshape(ho * wo, d)
+
+
+def _conv_accumulate(x_ref, rhs_ref, *, k: int, stride: int, ho: int,
+                     wo: int, d: int) -> jax.Array:
+    """The implicit-GEMM body: K*K tap gathers, each contracted D deep.
+
+    Integer accumulation is associative, so the tap-major sum is
+    bit-identical to the single S-deep im2col contraction.
+    """
+    xb = x_ref[0]                                # (Hp, Wp, D) int8
+    acc = None
+    for kk in range(k * k):
+        di, dj = divmod(kk, k)
+        lhs = _gather_tap(xb, di, dj, stride, ho, wo, d)
+        part = jax.lax.dot_general(
+            lhs, rhs_ref[kk * d:(kk + 1) * d, :], (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+        acc = part if acc is None else acc + part
+    return acc                                   # (ho*wo, block_o) int32
+
+
+def _conv_kernel(x_ref, rhs_ref, out_ref, *, k, stride, ho, wo, d):
+    out_ref[0] = _conv_accumulate(x_ref, rhs_ref, k=k, stride=stride,
+                                  ho=ho, wo=wo, d=d)
+
+
+def _conv_epilogue_kernel(scale_ref, x_ref, rhs_ref, bias_ref, out_ref,
+                          *, k, stride, ho, wo, d, act):
+    """Fused epilogue: the (1, 1) SMEM scale block is the whole-stream
+    scalar or — indexed by the image grid axis — image b's dequant scale."""
+    acc = _conv_accumulate(x_ref, rhs_ref, k=k, stride=stride,
+                           ho=ho, wo=wo, d=d)
+    r = acc.astype(jnp.float32) * scale_ref[0, 0] + bias_ref[...]
+    out_ref[0] = apply_act(r, act)
+
+
+def _conv_call(x_q: jax.Array, rhs: jax.Array, k: int, stride: int,
+               ho: int, wo: int, block_o: int, interpret: bool,
+               scale, bias, act: str) -> jax.Array:
+    b, hp, wp, d = x_q.shape
+    s_rows, f_pad = rhs.shape
+    min_h, min_w = conv_window_bounds(k, stride, ho, wo)
+    assert hp >= min_h and wp >= min_w, (
+        f"activation ({hp}, {wp}) too small for {k}x{k}/s{stride} taps over "
+        f"({ho}, {wo}) outputs; pad to at least ({min_h}, {min_w})")
+    assert k * k * d <= s_rows, (k, d, s_rows)
+    assert f_pad % block_o == 0, (f_pad, block_o)
+    p = ho * wo
+    grid = (b, f_pad // block_o)
+    x_spec = pl.BlockSpec((1, hp, wp, d), lambda i, j: (i, 0, 0, 0))
+    rhs_spec = pl.BlockSpec((s_rows, block_o), lambda i, j: (0, j))
+    out_spec = pl.BlockSpec((1, p, block_o), lambda i, j: (i, 0, j))
+    if scale is None:
+        assert bias is None and act == "none", "epilogue requires a scale"
+        return pl.pallas_call(
+            functools.partial(_conv_kernel, k=k, stride=stride, ho=ho,
+                              wo=wo, d=d),
+            grid=grid,
+            in_specs=[x_spec, rhs_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((b, p, f_pad), jnp.int32),
+            interpret=interpret,
+        )(x_q, rhs)
+    scale = jnp.asarray(scale, jnp.float32)
+    if bias is None:
+        bias = jnp.zeros((1, f_pad), jnp.float32)
+    if scale.size == 1:                # one swing for the whole stream
+        scale_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                                  memory_space=pltpu.SMEM)
+        scale = scale.reshape(1, 1)
+    else:                              # per-image input-DAC swings
+        if scale.size != b:
+            raise ValueError(
+                f"per-image scale must have one entry per image ({b}), "
+                f"got shape {scale.shape}")
+        scale_spec = pl.BlockSpec((1, 1), lambda i, j: (i, 0),
+                                  memory_space=pltpu.SMEM)
+        scale = scale.reshape(b, 1)
+    return pl.pallas_call(
+        functools.partial(_conv_epilogue_kernel, k=k, stride=stride,
+                          ho=ho, wo=wo, d=d, act=act),
+        grid=grid,
+        in_specs=[
+            scale_spec, x_spec, rhs_spec,
+            pl.BlockSpec((1, block_o), lambda i, j: (0, j)),
+        ],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((b, p, f_pad), jnp.float32),
+        interpret=interpret,
+    )(scale, x_q, rhs, bias)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "ho", "wo",
+                                             "block_o", "interpret", "act"))
+def vdpe_conv(x_q: jax.Array, rhs: jax.Array, k: int, stride: int,
+              ho: int, wo: int, block_o: int = BLOCK_O,
+              interpret: bool = True,
+              scale: jax.Array | None = None,
+              bias: jax.Array | None = None,
+              act: str = "none") -> jax.Array:
+    """Mode-1 implicit-GEMM conv: (B, Hp, Wp, D) int8 -> (B, ho*wo, F_pad).
+
+    ``x_q`` is the quantized activation, already spatially padded for the
+    layer's SAME/VALID policy (conv_window_bounds gives the minimum).
+    ``rhs`` is the plan's Mode-1 (S_pad, F_pad) operand; rows beyond
+    K*K*D padding are never read.  Without ``scale`` the result is the raw
+    int32 accumulator; with it the f32 epilogue ``act(acc * scale + bias)``
+    is fused.  ``scale`` may be a scalar or a per-image (B,) / (B, 1)
+    vector.  The caller slices F_pad -> F and reshapes P -> (ho, wo).
+    """
+    return _conv_call(x_q, rhs, k, stride, ho, wo, block_o, interpret,
+                      scale, bias, act)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "ho", "wo", "x",
+                                             "block_o", "interpret", "act"))
+def vdpe_pack_conv_zs(x_q: jax.Array, rhs_seg: jax.Array, k: int,
+                      stride: int, ho: int, wo: int, x: int,
+                      block_o: int = BLOCK_O, interpret: bool = True,
+                      scale: jax.Array | None = None,
+                      bias: jax.Array | None = None,
+                      act: str = "none") -> jax.Array:
+    """Zero-skipping Mode-2 implicit-GEMM conv (small S = K*K*D <= x).
+
+    ``rhs_seg`` must be the dense (x, F_pad) segment-sum pack
+    (ops.pack_mode2_segments) — the (y*x, F) block-diagonal operand is
+    structurally rejected, same as vdpe_pack_gemm_zs: the contraction this
+    kernel issues is S-deep, never y*x-deep.
+    """
+    d = x_q.shape[3]
+    assert rhs_seg.shape[0] == x, (
+        f"rhs must be the (x={x}, F) segment-sum pack, got "
+        f"{rhs_seg.shape} (block-diagonal operands are rejected)")
+    assert k * k * d <= x, (k, d, x)
+    return _conv_call(x_q, rhs_seg, k, stride, ho, wo, block_o, interpret,
+                      scale, bias, act)

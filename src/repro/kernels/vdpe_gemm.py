@@ -48,24 +48,12 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .common import ACTIVATIONS, apply_act as _apply_act  # noqa: F401
 
 # MXU-aligned default tile sizes (int8 operands tile as (32, 128) in VMEM).
 BLOCK_B = 128
 BLOCK_O = 128
 BLOCK_K = 128
-
-#: Fused-epilogue activations supported by every GEMM kernel here.
-ACTIVATIONS = ("none", "relu", "relu6")
-
-
-def _apply_act(r: jax.Array, act: str) -> jax.Array:
-    """Compile-time activation branch of the fused epilogue."""
-    if act == "relu":
-        return jnp.maximum(r, 0.0)
-    if act == "relu6":
-        return jnp.clip(r, 0.0, 6.0)
-    assert act == "none", act
-    return r
 
 
 # ---------------------------------------------------------------------------

@@ -19,9 +19,12 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+import jax.numpy as jnp
+
 from ..cnn.layers import LayerSpec
-from ..engine import DEFAULT_POINT, EnginePoint, LayerDef, ModelPlan
-from ..engine import compile_model
+from ..engine import (DEFAULT_POINT, EnginePoint, LayerDef, ModelPlan,
+                      batch_bucket, compile_model, forward_jit,
+                      pipeline_evict)
 from ..engine.plan import _defs_fingerprint
 from . import models as zoo
 
@@ -117,10 +120,29 @@ class PlanRegistry:
             sim_specs=(reg.sim_specs if reg.sim_specs is not None
                        else exec_specs))
         while len(self._loaded) >= self.capacity:
-            self._loaded.popitem(last=False)
+            _, evicted = self._loaded.popitem(last=False)
+            # drop the compiled whole-model pipelines with the imprint —
+            # otherwise the pipeline cache would pin the evicted plan's
+            # arrays resident forever
+            pipeline_evict(evicted.plan)
             self._stats["evictions"] += 1
         self._loaded[name] = entry
         return entry
+
+    def warm_pipelines(self, name: str, max_batch: int,
+                       interpret: Optional[bool] = None) -> List[int]:
+        """Pre-compile the whole-model jitted pipeline for every batch
+        bucket up to ``max_batch``, so serving pays no compile stalls.
+
+        Returns the bucket sizes traced.  Loads (and possibly evicts) like
+        any ``get``.
+        """
+        entry = self.get(name)
+        buckets = sorted({batch_bucket(b) for b in range(1, max_batch + 1)})
+        for bucket in buckets:
+            xb = jnp.zeros((bucket, *entry.input_shape), jnp.float32)
+            forward_jit(entry.plan, xb, interpret=interpret)
+        return buckets
 
 
 def paper_cnn_registry(capacity: int = 3,

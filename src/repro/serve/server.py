@@ -2,10 +2,12 @@
 
 One `step()` forms at most one batch (dynamic batcher policy), fetches the
 model's resident plan (registry, LRU), stacks the requests into an NHWC
-batch, runs it through the batched engine forward — ONE folded position
-stream against the resident DKV imprint — and splits the outputs back to
-their requests.  Wall-clock and modeled-hardware telemetry is recorded per
-batch (telemetry.py).
+batch, runs it through the whole-model jitted pipeline
+(engine.forward_jit) — the entire layer chain against the resident DKV
+imprint in ONE XLA dispatch — and splits the outputs back to their
+requests.  Wall-clock and modeled-hardware telemetry is recorded per
+batch (telemetry.py); pipeline compile stalls are counted per
+(plan, batch bucket) in ``pipeline_compiles``.
 
 The clock is injectable (``time_fn``) so tests and trace replays can drive
 a virtual clock; by default everything is wall time.
@@ -38,6 +40,9 @@ class CNNServer:
         self.interpret = interpret
         self._time = time_fn
         self.results: Dict[int, np.ndarray] = {}
+        #: pipeline trace+compile stalls paid inside step() so far — one
+        #: per (plan, batch-size bucket), like the registry's plan misses
+        self.pipeline_compiles = 0
 
     def _now(self, now: Optional[float]) -> float:
         return self._time() if now is None else now
@@ -81,12 +86,17 @@ class CNNServer:
     def step(self, now: Optional[float] = None, force: bool = False) -> int:
         """Serve at most one batch; returns the number of requests served.
 
-        The recorded per-batch ``exec_s`` is full service time: plan fetch
-        (a registry miss pays compile/LRU-reload here, where the requester
-        actually waits), batch stacking, and kernel execution.  Request
-        latencies are taken on the server's own clock (``time_fn``), so a
-        virtual-clock replay stays in one unit system; on the default wall
-        clock they include the compile stall too.
+        The batch runs through the whole-model jitted pipeline
+        (``engine.forward_jit``): one XLA dispatch for the entire layer
+        chain, batch size bucketed to the next power of two.  The recorded
+        per-batch ``exec_s`` is full service time: plan fetch (a registry
+        miss pays compile/LRU-reload here, where the requester actually
+        waits), batch stacking, kernel execution, and — for the first
+        batch in a (plan, bucket) — the pipeline trace+compile stall,
+        which ``pipeline_compiles`` counts.  Request latencies are taken
+        on the server's own clock (``time_fn``), so a virtual-clock replay
+        stays in one unit system; on the default wall clock they include
+        the compile stall too.
         """
         now = self._now(now)
         fb = self.batcher.pop_batch(now, force=force)
@@ -95,8 +105,11 @@ class CNNServer:
         t0 = time.perf_counter()
         entry = self.registry.get(fb.model)
         xb = jnp.stack([jnp.asarray(r.x, jnp.float32) for r in fb.requests])
-        out = engine.forward(entry.plan, xb, interpret=self.interpret)
+        compiles_before = engine.pipeline_cache_info()["compiles"]
+        out = engine.forward_jit(entry.plan, xb, interpret=self.interpret)
         out = jax.block_until_ready(out)
+        self.pipeline_compiles += (engine.pipeline_cache_info()["compiles"]
+                                   - compiles_before)
         exec_s = time.perf_counter() - t0
         done = self._now(None)
         out_np = np.asarray(out)
