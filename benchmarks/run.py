@@ -1,7 +1,7 @@
 """Benchmark harness: one entry per paper table/figure.
 
 Prints ``name,value,derived`` CSV rows per benchmark plus wall time.
-Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME]
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only NAME] [--skip NAME]
 """
 from __future__ import annotations
 
@@ -31,10 +31,21 @@ BENCHES = {
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None)
+    ap.add_argument("--skip", action="append", default=[],
+                    help="bench name to leave out (repeatable); e.g. the "
+                         "nightly runs serve_bench separately in non-smoke "
+                         "mode")
     args = ap.parse_args()
+    unknown = [n for n in [args.only, *args.skip]
+               if n is not None and n not in BENCHES]
+    if unknown:
+        ap.error(f"unknown bench name(s) {unknown}; "
+                 f"choose from {sorted(BENCHES)}")
     failures = 0
     for name, fn in BENCHES.items():
         if args.only and args.only != name:
+            continue
+        if name in args.skip:
             continue
         t0 = time.monotonic()
         print(f"### {name}")

@@ -96,6 +96,67 @@ def batch_sweep(model: str, sizes: Tuple[int, ...] = (1, 8),
 
 
 # ---------------------------------------------------------------------------
+# sharded dispatch: one batch across K simulated accelerator instances
+# ---------------------------------------------------------------------------
+
+def dispatch_sweep(model: str, batch: int = 8, fleet_sizes: Tuple[int, ...] = (1, 2, 4),
+                   reps: int = 3, seed: int = 0) -> Dict:
+    """Shard a fixed batch across K-instance fleets (bitwise-checked).
+
+    Wall numbers on one host only show the dispatch overhead (the shards
+    run sequentially here); the scaling story is the *modeled* per-shard
+    hardware time, which is what the heterogeneous-fleet entry records.
+    """
+    reg = serve.paper_cnn_registry()
+    entry = reg.get(model)
+    rng = np.random.default_rng(seed)
+    xb = jnp.asarray(_inputs(model, batch, rng))
+    single = np.asarray(engine.forward_jit(entry.plan, xb))
+    out: Dict = {"model": model, "batch": batch, "fleets": {}}
+    for k in fleet_sizes:
+        fleet = serve.ShardedDispatcher(serve.default_fleet(k))
+        res, runs = fleet.run(entry.plan, xb)       # warmup + trace
+        if not (np.asarray(res) == single).all():
+            raise RuntimeError(
+                f"sharded dispatch (K={k}) diverged from single-accelerator")
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            fleet.run(entry.plan, xb)
+        wall = batch * reps / (time.perf_counter() - t0)
+        out["fleets"][str(k)] = {
+            "images_per_s_wall": wall,
+            "shard_sizes": [r.batch_size for r in runs]}
+        print(f"serve_bench,dispatch,K={k},img_per_s={wall:.2f},"
+              f"shards={[r.batch_size for r in runs]}")
+    # heterogeneous fleet: per-instance modeled costs via telemetry
+    het = serve.ShardedDispatcher([
+        serve.AcceleratorInstance("rmam1g", serve.HardwarePoint("RMAM", 1.0),
+                                  capacity=2.0),
+        serve.AcceleratorInstance("rmam5g", serve.HardwarePoint("RMAM", 5.0),
+                                  capacity=1.0),
+    ])
+    res, runs = het.run(entry.plan, xb)
+    if not (np.asarray(res) == single).all():
+        raise RuntimeError("heterogeneous dispatch diverged")
+    log = serve.TelemetryLog(points=serve.DEFAULT_HW_POINTS)
+    rec = log.record_batch(
+        model=model, sim_specs=entry.sim_specs, batch_size=batch,
+        t_formed=0.0, exec_s=sum(r.exec_s for r in runs),
+        queue_waits_s=[0.0] * batch, latencies_s=[0.0] * batch,
+        shards=[(r.instance.name, r.batch_size, r.instance.hw, r.exec_s)
+                for r in runs])
+    out["heterogeneous"] = {
+        s.instance: {"point": s.point, "frames": s.batch_size,
+                     "modeled_fps": s.cost.fps,
+                     "modeled_fps_per_watt": s.cost.fps_per_watt}
+        for s in rec.shards}
+    for s in rec.shards:
+        print(f"serve_bench,dispatch_het,{s.instance}@{s.point},"
+              f"frames={s.batch_size},modeled_fps={s.cost.fps:.1f}")
+    return out
+
+
+# ---------------------------------------------------------------------------
 # closed loop: Poisson trace replayed against the server
 # ---------------------------------------------------------------------------
 
@@ -166,9 +227,13 @@ def run(smoke: bool = True, n_requests: int | None = None,
         max_batch = max_batch or 8
     sweep = batch_sweep(MODELS[0], sizes=(1, 8), reps=3 if smoke else 8,
                         seed=seed)
+    dispatch = dispatch_sweep(MODELS[0], batch=8,
+                              fleet_sizes=(1, 2) if smoke else (1, 2, 4),
+                              reps=2 if smoke else 5, seed=seed)
     loop = closed_loop(n_requests, rate_per_s, max_batch,
                        max_wait_ms / 1e3, seed, warm_sizes=True)
-    out = {"smoke": smoke, "batch_sweep": sweep, "closed_loop": loop}
+    out = {"smoke": smoke, "batch_sweep": sweep, "dispatch": dispatch,
+           "closed_loop": loop}
     OUT_PATH.write_text(json.dumps(out, indent=2, default=float) + "\n")
     print(f"serve_bench,batch8_speedup_wall,"
           f"{sweep['batch8_speedup_wall']:.2f}x")

@@ -1,0 +1,227 @@
+"""Bench-regression gate: fresh smoke benches vs the committed baselines.
+
+Snapshots the committed ``BENCH_serve.json`` / ``BENCH_kernels.json``,
+re-runs the benches that write them — ``benchmarks.serve_bench --smoke``
+plus the full ``kernel_bench`` (the smoke variant of kernel_bench is
+assertion-only and writes no JSON; budget ~2 min per round, and a
+first-round regression triggers a second confirming round — CI gives the
+job a 20-minute timeout) — and fails when a gated throughput family
+regresses by more than ``--threshold`` (default 30%).
+
+Tracked metrics are *same-run speedup ratios* (higher is better):
+
+* serve: whole-model-jit vs layer-loop images/s at batch 1 and 8, and
+  the batch-8-vs-batch-1 amortization ratio
+* kernels: zero-skipping vs block-diagonal Mode-2 GEMM per shape, and
+  implicit-GEMM vs im2col+GEMM per serving-zoo conv layer
+
+Absolute wall img/s swings several-fold with host load on shared CI
+runners (and on a laptop), which would page people for nothing; each
+speedup ratio divides two measurements taken back-to-back on the same
+host in the same process, so load cancels and what remains is the actual
+execution-path economics the benches exist to defend.
+
+The gate fires on the *geomean* of each kernel metric family: individual
+sub-ms interpret-mode timings still jitter past 30% run-to-run, but a
+real regression — a kernel falling off its fast path, fusion or
+zero-skipping breaking — drags its whole family, and the family geomean
+over ~3-16 members averages the per-layer jitter away.  Individual metric
+drops are printed as warnings (the nightly artifacts carry the trend).
+A first-round family regression triggers one full re-run of the smoke
+benches and only families regressed in BOTH rounds fail the gate.
+
+The serve-side ratios (jit-vs-loop, batch amortization) are REPORTED but
+do not gate: measured on identical code they swing 2-3x with the host's
+dispatch-overhead profile (two back-to-back runs have shown 4x and 11x
+for the same binary), so a 30% bar on them flags hosts, not code.  The
+kernel families divide two kernels timed back-to-back in one process on
+identical operands, which is the comparison that is actually stable.
+
+Metrics present in only one side are reported but never fail the gate, so
+schema evolution does not break CI.
+
+Usage:
+    python scripts/check_bench.py [--threshold 0.30] [--no-run]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
+from pathlib import Path
+from typing import Dict, Iterator, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+BENCH_FILES = ("BENCH_serve.json", "BENCH_kernels.json")
+SMOKE_COMMANDS = (
+    [sys.executable, "-m", "benchmarks.serve_bench", "--smoke"],
+    [sys.executable, "-m", "benchmarks.run", "--only", "kernel_bench"],
+)
+
+
+#: families whose geomean gates the PR; everything else is report-only
+GATED_FAMILY_PREFIXES = ("kernels.",)
+
+
+def serve_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
+    sweep = doc.get("batch_sweep", {})
+    for bs, v in sorted(sweep.get("jit_speedup", {}).items()):
+        yield f"serve.jit_speedup.b{bs}", float(v)
+    if "batch8_speedup_wall" in sweep:
+        yield "serve.amortization.batch8", float(sweep["batch8_speedup_wall"])
+
+
+def kernel_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
+    for shape, row in sorted(doc.get("shapes", {}).items()):
+        zs, bd = row.get("mode2_zs_s"), row.get("mode2_blockdiag_s")
+        if zs and bd:
+            yield f"kernels.zs_speedup.{shape}", float(bd) / float(zs)
+    layers = doc.get("implicit_conv", {}).get("layers", {})
+    for layer, row in sorted(layers.items()):
+        v = row.get("implicit_speedup")
+        if v:
+            yield f"kernels.implicit_speedup.{layer}", float(v)
+
+
+def collect(bench_dir: Path) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    extractors = {"BENCH_serve.json": serve_metrics,
+                  "BENCH_kernels.json": kernel_metrics}
+    for fname, extract in extractors.items():
+        path = bench_dir / fname
+        if not path.exists():
+            print(f"check_bench: {path} missing, skipping its metrics")
+            continue
+        out.update(extract(json.loads(path.read_text())))
+    return out
+
+
+def run_smoke_benches() -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (str(REPO_ROOT / "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    for cmd in SMOKE_COMMANDS:
+        print(f"check_bench: running {' '.join(cmd)}")
+        subprocess.run(cmd, cwd=REPO_ROOT, env=env, check=True)
+
+
+def family(name: str) -> str:
+    """Metric family: everything before the member suffix."""
+    return name.rsplit(".", 1)[0]
+
+
+def regressions(baseline: Dict[str, float], fresh: Dict[str, float],
+                threshold: float, verbose: bool = True,
+                ) -> Dict[str, Tuple[float, int]]:
+    """Family-geomean ratios below the bar: {family: (geomean, members)}."""
+    ratios: Dict[str, list] = {}
+    for name in sorted(baseline):
+        if name not in fresh:
+            if verbose:
+                print(f"check_bench: {name}: only in baseline (skipped)")
+            continue
+        base, new = baseline[name], fresh[name]
+        ratio = new / base if base > 0 else float("inf")
+        ratios.setdefault(family(name), []).append(ratio)
+        if verbose:
+            status = "warn" if ratio < 1.0 - threshold else "ok"
+            print(f"check_bench: {name}: baseline={base:.3f} "
+                  f"fresh={new:.3f} ratio={ratio:.2f} [{status}]")
+    if verbose:
+        for name in sorted(set(fresh) - set(baseline)):
+            print(f"check_bench: {name}: new metric (no baseline)")
+    out: Dict[str, Tuple[float, int]] = {}
+    for fam, rs in sorted(ratios.items()):
+        gm = math.exp(sum(math.log(max(r, 1e-12)) for r in rs) / len(rs))
+        gated = fam.startswith(GATED_FAMILY_PREFIXES)
+        status = "ok" if gated else "report-only"
+        if gm < 1.0 - threshold and gated:
+            status = "REGRESSION"
+            out[fam] = (gm, len(rs))
+        if verbose:
+            print(f"check_bench: family {fam}: geomean_ratio={gm:.2f} "
+                  f"over {len(rs)} metric(s) [{status}]")
+    return out
+
+
+def report(failures: Dict[str, Tuple[float, int]], threshold: float,
+           n_metrics: int) -> int:
+    if failures:
+        print(f"check_bench: FAIL — {len(failures)} metric famil"
+              f"{'y' if len(failures) == 1 else 'ies'} regressed more "
+              f"than {threshold:.0%}:")
+        for fam, (gm, n) in sorted(failures.items()):
+            print(f"  {fam}: geomean {gm:.2f}x over {n} metric(s)")
+        return 1
+    print(f"check_bench: PASS — no metric family regressed more than "
+          f"{threshold:.0%} ({n_metrics} baseline metrics)")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--threshold", type=float, default=0.30,
+                    help="max tolerated throughput drop (fraction)")
+    ap.add_argument("--no-run", action="store_true",
+                    help="compare the current BENCH_*.json in place "
+                         "against git HEAD's committed copies")
+    args = ap.parse_args()
+
+    with tempfile.TemporaryDirectory(prefix="bench_baseline_") as tmp:
+        tmp_dir = Path(tmp)
+        if args.no_run:
+            # baseline from git HEAD, fresh = working tree as-is
+            for fname in BENCH_FILES:
+                blob = subprocess.run(
+                    ["git", "show", f"HEAD:{fname}"], cwd=REPO_ROOT,
+                    capture_output=True, text=True)
+                if blob.returncode == 0:
+                    (tmp_dir / fname).write_text(blob.stdout)
+        else:
+            # baseline = committed files on disk, then re-run the benches
+            for fname in BENCH_FILES:
+                src = REPO_ROOT / fname
+                if src.exists():
+                    shutil.copy(src, tmp_dir / fname)
+            run_smoke_benches()
+        baseline = collect(tmp_dir)
+        fresh = collect(REPO_ROOT)
+        if not baseline:
+            print("check_bench: no baseline metrics found — nothing to gate")
+            return 0
+        failed = regressions(baseline, fresh, args.threshold)
+        if failed and not args.no_run:
+            # confirm before failing the PR: a single interpret-mode round
+            # can flake past the bar; a real regression reproduces
+            print(f"check_bench: {len(failed)} first-round family "
+                  f"regression(s) — re-running the smoke benches to confirm")
+            run_smoke_benches()
+            second = regressions(baseline, collect(REPO_ROOT),
+                                 args.threshold, verbose=False)
+            confirmed = {k: second[k] for k in failed if k in second}
+            for k in sorted(set(failed) - set(confirmed)):
+                print(f"check_bench: family {k}: not reproduced on re-run "
+                      f"(first geomean {failed[k][0]:.2f}x) — treated as "
+                      f"noise")
+            failed = confirmed
+        if not args.no_run:
+            # put the committed baselines back: the gate's bench runs must
+            # not leave this host's smoke output in the working tree,
+            # where a later `git commit -a` would enshrine it as the
+            # baseline every future gate compares against
+            for fname in BENCH_FILES:
+                snap = tmp_dir / fname
+                if snap.exists():
+                    shutil.copy(snap, REPO_ROOT / fname)
+            print("check_bench: restored committed BENCH_*.json baselines "
+                  "to the working tree")
+    return report(failed, args.threshold, len(baseline))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -212,6 +212,57 @@ map_layer.cache_info = _map_layer_cached.cache_info
 map_layer.cache_clear = _map_layer_cached.cache_clear
 
 
+# ---------------------------------------------------------------------------
+# Reconfigurable operating points (the planner's per-layer search space)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PointOption:
+    """One comb-switch operating point the RCA can retune to between layers.
+
+    ``reconfigurable=False`` is the fixed (N, S) geometry — comb switches
+    bypassed, every slice runs Mode 1 — i.e. what a non-reconfigurable MAM
+    TPC does; it is the baseline the planner's uplift is measured against.
+    """
+    x: int = REAGG_SIZE_X
+    reconfigurable: bool = True
+
+    @property
+    def label(self) -> str:
+        return f"x{self.x}" if self.reconfigurable else "fixed"
+
+
+FIXED_POINT_OPTION = PointOption(reconfigurable=False)
+
+
+def point_options(n: int, include_fixed: bool = True,
+                  ) -> "tuple[PointOption, ...]":
+    """Candidate operating points for a VDPE of size ``n``.
+
+    The canonical paper width (REAGG_SIZE_X) leads — on cost ties the
+    planner keeps the earliest option, so the default geometry wins —
+    followed by the wider retunings ``n // k`` (fewer, wider Mode-2 lanes;
+    Eq. 13 gives each its own CS ring FSR), all honoring the ``N >= 2x``
+    comb-switch existence constraint.  ``include_fixed`` appends the
+    Mode-1-only fixed geometry.
+    """
+    xs = [REAGG_SIZE_X] + [n // k for k in (2, 3, 4, 6)]
+    seen: List[int] = []
+    for x in xs:
+        if x >= 2 and n >= 2 * x and x not in seen:
+            seen.append(x)
+    opts = [PointOption(x=x) for x in seen]
+    if include_fixed:
+        opts.append(FIXED_POINT_OPTION)
+    return tuple(opts)
+
+
+def tpc_at(tpc: TPCConfig, opt: PointOption) -> TPCConfig:
+    """The TPC retuned to ``opt`` (same rings, different CS geometry)."""
+    return dataclasses.replace(tpc, x=opt.x,
+                               reconfigurable=opt.reconfigurable)
+
+
 def vdpe_utilization_for_s(tpc: TPCConfig, s: int) -> float:
     """Fig. 6: per-VDPE MRR utilization for an isolated DKV of size ``s``.
 

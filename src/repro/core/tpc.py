@@ -36,6 +36,7 @@ from typing import Dict
 from . import photonics as ph
 from . import scalability as sc
 from .mapping import TPCConfig
+from .photonics import REAGG_SIZE_X
 
 # ---------------------------------------------------------------------------
 # Paper cost tables
@@ -74,6 +75,13 @@ MRR_AREA_MM2 = (20e-3) ** 2
 #: A comb-switch pair occupies the area of 6 MRRs (Section V-B discussion).
 CS_PAIR_AREA_MM2 = 6 * MRR_AREA_MM2
 
+#: Latency of retuning the comb switches to a different operating point
+#: (x width / Mode-1 bypass) between two layers: every CS pair on a VDPE
+#: retunes in parallel, one EO ring-tuning step (Table VII).  This is the
+#: per-switch penalty the reconfiguration-aware planner charges when two
+#: consecutive layers run at different operating points.
+RECONFIG_SWITCH_LATENCY_S = EO_TUNING_LATENCY
+
 TPCS_PER_TILE = 4
 
 #: Table VIII — area-proportionate VDPE counts (canonical for Figs. 10-11).
@@ -90,13 +98,22 @@ PAPER_TABLE_VIII: Dict[str, Dict[float, int]] = {
 
 @dataclasses.dataclass(frozen=True)
 class AcceleratorConfig:
-    """One fully-specified accelerator operating point."""
+    """One fully-specified accelerator operating point.
+
+    ``x`` is the comb-switch re-aggregation width the accelerator is
+    currently tuned to (paper Eq. 13 sets the CS ring FSR from it).  The
+    reconfiguration-aware planner (engine/plan.py) sweeps operating points
+    that differ only in (x, reconfigurable) — retuning the comb switches
+    between layers — so the field is part of the frozen identity the
+    simulator memo keys on.
+    """
     name: str                  # RMAM/RAMM/MAM/AMM/CROSSLIGHT
     br_gbps: float
     n: int                     # VDPE size (Table II)
     n_vdpe: int                # total VDPEs (Table VIII, area-proportionate)
     reconfigurable: bool
     tuning: str                # "EO" | "TO"
+    x: int = REAGG_SIZE_X      # comb-switch re-aggregation width
 
     @property
     def org(self) -> str:
@@ -108,7 +125,8 @@ class AcceleratorConfig:
 
     @property
     def y(self) -> int:
-        return ph.num_comb_switch_pairs(self.n) if self.reconfigurable else 0
+        return (ph.num_comb_switch_pairs(self.n, self.x)
+                if self.reconfigurable else 0)
 
     @property
     def n_tpc(self) -> int:
@@ -121,7 +139,7 @@ class AcceleratorConfig:
     @property
     def tpc_config(self) -> TPCConfig:
         return TPCConfig(org=self.org, n=self.n, m=self.m,
-                         reconfigurable=self.reconfigurable)
+                         reconfigurable=self.reconfigurable, x=self.x)
 
     @property
     def cycle_time_s(self) -> float:
@@ -211,6 +229,28 @@ def build_accelerator(name: str, br_gbps: float,
         reconfigurable=name in ("RMAM", "RAMM"),
         tuning="TO" if name == "CROSSLIGHT" else "EO",
     )
+
+
+def accelerator_at(acc: AcceleratorConfig, opt=None,
+                   *, x: int | None = None,
+                   reconfigurable: bool | None = None) -> AcceleratorConfig:
+    """The same accelerator retuned to a different comb-switch point.
+
+    Accepts a ``mapping.PointOption``-like object (anything with ``x`` and
+    ``reconfigurable``) or explicit keyword overrides.  The MRR hardware is
+    unchanged — only the CS geometry (and therefore y, mode selection, and
+    the lane-SE power share) moves, which is exactly what the paper's RCA
+    retunes between layers.
+    """
+    if opt is not None:
+        x = opt.x if x is None else x
+        reconfigurable = (opt.reconfigurable if reconfigurable is None
+                          else reconfigurable)
+    return dataclasses.replace(
+        acc,
+        x=acc.x if x is None else x,
+        reconfigurable=(acc.reconfigurable if reconfigurable is None
+                        else reconfigurable))
 
 
 ACCELERATORS = ("RMAM", "RAMM", "MAM", "AMM", "CROSSLIGHT")

@@ -11,7 +11,9 @@ from .executor import (forward, forward_im2col, forward_layer,  # noqa: F401
 from .pipeline import (batch_bucket, forward_jit, get_pipeline,  # noqa: F401
                        pipeline_cache_clear, pipeline_cache_info)
 from .pipeline import evict as pipeline_evict  # noqa: F401
-from .plan import (DEFAULT_POINT, EnginePoint, LayerDef, LayerPlan,  # noqa: F401
-                   MODE_DENSE, MODE_DEPTHWISE, MODE_PACKED, ModelPlan,
-                   compile_layer, compile_model, get_plan,
-                   plan_cache_clear, plan_cache_info)
+from .plan import (DEFAULT_POINT, EnginePoint, LayerChoice,  # noqa: F401
+                   LayerDef, LayerPlan, MODE_DENSE, MODE_DEPTHWISE,
+                   MODE_PACKED, ModelPlan, PlannerReport, compile_layer,
+                   compile_model, defs_to_specs, get_plan, plan_cache_clear,
+                   plan_cache_info, plan_model, search_cache_evict,
+                   search_points)

@@ -225,10 +225,14 @@ def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
     Conv layers run the implicit-GEMM path (module docstring); FC falls
     through to the GEMM path.  Batched outputs are bit-identical to the
     per-image loop AND to forward_layer_im2col.
+
+    Each layer executes at its *own* operating point (``lp.point``):
+    planner-compiled plans carry heterogeneous per-layer packing geometry
+    while fixed-point plans repeat the model point.
     """
     if interpret is None:
         interpret = ops.default_interpret()
-    point = plan.point
+    point = lp.point
     if lp.kind is not ConvKind.FC:
         batched = x.ndim == 4
         x4 = x if batched else x[None]
@@ -243,7 +247,7 @@ def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
 def _forward_fc(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
                 interpret: bool) -> jax.Array:
     """FC layer: flatten to (B, S) rows and run the GEMM path."""
-    point = plan.point
+    point = lp.point
     if x.ndim == 4:                       # batched feature maps
         flat = x.reshape(x.shape[0], -1)
     elif x.ndim == 2:                     # rows are already the batch
@@ -330,7 +334,7 @@ def forward_layer_im2col(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
     """
     if interpret is None:
         interpret = ops.default_interpret()
-    point = plan.point
+    point = lp.point
 
     if lp.kind is ConvKind.FC:
         return _forward_fc(plan, lp, x, interpret)

@@ -53,8 +53,8 @@ CACHE_CAPACITY = 16
 # id(plan) -> (plan, interpret -> jitted fn), LRU-ordered; the strong plan
 # reference pins the id for the entry's lifetime (no reuse-after-free key
 # aliasing).
-_PIPELINES: "OrderedDict[int, Tuple[ModelPlan, Dict[bool, Callable]]]" = \
-    OrderedDict()
+_PIPELINES: "OrderedDict[int, Tuple[ModelPlan, Dict[bool, Callable]]]" = (
+    OrderedDict())
 _STATS = {"hits": 0, "misses": 0, "compiles": 0, "evictions": 0}
 
 
@@ -70,7 +70,10 @@ def batch_bucket(b: int) -> int:
 def _layer_params(plan: ModelPlan) -> tuple:
     """The plan's device arrays, passed as jit arguments (not baked into
     the executable as constants — the imprint stays a buffer, the traced
-    program stays small)."""
+    program stays small).  Per-layer operating points stay *static*: each
+    LayerPlan keeps its own ``point``, so a pipeline executable is keyed
+    on the plan's whole per-layer point sequence (a planner-compiled plan
+    and a fixed-point plan of the same model trace separately)."""
     return tuple((lp.rhs, lp.w_scale, lp.bias) for lp in plan.layers)
 
 

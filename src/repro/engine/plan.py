@@ -16,6 +16,17 @@ bias rows).  Forward calls (engine/executor.py) never touch `jnp.pad` or
 
 Plans are memoized by (model key, operating point) in `get_plan`, mirroring
 how a deployed TPC keeps a model's DKVs resident across requests.
+
+Reconfiguration-aware planning (the paper's RCA headline): `plan_model`
+sweeps, per layer, the simulator's reconfigurable comb-switch operating
+points (core/mapping.point_options — re-aggregation widths x plus the
+fixed Mode-1 geometry), scores each by memoized cycle-true layer time over
+MRR utilization, charges a reconfiguration-latency penalty at every point
+switch between consecutive layers (Viterbi over the option sequence), and
+emits *heterogeneous per-layer* `EnginePoint`s into the `ModelPlan`.  Only
+the packing geometry varies — quantization bits never do — so a planned
+plan's outputs are bitwise-identical to the fixed-point plan's while its
+mode census and point sequence follow the hardware search.
 """
 from __future__ import annotations
 
@@ -25,8 +36,11 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 
-from ..cnn.layers import ConvKind
-from ..core import vdp
+from ..cnn.layers import ConvKind, LayerSpec, dc, fc, pc, sc
+from ..core import mapping, vdp
+from ..core import simulator as sim
+from ..core.tpc import (AcceleratorConfig, RECONFIG_SWITCH_LATENCY_S,
+                        accelerator_at, build_accelerator)
 from ..kernels import ops
 from ..kernels import vdpe_gemm as kern
 from ..kernels.common import ACTIVATIONS, round_up as _round_up
@@ -72,7 +86,12 @@ MODE_DENSE, MODE_PACKED, MODE_DEPTHWISE = 1, 2, 0
 
 @dataclasses.dataclass(frozen=True)
 class LayerPlan:
-    """One layer, pre-packed for its kernel — the imprinted DKV state."""
+    """One layer, pre-packed for its kernel — the imprinted DKV state.
+
+    ``point`` is the layer's *own* operating point: a fixed-point plan
+    repeats the model point, a planner-compiled plan carries heterogeneous
+    per-layer geometry (executor/pipeline read the packing from here).
+    """
     name: str
     kind: ConvKind
     mode: int                 # MODE_DENSE | MODE_PACKED | MODE_DEPTHWISE
@@ -86,13 +105,15 @@ class LayerPlan:
     w_scale: jax.Array        # () dequant scale; (D,) for depthwise
     bias: Optional[jax.Array]  # (1, F_pad) f32; (D,) for depthwise
     act: str
+    point: EnginePoint
 
 
 @dataclasses.dataclass(frozen=True)
 class ModelPlan:
     name: str
-    point: EnginePoint
+    point: EnginePoint        # base point (per-layer points may differ)
     layers: Tuple[LayerPlan, ...]
+    planner: Optional["PlannerReport"] = None   # set by plan_model
 
     @property
     def mode_census(self) -> Dict[int, int]:
@@ -100,6 +121,16 @@ class ModelPlan:
         for l in self.layers:
             out[l.mode] = out.get(l.mode, 0) + 1
         return out
+
+    @property
+    def points(self) -> Tuple[EnginePoint, ...]:
+        """The per-layer engine point sequence (the jit-bucket identity)."""
+        return tuple(l.point for l in self.layers)
+
+    @property
+    def point_labels(self) -> Optional[Tuple[str, ...]]:
+        """Chosen hardware operating point per layer (planner plans only)."""
+        return None if self.planner is None else self.planner.labels
 
 
 def _quantize_rows(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:
@@ -138,7 +169,7 @@ def compile_layer(ld: LayerDef, point: EnginePoint = DEFAULT_POINT,
         return LayerPlan(name=ld.name, kind=ld.kind, mode=MODE_DEPTHWISE,
                          k=k, stride=ld.stride, padding=ld.padding,
                          s=k * k, f=d, rhs=dkvs_q, w_scale=w_scale,
-                         bias=bias, act=ld.act)
+                         bias=bias, act=ld.act, point=point)
 
     if ld.kind is ConvKind.FC:
         f, s = ld.weights.shape
@@ -155,7 +186,7 @@ def compile_layer(ld: LayerDef, point: EnginePoint = DEFAULT_POINT,
     if ld.bias is not None:
         bias = jnp.pad(jnp.asarray(ld.bias, jnp.float32).reshape(1, f),
                        ((0, 0), (0, ff - f)))
-    if s <= point.x:
+    if 0 < point.x and s <= point.x:
         mode = MODE_PACKED
         rhs = jnp.pad(ops.pack_mode2_segments(dkvs_q, point.x),
                       ((0, 0), (0, ff - f)))
@@ -165,7 +196,8 @@ def compile_layer(ld: LayerDef, point: EnginePoint = DEFAULT_POINT,
         rhs = jnp.pad(dkvs_q.T, ((0, ss - s), (0, ff - f)))
     return LayerPlan(name=ld.name, kind=ld.kind, mode=mode, k=k,
                      stride=ld.stride, padding=ld.padding, s=s, f=f,
-                     rhs=rhs, w_scale=w_scale, bias=bias, act=ld.act)
+                     rhs=rhs, w_scale=w_scale, bias=bias, act=ld.act,
+                     point=point)
 
 
 def compile_model(name: str, layer_defs: Sequence[LayerDef],
@@ -174,6 +206,281 @@ def compile_model(name: str, layer_defs: Sequence[LayerDef],
     return ModelPlan(name=name, point=point,
                      layers=tuple(compile_layer(ld, point)
                                   for ld in layer_defs))
+
+
+# ---------------------------------------------------------------------------
+# Reconfiguration-aware planner: per-layer operating-point search
+# ---------------------------------------------------------------------------
+
+def defs_to_specs(layer_defs: Sequence[LayerDef],
+                  input_shape: Tuple[int, int, int]) -> Tuple[LayerSpec, ...]:
+    """Analytic LayerSpec table of an executable LayerDef chain.
+
+    Walks the chain tracking spatial shape exactly as the executor does
+    (vdp.out_hw), so the planner scores precisely the tensor products the
+    engine will run (serve.models.specs_for_defs delegates here).
+    """
+    h, w, _ = input_shape
+    specs: List[LayerSpec] = []
+    for ld in layer_defs:
+        if ld.kind is ConvKind.FC:
+            f, s = ld.weights.shape
+            specs.append(fc(ld.name, s, f))
+            continue
+        if ld.kind is ConvKind.DC:
+            d, k, _ = ld.weights.shape
+            h, w = vdp.out_hw(h, w, k, ld.stride, ld.padding)
+            specs.append(dc(ld.name, k, d, h, w))
+            continue
+        f, k, _, d = ld.weights.shape
+        h, w = vdp.out_hw(h, w, k, ld.stride, ld.padding)
+        if ld.kind is ConvKind.PC:
+            specs.append(pc(ld.name, d, f, h, w))
+        else:
+            specs.append(sc(ld.name, k, d, f, h, w))
+    return tuple(specs)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerChoice:
+    """The planner's verdict for one layer."""
+    name: str
+    option: mapping.PointOption
+    time_s: float             # memoized simulate_layer time at the point
+    utilization: float        # Fig. 6 per-VDPE utilization at the point
+    modes: Tuple[int, ...]    # hardware slice modes the mapping selected
+
+    @property
+    def cost(self) -> float:
+        """The search objective: modeled time per utilized MRR fraction."""
+        return self.time_s / max(self.utilization, 1e-9)
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerReport:
+    """One model's operating-point search result (attached to its plan)."""
+    accelerator: AcceleratorConfig
+    options: Tuple[mapping.PointOption, ...]
+    choices: Tuple[LayerChoice, ...]
+    switch_penalty_s: float
+    switches: int             # point changes between consecutive layers
+    total_time_s: float       # chosen layer times + switch penalties
+    fixed_time_s: float       # every layer at the fixed Mode-1 geometry
+    fixed_utilization: float  # time-weighted, at the fixed geometry
+    batch: int
+
+    @property
+    def fps(self) -> float:
+        return self.batch / self.total_time_s
+
+    @property
+    def fixed_fps(self) -> float:
+        return self.batch / self.fixed_time_s
+
+    @property
+    def uplift(self) -> float:
+        """Modeled planner-vs-fixed FPS ratio (the paper's RCA headline)."""
+        return self.fixed_time_s / self.total_time_s
+
+    @property
+    def mean_utilization(self) -> float:
+        """Time-weighted MRR utilization over the chosen point sequence."""
+        return _time_weighted_utilization(self.choices)
+
+    @property
+    def labels(self) -> Tuple[str, ...]:
+        return tuple(c.option.label for c in self.choices)
+
+
+def _time_weighted_utilization(choices: Sequence["LayerChoice"]) -> float:
+    t = sum(c.time_s for c in choices)
+    return sum(c.utilization * c.time_s for c in choices) / max(t, 1e-30)
+
+
+def _score_layer(acc: AcceleratorConfig, opt: mapping.PointOption,
+                 spec: LayerSpec, batch: int) -> LayerChoice:
+    acc_o = accelerator_at(acc, opt)
+    rep = sim.simulate_layer(acc_o, spec, batch)
+    util = mapping.vdpe_utilization_for_s(acc_o.tpc_config, spec.dkv_size)
+    return LayerChoice(name=spec.name, option=opt, time_s=rep.time_s,
+                       utilization=util,
+                       modes=tuple(sorted(rep.mapping.modes)))
+
+
+def search_points(specs: Sequence[LayerSpec],
+                  acc: Optional[AcceleratorConfig] = None,
+                  options: Optional[Sequence[mapping.PointOption]] = None,
+                  switch_penalty_s: Optional[float] = None,
+                  batch: int = 1) -> PlannerReport:
+    """Per-layer operating-point search over a layer table (Viterbi).
+
+    For every layer the candidate comb-switch points are scored by
+    memoized cycle-true layer time / MRR utilization
+    (``simulate_layer``, ``vdpe_utilization_for_s``); a reconfiguration
+    penalty of ``switch_penalty_s`` (default: one EO comb-switch retune,
+    ``RECONFIG_SWITCH_LATENCY_S``) is charged whenever two consecutive
+    layers run at different points, so a higher switch cost monotonically
+    drives the sequence toward fewer switches.  Ties keep the earlier
+    option (the canonical geometry leads the candidate list) and prefer
+    not switching, which makes the search deterministic in its inputs.
+
+    The DP objective is ``time_s / utilization`` per layer plus the raw
+    switch penalty in seconds: dividing by utilization deliberately biases
+    the search toward configurations that keep MRR area busy (the paper's
+    stated selection criterion), which weights the penalty lightly against
+    low-utilization layers.  Because the *reported* total is pure modeled
+    time, the search falls back to the all-fixed sequence whenever its
+    pick would lose in pure time — ``uplift >= 1`` always holds.
+    """
+    if acc is None:
+        acc = build_accelerator("RMAM", 1.0)
+    opts = (mapping.point_options(acc.n) if options is None
+            else tuple(options))
+    if not opts:
+        raise ValueError("search_points needs at least one PointOption")
+    penalty = (RECONFIG_SWITCH_LATENCY_S if switch_penalty_s is None
+               else switch_penalty_s)
+    specs = tuple(specs)
+    if not specs:
+        raise ValueError("search_points needs at least one layer")
+    table = [[_score_layer(acc, opt, spec, batch) for opt in opts]
+             for spec in specs]
+
+    dp = [table[0][j].cost for j in range(len(opts))]
+    back: List[List[int]] = []
+    for i in range(1, len(specs)):
+        best_k = 0
+        for k in range(1, len(opts)):
+            if dp[k] < dp[best_k]:
+                best_k = k
+        ndp, nback = [], []
+        for j in range(len(opts)):
+            stay, switch = dp[j], dp[best_k] + penalty
+            if stay <= switch:
+                prev, base = j, stay
+            else:
+                prev, base = best_k, switch
+            ndp.append(base + table[i][j].cost)
+            nback.append(prev)
+        dp = ndp
+        back.append(nback)
+
+    j = 0
+    for k in range(1, len(opts)):
+        if dp[k] < dp[j]:
+            j = k
+    path = [j]
+    for nback in reversed(back):
+        j = nback[j]
+        path.append(j)
+    path.reverse()
+
+    choices = tuple(table[i][path[i]] for i in range(len(specs)))
+    switches = sum(1 for a, b in zip(path, path[1:]) if a != b)
+    total = sum(c.time_s for c in choices) + switches * penalty
+    if mapping.FIXED_POINT_OPTION in opts:
+        fixed_j = opts.index(mapping.FIXED_POINT_OPTION)
+        fixed = [row[fixed_j] for row in table]
+    else:
+        fixed = [_score_layer(acc, mapping.FIXED_POINT_OPTION, spec, batch)
+                 for spec in specs]
+    fixed_t = sum(c.time_s for c in fixed)
+    if total > fixed_t:
+        # the utilization-weighted objective can, on tables where the
+        # fixed geometry is simply fastest, pick a sequence that loses in
+        # pure time — never ship a plan worse than the baseline it is
+        # measured against
+        choices, switches, total = tuple(fixed), 0, fixed_t
+    return PlannerReport(accelerator=acc, options=opts, choices=choices,
+                         switch_penalty_s=penalty, switches=switches,
+                         total_time_s=total, fixed_time_s=fixed_t,
+                         fixed_utilization=_time_weighted_utilization(fixed),
+                         batch=batch)
+
+
+def _engine_point_for(base: EnginePoint, ld: LayerDef, spec: LayerSpec,
+                      choice: LayerChoice) -> EnginePoint:
+    """Map a chosen hardware point onto the layer's engine geometry.
+
+    The engine analogue of the comb-switch decision: a layer the hardware
+    runs entirely in Mode 2 packs its segments (width rounded up to the
+    int8 sublane tile so contractions up to the chosen re-aggregation
+    reach still pack); a layer with any Mode-1 slice runs the dense path
+    with the re-aggregation segments parked (x = 0).  Quantization bits
+    are never touched, which is what keeps planned plans bitwise-equal to
+    fixed-point plans.
+    """
+    if ld.kind is ConvKind.DC:
+        return base               # depthwise VPU path has no GEMM packing
+    if choice.option.reconfigurable and set(choice.modes) == {2}:
+        return dataclasses.replace(
+            base, x=max(base.x, _round_up(spec.dkv_size, 32)))
+    return dataclasses.replace(base, x=0)
+
+
+# the per-layer point-search memo: (model, acc, options, penalty, batch)
+# -> (spec table, report); evicted per model with the registry's LRU
+_SEARCH_CACHE: Dict[tuple, Tuple[tuple, PlannerReport]] = {}
+_SEARCH_STATS = {"hits": 0, "misses": 0}
+
+
+def cached_search(name: str, specs: Sequence[LayerSpec],
+                  acc: Optional[AcceleratorConfig] = None,
+                  options: Optional[Sequence[mapping.PointOption]] = None,
+                  switch_penalty_s: Optional[float] = None,
+                  batch: int = 1) -> PlannerReport:
+    """Memoized ``search_points``, keyed like ``get_plan`` (model name =
+    identity, spec table as the structural guard)."""
+    specs = tuple(specs)
+    key = (name, acc, None if options is None else tuple(options),
+           switch_penalty_s, batch)
+    cached = _SEARCH_CACHE.get(key)
+    if cached is not None:
+        cached_specs, report = cached
+        if cached_specs != specs:
+            raise ValueError(
+                f"planner search cache key {name!r} reused for a "
+                f"structurally different model; use a distinct model key "
+                f"per weight set")
+        _SEARCH_STATS["hits"] += 1
+        return report
+    _SEARCH_STATS["misses"] += 1
+    report = search_points(specs, acc=acc, options=options,
+                           switch_penalty_s=switch_penalty_s, batch=batch)
+    _SEARCH_CACHE[key] = (specs, report)
+    return report
+
+
+def search_cache_evict(name: str) -> int:
+    """Drop a model's point-search memo entries (registry eviction hook)."""
+    stale = [k for k in _SEARCH_CACHE if k[0] == name]
+    for k in stale:
+        del _SEARCH_CACHE[k]
+    return len(stale)
+
+
+def plan_model(name: str, layer_defs: Sequence[LayerDef],
+               input_shape: Tuple[int, int, int],
+               point: EnginePoint = DEFAULT_POINT,
+               acc: Optional[AcceleratorConfig] = None,
+               options: Optional[Sequence[mapping.PointOption]] = None,
+               switch_penalty_s: Optional[float] = None) -> ModelPlan:
+    """Compile a model with per-layer operating points (the RCA planner).
+
+    Same inputs as ``compile_model`` plus the model's input shape (the
+    planner needs the spatial walk to score positions), returning a
+    ``ModelPlan`` whose layers carry heterogeneous ``EnginePoint``s and
+    whose ``planner`` field records the search.  Outputs are
+    bitwise-identical to ``compile_model(name, layer_defs, point)`` —
+    only packing geometry differs, never quantization.
+    """
+    specs = defs_to_specs(layer_defs, input_shape)
+    report = cached_search(name, specs, acc=acc, options=options,
+                           switch_penalty_s=switch_penalty_s)
+    layers = tuple(
+        compile_layer(ld, _engine_point_for(point, ld, spec, choice))
+        for ld, spec, choice in zip(layer_defs, specs, report.choices))
+    return ModelPlan(name=name, point=point, layers=layers, planner=report)
 
 
 # ---------------------------------------------------------------------------
@@ -220,9 +527,15 @@ def get_plan(name: str, layer_defs: Sequence[LayerDef],
 
 
 def plan_cache_info() -> Dict[str, int]:
-    return dict(_CACHE_STATS, size=len(_PLAN_CACHE))
+    return dict(_CACHE_STATS, size=len(_PLAN_CACHE),
+                search_hits=_SEARCH_STATS["hits"],
+                search_misses=_SEARCH_STATS["misses"],
+                search_size=len(_SEARCH_CACHE))
 
 
 def plan_cache_clear() -> None:
+    """Clear the pack cache AND the per-layer point-search memo."""
     _PLAN_CACHE.clear()
     _CACHE_STATS["hits"] = _CACHE_STATS["misses"] = 0
+    _SEARCH_CACHE.clear()
+    _SEARCH_STATS["hits"] = _SEARCH_STATS["misses"] = 0

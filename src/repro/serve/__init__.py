@@ -11,6 +11,9 @@ realizes that stream:
                  admission, mixed-model round-robin dispatch
 * server.py    — CNNServer: forms batches, runs them through the batched
                  engine forward (engine/executor.py), splits results
+* dispatch.py  — multi-accelerator sharded dispatch: batches split across
+                 K simulated accelerator instances (possibly heterogeneous
+                 operating points), bitwise-equal to single-accelerator
 * telemetry.py — hardware-time telemetry: every served batch is also
                  costed through core/simulator.simulate, so the server
                  reports wall-clock images/s AND modeled photonic FPS and
@@ -21,9 +24,11 @@ realizes that stream:
 Closed-loop benchmark: benchmarks/serve_bench.py.
 """
 from .batcher import DynamicBatcher, FormedBatch, Request  # noqa: F401
+from .dispatch import (AcceleratorInstance, ShardedDispatcher,  # noqa: F401
+                       ShardRun, default_fleet)
 from .models import (SERVING_MODELS, serving_defs,  # noqa: F401
                      serving_input_shape, specs_for_defs)
 from .registry import PlanRegistry, ServingModel, paper_cnn_registry  # noqa: F401
 from .server import CNNServer  # noqa: F401
 from .telemetry import (DEFAULT_HW_POINTS, BatchRecord,  # noqa: F401
-                        HardwarePoint, TelemetryLog)
+                        HardwarePoint, ShardCost, TelemetryLog)

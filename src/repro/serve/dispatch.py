@@ -1,0 +1,128 @@
+"""Multi-accelerator sharded dispatch: one batch, K simulated accelerators.
+
+A deployment that outgrows one photonic accelerator scales out: K
+accelerator instances (possibly heterogeneous operating points — e.g. an
+RMAM@1G next to an RMAM@5G) serve shards of every formed batch in
+parallel, each against its own resident copy of the model's DKV imprint.
+``ShardedDispatcher`` models exactly that on the execution side:
+
+* the batch is split contiguously into per-instance shards sized by each
+  instance's ``capacity`` weight (largest-remainder apportionment, so
+  shard sizes are deterministic and sum to the batch);
+* every non-empty shard runs through the whole-model jitted pipeline
+  (``engine.forward_jit``) — per-image quantization makes each image's
+  output independent of its shard, so the concatenated outputs are
+  bitwise-identical to serving the unsharded batch on one accelerator
+  (asserted in tests/test_dispatch.py, ragged batches included);
+* each shard reports its wall execution time and its instance, and the
+  telemetry layer (telemetry.record_batch ``shards=``) costs it through
+  the cycle-true simulator at that instance's hardware operating point.
+
+``CNNServer`` routes through a dispatcher when one is configured;
+``PlanRegistry.warm_pipelines`` accepts the dispatcher so every
+(plan, shard-bucket) executable is pre-traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .. import engine
+from .telemetry import HardwarePoint
+
+
+@dataclasses.dataclass(frozen=True)
+class AcceleratorInstance:
+    """One simulated accelerator in the fleet."""
+    name: str
+    hw: HardwarePoint = HardwarePoint()
+    capacity: float = 1.0     # relative shard weight (throughput share)
+
+    def __post_init__(self) -> None:
+        if self.capacity <= 0:
+            raise ValueError(
+                f"instance {self.name!r} capacity must be > 0, "
+                f"got {self.capacity}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardRun:
+    """One instance's share of a dispatched batch."""
+    instance: AcceleratorInstance
+    batch_size: int
+    exec_s: float             # wall-clock pipeline time for the shard
+
+
+def default_fleet(k: int, hw: HardwarePoint = HardwarePoint(),
+                  ) -> Tuple[AcceleratorInstance, ...]:
+    """K homogeneous instances at one hardware operating point."""
+    if k < 1:
+        raise ValueError(f"fleet size must be >= 1, got {k}")
+    return tuple(AcceleratorInstance(name=f"acc{i}", hw=hw)
+                 for i in range(k))
+
+
+class ShardedDispatcher:
+    """Shard batches across a fleet of simulated accelerator instances."""
+
+    def __init__(self, instances: Sequence[AcceleratorInstance]):
+        if not instances:
+            raise ValueError("dispatcher needs at least one instance")
+        names = [i.name for i in instances]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate instance names: {names}")
+        self.instances = tuple(instances)
+        self._total_capacity = sum(i.capacity for i in self.instances)
+
+    def shard_sizes(self, batch: int) -> List[int]:
+        """Deterministic capacity-proportional split summing to ``batch``.
+
+        Largest-remainder apportionment: every instance gets the floor of
+        its proportional share, the leftover frames go to the largest
+        fractional remainders (ties to the earlier instance).  Instances
+        may receive 0 frames for small batches.
+        """
+        if batch < 0:
+            raise ValueError(f"batch must be >= 0, got {batch}")
+        quotas = [batch * i.capacity / self._total_capacity
+                  for i in self.instances]
+        sizes = [int(q) for q in quotas]
+        order = sorted(range(len(quotas)),
+                       key=lambda j: (-(quotas[j] - sizes[j]), j))
+        for j in order[:batch - sum(sizes)]:
+            sizes[j] += 1
+        return sizes
+
+    def run(self, plan: engine.ModelPlan, xb: jax.Array,
+            interpret: Optional[bool] = None,
+            ) -> Tuple[jax.Array, List[ShardRun]]:
+        """Serve one batch sharded across the fleet.
+
+        Returns the concatenated outputs (request order preserved) and
+        one ``ShardRun`` per non-empty shard.  Bitwise-identical to
+        ``engine.forward_jit(plan, xb)`` because quantization, GEMM rows
+        and epilogue scales are all per image.
+        """
+        b = xb.shape[0]
+        if b == 0:
+            raise ValueError("cannot dispatch an empty batch")
+        sizes = self.shard_sizes(b)
+        outs: List[jax.Array] = []
+        runs: List[ShardRun] = []
+        start = 0
+        for inst, size in zip(self.instances, sizes):
+            if size == 0:
+                continue
+            shard = xb[start:start + size]
+            start += size
+            t0 = time.perf_counter()
+            out = engine.forward_jit(plan, shard, interpret=interpret)
+            out = jax.block_until_ready(out)
+            runs.append(ShardRun(instance=inst, batch_size=size,
+                                 exec_s=time.perf_counter() - t0))
+            outs.append(out)
+        return jnp.concatenate(outs, axis=0), runs

@@ -27,10 +27,9 @@ from typing import Callable, Dict, List, Sequence, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from ..cnn.layers import ConvKind, LayerSpec, dc, fc, pc, sc
+from ..cnn.layers import ConvKind, LayerSpec
 from ..cnn.models import MODEL_ZOO
-from ..core import vdp
-from ..engine import LayerDef
+from ..engine import LayerDef, defs_to_specs
 
 
 def _w(rng: np.random.Generator, shape: Tuple[int, ...]) -> jnp.ndarray:
@@ -118,26 +117,8 @@ def specs_for_defs(defs: Sequence[LayerDef],
                    input_shape: Tuple[int, int, int]) -> List[LayerSpec]:
     """Derive the analytic LayerSpec table of an executable LayerDef chain.
 
-    Walks the chain tracking spatial shape exactly as the executor does
-    (vdp.out_hw), so ``simulate(acc, specs_for_defs(defs, shape), batch)``
-    models precisely the tensor products the engine will run.
+    Delegates to ``engine.defs_to_specs`` (the planner scores the same
+    walk), so ``simulate(acc, specs_for_defs(defs, shape), batch)`` models
+    precisely the tensor products the engine will run.
     """
-    h, w, _ = input_shape
-    specs: List[LayerSpec] = []
-    for ld in defs:
-        if ld.kind is ConvKind.FC:
-            f, s = ld.weights.shape
-            specs.append(fc(ld.name, s, f))
-            continue
-        if ld.kind is ConvKind.DC:
-            d, k, _ = ld.weights.shape
-            h, w = vdp.out_hw(h, w, k, ld.stride, ld.padding)
-            specs.append(dc(ld.name, k, d, h, w))
-            continue
-        f, k, _, d = ld.weights.shape
-        h, w = vdp.out_hw(h, w, k, ld.stride, ld.padding)
-        if ld.kind is ConvKind.PC:
-            specs.append(pc(ld.name, d, f, h, w))
-        else:
-            specs.append(sc(ld.name, k, d, f, h, w))
-    return specs
+    return list(defs_to_specs(defs, input_shape))

@@ -24,7 +24,7 @@ import jax.numpy as jnp
 from ..cnn.layers import LayerSpec
 from ..engine import (DEFAULT_POINT, EnginePoint, LayerDef, ModelPlan,
                       batch_bucket, compile_model, forward_jit,
-                      pipeline_evict)
+                      pipeline_evict, plan_model, search_cache_evict)
 from ..engine.plan import _defs_fingerprint
 from . import models as zoo
 
@@ -52,15 +52,20 @@ class PlanRegistry:
 
     ``capacity`` bounds how many plans are resident at once; every loaded
     plan shares this registry's ``EnginePoint`` (one accelerator operating
-    point per registry, as on real hardware).
+    point per registry, as on real hardware).  With ``planner=True`` the
+    registry compiles through the reconfiguration-aware planner
+    (``engine.plan_model``): each layer gets its modeled-best operating
+    point (bitwise-identical outputs, heterogeneous packing).
     """
 
     def __init__(self, capacity: int = 4,
-                 point: EnginePoint = DEFAULT_POINT):
+                 point: EnginePoint = DEFAULT_POINT,
+                 planner: bool = False):
         if capacity < 1:
             raise ValueError(f"capacity must be >= 1, got {capacity}")
         self.capacity = capacity
         self.point = point
+        self.planner = planner
         self._registered: Dict[str, _Registration] = {}
         self._loaded: "OrderedDict[str, ServingModel]" = OrderedDict()
         self._stats = {"hits": 0, "misses": 0, "evictions": 0}
@@ -112,7 +117,10 @@ class PlanRegistry:
                 f"weight factory for {name!r} produced a structurally "
                 f"different model than its first load; factories must be "
                 f"deterministic per model key")
-        plan = compile_model(name, defs, self.point)
+        if self.planner:
+            plan = plan_model(name, defs, reg.input_shape, self.point)
+        else:
+            plan = compile_model(name, defs, self.point)
         exec_specs = tuple(zoo.specs_for_defs(defs, reg.input_shape))
         entry = ServingModel(
             name=name, plan=plan, input_shape=reg.input_shape,
@@ -120,25 +128,34 @@ class PlanRegistry:
             sim_specs=(reg.sim_specs if reg.sim_specs is not None
                        else exec_specs))
         while len(self._loaded) >= self.capacity:
-            _, evicted = self._loaded.popitem(last=False)
-            # drop the compiled whole-model pipelines with the imprint —
-            # otherwise the pipeline cache would pin the evicted plan's
-            # arrays resident forever
+            evicted_name, evicted = self._loaded.popitem(last=False)
+            # drop the compiled whole-model pipelines AND the planner's
+            # point-search memo with the imprint — either cache would
+            # otherwise pin the evicted model's state resident forever
             pipeline_evict(evicted.plan)
+            search_cache_evict(evicted_name)
             self._stats["evictions"] += 1
         self._loaded[name] = entry
         return entry
 
     def warm_pipelines(self, name: str, max_batch: int,
-                       interpret: Optional[bool] = None) -> List[int]:
+                       interpret: Optional[bool] = None,
+                       dispatcher=None) -> List[int]:
         """Pre-compile the whole-model jitted pipeline for every batch
         bucket up to ``max_batch``, so serving pays no compile stalls.
 
         Returns the bucket sizes traced.  Loads (and possibly evicts) like
-        any ``get``.
+        any ``get``.  With a ``ShardedDispatcher``, the buckets are those
+        of every *shard* a batch up to ``max_batch`` can produce — the
+        shapes the dispatcher will actually run.
         """
         entry = self.get(name)
-        buckets = sorted({batch_bucket(b) for b in range(1, max_batch + 1)})
+        sizes = range(1, max_batch + 1)
+        if dispatcher is None:
+            buckets = sorted({batch_bucket(b) for b in sizes})
+        else:
+            buckets = sorted({batch_bucket(s) for b in sizes
+                              for s in dispatcher.shard_sizes(b) if s > 0})
         for bucket in buckets:
             xb = jnp.zeros((bucket, *entry.input_shape), jnp.float32)
             forward_jit(entry.plan, xb, interpret=interpret)
@@ -147,14 +164,14 @@ class PlanRegistry:
 
 def paper_cnn_registry(capacity: int = 3,
                        point: EnginePoint = DEFAULT_POINT,
-                       seed: int = 0) -> PlanRegistry:
+                       seed: int = 0, planner: bool = False) -> PlanRegistry:
     """Registry pre-loaded with the serving zoo's paper-CNN stand-ins.
 
     Each mini executes functionally through the engine while its telemetry
     is costed at paper scale (the full EfficientNetB7 / Xception /
     ShuffleNetV2 layer tables from cnn/models.py).
     """
-    reg = PlanRegistry(capacity=capacity, point=point)
+    reg = PlanRegistry(capacity=capacity, point=point, planner=planner)
     for name in zoo.SERVING_MODELS:
         reg.register(
             name,

@@ -5,8 +5,11 @@ model's resident plan (registry, LRU), stacks the requests into an NHWC
 batch, runs it through the whole-model jitted pipeline
 (engine.forward_jit) — the entire layer chain against the resident DKV
 imprint in ONE XLA dispatch — and splits the outputs back to their
-requests.  Wall-clock and modeled-hardware telemetry is recorded per
-batch (telemetry.py); pipeline compile stalls are counted per
+requests.  With a ``dispatcher`` (serve/dispatch.py) the batch is instead
+sharded across the fleet's simulated accelerator instances,
+bitwise-identically.  Wall-clock and modeled-hardware telemetry is
+recorded per batch — per shard and instance operating point when sharded
+(telemetry.py); pipeline compile stalls are counted per
 (plan, batch bucket) in ``pipeline_compiles``.
 
 The clock is injectable (``time_fn``) so tests and trace replays can drive
@@ -23,6 +26,7 @@ import numpy as np
 
 from .. import engine
 from .batcher import DynamicBatcher
+from .dispatch import ShardedDispatcher
 from .registry import PlanRegistry
 from .telemetry import DEFAULT_HW_POINTS, HardwarePoint, TelemetryLog
 
@@ -32,12 +36,14 @@ class CNNServer:
                  max_wait_s: float = 0.005,
                  hw_points: Sequence[HardwarePoint] = DEFAULT_HW_POINTS,
                  interpret: Optional[bool] = None,
-                 time_fn: Callable[[], float] = time.monotonic):
+                 time_fn: Callable[[], float] = time.monotonic,
+                 dispatcher: Optional[ShardedDispatcher] = None):
         self.registry = registry
         self.batcher = DynamicBatcher(max_batch=max_batch,
                                       max_wait_s=max_wait_s)
         self.telemetry = TelemetryLog(hw_points)
         self.interpret = interpret
+        self.dispatcher = dispatcher
         self._time = time_fn
         self.results: Dict[int, np.ndarray] = {}
         #: pipeline trace+compile stalls paid inside step() so far — one
@@ -106,8 +112,17 @@ class CNNServer:
         entry = self.registry.get(fb.model)
         xb = jnp.stack([jnp.asarray(r.x, jnp.float32) for r in fb.requests])
         compiles_before = engine.pipeline_cache_info()["compiles"]
-        out = engine.forward_jit(entry.plan, xb, interpret=self.interpret)
-        out = jax.block_until_ready(out)
+        shard_info = ()
+        if self.dispatcher is None:
+            out = engine.forward_jit(entry.plan, xb,
+                                     interpret=self.interpret)
+            out = jax.block_until_ready(out)
+        else:
+            # shard the batch across the fleet; outputs keep request order
+            out, runs = self.dispatcher.run(entry.plan, xb,
+                                            interpret=self.interpret)
+            shard_info = [(r.instance.name, r.batch_size, r.instance.hw,
+                           r.exec_s) for r in runs]
         self.pipeline_compiles += (engine.pipeline_cache_info()["compiles"]
                                    - compiles_before)
         exec_s = time.perf_counter() - t0
@@ -120,7 +135,7 @@ class CNNServer:
         self.telemetry.record_batch(
             model=fb.model, sim_specs=entry.sim_specs, batch_size=fb.size,
             t_formed=now, exec_s=exec_s, queue_waits_s=fb.queue_waits(),
-            latencies_s=lats)
+            latencies_s=lats, shards=shard_info)
         return fb.size
 
     def run_until_drained(self, max_steps: int = 100_000,

@@ -48,6 +48,16 @@ class HwCost:
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardCost:
+    """One dispatched shard, costed at its instance's operating point."""
+    instance: str
+    batch_size: int
+    point: str                          # hardware point label
+    exec_s: float                       # wall-clock shard time
+    cost: HwCost
+
+
+@dataclasses.dataclass(frozen=True)
 class BatchRecord:
     model: str
     batch_size: int
@@ -56,6 +66,7 @@ class BatchRecord:
     queue_waits_s: Tuple[float, ...]    # per request
     latencies_s: Tuple[float, ...]      # submit -> results ready, per request
     hw: Dict[str, HwCost]               # point label -> modeled cost
+    shards: Tuple[ShardCost, ...] = ()  # sharded dispatch (empty if single)
 
 
 class TelemetryLog:
@@ -71,18 +82,27 @@ class TelemetryLog:
         self._hw_memo: Dict[Tuple[str, int, str], HwCost] = {}
         self._model_specs: Dict[str, Tuple[LayerSpec, ...]] = {}
 
+    def _accelerator(self, point: HardwarePoint) -> AcceleratorConfig:
+        """The built accelerator for a point (fleet points added lazily)."""
+        acc = self._acc.get(point.label)
+        if acc is None:
+            acc = build_accelerator(point.accelerator, point.bit_rate_gbps)
+            self._acc[point.label] = acc
+        return acc
+
     def _hw_cost(self, model: str, sim_specs: Sequence[LayerSpec],
-                 batch_size: int, label: str) -> HwCost:
+                 batch_size: int, point: HardwarePoint) -> HwCost:
         specs = tuple(sim_specs)
         seen = self._model_specs.setdefault(model, specs)
         if seen != specs:
             raise ValueError(
                 f"model {model!r} recorded with a different sim_specs "
                 f"table than before; one spec table per model name")
-        key = (model, batch_size, label)
+        key = (model, batch_size, point.label)
         cost = self._hw_memo.get(key)
         if cost is None:
-            rep = sim.simulate(self._acc[label], sim_specs, batch=batch_size)
+            rep = sim.simulate(self._accelerator(point), sim_specs,
+                               batch=batch_size)
             cost = HwCost(fps=rep.fps, fps_per_watt=rep.fps_per_watt,
                           frame_latency_s=rep.frame_latency_s,
                           energy_per_frame_j=rep.energy_per_frame_j)
@@ -92,13 +112,28 @@ class TelemetryLog:
     def record_batch(self, model: str, sim_specs: Sequence[LayerSpec],
                      batch_size: int, t_formed: float, exec_s: float,
                      queue_waits_s: Sequence[float],
-                     latencies_s: Sequence[float]) -> BatchRecord:
-        hw = {p.label: self._hw_cost(model, sim_specs, batch_size, p.label)
+                     latencies_s: Sequence[float],
+                     shards: Sequence[Tuple[str, int, HardwarePoint,
+                                            float]] = ()) -> BatchRecord:
+        """Record one served batch (and, when sharded, each shard).
+
+        ``shards`` rows are (instance name, shard size, the instance's
+        hardware point, wall shard seconds) — each shard is costed through
+        the simulator at its *own* operating point, so a heterogeneous
+        fleet reports per-instance modeled FPS/FPS-per-W.
+        """
+        hw = {p.label: self._hw_cost(model, sim_specs, batch_size, p)
               for p in self.points}
+        shard_costs = tuple(
+            ShardCost(instance=name, batch_size=size, point=point.label,
+                      exec_s=shard_exec_s,
+                      cost=self._hw_cost(model, sim_specs, size, point))
+            for name, size, point, shard_exec_s in shards)
         rec = BatchRecord(model=model, batch_size=batch_size,
                           t_formed=t_formed, exec_s=exec_s,
                           queue_waits_s=tuple(queue_waits_s),
-                          latencies_s=tuple(latencies_s), hw=dict(hw))
+                          latencies_s=tuple(latencies_s), hw=dict(hw),
+                          shards=shard_costs)
         self.records.append(rec)
         return rec
 
@@ -130,6 +165,24 @@ class TelemetryLog:
             out[p.label] = {"modeled_fps": fps, "modeled_fps_per_watt": fpw}
         return out
 
+    def _dispatch_summary(self, records: List[BatchRecord]) -> Dict[str, Dict]:
+        """Per-instance view of sharded dispatch (empty when unsharded)."""
+        out: Dict[str, Dict] = {}
+        for r in records:
+            for s in r.shards:
+                d = out.setdefault(s.instance, {
+                    "point": s.point, "frames": 0, "shards": 0,
+                    "exec_s": 0.0, "_fps_frames": 0.0, "_fpw_frames": 0.0})
+                d["frames"] += s.batch_size
+                d["shards"] += 1
+                d["exec_s"] += s.exec_s
+                d["_fps_frames"] += s.cost.fps * s.batch_size
+                d["_fpw_frames"] += s.cost.fps_per_watt * s.batch_size
+        for d in out.values():
+            d["modeled_fps"] = d.pop("_fps_frames") / d["frames"]
+            d["modeled_fps_per_watt"] = d.pop("_fpw_frames") / d["frames"]
+        return out
+
     def summary(self) -> Dict:
         """Serving report: wall-clock throughput/latency + modeled hardware.
 
@@ -152,6 +205,7 @@ class TelemetryLog:
             "latency_p50_s": self.latency_percentile(50),
             "latency_p99_s": self.latency_percentile(99),
             "hardware": self._hw_summary(self.records),
+            "dispatch": self._dispatch_summary(self.records),
             "models": {},
         }
         for model in sorted({r.model for r in self.records}):

@@ -1,0 +1,158 @@
+"""Sharded multi-accelerator dispatch tests: apportionment, bitwise
+identity vs the single-accelerator path on ragged batches, per-shard
+telemetry costing, and server/registry routing."""
+import jax
+import numpy as np
+import pytest
+
+from repro import engine, serve
+from repro.serve import models as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+RMAM1 = serve.HardwarePoint("RMAM", 1.0)
+RMAM5 = serve.HardwarePoint("RMAM", 5.0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    engine.plan_cache_clear()
+    yield
+    engine.plan_cache_clear()
+
+
+def _fleet(caps=(1.0, 1.0), points=None):
+    points = points or [RMAM1] * len(caps)
+    return serve.ShardedDispatcher([
+        serve.AcceleratorInstance(f"acc{i}", hw=p, capacity=c)
+        for i, (c, p) in enumerate(zip(caps, points))])
+
+
+# ---------------------------------------------------------------------------
+# apportionment
+# ---------------------------------------------------------------------------
+
+def test_shard_sizes_sum_and_proportionality():
+    d = _fleet((2.0, 1.0, 1.0))
+    for b in range(0, 33):
+        sizes = d.shard_sizes(b)
+        assert sum(sizes) == b and all(s >= 0 for s in sizes)
+    assert d.shard_sizes(8) == [4, 2, 2]
+    assert d.shard_sizes(1) == [1, 0, 0]     # ties go to earlier instances
+
+
+def test_shard_sizes_deterministic():
+    d = _fleet((1.0, 1.0, 1.0))
+    assert d.shard_sizes(7) == d.shard_sizes(7) == [3, 2, 2]
+
+
+def test_dispatcher_validates_instances():
+    with pytest.raises(ValueError):
+        serve.ShardedDispatcher([])
+    with pytest.raises(ValueError):
+        _fleet((1.0, -1.0))
+    with pytest.raises(ValueError):
+        serve.ShardedDispatcher(
+            [serve.AcceleratorInstance("a"), serve.AcceleratorInstance("a")])
+    with pytest.raises(ValueError):
+        serve.default_fleet(0)
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity vs single accelerator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 2, 3, 5, 7, 8])
+def test_sharded_dispatch_bitwise_on_ragged_batches(batch):
+    name = "shufflenet_mini"
+    defs = zoo.serving_defs(name)
+    plan = engine.compile_model(f"{name}#d{batch}", defs)
+    rng = np.random.default_rng(batch)
+    xb = rng.normal(size=(batch, *zoo.serving_input_shape(name))).astype(
+        np.float32)
+    single = np.asarray(engine.forward_jit(plan, xb))
+    for caps in ((1.0, 1.0), (3.0, 1.0), (1.0, 1.0, 1.0)):
+        d = _fleet(caps)
+        out, runs = d.run(plan, xb)
+        np.testing.assert_array_equal(np.asarray(out), single)
+        assert sum(r.batch_size for r in runs) == batch
+        assert all(r.batch_size > 0 for r in runs)   # empty shards skipped
+
+
+def test_sharded_dispatch_bitwise_with_planner_plan():
+    name = "xception_mini"
+    defs = zoo.serving_defs(name)
+    shape = zoo.serving_input_shape(name)
+    planned = engine.plan_model(f"{name}#dp", defs, shape)
+    fixed = engine.compile_model(f"{name}#df", defs)
+    rng = np.random.default_rng(0)
+    xb = rng.normal(size=(5, *shape)).astype(np.float32)
+    out, _ = _fleet((2.0, 1.0), [RMAM1, RMAM5]).run(planned, xb)
+    np.testing.assert_array_equal(np.asarray(out),
+                                  np.asarray(engine.forward_jit(fixed, xb)))
+
+
+# ---------------------------------------------------------------------------
+# telemetry: per-shard costing
+# ---------------------------------------------------------------------------
+
+def test_telemetry_costs_each_shard_at_its_point():
+    log = serve.TelemetryLog(points=(RMAM1,))
+    specs = tuple(zoo.paper_scale_specs("xception_mini"))
+    rec = log.record_batch(
+        model="m", sim_specs=specs, batch_size=8, t_formed=0.0,
+        exec_s=0.1, queue_waits_s=[0.0] * 8, latencies_s=[0.1] * 8,
+        shards=[("acc0", 5, RMAM1, 0.06), ("acc1", 3, RMAM5, 0.04)])
+    assert len(rec.shards) == 2
+    by_inst = {s.instance: s for s in rec.shards}
+    assert by_inst["acc0"].point == "RMAM@1G"
+    assert by_inst["acc1"].point == "RMAM@5G"
+    # shard costs use the shard's batch size at the shard's point
+    from repro.core import simulator as sim
+    from repro.core.tpc import build_accelerator
+    exp = sim.simulate(build_accelerator("RMAM", 5.0), specs, batch=3)
+    assert by_inst["acc1"].cost.fps == pytest.approx(exp.fps)
+    summ = log.summary()
+    assert summ["dispatch"]["acc0"]["frames"] == 5
+    assert summ["dispatch"]["acc1"]["point"] == "RMAM@5G"
+
+
+# ---------------------------------------------------------------------------
+# server + registry routing
+# ---------------------------------------------------------------------------
+
+def test_server_routes_through_dispatcher_bitwise():
+    fleet = _fleet((2.0, 1.0), [RMAM1, RMAM5])
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet)
+    srv1 = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4)
+    rng = np.random.default_rng(5)
+    for name in zoo.SERVING_MODELS:
+        for x in rng.normal(size=(5, *zoo.serving_input_shape(name))):
+            srv.submit(name, x.astype(np.float32))
+            srv1.submit(name, x.astype(np.float32))
+    out, out1 = srv.run_until_drained(), srv1.run_until_drained()
+    assert out.keys() == out1.keys()
+    for rid in out:
+        np.testing.assert_array_equal(out[rid], out1[rid])
+    summ = srv.telemetry.summary()
+    assert set(summ["dispatch"]) == {"acc0", "acc1"}
+    assert sum(d["frames"] for d in summ["dispatch"].values()) \
+        == summ["requests"]
+    assert srv1.telemetry.summary()["dispatch"] == {}
+
+
+def test_warm_pipelines_covers_shard_buckets():
+    fleet = _fleet((1.0, 1.0, 1.0))
+    reg = serve.paper_cnn_registry()
+    name = next(iter(zoo.SERVING_MODELS))
+    buckets = reg.warm_pipelines(name, max_batch=6, dispatcher=fleet)
+    # shards of batches 1..6 over 3 equal instances are 1 or 2 frames
+    assert buckets == [1, 2]
+    # serving through the dispatcher now pays zero compile stalls
+    srv = serve.CNNServer(reg, max_batch=6, dispatcher=fleet)
+    rng = np.random.default_rng(9)
+    for x in rng.normal(size=(6, *zoo.serving_input_shape(name))):
+        srv.submit(name, x.astype(np.float32))
+    srv.run_until_drained()
+    assert srv.pipeline_compiles == 0

@@ -1,0 +1,201 @@
+"""Reconfiguration-aware planner tests: determinism, bitwise equivalence
+vs the fixed-point plan, switch-penalty monotonicity, and the search-cache
+lifecycle (plan_cache_clear + registry LRU eviction)."""
+import jax
+import numpy as np
+import pytest
+
+from repro import engine, serve
+from repro.cnn.models import MODEL_ZOO
+from repro.core import mapping
+from repro.core.tpc import accelerator_at, build_accelerator
+from repro.engine import plan as plan_mod
+from repro.serve import models as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+DS_MODELS = tuple(zoo.SERVING_MODELS)   # all minis are depthwise-separable
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    engine.plan_cache_clear()
+    yield
+    engine.plan_cache_clear()
+
+
+def _planned(name, seed=0):
+    defs = zoo.serving_defs(name, seed)
+    return engine.plan_model(f"{name}#t", defs,
+                             zoo.serving_input_shape(name)), defs
+
+
+# ---------------------------------------------------------------------------
+# operating-point candidates
+# ---------------------------------------------------------------------------
+
+def test_point_options_honor_comb_switch_constraint():
+    for n in (16, 22, 27, 43):
+        opts = mapping.point_options(n)
+        assert opts[-1] == mapping.FIXED_POINT_OPTION
+        recon = opts[:-1]
+        assert recon, f"no reconfigurable option for n={n}"
+        assert recon[0].x == mapping.REAGG_SIZE_X or n < 2 * mapping.REAGG_SIZE_X
+        for o in recon:
+            assert n >= 2 * o.x, (n, o.x)   # y > 0 (paper Section V-A)
+            tpc = mapping.tpc_at(build_accelerator("RMAM", 1.0).tpc_config, o)
+            assert tpc.y > 0
+
+
+def test_accelerator_at_changes_only_geometry():
+    acc = build_accelerator("RMAM", 1.0)
+    acc2 = accelerator_at(acc, mapping.PointOption(x=21))
+    assert acc2.x == 21 and acc2.n == acc.n and acc2.n_vdpe == acc.n_vdpe
+    fixed = accelerator_at(acc, mapping.FIXED_POINT_OPTION)
+    assert fixed.y == 0 and fixed.tpc_config.y == 0
+
+
+# ---------------------------------------------------------------------------
+# search: determinism + monotonicity + uplift
+# ---------------------------------------------------------------------------
+
+def test_search_deterministic_same_defs_same_sequence():
+    specs = MODEL_ZOO["xception"]()
+    a = engine.search_points(specs)
+    b = engine.search_points(specs)
+    assert a.labels == b.labels
+    assert a.total_time_s == b.total_time_s
+    # and through plan_model: identical point sequence for identical defs
+    p1, _ = _planned("efficientnet_mini")
+    engine.plan_cache_clear()
+    p2, _ = _planned("efficientnet_mini")
+    assert p1.point_labels == p2.point_labels
+    assert p1.points == p2.points
+
+
+def test_switch_penalty_monotonicity():
+    specs = MODEL_ZOO["shufflenet_v2"]()
+    penalties = (0.0, 1e-9, 1e-6, 1e-3, 1.0)
+    switches = [engine.search_points(specs, switch_penalty_s=p).switches
+                for p in penalties]
+    assert switches == sorted(switches, reverse=True)
+    assert switches[0] > 0          # free switching does reconfigure
+    assert switches[-1] == 0        # a frame-dominating penalty pins one point
+
+
+def test_planner_beats_fixed_geometry_on_paper_tables():
+    for name in ("efficientnet_b7", "xception", "shufflenet_v2"):
+        rep = engine.search_points(MODEL_ZOO[name]())
+        assert rep.uplift > 1.3, (name, rep.uplift)
+        assert rep.mean_utilization > rep.fixed_utilization
+        # total time accounts for every switch at the charged penalty
+        assert rep.total_time_s == pytest.approx(
+            sum(c.time_s for c in rep.choices)
+            + rep.switches * rep.switch_penalty_s)
+
+
+def test_search_rejects_empty_options():
+    with pytest.raises(ValueError):
+        engine.search_points(MODEL_ZOO["xception"]()[:3], options=())
+
+
+# ---------------------------------------------------------------------------
+# planned plans: bitwise identity + differing census/points
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", DS_MODELS)
+def test_planned_plan_bitwise_equals_fixed_plan(name):
+    planned, defs = _planned(name)
+    fixed = engine.compile_model(f"{name}#fixed", defs, engine.DEFAULT_POINT)
+    rng = np.random.default_rng(7)
+    xb = rng.normal(size=(3, *zoo.serving_input_shape(name))).astype(
+        np.float32)
+    np.testing.assert_array_equal(
+        np.asarray(engine.forward(planned, xb)),
+        np.asarray(engine.forward(fixed, xb)))
+    # the jitted pipeline agrees too (per-layer points are static in it)
+    np.testing.assert_array_equal(
+        np.asarray(engine.forward_jit(planned, xb)),
+        np.asarray(engine.forward(fixed, xb)))
+
+
+@pytest.mark.parametrize("name", DS_MODELS)
+def test_planned_point_sequence_and_census_differ(name):
+    planned, defs = _planned(name)
+    fixed = engine.compile_model(f"{name}#fixed", defs, engine.DEFAULT_POINT)
+    assert planned.planner is not None and fixed.planner is None
+    assert planned.points != fixed.points
+    assert planned.mode_census != fixed.mode_census
+    # heterogeneous: the planner used more than one hardware point
+    assert len(set(planned.point_labels)) > 1
+
+
+def test_planned_layers_keep_quantization_bits():
+    planned, defs = _planned("xception_mini")
+    for lp in planned.layers:
+        assert lp.point.bits == engine.DEFAULT_POINT.bits
+
+
+def test_packed_width_covers_contraction():
+    planned, _ = _planned("xception_mini")
+    for lp in planned.layers:
+        if lp.mode == engine.MODE_PACKED:
+            assert lp.point.x >= lp.s
+            assert lp.rhs.shape[0] == lp.point.x
+
+
+# ---------------------------------------------------------------------------
+# search cache lifecycle
+# ---------------------------------------------------------------------------
+
+def test_search_cache_memoizes_and_clears():
+    _planned("efficientnet_mini")
+    info = engine.plan_cache_info()
+    assert info["search_misses"] == 1 and info["search_size"] == 1
+    _planned("efficientnet_mini")
+    info = engine.plan_cache_info()
+    assert info["search_hits"] == 1
+    engine.plan_cache_clear()          # satellite: clears the search memo
+    info = engine.plan_cache_info()
+    assert info["search_size"] == 0
+    assert info["search_hits"] == info["search_misses"] == 0
+
+
+def test_search_cache_guards_structural_reuse():
+    defs = zoo.serving_defs("efficientnet_mini", 0)
+    shape = zoo.serving_input_shape("efficientnet_mini")
+    engine.plan_model("dup", defs, shape)
+    other = zoo.serving_defs("xception_mini", 0)
+    with pytest.raises(ValueError, match="structurally different"):
+        engine.plan_model("dup", other,
+                          zoo.serving_input_shape("xception_mini"))
+
+
+def test_registry_eviction_drops_search_cache():
+    reg = serve.paper_cnn_registry(capacity=1, planner=True)
+    names = list(zoo.SERVING_MODELS)
+    reg.get(names[0])
+    assert any(k[0] == names[0] for k in plan_mod._SEARCH_CACHE)
+    reg.get(names[1])                  # evicts names[0]
+    assert not any(k[0] == names[0] for k in plan_mod._SEARCH_CACHE)
+    assert any(k[0] == names[1] for k in plan_mod._SEARCH_CACHE)
+    # re-load recomputes the search and serves bit-identical outputs
+    rng = np.random.default_rng(3)
+    x = rng.normal(size=zoo.serving_input_shape(names[0])).astype(np.float32)
+    before = np.asarray(engine.forward(reg.get(names[0]).plan, x))
+    reg.get(names[1])
+    after = np.asarray(engine.forward(reg.get(names[0]).plan, x))
+    np.testing.assert_array_equal(before, after)
+
+
+def test_planner_registry_serves_bitwise_vs_fixed_registry():
+    reg_p = serve.paper_cnn_registry(planner=True)
+    reg_f = serve.paper_cnn_registry(planner=False)
+    rng = np.random.default_rng(11)
+    for name in zoo.SERVING_MODELS:
+        x = rng.normal(size=(2, *zoo.serving_input_shape(name))).astype(
+            np.float32)
+        np.testing.assert_array_equal(
+            np.asarray(engine.forward_jit(reg_p.get(name).plan, x)),
+            np.asarray(engine.forward_jit(reg_f.get(name).plan, x)))
+        assert reg_p.get(name).plan.point_labels is not None
