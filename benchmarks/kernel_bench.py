@@ -9,10 +9,19 @@ the measured-perf trajectory:
 
 * ``implicit_conv`` — implicit-GEMM conv vs the materialized im2col->GEMM
   oracle over every conv layer of the serving-zoo paper-CNN stand-ins,
-  with the per-shape peak activation-stream HBM estimate: im2col holds a
-  (B, P, K*K*D) DIV matrix, the implicit path only the (B, Hp, Wp, D)
-  padded activation — a K^2-ish footprint ratio for K>1 (EXPERIMENTS.md
-  §Perf "Dispatch & memory").
+  with the per-shape peak activation-stream estimate (elements at a
+  common width): im2col holds a (B, P, K*K*D) DIV matrix, the implicit
+  path only the (B, Hp, Wp, D) padded activation — a K^2-ish footprint
+  ratio for K>1 (EXPERIMENTS.md §Perf "Dispatch & memory").
+
+* ``quantized_domain`` — the int8-vs-float sweep over EVERY serving-zoo
+  layer shape (conv AND FC): the fused-quantize int8 path
+  (engine.forward_layer — DAC absmax/quantize in the kernel prologues,
+  int8 operand streams, double-buffered K-pipelining) against the
+  quantize-then-float oracle (engine.forward_layer_f32 — separate XLA
+  quantize passes, lattice values streamed as f32), re-checked bitwise at
+  every timed shape, with the modeled per-layer HBM bytes each path moves
+  (EXPERIMENTS.md §Quantized-domain execution).
 
 Wall-times in interpret mode are NOT TPU times — the derived structural
 metrics (MXU passes, HBM bytes) are machine-independent; wall times are
@@ -147,8 +156,13 @@ def gemm_section() -> Dict:
 # Implicit-GEMM conv vs im2col+GEMM section
 # ---------------------------------------------------------------------------
 
-def conv_cases() -> List[Tuple[str, object, Tuple[int, int, int]]]:
-    """(model, LayerPlan, input HWC) for every serving-zoo conv layer."""
+def layer_cases(include_fc: bool = False,
+                ) -> List[Tuple[str, object, Tuple[int, int, int]]]:
+    """(model, LayerPlan, input HWC) for every serving-zoo layer.
+
+    FC layers (the serving zoo puts them last) receive their input as the
+    preceding feature map's (H, W, D) — the executor flattens it.
+    """
     _build_plans()
     cases = []
     for name in zoo.SERVING_MODELS:
@@ -156,6 +170,8 @@ def conv_cases() -> List[Tuple[str, object, Tuple[int, int, int]]]:
         h, w, d = zoo.serving_input_shape(name)
         for lp in plan.layers:
             if lp.kind is ConvKind.FC:
+                if include_fc:
+                    cases.append((name, lp, (h, w, d)))
                 break                       # spatial structure ends here
             cases.append((name, lp, (h, w, d)))
             h, w = vdp.out_hw(h, w, lp.k, lp.stride, lp.padding)
@@ -163,12 +179,18 @@ def conv_cases() -> List[Tuple[str, object, Tuple[int, int, int]]]:
     return cases
 
 
-def _stream_bytes(lp, in_shape, batch: int) -> Tuple[int, int]:
-    """(im2col, implicit) peak activation-stream bytes for one layer.
+def conv_cases() -> List[Tuple[str, object, Tuple[int, int, int]]]:
+    """(model, LayerPlan, input HWC) for every serving-zoo conv layer."""
+    return layer_cases(include_fc=False)
 
-    im2col materializes the int8 (B, P, K*K*D) DIV matrix; the implicit
-    path streams the int8 padded activation (B, Hp, Wp, D) straight into
-    the kernel.
+
+def _conv_footprints(lp, in_shape) -> Tuple[Tuple[int, int],
+                                            Tuple[int, int]]:
+    """((ho, wo), (hp, wp)): one conv layer's output and padded-input dims.
+
+    The single home of the SAME/VALID padded-footprint arithmetic — both
+    HBM models below (implicit-vs-im2col and int8-vs-float) price the
+    same (B, Hp, Wp, D) activation the kernels actually fetch.
     """
     h, w, d = in_shape
     ho, wo = vdp.out_hw(h, w, lp.k, lp.stride, lp.padding)
@@ -177,6 +199,22 @@ def _stream_bytes(lp, in_shape, batch: int) -> Tuple[int, int]:
         hp, wp = max(hp, h), max(wp, w)
     else:
         hp, wp = h, w
+    return (ho, wo), (hp, wp)
+
+
+def _stream_bytes(lp, in_shape, batch: int) -> Tuple[int, int]:
+    """(im2col, implicit) peak activation-stream size for one layer.
+
+    Counted in *elements at a common width* (dtype-neutral — since PR 5
+    both paths peak on an f32-held activation: the im2col path builds the
+    f32 (B, P, K*K*D) DIV matrix before quantizing, the implicit q8 path
+    fetches the raw f32 (B, Hp, Wp, D) map), so the ratio is the K²-ish
+    footprint blow-up of materializing the DIV matrix at all.  The
+    per-HBM-pass byte model of the int8-vs-float comparison is
+    ``_q8_hbm_bytes`` below.
+    """
+    d = in_shape[2]
+    (ho, wo), (hp, wp) = _conv_footprints(lp, in_shape)
     im2col = batch * ho * wo * lp.k * lp.k * d
     implicit = batch * hp * wp * d
     return im2col, implicit
@@ -229,6 +267,84 @@ def conv_section(batch: int = 4, iters: int = ITERS,
     return results
 
 
+# ---------------------------------------------------------------------------
+# Quantized-domain execution: int8 path vs quantize-then-float oracle
+# ---------------------------------------------------------------------------
+
+def _q8_hbm_bytes(lp, in_shape, batch: int) -> Tuple[int, int]:
+    """(int8-path, float-path) modeled HBM bytes one layer call moves.
+
+    Counts every activation/weight pass each path actually performs:
+
+    * conv int8 (fused prologue): the raw f32 activation is fetched ONCE
+      by the kernel (absmax + quantize happen off the VMEM tile) and the
+      resident weights stream as int8.
+    * conv float (quantize-then-float): XLA absmax read + quantize
+      read/write of the f32 lattice + kernel read (4 activation passes),
+      weights cast int8->f32 (read+write) then kernel-read as f32.
+    * FC int8: the row absmax is one XLA read, the quantize is fused
+      (kernel reads the raw f32 rows) — 2 activation passes; int8 weights.
+    * FC float: like conv float (4 activation passes, f32 weights).
+    * DC runs the integer VPU path in both domains (int32 vs f32 lattice,
+      4 bytes either way): equal traffic, ratio 1.
+    """
+    w_elems = int(np.prod(lp.rhs.shape))
+    if lp.kind is ConvKind.FC:
+        a_elems = batch * lp.s
+        return (a_elems * (4 + 4) + w_elems * 1,
+                a_elems * (4 + 4 + 4 + 4) + w_elems * (1 + 4 + 4))
+    _, (hp, wp) = _conv_footprints(lp, in_shape)
+    a_elems = batch * hp * wp * in_shape[2]
+    if lp.mode == engine.MODE_DEPTHWISE:
+        n = a_elems * (4 + 4 + 4 + 4) + w_elems * 4
+        return n, n
+    return (a_elems * 4 + w_elems * 1,
+            a_elems * (4 + 4 + 4 + 4) + w_elems * (1 + 4 + 4))
+
+
+def quantized_section(batch: int = 4, iters: int = ITERS,
+                      seed: int = 0) -> Dict:
+    rng = np.random.default_rng(seed)
+    results: Dict = {"batch": batch, "layers": {}}
+    tot8 = totf = 0
+    for model, lp, in_shape in layer_cases(include_fc=True):
+        x = jnp.asarray(rng.normal(size=(batch, *in_shape)), jnp.float32)
+        plan = _PLAN_BY_MODEL[model]
+        t_q8 = _time(ex.forward_layer, plan, lp, x,
+                     iters=iters, interpret=True)
+        t_f32 = _time(ex.forward_layer_f32, plan, lp, x,
+                      iters=iters, interpret=True)
+        a = ex.forward_layer(plan, lp, x, interpret=True)
+        b = ex.forward_layer_f32(plan, lp, x, interpret=True)
+        _check(np.array_equal(np.asarray(a), np.asarray(b)),
+               f"int8 path diverged from quantize-then-float oracle at "
+               f"{model}/{lp.name}")
+        by8, byf = _q8_hbm_bytes(lp, in_shape, batch)
+        tot8 += by8
+        totf += byf
+        key = f"{model}/{lp.name}"
+        results["layers"][key] = {
+            "kind": lp.kind.value, "k": lp.k, "stride": lp.stride,
+            "route": engine.layer_route(lp),
+            "int8_s": t_q8, "float_s": t_f32,
+            "q8_speedup": t_f32 / t_q8,
+            "hbm_bytes_int8": by8, "hbm_bytes_float": byf,
+            "hbm_ratio": byf / by8,
+        }
+        print(f"quantized_domain,{key},{lp.kind.value},"
+              f"int8_s={t_q8:.4f},float_s={t_f32:.4f},"
+              f"q8_speedup={t_f32 / t_q8:.2f}x,hbm_ratio={byf / by8:.2f}x")
+    speedups = [r["q8_speedup"] for r in results["layers"].values()]
+    results["geomean_q8_speedup"] = float(
+        np.exp(np.mean(np.log(speedups))))
+    results["total_hbm_bytes"] = {
+        "int8": tot8, "float": totf, "ratio": totf / tot8}
+    print(f"quantized_domain,geomean_q8_speedup="
+          f"{results['geomean_q8_speedup']:.2f}x,"
+          f"total_hbm_ratio={totf / tot8:.2f}x")
+    return results
+
+
 _PLAN_BY_MODEL: Dict[str, engine.ModelPlan] = {}
 
 
@@ -242,6 +358,7 @@ def _build_plans() -> None:
 def run() -> None:
     results = gemm_section()
     results["implicit_conv"] = conv_section()
+    results["quantized_domain"] = quantized_section()
     OUT_PATH.write_text(json.dumps(results, indent=2) + "\n")
     print(f"kernel_bench,json,{OUT_PATH}")
 
@@ -271,7 +388,18 @@ def smoke() -> None:
                f"{model}/{lp.name}")
         print(f"smoke,layer,{model}/{lp.name},{route},bitwise=ok")
     _check(n_conv > 0, "no conv layer routed to the implicit kernels")
-    # whole-model jitted pipeline == eager loop
+    # quantized-domain path == quantize-then-float oracle, every layer
+    # shape including FC
+    for model, lp, in_shape in layer_cases(include_fc=True):
+        x = jnp.asarray(rng.normal(size=(2, *in_shape)), jnp.float32)
+        plan = _PLAN_BY_MODEL[model]
+        a = ex.forward_layer(plan, lp, x, interpret=True)
+        b = ex.forward_layer_f32(plan, lp, x, interpret=True)
+        _check(np.array_equal(np.asarray(a), np.asarray(b)),
+               f"int8 path diverged from quantize-then-float oracle at "
+               f"{model}/{lp.name}")
+        print(f"smoke,quantized,{model}/{lp.name},bitwise=ok")
+    # whole-model jitted pipeline == eager loop == float oracle
     engine.pipeline_cache_clear()
     for model, plan in _PLAN_BY_MODEL.items():
         shape = zoo.serving_input_shape(model)
@@ -280,6 +408,9 @@ def smoke() -> None:
         want = engine.forward(plan, x, interpret=True)
         _check(np.array_equal(np.asarray(got), np.asarray(want)),
                f"whole-model jit diverged from the eager loop for {model}")
+        oracle = engine.forward_f32(plan, x, interpret=True)
+        _check(np.array_equal(np.asarray(got), np.asarray(oracle)),
+               f"whole-model jit diverged from the float oracle for {model}")
         print(f"smoke,pipeline,{model},bitwise=ok")
     _check(engine.pipeline_cache_info()["compiles"] == len(_PLAN_BY_MODEL),
            "pipeline compiled more than once per (plan, bucket)")

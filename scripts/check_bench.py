@@ -12,8 +12,10 @@ Tracked metrics are *same-run speedup ratios* (higher is better):
 
 * serve: whole-model-jit vs layer-loop images/s at batch 1 and 8, and
   the batch-8-vs-batch-1 amortization ratio
-* kernels: zero-skipping vs block-diagonal Mode-2 GEMM per shape, and
-  implicit-GEMM vs im2col+GEMM per serving-zoo conv layer
+* kernels: zero-skipping vs block-diagonal Mode-2 GEMM per shape,
+  implicit-GEMM vs im2col+GEMM per serving-zoo conv layer, and the
+  quantized-domain int8 path vs the quantize-then-float oracle per
+  serving-zoo layer (conv and FC)
 
 Absolute wall img/s swings several-fold with host load on shared CI
 runners (and on a laptop), which would page people for nothing; each
@@ -86,6 +88,11 @@ def kernel_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
         v = row.get("implicit_speedup")
         if v:
             yield f"kernels.implicit_speedup.{layer}", float(v)
+    q8 = doc.get("quantized_domain", {}).get("layers", {})
+    for layer, row in sorted(q8.items()):
+        v = row.get("q8_speedup")
+        if v:
+            yield f"kernels.q8_speedup.{layer}", float(v)
 
 
 def collect(bench_dir: Path) -> Dict[str, float]:

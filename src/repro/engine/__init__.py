@@ -6,7 +6,8 @@ kernels/vdpe_conv.py; eager oracle: kernels/ref.epilogue_ref).  Conv layers
 run implicit-GEMM kernels (no materialized im2col); the serving hot path
 serves whole batches through one jitted dispatch (pipeline.forward_jit).
 """
-from .executor import (forward, forward_im2col, forward_layer,  # noqa: F401
+from .executor import (forward, forward_f32, forward_im2col,  # noqa: F401
+                       forward_layer, forward_layer_f32,
                        forward_layer_im2col, layer_route)
 from .pipeline import (batch_bucket, forward_jit, get_pipeline,  # noqa: F401
                        pipeline_cache_clear, pipeline_cache_info)

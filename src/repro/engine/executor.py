@@ -3,42 +3,60 @@
 The per-call work is exactly what the hardware pays per frame: quantize the
 activations (the input DACs) and stream their DIV patches against the
 resident DKV state.  Weight-side padding/packing happened once at plan
-compile time; the dequant-scale + bias + activation epilogue is fused into
-the Pallas kernels, so the int32 accumulators never round-trip HBM.
+compile time; the whole quantize prologue AND the dequant-scale + bias +
+activation epilogue are fused into the Pallas kernels, so neither the int8
+activation stream nor the int32 accumulators ever round-trip HBM.
 
-Two execution paths, one numerics contract:
+Three execution paths, one numerics contract:
 
-* **Implicit-GEMM (default, the serving hot path).**  ``forward`` /
-  ``forward_layer`` route SC/PC conv layers to the implicit-GEMM Pallas
-  kernels (kernels/vdpe_conv.py): the quantized NHWC activation goes to
-  the kernel at its natural (B, Hp, Wp, D) size and the K*K patch taps are
-  gathered *inside* the kernel — the (B, P, K*K*D) im2col DIV matrix never
-  exists in HBM (a K^2x peak-activation saving for K>1).  Depthwise layers
-  run the same windowed gather as a per-channel VPU contraction in plain
-  jnp; FC layers have no spatial structure and fall through to the GEMM
-  path.  ``layer_route`` reports the routing per layer.
+* **Quantized-domain implicit-GEMM (default, the serving hot path).**
+  ``forward`` / ``forward_layer`` route SC/PC conv layers to the
+  fused-quantize implicit-GEMM kernels (kernels/vdpe_conv.py): the *raw
+  f32* NHWC activation goes to the kernel at its natural (B, Hp, Wp, D)
+  size and the entire input-DAC stage — covered-window absmax, DAC scale,
+  int8 quantize — runs in the kernel prologue off the VMEM tile, so the
+  separate XLA absmax/round/clip passes (two extra f32 reads plus an int8
+  round-trip of the activation through HBM) disappear.  The K*K patch
+  taps are gathered *inside* the kernel — the (B, P, K*K*D) im2col DIV
+  matrix never exists in HBM.  Depthwise layers run the same windowed
+  gather as a per-channel integer VPU contraction in plain jnp; FC layers
+  quantize in the GEMM kernels' prologues (their row absmax is a cheap
+  XLA reduction, the quantize itself is fused) and stream K through the
+  explicitly double-buffered q8 GEMMs.  ``layer_route`` reports the
+  routing per layer.
 
-* **im2col -> GEMM (the bitwise oracle).**  ``forward_im2col`` /
-  ``forward_layer_im2col`` keep the historical materialized-DIV path next
-  to kernels/ref.py's oracles; tests/test_implicit_conv.py asserts the two
-  paths are bit-identical across all layer kinds, strides, paddings and
-  batch shapes, and benchmarks/kernel_bench.py tracks their wall-clock and
-  peak-HBM gap.
+* **Quantize-then-float (the float oracle).**  ``forward_f32`` /
+  ``forward_layer_f32`` keep the pre-fusion structure: activations are
+  quantized by separate XLA passes, and the *quantized lattice values are
+  streamed as f32* through the same implicit-GEMM kernels with f32
+  accumulation.  Because int8-lattice products summed to any paper-CNN
+  depth stay far below 2^24, f32 accumulation is exact and the path is
+  bit-identical to the int8 path while moving 4x the operand bytes —
+  it is both the bitwise oracle for the quantized-domain path and the
+  float side of benchmarks/kernel_bench.py's int8-vs-float sweep.
+
+* **im2col -> GEMM (the historical oracle).**  ``forward_im2col`` /
+  ``forward_layer_im2col`` keep the materialized-DIV path next to
+  kernels/ref.py's oracles; tests/test_implicit_conv.py and
+  tests/test_quantized.py assert all paths are bit-identical across all
+  layer kinds, strides, paddings and batch shapes.
 
 Bitwise identity holds because every step matches elementwise: the
 per-image quantization scale is the max |activation| over exactly the
-patch-covered window set (computed windowed here, equal to the im2col
-matrix max — SAME-padding zeros never raise a max), integer tap-sum
-accumulation is associative, and both fused epilogues apply the identical
-``act(acc * scale + bias)`` expression (kernels/common.apply_act).
+patch-covered window set (the in-kernel prologue and the XLA pass both
+enumerate it through kconv.tap_window; SAME-padding zeros never raise a
+max), the quantizer rounds onto the same integer lattice through
+kernels/common.quantize_tile, integer tap-sum accumulation is associative
+(and exact in f32), and every fused epilogue applies the identical
+``act(acc * scale + bias)`` expression (kernels/common.dequant_epilogue).
 
-Batching (the serving runtime's path): both paths accept a single image
+Batching (the serving runtime's path): all paths accept a single image
 (H, W, D) or an NHWC batch (B, H, W, D).  Quantization stays *per image*
-(each frame gets its own input-DAC swing); the implicit-conv kernels take
-the per-image scales through a grid-indexed SMEM epilogue, the GEMM path
-through per-row scale columns (kernels/vdpe_gemm.py).  For the whole-model
-jitted pipeline that chases the per-layer Python dispatch out of this
-loop, see engine/pipeline.py.
+(each frame gets its own input-DAC swing); the conv kernels derive the
+per-image scales per grid instance, the GEMM paths carry per-row scale
+columns (kernels/vdpe_gemm.py).  For the whole-model jitted pipeline that
+chases the per-layer Python dispatch out of this loop, see
+engine/pipeline.py.
 """
 from __future__ import annotations
 
@@ -52,7 +70,8 @@ from ..core import vdp
 from ..kernels import ops, ref
 from ..kernels import vdpe_conv as kconv
 from ..kernels import vdpe_gemm as kern
-from ..kernels.common import round_up as _round_up
+from ..kernels.common import (quantize_tile, round_up as _round_up,
+                              stable_scale)
 from .plan import (LayerPlan, MODE_DENSE, MODE_DEPTHWISE, MODE_PACKED,
                    ModelPlan)
 
@@ -76,18 +95,10 @@ def layer_route(lp: LayerPlan) -> str:
 # Shared activation-side helpers
 # ---------------------------------------------------------------------------
 
-def _stable_scale(x: jax.Array) -> jax.Array:
-    """Pin a DAC scale against XLA algebraic reassociation.
-
-    The per-image scale is ``absmax * (1/qmax)`` with 1/qmax a compile-time
-    constant; under the whole-model jit XLA's simplifier reassociates its
-    later multiply by the weight scale — ``(m * c) * w -> m * (c * w)`` —
-    which shifts the epilogue scale by 1 ulp and lets the next layer's
-    quantizer round() amplify that into integer flips.  Eager execution
-    never reassociates, so the two regimes would disagree bitwise.  An
-    optimization barrier freezes the association on both sides.
-    """
-    return jax.lax.optimization_barrier(x)
+#: Pin a DAC scale against XLA algebraic reassociation (the PR-3
+#: reciprocal/optimization_barrier lesson) — now shared with the in-kernel
+#: quantize prologues through kernels/common.stable_scale.
+_stable_scale = stable_scale
 
 
 def _pad_spatial(x4: jax.Array, k: int, stride: int,
@@ -111,6 +122,7 @@ def _window_absmax(x4p: jax.Array, k: int, stride: int, ho: int, wo: int,
     pixels the DIV matrix replicates (a strided layer can leave border
     pixels uncovered, so the whole-image max would be *wrong* — the
     covered-set max is what keeps this path bitwise-equal to the oracle).
+    The q8 conv kernels run this same tap walk in their prologues.
     """
     axes = (1, 2) if per_channel else (1, 2, 3)
     m = None
@@ -135,23 +147,32 @@ def _quantize_per_image(divs: jax.Array, bits: int,
     Each image keeps its own input-DAC swing — identical to running
     vdp.quantize_symmetric on every image separately (max is exact, the
     divide/round/clip are elementwise), which is what makes the folded
-    batch bit-identical to the per-image loop.
+    batch bit-identical to the per-image loop.  The oracle paths' XLA-side
+    twin of the q8 kernels' fused prologue.
     """
-    qmax = 2 ** (bits - 1) - 1
     scale = _stable_scale(jnp.maximum(jnp.max(jnp.abs(divs), axis=(1, 2)),
                                       1e-12) * vdp.inv_qmax(bits))
-    q = jnp.clip(jnp.round(divs / scale[:, None, None]),
-                 -qmax, qmax).astype(jnp.int8)
-    return q, scale
+    return quantize_tile(divs, scale[:, None, None], bits), scale
+
+
+def _row_dac_scales(flat: jax.Array, bits: int) -> jax.Array:
+    """Per-row DAC scales of a (B, S) stream (the q8 GEMM prologue input)."""
+    return _stable_scale(jnp.maximum(jnp.max(jnp.abs(flat), axis=1),
+                                     1e-12) * vdp.inv_qmax(bits))
 
 
 # ---------------------------------------------------------------------------
-# Implicit-GEMM conv path (no materialized im2col)
+# Quantized-domain implicit-GEMM conv path (the serving hot path)
 # ---------------------------------------------------------------------------
 
 def _forward_conv_implicit(lp: LayerPlan, x4: jax.Array, point,
                            interpret: bool) -> jax.Array:
-    """SC/PC layer through the implicit-GEMM kernels (Mode 1 or 2)."""
+    """SC/PC layer through the fused-quantize implicit-GEMM kernels.
+
+    The raw f32 activation goes straight to the kernel; absmax, DAC scale
+    and int8 quantize all happen in the kernel prologue (no XLA passes,
+    no int8 round-trip of the activation through HBM).
+    """
     b, h, w, din = x4.shape
     k = lp.k
     d = lp.s // (k * k)
@@ -160,27 +181,17 @@ def _forward_conv_implicit(lp: LayerPlan, x4: jax.Array, point,
                          f"got input stream of width {k * k * din}")
     ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
     x4p = _pad_spatial(x4, k, lp.stride, lp.padding)
-    qmax = 2 ** (point.bits - 1) - 1
-    a_scale = _stable_scale(
-        jnp.maximum(_window_absmax(x4p, k, lp.stride, ho, wo,
-                                   per_channel=False),
-                    1e-12) * vdp.inv_qmax(point.bits))           # (B,)
-    x_q = jnp.clip(jnp.round(x4p / a_scale[:, None, None, None]),
-                   -qmax, qmax).astype(jnp.int8)
-    scale = a_scale * lp.w_scale
-    # one image rides the scalar-SMEM epilogue; a batch carries per-image
-    # scales through the grid-indexed SMEM variant
-    scale_arg = scale[0] if b == 1 else scale
     if lp.mode == MODE_PACKED:
-        out = kconv.vdpe_pack_conv_zs(
-            x_q, lp.rhs, k, lp.stride, ho, wo, x=point.x,
-            block_o=point.block_o, interpret=interpret,
-            scale=scale_arg, bias=lp.bias, act=lp.act)
+        out = kconv.vdpe_pack_conv_zs_q8(
+            x4p, lp.rhs, lp.w_scale, k, lp.stride, ho, wo, x=point.x,
+            bits=point.bits, block_o=point.block_o, interpret=interpret,
+            bias=lp.bias, act=lp.act)
     else:
         assert lp.mode == MODE_DENSE
-        out = kconv.vdpe_conv(
-            x_q, lp.rhs, k, lp.stride, ho, wo, block_o=point.block_o,
-            interpret=interpret, scale=scale_arg, bias=lp.bias, act=lp.act)
+        out = kconv.vdpe_conv_q8(
+            x4p, lp.rhs, lp.w_scale, k, lp.stride, ho, wo,
+            bits=point.bits, block_o=point.block_o, interpret=interpret,
+            bias=lp.bias, act=lp.act)
     return out[:, :, :lp.f].reshape(b, ho, wo, lp.f)
 
 
@@ -198,13 +209,12 @@ def _forward_depthwise(lp: LayerPlan, x4: jax.Array, point) -> jax.Array:
     k = lp.k
     ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
     x4p = _pad_spatial(x4, k, lp.stride, lp.padding)
-    qmax = 2 ** (point.bits - 1) - 1
     a_scale = _stable_scale(
         jnp.maximum(_window_absmax(x4p, k, lp.stride, ho, wo,
                                    per_channel=True),
                     1e-12) * vdp.inv_qmax(point.bits))           # (B, D)
-    x_q = jnp.clip(jnp.round(x4p / a_scale[:, None, None, :]),
-                   -qmax, qmax).astype(jnp.int32)
+    x_q = quantize_tile(x4p, a_scale[:, None, None, :],
+                        point.bits).astype(jnp.int32)
     acc = jnp.zeros((b, ho, wo, d), jnp.int32)
     for kk in range(k * k):
         di, dj = divmod(kk, k)
@@ -218,13 +228,15 @@ def _forward_depthwise(lp: LayerPlan, x4: jax.Array, point) -> jax.Array:
 
 def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
                   interpret: bool | None = None) -> jax.Array:
-    """One layer through its pre-packed kernel with the fused epilogue.
+    """One layer through its pre-packed kernel with the fused quantize
+    prologue and dequant epilogue.
 
     x: (H, W, D) or batched (B, H, W, D) for conv layers; a flat feature
     vector, (H, W, D) map, batched rows (B, S) or batched maps for FC.
-    Conv layers run the implicit-GEMM path (module docstring); FC falls
-    through to the GEMM path.  Batched outputs are bit-identical to the
-    per-image loop AND to forward_layer_im2col.
+    Conv layers run the quantized-domain implicit-GEMM path (module
+    docstring); FC falls through to the q8 GEMM path.  Batched outputs
+    are bit-identical to the per-image loop AND to forward_layer_f32 /
+    forward_layer_im2col.
 
     Each layer executes at its *own* operating point (``lp.point``):
     planner-compiled plans carry heterogeneous per-layer packing geometry
@@ -244,10 +256,8 @@ def forward_layer(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
     return _forward_fc(plan, lp, x, interpret)
 
 
-def _forward_fc(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
-                interpret: bool) -> jax.Array:
-    """FC layer: flatten to (B, S) rows and run the GEMM path."""
-    point = lp.point
+def _fc_flatten(lp: LayerPlan, x: jax.Array) -> jax.Array:
+    """FC input: flatten maps/vectors to (B, S) rows."""
     if x.ndim == 4:                       # batched feature maps
         flat = x.reshape(x.shape[0], -1)
     elif x.ndim == 2:                     # rows are already the batch
@@ -257,28 +267,40 @@ def _forward_fc(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
     if flat.shape[1] != lp.s:
         raise ValueError(f"layer {lp.name!r} expects contraction {lp.s}, "
                          f"got input stream of width {flat.shape[1]}")
-    divs_q, a_scale = _quantize_per_image(flat[:, None, :], point.bits)
+    return flat
+
+
+def _forward_fc(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                interpret: bool) -> jax.Array:
+    """FC layer: (B, S) rows through the fused-quantize q8 GEMMs.
+
+    The per-row DAC scales (a cheap XLA row reduction — a K-blocked GEMM
+    tile cannot see its whole row) go in as data; the divide/round/clip
+    quantize itself runs in the kernel prologue and the K axis streams
+    through explicitly double-buffered VMEM slots.  Pad rows carry scale
+    1 so the prologue quantizes their zeros to zero.
+    """
+    point = lp.point
+    flat = _fc_flatten(lp, x)
     b = flat.shape[0]
-    lhs = divs_q.reshape(b, lp.s)
+    a_scale = _row_dac_scales(flat, point.bits)
     bp = _round_up(b, point.block_b)
-    scale = a_scale * lp.w_scale
-    if b == 1:
-        scale_rows = scale[0]
-    else:
-        scale_rows = jnp.pad(scale, (0, bp - b))
+    a_rows = jnp.pad(a_scale, (0, bp - b), constant_values=1.0)
     if lp.mode == MODE_PACKED:
-        lhs = jnp.pad(lhs, ((0, bp - b), (0, point.x - lp.s)))
-        out = kern.vdpe_pack_gemm_zs(
-            lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
-            interpret=interpret, scale=scale_rows, bias=lp.bias, act=lp.act)
+        lhs = jnp.pad(flat, ((0, bp - b), (0, point.x - lp.s)))
+        out = kern.vdpe_pack_gemm_zs_q8(
+            lhs, lp.rhs, a_rows, lp.w_scale, bits=point.bits,
+            block_b=point.block_b, block_o=point.block_o,
+            interpret=interpret, bias=lp.bias, act=lp.act)
     else:
         assert lp.mode == MODE_DENSE
         ss = lp.rhs.shape[0]
-        lhs = jnp.pad(lhs, ((0, bp - b), (0, ss - lp.s)))
-        out = kern.vdpe_gemm(
-            lhs, lp.rhs, block_b=point.block_b, block_o=point.block_o,
+        lhs = jnp.pad(flat, ((0, bp - b), (0, ss - lp.s)))
+        out = kern.vdpe_gemm_q8(
+            lhs, lp.rhs, a_rows, lp.w_scale, bits=point.bits,
+            block_b=point.block_b, block_o=point.block_o,
             block_k=point.block_k, interpret=interpret,
-            scale=scale_rows, bias=lp.bias, act=lp.act)
+            bias=lp.bias, act=lp.act)
     return out[:b, :lp.f]                 # FC single image stays (1, F)
 
 
@@ -297,6 +319,151 @@ def forward(plan: ModelPlan, x: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Quantize-then-float path: the float oracle (and the bench's float side)
+# ---------------------------------------------------------------------------
+
+def _forward_conv_implicit_f32(lp: LayerPlan, x4: jax.Array, point,
+                               interpret: bool) -> jax.Array:
+    """SC/PC float oracle: XLA quantize passes + f32 operand streams.
+
+    The pre-fusion structure kept verbatim: covered-window absmax and
+    round/clip run as separate XLA passes, then the *lattice values* are
+    streamed as f32 (4x the bytes of the int8 stream) through the same
+    implicit-GEMM kernels with exact f32 accumulation.
+    """
+    b, h, w, din = x4.shape
+    k = lp.k
+    d = lp.s // (k * k)
+    if d != din:
+        raise ValueError(f"layer {lp.name!r} expects contraction {lp.s}, "
+                         f"got input stream of width {k * k * din}")
+    ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
+    x4p = _pad_spatial(x4, k, lp.stride, lp.padding)
+    a_scale = _stable_scale(
+        jnp.maximum(_window_absmax(x4p, k, lp.stride, ho, wo,
+                                   per_channel=False),
+                    1e-12) * vdp.inv_qmax(point.bits))           # (B,)
+    x_q = quantize_tile(x4p, a_scale[:, None, None, None],
+                        point.bits).astype(jnp.float32)
+    rhs_f = lp.rhs.astype(jnp.float32)
+    scale = a_scale * lp.w_scale
+    # one image rides the scalar-SMEM epilogue; a batch carries per-image
+    # scales through the grid-indexed SMEM variant
+    scale_arg = scale[0] if b == 1 else scale
+    if lp.mode == MODE_PACKED:
+        out = kconv.vdpe_pack_conv_zs(
+            x_q, rhs_f, k, lp.stride, ho, wo, x=point.x,
+            block_o=point.block_o, interpret=interpret,
+            scale=scale_arg, bias=lp.bias, act=lp.act)
+    else:
+        assert lp.mode == MODE_DENSE
+        out = kconv.vdpe_conv(
+            x_q, rhs_f, k, lp.stride, ho, wo, block_o=point.block_o,
+            interpret=interpret, scale=scale_arg, bias=lp.bias, act=lp.act)
+    return out[:, :, :lp.f].reshape(b, ho, wo, lp.f)
+
+
+def _forward_depthwise_f32(lp: LayerPlan, x4: jax.Array, point) -> jax.Array:
+    """Depthwise float oracle: lattice values accumulated exactly in f32."""
+    b, h, w, d = x4.shape
+    k = lp.k
+    ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
+    x4p = _pad_spatial(x4, k, lp.stride, lp.padding)
+    a_scale = _stable_scale(
+        jnp.maximum(_window_absmax(x4p, k, lp.stride, ho, wo,
+                                   per_channel=True),
+                    1e-12) * vdp.inv_qmax(point.bits))           # (B, D)
+    x_q = quantize_tile(x4p, a_scale[:, None, None, :],
+                        point.bits).astype(jnp.float32)
+    acc = jnp.zeros((b, ho, wo, d), jnp.float32)
+    for kk in range(k * k):
+        di, dj = divmod(kk, k)
+        win = kconv.tap_window(x_q, di, dj, lp.stride, ho, wo)
+        acc = acc + win * lp.rhs[:, kk].astype(jnp.float32)[None, None, None]
+    return ref.epilogue_ref(
+        acc, (a_scale * lp.w_scale[None, :])[:, None, None, :],
+        None if lp.bias is None else lp.bias[None, None, None, :],
+        lp.act)
+
+
+def _forward_fc_prequantized(lp: LayerPlan, x: jax.Array, interpret: bool,
+                             lattice_f32: bool) -> jax.Array:
+    """Shared FC oracle body: XLA quantize, pre-quantized GEMM kernels.
+
+    ``lattice_f32`` picks the operand domain — int8 (the historical
+    im2col-era path) or the same lattice streamed as f32 (the float
+    oracle); everything else (padding, per-row dequant scales, mode
+    routing) is identical, which is the point: the oracles cannot drift
+    apart structurally.
+    """
+    point = lp.point
+    flat = _fc_flatten(lp, x)
+    divs_q, a_scale = _quantize_per_image(flat[:, None, :], point.bits)
+    b = flat.shape[0]
+    lhs = divs_q.reshape(b, lp.s)
+    rhs = lp.rhs
+    if lattice_f32:
+        lhs = lhs.astype(jnp.float32)
+        rhs = rhs.astype(jnp.float32)
+    bp = _round_up(b, point.block_b)
+    scale = a_scale * lp.w_scale
+    if b == 1:
+        scale_rows = scale[0]
+    else:
+        scale_rows = jnp.pad(scale, (0, bp - b))
+    if lp.mode == MODE_PACKED:
+        lhs = jnp.pad(lhs, ((0, bp - b), (0, point.x - lp.s)))
+        out = kern.vdpe_pack_gemm_zs(
+            lhs, rhs, block_b=point.block_b, block_o=point.block_o,
+            interpret=interpret, scale=scale_rows, bias=lp.bias, act=lp.act)
+    else:
+        assert lp.mode == MODE_DENSE
+        ss = lp.rhs.shape[0]
+        lhs = jnp.pad(lhs, ((0, bp - b), (0, ss - lp.s)))
+        out = kern.vdpe_gemm(
+            lhs, rhs, block_b=point.block_b, block_o=point.block_o,
+            block_k=point.block_k, interpret=interpret,
+            scale=scale_rows, bias=lp.bias, act=lp.act)
+    return out[:b, :lp.f]
+
+
+def _forward_fc_f32(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                    interpret: bool) -> jax.Array:
+    """FC float oracle: the shared body with f32 lattice streams."""
+    return _forward_fc_prequantized(lp, x, interpret, lattice_f32=True)
+
+
+def forward_layer_f32(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                      interpret: bool | None = None) -> jax.Array:
+    """One layer through the quantize-then-float path (module docstring).
+
+    Bit-identical to ``forward_layer`` while streaming f32 operands —
+    the float side of the int8-vs-float kernel bench and the oracle the
+    quantized-domain tests hold the int8 path against.
+    """
+    if interpret is None:
+        interpret = ops.default_interpret()
+    point = lp.point
+    if lp.kind is ConvKind.FC:
+        return _forward_fc_f32(plan, lp, x, interpret)
+    batched = x.ndim == 4
+    x4 = x if batched else x[None]
+    if lp.mode == MODE_DEPTHWISE:
+        out = _forward_depthwise_f32(lp, x4, point)
+    else:
+        out = _forward_conv_implicit_f32(lp, x4, point, interpret)
+    return out if batched else out[0]
+
+
+def forward_f32(plan: ModelPlan, x: jax.Array,
+                interpret: bool | None = None) -> jax.Array:
+    """Whole-model quantize-then-float oracle loop."""
+    for lp in plan.layers:
+        x = forward_layer_f32(plan, lp, x, interpret=interpret)
+    return x
+
+
+# ---------------------------------------------------------------------------
 # im2col -> GEMM path: the historical bitwise oracle
 # ---------------------------------------------------------------------------
 
@@ -305,15 +472,13 @@ def _forward_depthwise_im2col(lp: LayerPlan, x4: jax.Array,
     """Depthwise oracle: materialized (B, P, K*K, D) + einsum contraction."""
     b, h, w, d = x4.shape
     k = lp.k
-    qmax = 2 ** (point.bits - 1) - 1
     divs = _im2col_batch(x4, k, lp.stride, lp.padding)    # (B, P, K*K*D)
     p = divs.shape[1]
     divs = divs.reshape(b, p, k * k, d)
     a_scale = _stable_scale(jnp.maximum(jnp.max(jnp.abs(divs), axis=(1, 2)),
                                         1e-12)
                             * vdp.inv_qmax(point.bits))      # (B, D)
-    divs_q = jnp.clip(jnp.round(divs / a_scale[:, None, None, :]),
-                      -qmax, qmax).astype(jnp.int8)
+    divs_q = quantize_tile(divs, a_scale[:, None, None, :], point.bits)
     acc = jnp.einsum("bpkc,ck->bpc", divs_q.astype(jnp.int32),
                      lp.rhs.astype(jnp.int32))
     r = ref.epilogue_ref(acc, (a_scale * lp.w_scale[None, :])[:, None, :],
@@ -337,7 +502,7 @@ def forward_layer_im2col(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
     point = lp.point
 
     if lp.kind is ConvKind.FC:
-        return _forward_fc(plan, lp, x, interpret)
+        return _forward_fc_im2col(plan, lp, x, interpret)
     batched = x.ndim == 4
     x4 = x if batched else x[None]
     if lp.mode == MODE_DEPTHWISE:
@@ -377,6 +542,12 @@ def forward_layer_im2col(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
             scale=scale_rows, bias=lp.bias, act=lp.act)
     out = out[:bp, :lp.f].reshape(b, *spatial, lp.f)
     return out if batched else out[0]
+
+
+def _forward_fc_im2col(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                       interpret: bool) -> jax.Array:
+    """FC oracle: the shared body with int8 operand streams."""
+    return _forward_fc_prequantized(lp, x, interpret, lattice_f32=False)
 
 
 def forward_im2col(plan: ModelPlan, x: jax.Array,

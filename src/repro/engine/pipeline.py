@@ -8,9 +8,11 @@ This module closes the gap on the serving hot path:
 
     forward_jit(plan, xb)  ->  one jitted callable per (plan, batch bucket)
 
-The callable traces the *entire* layer chain — per-image quantization,
-implicit-GEMM conv kernels, depthwise VPU path, FC GEMM, fused epilogues —
-into a single XLA program, so a served batch is one dispatch instead of ~L.
+The callable traces the *entire* layer chain — the quantized-domain
+implicit-GEMM conv kernels (input-DAC absmax/quantize fused into the
+kernel prologues), the depthwise VPU path, the double-buffered q8 FC
+GEMMs, fused dequant epilogues — into a single XLA program, so a served
+batch is one dispatch instead of ~L.
 Inter-layer activations are XLA temporaries (never returned to the host),
 and on accelerator backends the input batch buffer is donated to the
 computation; the CPU backend ignores donation, so it is gated off there to

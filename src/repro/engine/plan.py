@@ -107,6 +107,24 @@ class LayerPlan:
     act: str
     point: EnginePoint
 
+    @property
+    def weight_bytes(self) -> int:
+        """Resident HBM bytes of this layer's imprint: the pre-quantized
+        int8 operand plus its f32 scale/bias metadata."""
+        n = self.rhs.size * self.rhs.dtype.itemsize
+        n += self.w_scale.size * 4
+        if self.bias is not None:
+            n += self.bias.size * 4
+        return n
+
+    @property
+    def weight_bytes_f32(self) -> int:
+        """What the same imprint would weigh streaming f32 operands."""
+        n = self.rhs.size * 4 + self.w_scale.size * 4
+        if self.bias is not None:
+            n += self.bias.size * 4
+        return n
+
 
 @dataclasses.dataclass(frozen=True)
 class ModelPlan:
@@ -131,6 +149,17 @@ class ModelPlan:
     def point_labels(self) -> Optional[Tuple[str, ...]]:
         """Chosen hardware operating point per layer (planner plans only)."""
         return None if self.planner is None else self.planner.labels
+
+    @property
+    def weight_bytes(self) -> int:
+        """Resident HBM bytes of the whole imprint (int8 operands + f32
+        scale/bias metadata) — what the serving registry reports."""
+        return sum(l.weight_bytes for l in self.layers)
+
+    @property
+    def weight_bytes_f32(self) -> int:
+        """The same imprint's footprint as f32 operand streams."""
+        return sum(l.weight_bytes_f32 for l in self.layers)
 
 
 def _quantize_rows(w: jax.Array, bits: int) -> Tuple[jax.Array, jax.Array]:

@@ -4,18 +4,33 @@ The im2col -> GEMM path materializes the full (B, P, K*K*D) DIV matrix in
 HBM — a K^2x blow-up of the activation footprint — before the GEMM reads
 it back.  The photonic accelerator never pays that: DIV streams are formed
 on the fly from the activation map as they enter the VDPE lanes.  These
-kernels are the software analogue: the quantized NHWC activation rides to
-VMEM *once* at its natural size, and each kernel instance gathers its K*K
-patch taps with in-kernel strided loads, contracting each tap's (P, D)
-window D-deep against the matching D-row band of the resident packed DKV
-operand.  The K*K-tap loop is unrolled at trace time (K is static), so the
-full S = K*K*D contraction accumulates in registers/VMEM and the DIV
-matrix never exists anywhere.
+kernels are the software analogue: the activation rides to VMEM *once* at
+its natural NHWC size, and each kernel instance gathers its K*K patch taps
+with in-kernel strided loads, contracting each tap's (P, D) window D-deep
+against the matching D-row band of the resident packed DKV operand.  The
+K*K-tap loop is unrolled at trace time (K is static), so the full
+S = K*K*D contraction accumulates in registers/VMEM and the DIV matrix
+never exists anywhere.
 
-Kernels:
+Quantized-domain entry points (the serving hot path):
 
-* ``vdpe_conv`` — Mode 1 (dense S): rhs is the plan's (S_pad, F_pad)
-  MXU-tiled operand; only the first K*K*D rows are read, as D-row bands.
+* ``vdpe_conv_q8`` — Mode 1: the *raw f32* activation map enters the
+  kernel and the whole input-DAC stage runs in the prologue, off the VMEM
+  tile: covered-window absmax (the exact pixel set the taps enumerate),
+  DAC scale ``max(absmax, 1e-12) * (1/qmax)``, and the int8 quantize.
+  The separate XLA absmax/round/clip passes of the pre-quantized path —
+  two f32 reads plus an int8 round-trip of the activation through HBM —
+  collapse into the kernel's single activation fetch.
+
+* ``vdpe_pack_conv_zs_q8`` — Mode 2, zero-skipping, same fused prologue.
+
+Pre-quantized entry points (oracles + the im2col baseline):
+
+* ``vdpe_conv`` — Mode 1 over an already-quantized activation: rhs is
+  the plan's (S_pad, F_pad) MXU-tiled operand; only the first K*K*D rows
+  are read, as D-row bands.  Accepts int8 or lattice-f32 operands (f32
+  accumulation of int8 products is exact — the quantize-then-float
+  oracle's conv).
 
 * ``vdpe_pack_conv_zs`` — Mode 2, zero-skipping: rhs is the (x, F_pad)
   dense segment-sum pack (ops.pack_mode2_segments), never the (y*x, F)
@@ -23,20 +38,29 @@ Kernels:
   contraction is S-deep (S <= x), so the kernel keeps both wins at once:
   no im2col blow-up AND no (y-1)/y zero-FLOPs.
 
-Both carry the fused dequant/bias/ReLU(6) epilogue from the GEMM kernels
-(kernels/common.apply_act): a scalar ``scale`` rides SMEM; the batched
-engine's per-image dequant scales ride SMEM too, one (1, 1) block indexed
-by the image grid axis — per-image is the conv twin of the GEMM kernels'
-per-row scale, because every position of image b shares b's input-DAC
-swing.  ``bias`` is blocked over the output-channel axis.
+All carry the fused dequant/bias/ReLU(6) epilogue from the GEMM kernels
+(kernels/common.dequant_epilogue): a scalar ``scale`` rides SMEM; the
+batched engine's per-image dequant scales ride SMEM too, one (1, 1) block
+indexed by the image grid axis — per-image is the conv twin of the GEMM
+kernels' per-row scale, because every position of image b shares b's
+input-DAC swing.  The q8 kernels need no scale input at all: the image's
+DAC scale is born in the prologue and multiplied by the plan's scalar
+``w_scale`` in-kernel (same association as the oracle paths, pinned by
+``common.stable_scale`` against XLA reassociation).  ``bias`` is blocked
+over the output-channel axis.
 
 Grid: (B, F_pad / block_o).  Per instance, VMEM holds one image's padded
-activation map (Hp, Wp, D) int8 plus one (S_rows, block_o) weight block —
-for the paper CNNs' conv shapes that is far below the ~16 MB VMEM budget
-(the largest, 112x112x64 int8, is ~0.8 MB).  Validated in interpret mode
-(CI is CPU-only) against the im2col oracle; a first real-TPU run should
-confirm the Mosaic lowering of the strided window loads like any other
-kernel change.
+activation map (Hp, Wp, D) plus one (S_rows, block_o) weight block — for
+the paper CNNs' conv shapes that is far below the ~16 MB VMEM budget (the
+largest, 112x112x64 f32, is ~3.2 MB).  Unlike the Mode-1 GEMM's K axis,
+the conv stream operand (the next image's activation) is already
+double-buffered by the Pallas grid pipeline itself: every block index map
+here is grid-linear and each output tile is visited exactly once, so the
+revolving-window prefetch of instance (b+1, j) overlaps instance (b, j)'s
+MXU passes without manual DMA.  Validated in interpret mode (CI is
+CPU-only) against the im2col oracle; a first real-TPU run should confirm
+the Mosaic lowering of the strided window loads like any other kernel
+change.
 """
 from __future__ import annotations
 
@@ -47,8 +71,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import apply_act
-from .vdpe_gemm import BLOCK_O
+from .common import (dequant_epilogue, inv_qmax, quantize_tile,
+                     stable_scale)
+from .vdpe_gemm import BLOCK_O, _acc_dtype
 
 
 def conv_window_bounds(k: int, stride: int, ho: int, wo: int) -> tuple:
@@ -66,9 +91,10 @@ def tap_window(x: jax.Array, di: int, dj: int, stride: int,
     """Tap (di, dj)'s strided window: (..., Hp, Wp, D) -> (..., ho, wo, D).
 
     THE tap-geometry definition: the executor's covered-set quantization
-    max and depthwise taps and this kernel's gather must enumerate exactly
-    the same pixels for the bitwise contract with the im2col oracle to
-    hold, so they all slice through this one helper.
+    max, the depthwise taps, this kernel's gather AND the q8 prologue's
+    in-kernel absmax must enumerate exactly the same pixels for the
+    bitwise contract with the im2col oracle to hold, so they all slice
+    through this one helper.
     """
     return x[..., di:di + stride * (ho - 1) + 1:stride,
              dj:dj + stride * (wo - 1) + 1:stride, :]
@@ -80,23 +106,30 @@ def _gather_tap(xb: jax.Array, di: int, dj: int, stride: int,
     return tap_window(xb, di, dj, stride, ho, wo).reshape(ho * wo, d)
 
 
-def _conv_accumulate(x_ref, rhs_ref, *, k: int, stride: int, ho: int,
-                     wo: int, d: int) -> jax.Array:
+def _accumulate_taps(xb: jax.Array, rhs_ref, *, k: int, stride: int,
+                     ho: int, wo: int, d: int) -> jax.Array:
     """The implicit-GEMM body: K*K tap gathers, each contracted D deep.
 
-    Integer accumulation is associative, so the tap-major sum is
-    bit-identical to the single S-deep im2col contraction.
+    Integer accumulation is associative (and exact in f32 for the lattice
+    oracle operands), so the tap-major sum is bit-identical to the single
+    S-deep im2col contraction.
     """
-    xb = x_ref[0]                                # (Hp, Wp, D) int8
+    acc_dtype = _acc_dtype(xb.dtype)
     acc = None
     for kk in range(k * k):
         di, dj = divmod(kk, k)
         lhs = _gather_tap(xb, di, dj, stride, ho, wo, d)
         part = jax.lax.dot_general(
             lhs, rhs_ref[kk * d:(kk + 1) * d, :], (((1,), (0,)), ((), ())),
-            preferred_element_type=jnp.int32)
+            preferred_element_type=acc_dtype)
         acc = part if acc is None else acc + part
-    return acc                                   # (ho*wo, block_o) int32
+    return acc                                   # (ho*wo, block_o)
+
+
+def _conv_accumulate(x_ref, rhs_ref, *, k: int, stride: int, ho: int,
+                     wo: int, d: int) -> jax.Array:
+    return _accumulate_taps(x_ref[0], rhs_ref, k=k, stride=stride,
+                            ho=ho, wo=wo, d=d)
 
 
 def _conv_kernel(x_ref, rhs_ref, out_ref, *, k, stride, ho, wo, d):
@@ -110,13 +143,47 @@ def _conv_epilogue_kernel(scale_ref, x_ref, rhs_ref, bias_ref, out_ref,
     scalar or — indexed by the image grid axis — image b's dequant scale."""
     acc = _conv_accumulate(x_ref, rhs_ref, k=k, stride=stride,
                            ho=ho, wo=wo, d=d)
-    r = acc.astype(jnp.float32) * scale_ref[0, 0] + bias_ref[...]
-    out_ref[0] = apply_act(r, act)
+    out_ref[0] = dequant_epilogue(acc, scale_ref[0, 0], bias_ref[...], act)
+
+
+def _conv_q8_kernel(w_scale_ref, x_ref, rhs_ref, bias_ref, out_ref,
+                    *, k, stride, ho, wo, d, bits, act):
+    """Quantized-domain body: the whole input-DAC stage in the prologue.
+
+    The f32 image tile is already in VMEM, so the covered-window absmax
+    (the exact pixel set the taps enumerate — a strided layer can leave
+    border pixels uncovered, and the whole-image max would break the
+    bitwise contract with the im2col oracle), the DAC scale and the int8
+    quantize all run in-kernel; the XLA-side passes disappear.
+
+    Known tradeoff: the prologue runs per grid instance, so a layer with
+    F_pad / block_o > 1 recomputes the absmax+quantize of its image once
+    per output-channel block (the serving zoo's layers all fit one block;
+    for wide-F layers, hoisting the scale to SMEM like the FC path's
+    _row_dac_scales would trade one XLA absmax pass for the recompute).
+    """
+    xb = x_ref[0]                                # (Hp, Wp, D) f32
+    m = None
+    for kk in range(k * k):
+        di, dj = divmod(kk, k)
+        wm = jnp.max(jnp.abs(tap_window(xb, di, dj, stride, ho, wo)))
+        m = wm if m is None else jnp.maximum(m, wm)
+    # same expression, same association, same barrier as the XLA-side
+    # oracle (executor._window_absmax + common.stable_scale): the barrier
+    # keeps the jitted simplifier from reassociating the later w_scale
+    # multiply and shifting the scale by 1 ulp (the PR-3 lesson)
+    a_scale = stable_scale(jnp.maximum(m, 1e-12) * inv_qmax(bits))
+    x_q = quantize_tile(xb, a_scale, bits)
+    acc = _accumulate_taps(x_q, rhs_ref, k=k, stride=stride, ho=ho, wo=wo,
+                           d=d)
+    out_ref[0] = dequant_epilogue(acc, a_scale * w_scale_ref[0, 0],
+                                  bias_ref[...], act)
 
 
 def _conv_call(x_q: jax.Array, rhs: jax.Array, k: int, stride: int,
                ho: int, wo: int, block_o: int, interpret: bool,
-               scale, bias, act: str) -> jax.Array:
+               scale, bias, act: str, quantize_bits: int | None = None,
+               w_scale=None) -> jax.Array:
     b, hp, wp, d = x_q.shape
     s_rows, f_pad = rhs.shape
     min_h, min_w = conv_window_bounds(k, stride, ho, wo)
@@ -130,6 +197,26 @@ def _conv_call(x_q: jax.Array, rhs: jax.Array, k: int, stride: int,
     x_spec = pl.BlockSpec((1, hp, wp, d), lambda i, j: (i, 0, 0, 0))
     rhs_spec = pl.BlockSpec((s_rows, block_o), lambda i, j: (0, j))
     out_spec = pl.BlockSpec((1, p, block_o), lambda i, j: (i, 0, j))
+    if bias is None and (quantize_bits is not None or scale is not None):
+        bias = jnp.zeros((1, f_pad), jnp.float32)
+    if quantize_bits is not None:                # fused-quantize q8 path
+        assert scale is None, "q8 path derives the DAC scale in-kernel"
+        assert rhs.dtype == jnp.int8, rhs.dtype
+        return pl.pallas_call(
+            functools.partial(_conv_q8_kernel, k=k, stride=stride, ho=ho,
+                              wo=wo, d=d, bits=quantize_bits, act=act),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                             memory_space=pltpu.SMEM),
+                x_spec, rhs_spec,
+                pl.BlockSpec((1, block_o), lambda i, j: (0, j)),
+            ],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((b, p, f_pad), jnp.float32),
+            interpret=interpret,
+        )(jnp.asarray(w_scale, jnp.float32).reshape(1, 1),
+          x_q.astype(jnp.float32), rhs, bias)
     if scale is None:
         assert bias is None and act == "none", "epilogue requires a scale"
         return pl.pallas_call(
@@ -138,12 +225,11 @@ def _conv_call(x_q: jax.Array, rhs: jax.Array, k: int, stride: int,
             grid=grid,
             in_specs=[x_spec, rhs_spec],
             out_specs=out_spec,
-            out_shape=jax.ShapeDtypeStruct((b, p, f_pad), jnp.int32),
+            out_shape=jax.ShapeDtypeStruct((b, p, f_pad),
+                                           _acc_dtype(x_q.dtype)),
             interpret=interpret,
         )(x_q, rhs)
     scale = jnp.asarray(scale, jnp.float32)
-    if bias is None:
-        bias = jnp.zeros((1, f_pad), jnp.float32)
     if scale.size == 1:                # one swing for the whole stream
         scale_spec = pl.BlockSpec((1, 1), lambda i, j: (0, 0),
                                   memory_space=pltpu.SMEM)
@@ -178,18 +264,40 @@ def vdpe_conv(x_q: jax.Array, rhs: jax.Array, k: int, stride: int,
               scale: jax.Array | None = None,
               bias: jax.Array | None = None,
               act: str = "none") -> jax.Array:
-    """Mode-1 implicit-GEMM conv: (B, Hp, Wp, D) int8 -> (B, ho*wo, F_pad).
+    """Mode-1 implicit-GEMM conv over a *pre-quantized* activation.
 
-    ``x_q`` is the quantized activation, already spatially padded for the
-    layer's SAME/VALID policy (conv_window_bounds gives the minimum).
-    ``rhs`` is the plan's Mode-1 (S_pad, F_pad) operand; rows beyond
-    K*K*D padding are never read.  Without ``scale`` the result is the raw
-    int32 accumulator; with it the f32 epilogue ``act(acc * scale + bias)``
-    is fused.  ``scale`` may be a scalar or a per-image (B,) / (B, 1)
-    vector.  The caller slices F_pad -> F and reshapes P -> (ho, wo).
+    ``x_q`` is the quantized activation (int8, or the same lattice held
+    in f32 for the quantize-then-float oracle), already spatially padded
+    for the layer's SAME/VALID policy (conv_window_bounds gives the
+    minimum).  ``rhs`` is the plan's Mode-1 (S_pad, F_pad) operand; rows
+    beyond K*K*D padding are never read.  Without ``scale`` the result is
+    the raw accumulator; with it the f32 epilogue ``act(acc * scale +
+    bias)`` is fused.  ``scale`` may be a scalar or a per-image (B,) /
+    (B, 1) vector.  The caller slices F_pad -> F and reshapes
+    P -> (ho, wo).
     """
     return _conv_call(x_q, rhs, k, stride, ho, wo, block_o, interpret,
                       scale, bias, act)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "ho", "wo",
+                                             "bits", "block_o", "interpret",
+                                             "act"))
+def vdpe_conv_q8(x: jax.Array, rhs: jax.Array, w_scale: jax.Array, k: int,
+                 stride: int, ho: int, wo: int, bits: int = 4,
+                 block_o: int = BLOCK_O, interpret: bool = True,
+                 bias: jax.Array | None = None,
+                 act: str = "none") -> jax.Array:
+    """Quantized-domain Mode-1 conv: raw f32 activation in, DAC in-kernel.
+
+    ``x`` is the *unquantized* f32 activation (spatially padded as for
+    ``vdpe_conv``); the kernel prologue computes the covered-window
+    absmax, the per-image DAC scale and the int8 quantize off the VMEM
+    tile, and the fused epilogue dequantizes with ``a_scale * w_scale``.
+    Bitwise-identical to quantizing in XLA and calling ``vdpe_conv``.
+    """
+    return _conv_call(x, rhs, k, stride, ho, wo, block_o, interpret,
+                      None, bias, act, quantize_bits=bits, w_scale=w_scale)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "stride", "ho", "wo", "x",
@@ -214,3 +322,26 @@ def vdpe_pack_conv_zs(x_q: jax.Array, rhs_seg: jax.Array, k: int,
     assert k * k * d <= x, (k, d, x)
     return _conv_call(x_q, rhs_seg, k, stride, ho, wo, block_o, interpret,
                       scale, bias, act)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "stride", "ho", "wo", "x",
+                                             "bits", "block_o", "interpret",
+                                             "act"))
+def vdpe_pack_conv_zs_q8(xa: jax.Array, rhs_seg: jax.Array,
+                         w_scale: jax.Array, k: int, stride: int, ho: int,
+                         wo: int, x: int, bits: int = 4,
+                         block_o: int = BLOCK_O, interpret: bool = True,
+                         bias: jax.Array | None = None,
+                         act: str = "none") -> jax.Array:
+    """Quantized-domain zero-skipping Mode-2 conv (fused DAC prologue).
+
+    ``xa`` is the raw f32 activation; the segment-sum pack contract is
+    the same as ``vdpe_pack_conv_zs``.
+    """
+    d = xa.shape[3]
+    assert rhs_seg.shape[0] == x, (
+        f"rhs must be the (x={x}, F) segment-sum pack, got "
+        f"{rhs_seg.shape} (block-diagonal operands are rejected)")
+    assert k * k * d <= x, (k, d, x)
+    return _conv_call(xa, rhs_seg, k, stride, ho, wo, block_o, interpret,
+                      None, bias, act, quantize_bits=bits, w_scale=w_scale)

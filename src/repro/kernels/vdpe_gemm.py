@@ -9,9 +9,28 @@ produces y independent dot products.
 
 Kernels:
 
-* ``vdpe_gemm`` — Mode 1: K-blocked dense int8 x int8 -> int32 GEMM
-  (the S >= N slice path).  lhs (B, K), rhs (K, O), out (B, O); the K grid
-  axis is innermost and accumulates into the VMEM out block.
+* ``vdpe_gemm_q8`` — Mode 1, quantized-domain serving path: the f32 DIV
+  stream enters the kernel raw and is quantized onto the int8 lattice *in
+  the prologue* (per-row DAC scales — the batched engine's per-image
+  swings), contracted int8 x int8 -> int32 against the plan's resident
+  int8 operand, and dequantized by the fused epilogue.  The K axis is
+  streamed *inside* the kernel with explicit double buffering: lhs/rhs
+  live in HBM (``memory_space=ANY``) and the kernel prefetches K-block
+  ``kk+1`` into the alternate VMEM slot while the MXU contracts block
+  ``kk`` — one grid step per output tile instead of n_k, and the int32
+  accumulator lives its whole life in registers/VMEM.
+
+* ``vdpe_pack_gemm_zs_q8`` — Mode 2, quantized-domain + zero-skipping:
+  same fused quantize prologue and epilogue, segment-sum rhs resident in
+  VMEM, and the *position stream* (the B axis — Mode 2's stream-bound
+  side, since its contraction is a single x-deep pass) double-buffered:
+  DIV block ``n+1`` is prefetched from HBM while block ``n`` rides the
+  MXU.
+
+* ``vdpe_gemm`` — Mode 1: K-blocked dense int8 x int8 -> int32 GEMM over
+  *pre-quantized* operands (the S >= N slice path).  Also accepts f32
+  operands on the quantized lattice (f32 accumulation is exact for int8
+  products, so it doubles as the quantize-then-float oracle's GEMM).
 
 * ``vdpe_pack_gemm_zs`` — Mode 2, zero-skipping: because Mode-2 lane
   segments are *column-disjoint* (kernel f lives only in segment f mod y),
@@ -19,25 +38,28 @@ Kernels:
   segment-sum (x, O).  The kernel therefore issues a single x-deep
   contraction per output tile instead of a (y*x)-deep one against an
   operand that is (y-1)/y zeros — cutting both the y-fold zero-FLOPs and
-  the y× RHS VMEM/HBM footprint.  The historical block-diagonal kernel
-  lives in kernels/ref.py (``vdpe_pack_gemm_blockdiag``) as the oracle.
+  the y× RHS VMEM/HBM footprint.  Accepts lattice-f32 operands like
+  ``vdpe_gemm``.  The historical block-diagonal kernel lives in
+  kernels/ref.py (``vdpe_pack_gemm_blockdiag``) as the oracle.
 
 * ``gemm_bf16`` — bf16 GEMM with f32 accumulation (dense tile path).
 
-All three take an optional fused epilogue (dequant scale, bias add,
-ReLU/ReLU6) so integer accumulators never round-trip HBM between the GEMM
-and the activation: a scalar ``scale`` rides in SMEM, ``bias`` is blocked
-over O, and the activation is a compile-time branch.  The int8 GEMMs also
+All take an optional fused epilogue (dequant scale, bias add, ReLU/ReLU6)
+so integer accumulators never round-trip HBM between the GEMM and the
+activation: a scalar ``scale`` rides in SMEM, ``bias`` is blocked over O,
+and the activation is a compile-time branch.  The pre-quantized GEMMs also
 accept a *per-row* scale (shape (B,) or (B, 1)): the batched engine folds
 many images' DIV streams into one GEMM, and each image keeps its own
 activation-DAC quantization scale, so the dequant scale varies along B.
 Per-row scales ride as a (block_b, 1) VMEM column blocked over the B grid
 axis and broadcast across the O lanes.
 
-Both kernels use explicit BlockSpec VMEM tiling with MXU-aligned block
-shapes (multiples of (32, 128) for int8 operands, (8, 128) for f32).
+Blocked operands use explicit BlockSpec VMEM tiling with MXU-aligned block
+shapes (multiples of (32, 128) for int8 operands, (8, 128) for f32); the
+q8 kernels' streamed operands stay in HBM and ride explicit
+``pltpu.make_async_copy`` DMAs into double-buffered VMEM scratch.
 Validated against kernels/ref.py in interpret mode (tests/test_kernels.py,
-tests/test_engine.py).
+tests/test_engine.py, tests/test_quantized.py).
 """
 from __future__ import annotations
 
@@ -48,7 +70,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .common import ACTIVATIONS, apply_act as _apply_act  # noqa: F401
+from .common import (ACTIVATIONS, apply_act as _apply_act,  # noqa: F401
+                     dequant_epilogue as _dequant_epilogue, quantize_tile)
 
 # MXU-aligned default tile sizes (int8 operands tile as (32, 128) in VMEM).
 BLOCK_B = 128
@@ -56,29 +79,39 @@ BLOCK_O = 128
 BLOCK_K = 128
 
 
+def _acc_dtype(operand_dtype) -> jnp.dtype:
+    """int32 accumulation for int8 operands; exact f32 for the lattice-f32
+    oracle operands (int8 products summed in f32 stay < 2^24: exact)."""
+    return (jnp.int32 if jnp.issubdtype(operand_dtype, jnp.integer)
+            else jnp.float32)
+
+
+def _dot(lhs, rhs, acc_dtype):
+    return jax.lax.dot_general(lhs, rhs, (((1,), (0,)), ((), ())),
+                               preferred_element_type=acc_dtype)
+
+
 # ---------------------------------------------------------------------------
-# Mode 1: K-blocked dense int8 GEMM
+# Mode 1: K-blocked dense GEMM over pre-quantized operands
 # ---------------------------------------------------------------------------
 
 def _gemm_kernel(lhs_ref, rhs_ref, out_ref):
-    """Mode-1 kernel body: K-accumulating int8 GEMM tile."""
+    """Mode-1 kernel body: K-accumulating GEMM tile."""
     k = pl.program_id(2)
 
     @pl.when(k == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[...] += jax.lax.dot_general(
-        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    out_ref[...] += _dot(lhs_ref[...], rhs_ref[...], out_ref.dtype)
 
 
 def _gemm_epilogue_kernel(scale_ref, lhs_ref, rhs_ref, bias_ref, out_ref,
                           acc_ref, *, n_k: int, act: str):
-    """Mode-1 fused kernel: int32 VMEM accumulator, f32 epilogue at last K.
+    """Mode-1 fused kernel: accumulator scratch, f32 epilogue at last K.
 
-    The int32 partial sums live only in the ``acc_ref`` scratch; the HBM
-    output is the already-dequantized, biased, activated f32 tile.
+    The partial sums live only in the ``acc_ref`` scratch; the HBM output
+    is the already-dequantized, biased, activated f32 tile.
     """
     k = pl.program_id(2)
 
@@ -86,14 +119,12 @@ def _gemm_epilogue_kernel(scale_ref, lhs_ref, rhs_ref, bias_ref, out_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    acc_ref[...] += _dot(lhs_ref[...], rhs_ref[...], acc_ref.dtype)
 
     @pl.when(k == n_k - 1)
     def _epilogue():
-        r = acc_ref[...].astype(jnp.float32) * scale_ref[0, 0] + bias_ref[...]
-        out_ref[...] = _apply_act(r, act)
+        out_ref[...] = _dequant_epilogue(acc_ref[...], scale_ref[0, 0],
+                                         bias_ref[...], act)
 
 
 def _gemm_epilogue_rows_kernel(lhs_ref, rhs_ref, scale_ref, bias_ref,
@@ -112,14 +143,12 @@ def _gemm_epilogue_rows_kernel(lhs_ref, rhs_ref, scale_ref, bias_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    acc_ref[...] += _dot(lhs_ref[...], rhs_ref[...], acc_ref.dtype)
 
     @pl.when(k == n_k - 1)
     def _epilogue():
-        r = acc_ref[...].astype(jnp.float32) * scale_ref[...] + bias_ref[...]
-        out_ref[...] = _apply_act(r, act)
+        out_ref[...] = _dequant_epilogue(acc_ref[...], scale_ref[...],
+                                         bias_ref[...], act)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_o", "block_k",
@@ -130,19 +159,22 @@ def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
               scale: jax.Array | None = None,
               bias: jax.Array | None = None,
               act: str = "none") -> jax.Array:
-    """Mode-1 VDPE GEMM: (B, K) int8 x (K, O) int8 -> (B, O).
+    """Mode-1 VDPE GEMM: (B, K) x (K, O) pre-quantized -> (B, O).
 
     B, K, O must be multiples of the block sizes (ops.py / engine pad).
-    Without ``scale`` the result is the raw int32 accumulator; with it the
-    epilogue ``act(acc * scale + bias)`` is fused and the result is f32.
-    ``scale`` may be a scalar (one dequant scale for the whole stream) or a
-    (B,) / (B, 1) per-row vector (the batched engine's per-image scales).
+    int8 operands accumulate in int32; lattice-f32 operands (the float
+    oracle path) accumulate exactly in f32.  Without ``scale`` the result
+    is the raw accumulator; with it the epilogue ``act(acc * scale +
+    bias)`` is fused and the result is f32.  ``scale`` may be a scalar
+    (one dequant scale for the whole stream) or a (B,) / (B, 1) per-row
+    vector (the batched engine's per-image scales).
     """
     b, k = lhs.shape
     k2, o = rhs.shape
     assert k == k2 and b % block_b == 0 and o % block_o == 0 and k % block_k == 0
     n_k = k // block_k
     grid = (b // block_b, o // block_o, n_k)
+    acc_dtype = _acc_dtype(lhs.dtype)
     lhs_spec = pl.BlockSpec((block_b, block_k), lambda i, j, kk: (i, kk))
     rhs_spec = pl.BlockSpec((block_k, block_o), lambda i, j, kk: (kk, j))
     out_spec = pl.BlockSpec((block_b, block_o), lambda i, j, kk: (i, j))
@@ -153,7 +185,7 @@ def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
             grid=grid,
             in_specs=[lhs_spec, rhs_spec],
             out_specs=out_spec,
-            out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+            out_shape=jax.ShapeDtypeStruct((b, o), acc_dtype),
             interpret=interpret,
         )(lhs, rhs)
     scale = jnp.asarray(scale, jnp.float32)
@@ -174,7 +206,7 @@ def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
             ],
             out_specs=out_spec,
             out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
-            scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
+            scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
             interpret=interpret,
         )(lhs, rhs, scale.reshape(b, 1), bias)
     scale = scale.reshape(1, 1)
@@ -189,9 +221,114 @@ def vdpe_gemm(lhs: jax.Array, rhs: jax.Array,
         ],
         out_specs=out_spec,
         out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
-        scratch_shapes=[pltpu.VMEM((block_b, block_o), jnp.int32)],
+        scratch_shapes=[pltpu.VMEM((block_b, block_o), acc_dtype)],
         interpret=interpret,
     )(scale, lhs, rhs, bias)
+
+
+# ---------------------------------------------------------------------------
+# Mode 1, quantized-domain: fused quantize prologue + K-pipelined stream
+# ---------------------------------------------------------------------------
+
+def _gemm_q8_kernel(w_scale_ref, lhs_hbm, rhs_hbm, a_scale_ref, bias_ref,
+                    out_ref, lhs_buf, rhs_buf, sems, *, n_k: int,
+                    block_b: int, block_o: int, block_k: int, bits: int,
+                    act: str):
+    """Quantized-domain Mode-1 body: in-kernel quantize, K double-buffered.
+
+    lhs/rhs stay in HBM (``ANY``); K-block ``kk+1`` is DMA'd into the
+    alternate VMEM slot while block ``kk`` is quantized and contracted.
+    The K loop is unrolled at trace time (n_k is static), so the int32
+    accumulator never leaves registers/VMEM and the epilogue runs once.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+
+    def copies(slot: int, kk: int):
+        return (
+            pltpu.make_async_copy(
+                lhs_hbm.at[pl.ds(i * block_b, block_b),
+                           pl.ds(kk * block_k, block_k)],
+                lhs_buf.at[slot], sems.at[slot, 0]),
+            pltpu.make_async_copy(
+                rhs_hbm.at[pl.ds(kk * block_k, block_k),
+                           pl.ds(j * block_o, block_o)],
+                rhs_buf.at[slot], sems.at[slot, 1]),
+        )
+
+    for c in copies(0, 0):
+        c.start()
+    a_col = a_scale_ref[...]                       # (block_b, 1) f32
+    acc = jnp.zeros((block_b, block_o), jnp.int32)
+    for kk in range(n_k):
+        slot = kk % 2
+        if kk + 1 < n_k:                           # prefetch next K block
+            for c in copies((kk + 1) % 2, kk + 1):
+                c.start()
+        for c in copies(slot, kk):
+            c.wait()
+        lhs_q = quantize_tile(lhs_buf[slot], a_col, bits)
+        acc += _dot(lhs_q, rhs_buf[slot], jnp.int32)
+    # per-row dequant scale: image scale x the plan's weight scale, the
+    # same association the oracle paths compute outside the kernel
+    out_ref[...] = _dequant_epilogue(acc, a_col * w_scale_ref[0, 0],
+                                     bias_ref[...], act)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_b", "block_o",
+                                             "block_k", "interpret", "act"))
+def vdpe_gemm_q8(lhs: jax.Array, rhs: jax.Array, a_scale: jax.Array,
+                 w_scale: jax.Array, bits: int = 4,
+                 block_b: int = BLOCK_B, block_o: int = BLOCK_O,
+                 block_k: int = BLOCK_K, interpret: bool = True,
+                 bias: jax.Array | None = None,
+                 act: str = "none") -> jax.Array:
+    """Quantized-domain Mode-1 GEMM: (B, K) f32 x (K, O) int8 -> (B, O) f32.
+
+    ``lhs`` is the *raw* f32 DIV stream; the kernel prologue quantizes it
+    onto the int8 lattice with the per-row DAC scales ``a_scale`` ((B,) or
+    (B, 1); pad rows use scale 1).  ``rhs`` is the plan's resident int8
+    operand, ``w_scale`` its scalar dequant scale.  The fused epilogue is
+    ``act(acc * (a_scale * w_scale) + bias)`` — bitwise-identical to
+    quantizing outside and calling ``vdpe_gemm`` with per-row scales,
+    while the int8 stream never round-trips HBM and the K axis streams
+    through explicitly double-buffered VMEM slots.
+    """
+    b, k = lhs.shape
+    k2, o = rhs.shape
+    assert k == k2 and b % block_b == 0 and o % block_o == 0 and k % block_k == 0
+    assert rhs.dtype == jnp.int8, rhs.dtype
+    n_k = k // block_k
+    a_scale = jnp.asarray(a_scale, jnp.float32)
+    if a_scale.size != b:
+        raise ValueError(
+            f"per-row a_scale must have one entry per lhs row "
+            f"({b}, block-padded), got shape {a_scale.shape}")
+    if bias is None:
+        bias = jnp.zeros((1, o), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_gemm_q8_kernel, n_k=n_k, block_b=block_b,
+                          block_o=block_o, block_k=block_k, bits=bits,
+                          act=act),
+        grid=(b // block_b, o // block_o),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_o), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_o), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_b, block_k), jnp.float32),
+            pltpu.VMEM((2, block_k, block_o), jnp.int8),
+            pltpu.SemaphoreType.DMA((2, 2)),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(w_scale, jnp.float32).reshape(1, 1), lhs, rhs,
+      a_scale.reshape(b, 1), bias)
 
 
 # ---------------------------------------------------------------------------
@@ -211,28 +348,22 @@ def zs_block_shapes(x: int, block_b: int = BLOCK_B,
 
 def _pack_gemm_zs_kernel(lhs_ref, rhs_ref, out_ref):
     """Zero-skipping Mode-2 body: one x-deep dot per output tile."""
-    out_ref[...] = jax.lax.dot_general(
-        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
+    out_ref[...] = _dot(lhs_ref[...], rhs_ref[...], out_ref.dtype)
 
 
 def _pack_gemm_zs_epilogue_kernel(scale_ref, lhs_ref, rhs_ref, bias_ref,
                                   out_ref, *, act: str):
-    acc = jax.lax.dot_general(
-        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    r = acc.astype(jnp.float32) * scale_ref[0, 0] + bias_ref[...]
-    out_ref[...] = _apply_act(r, act)
+    acc = _dot(lhs_ref[...], rhs_ref[...], _acc_dtype(lhs_ref.dtype))
+    out_ref[...] = _dequant_epilogue(acc, scale_ref[0, 0], bias_ref[...],
+                                     act)
 
 
 def _pack_gemm_zs_epilogue_rows_kernel(lhs_ref, rhs_ref, scale_ref, bias_ref,
                                        out_ref, *, act: str):
     """Zero-skipping Mode-2 body with a per-row dequant scale column."""
-    acc = jax.lax.dot_general(
-        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32)
-    r = acc.astype(jnp.float32) * scale_ref[...] + bias_ref[...]
-    out_ref[...] = _apply_act(r, act)
+    acc = _dot(lhs_ref[...], rhs_ref[...], _acc_dtype(lhs_ref.dtype))
+    out_ref[...] = _dequant_epilogue(acc, scale_ref[...], bias_ref[...],
+                                     act)
 
 
 @functools.partial(jax.jit, static_argnames=("block_b", "block_o",
@@ -243,14 +374,15 @@ def vdpe_pack_gemm_zs(lhs: jax.Array, rhs_seg: jax.Array,
                       scale: jax.Array | None = None,
                       bias: jax.Array | None = None,
                       act: str = "none") -> jax.Array:
-    """Zero-skipping Mode-2 GEMM: (B, x) int8 x (x, O) int8 -> (B, O).
+    """Zero-skipping Mode-2 GEMM: (B, x) x (x, O) pre-quantized -> (B, O).
 
     ``rhs_seg`` is the dense *segment-sum* of the block-diagonal packed
     operand (ops.pack_mode2_segments): column f holds kernel f's weights at
     their natural offset.  Because lane segments are column-disjoint the
     result is bit-identical to the (y*x)-deep block-diagonal oracle
     (ref.vdpe_pack_gemm_blockdiag) while issuing only an x-deep contraction
-    and reading/holding 1/y of the RHS bytes.
+    and reading/holding 1/y of the RHS bytes.  Lattice-f32 operands (the
+    float oracle path) accumulate exactly in f32.
 
     ``scale`` follows the vdpe_gemm convention: scalar, or per-row (B,) /
     (B, 1) for the batched engine's folded multi-image streams.
@@ -260,6 +392,7 @@ def vdpe_pack_gemm_zs(lhs: jax.Array, rhs_seg: jax.Array,
     assert x == x2, (x, x2)  # structurally cannot issue a (y*x)-deep pass
     assert b % block_b == 0 and o % block_o == 0
     grid = (b // block_b, o // block_o)
+    acc_dtype = _acc_dtype(lhs.dtype)
     lhs_shape, rhs_shape, out_shape = zs_block_shapes(x, block_b, block_o)
     lhs_spec = pl.BlockSpec(lhs_shape, lambda i, j: (i, 0))
     rhs_spec = pl.BlockSpec(rhs_shape, lambda i, j: (0, j))
@@ -271,7 +404,7 @@ def vdpe_pack_gemm_zs(lhs: jax.Array, rhs_seg: jax.Array,
             grid=grid,
             in_specs=[lhs_spec, rhs_spec],
             out_specs=out_spec,
-            out_shape=jax.ShapeDtypeStruct((b, o), jnp.int32),
+            out_shape=jax.ShapeDtypeStruct((b, o), acc_dtype),
             interpret=interpret,
         )(lhs, rhs_seg)
     scale = jnp.asarray(scale, jnp.float32)
@@ -311,6 +444,91 @@ def vdpe_pack_gemm_zs(lhs: jax.Array, rhs_seg: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Mode 2, quantized-domain: fused quantize + double-buffered DIV stream
+# ---------------------------------------------------------------------------
+
+def _pack_gemm_zs_q8_kernel(w_scale_ref, lhs_hbm, rhs_ref, a_scale_ref,
+                            bias_ref, out_ref, lhs_buf, sems, *, n_b: int,
+                            block_b: int, bits: int, act: str):
+    """Quantized-domain zero-skipping body: B-stream double-buffered.
+
+    The (x, block_o) segment-sum rhs stays resident in VMEM; DIV block
+    ``n+1`` is DMA'd from HBM into the alternate slot while block ``n``
+    is quantized and contracted (Mode 2's single x-deep pass makes the
+    position stream, not the contraction, the bound resource).
+    """
+    def copy(slot: int, n: int):
+        return pltpu.make_async_copy(
+            lhs_hbm.at[pl.ds(n * block_b, block_b), :],
+            lhs_buf.at[slot], sems.at[slot])
+
+    copy(0, 0).start()
+    rhs = rhs_ref[...]
+    w_scale = w_scale_ref[0, 0]
+    for n in range(n_b):
+        slot = n % 2
+        if n + 1 < n_b:                            # prefetch next DIV block
+            copy((n + 1) % 2, n + 1).start()
+        copy(slot, n).wait()
+        a_col = a_scale_ref[pl.ds(n * block_b, block_b), :]
+        lhs_q = quantize_tile(lhs_buf[slot], a_col, bits)
+        acc = _dot(lhs_q, rhs, jnp.int32)
+        out_ref[pl.ds(n * block_b, block_b), :] = _dequant_epilogue(
+            acc, a_col * w_scale, bias_ref[...], act)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_b", "block_o",
+                                             "interpret", "act"))
+def vdpe_pack_gemm_zs_q8(lhs: jax.Array, rhs_seg: jax.Array,
+                         a_scale: jax.Array, w_scale: jax.Array,
+                         bits: int = 4, block_b: int = BLOCK_B,
+                         block_o: int = BLOCK_O, interpret: bool = True,
+                         bias: jax.Array | None = None,
+                         act: str = "none") -> jax.Array:
+    """Quantized-domain Mode-2 GEMM: (B, x) f32 x (x, O) int8 -> (B, O) f32.
+
+    ``lhs`` is the raw f32 DIV stream (quantized in the kernel prologue
+    with per-row DAC scales ``a_scale``; pad rows use scale 1); ``rhs_seg``
+    the dense int8 segment-sum pack with scalar dequant scale ``w_scale``.
+    Bitwise-identical to quantizing outside and calling
+    ``vdpe_pack_gemm_zs`` with per-row scales.
+    """
+    b, x = lhs.shape
+    x2, o = rhs_seg.shape
+    assert x == x2, (x, x2)
+    assert b % block_b == 0 and o % block_o == 0
+    assert rhs_seg.dtype == jnp.int8, rhs_seg.dtype
+    a_scale = jnp.asarray(a_scale, jnp.float32)
+    if a_scale.size != b:
+        raise ValueError(
+            f"per-row a_scale must have one entry per lhs row "
+            f"({b}, block-padded), got shape {a_scale.shape}")
+    if bias is None:
+        bias = jnp.zeros((1, o), jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_pack_gemm_zs_q8_kernel, n_b=b // block_b,
+                          block_b=block_b, bits=bits, act=act),
+        grid=(o // block_o,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda j: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec(memory_space=pltpu.ANY),
+            pl.BlockSpec((x, block_o), lambda j: (0, j)),
+            pl.BlockSpec((b, 1), lambda j: (0, 0)),
+            pl.BlockSpec((1, block_o), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((b, block_o), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, o), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((2, block_b, x), jnp.float32),
+            pltpu.SemaphoreType.DMA((2,)),
+        ],
+        interpret=interpret,
+    )(jnp.asarray(w_scale, jnp.float32).reshape(1, 1), lhs, rhs_seg,
+      a_scale.reshape(b, 1), bias)
+
+
+# ---------------------------------------------------------------------------
 # Dense bf16 tile path
 # ---------------------------------------------------------------------------
 
@@ -321,9 +539,7 @@ def _gemm_bf16_kernel(lhs_ref, rhs_ref, out_ref):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    out_ref[...] += jax.lax.dot_general(
-        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    out_ref[...] += _dot(lhs_ref[...], rhs_ref[...], jnp.float32)
 
 
 def _gemm_bf16_epilogue_kernel(lhs_ref, rhs_ref, bias_ref, out_ref, acc_ref,
@@ -334,9 +550,7 @@ def _gemm_bf16_epilogue_kernel(lhs_ref, rhs_ref, bias_ref, out_ref, acc_ref,
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += jax.lax.dot_general(
-        lhs_ref[...], rhs_ref[...], (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    acc_ref[...] += _dot(lhs_ref[...], rhs_ref[...], jnp.float32)
 
     @pl.when(k == n_k - 1)
     def _epilogue():

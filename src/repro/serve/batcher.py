@@ -6,6 +6,13 @@ frames or its oldest request has waited ``max_wait_s`` — the standard
 latency/throughput knob of serving batchers.  Across models, dispatch is
 round-robin over dispatchable queues so one hot model cannot starve the
 others' imprints.
+
+Fairness is *deterministic by construction*: the rotation order is the
+explicit ``_rr`` list (models in first-submission order), never an
+iteration over the queue dict — so the pop order of a given submit trace
+is reproducible regardless of dict-ordering behavior across Python
+versions/implementations, and two models submitting interleaved traffic
+alternate batches exactly (regression-tested in tests/test_serve.py).
 """
 from __future__ import annotations
 
@@ -56,10 +63,15 @@ class DynamicBatcher:
         self._queues[model].append(Request(rid, model, x, now))
         return rid
 
+    @property
+    def rotation(self) -> List[str]:
+        """The deterministic round-robin order (first-submission order)."""
+        return list(self._rr)
+
     def pending(self, model: Optional[str] = None) -> int:
         if model is not None:
             return len(self._queues.get(model, ()))
-        return sum(len(q) for q in self._queues.values())
+        return sum(len(self._queues[m]) for m in self._rr)
 
     def _dispatchable(self, model: str, now: float, force: bool) -> bool:
         q = self._queues[model]
@@ -74,6 +86,11 @@ class DynamicBatcher:
 
         ``force`` admits any non-empty queue regardless of fill/wait —
         the drain path at end of trace (ragged final batches).
+
+        Candidates are scanned in rotation order starting after the last
+        dispatched model (``_rr``/``_rr_next`` — never the queue dict's
+        iteration order), so ties between simultaneously dispatchable
+        models resolve identically on every Python implementation.
         """
         n = len(self._rr)
         for i in range(n):

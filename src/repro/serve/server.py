@@ -135,7 +135,8 @@ class CNNServer:
         self.telemetry.record_batch(
             model=fb.model, sim_specs=entry.sim_specs, batch_size=fb.size,
             t_formed=now, exec_s=exec_s, queue_waits_s=fb.queue_waits(),
-            latencies_s=lats, shards=shard_info)
+            latencies_s=lats, shards=shard_info,
+            exec_specs=entry.exec_specs)
         return fb.size
 
     def run_until_drained(self, max_steps: int = 100_000,

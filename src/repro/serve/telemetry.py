@@ -16,7 +16,7 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from ..cnn.layers import LayerSpec
+from ..cnn.layers import ConvKind, LayerSpec
 from ..core import simulator as sim
 from ..core.tpc import AcceleratorConfig, build_accelerator
 
@@ -67,6 +67,47 @@ class BatchRecord:
     latencies_s: Tuple[float, ...]      # submit -> results ready, per request
     hw: Dict[str, HwCost]               # point label -> modeled cost
     shards: Tuple[ShardCost, ...] = ()  # sharded dispatch (empty if single)
+    #: per-batch activation-stream footprint, a *modeled* metric like the
+    #: hw costs above: every DIV element the batch pushes through the
+    #: engine, priced at the quantized lattice width (int8 for SC/PC/FC,
+    #: int32 on the depthwise VPU path — see activation_stream_bytes) vs
+    #: a float-domain engine's f32 streams.  NOT the host kernels' HBM
+    #: pass count — that model lives in benchmarks/kernel_bench.
+    #: (both 0 when the server didn't pass exec_specs)
+    act_stream_bytes_int8: int = 0
+    act_stream_bytes_f32: int = 0
+
+
+def activation_stream_elements(specs: Sequence[LayerSpec]) -> int:
+    """DIV-stream elements one frame pushes through a layer table.
+
+    SC/PC/FC layers share one (P, S) DIV stream across their F kernels;
+    a depthwise layer streams a separate (P, K*K) window per channel.
+    The single home of the stream-element formula —
+    ``activation_stream_bytes`` prices these same elements per domain.
+    """
+    return sum(s.n_positions * s.dkv_size * (1 if s.shares_div else s.f)
+               for s in specs)
+
+
+def activation_stream_bytes(specs: Sequence[LayerSpec]) -> Tuple[int, int]:
+    """(quantized-domain, f32-domain) activation-stream bytes per frame.
+
+    A *modeled* footprint in the same spirit as telemetry's simulator
+    costs: each DIV element priced at the width of its quantized lattice
+    — int8 (1 byte) for SC/PC/FC streams, int32 (4 bytes, no saving) on
+    the depthwise VPU path — against a float-domain engine streaming
+    every element as f32.  This is what a quantized-domain accelerator's
+    DACs move per frame, not the host Pallas kernels' HBM pass count
+    (absmax reads, raw-f32 fetches); that per-pass model lives in
+    benchmarks/kernel_bench._q8_hbm_bytes.
+    """
+    q = f32 = 0
+    for s in specs:
+        n = activation_stream_elements((s,))
+        q += n * (4 if s.kind is ConvKind.DC else 1)
+        f32 += n * 4
+    return q, f32
 
 
 class TelemetryLog:
@@ -114,13 +155,21 @@ class TelemetryLog:
                      queue_waits_s: Sequence[float],
                      latencies_s: Sequence[float],
                      shards: Sequence[Tuple[str, int, HardwarePoint,
-                                            float]] = ()) -> BatchRecord:
+                                            float]] = (),
+                     exec_specs: Optional[Sequence[LayerSpec]] = None,
+                     ) -> BatchRecord:
         """Record one served batch (and, when sharded, each shard).
 
         ``shards`` rows are (instance name, shard size, the instance's
         hardware point, wall shard seconds) — each shard is costed through
         the simulator at its *own* operating point, so a heterogeneous
         fleet reports per-instance modeled FPS/FPS-per-W.
+
+        ``exec_specs`` is the layer table the engine actually ran (not
+        the paper-scale ``sim_specs``); when given, the batch's
+        activation-stream bytes are recorded as int8 (what the
+        quantized-domain kernels stream) vs the f32 estimate of the same
+        stream, so the HBM saving shows up in ``summary()``.
         """
         hw = {p.label: self._hw_cost(model, sim_specs, batch_size, p)
               for p in self.points}
@@ -129,11 +178,16 @@ class TelemetryLog:
                       exec_s=shard_exec_s,
                       cost=self._hw_cost(model, sim_specs, size, point))
             for name, size, point, shard_exec_s in shards)
+        by_q = by_f = 0
+        if exec_specs is not None:
+            by_q, by_f = activation_stream_bytes(exec_specs)
         rec = BatchRecord(model=model, batch_size=batch_size,
                           t_formed=t_formed, exec_s=exec_s,
                           queue_waits_s=tuple(queue_waits_s),
                           latencies_s=tuple(latencies_s), hw=dict(hw),
-                          shards=shard_costs)
+                          shards=shard_costs,
+                          act_stream_bytes_int8=batch_size * by_q,
+                          act_stream_bytes_f32=batch_size * by_f)
         self.records.append(rec)
         return rec
 
@@ -183,6 +237,19 @@ class TelemetryLog:
             d["modeled_fps_per_watt"] = d.pop("_fpw_frames") / d["frames"]
         return out
 
+    @staticmethod
+    def _act_stream_summary(records: List[BatchRecord]) -> Dict[str, float]:
+        """Total activation-stream bytes served: quantized lattice vs f32.
+
+        Records without exec_specs contribute zero to both sides; the
+        ratio reports the modeled stream saving of quantized-domain
+        execution (activation_stream_bytes).
+        """
+        int8 = sum(r.act_stream_bytes_int8 for r in records)
+        f32 = sum(r.act_stream_bytes_f32 for r in records)
+        return {"int8_bytes": int8, "f32_bytes": f32,
+                "ratio": f32 / int8 if int8 else 0.0}
+
     def summary(self) -> Dict:
         """Serving report: wall-clock throughput/latency + modeled hardware.
 
@@ -206,6 +273,7 @@ class TelemetryLog:
             "latency_p99_s": self.latency_percentile(99),
             "hardware": self._hw_summary(self.records),
             "dispatch": self._dispatch_summary(self.records),
+            "activation_stream": self._act_stream_summary(self.records),
             "models": {},
         }
         for model in sorted({r.model for r in self.records}):
@@ -218,5 +286,6 @@ class TelemetryLog:
                 "latency_p50_s": self.latency_percentile(50, model),
                 "latency_p99_s": self.latency_percentile(99, model),
                 "hardware": self._hw_summary(recs),
+                "activation_stream": self._act_stream_summary(recs),
             }
         return out
