@@ -1,0 +1,439 @@
+"""Chaos harness: fault-injected serving scenarios, replayable by seed.
+
+Every scenario drives the real serving stack (CNNServer -> concurrent
+ShardedDispatcher -> whole-model jitted pipeline) against an injected
+photonic failure and asserts the two properties a fault-tolerant fleet
+owes its clients:
+
+* **correctness is non-negotiable** — outputs of every admitted request
+  are bitwise-identical to the healthy single-accelerator run, no matter
+  which instances crashed, straggled, or got re-dealt mid-trace;
+* **degradation is graceful and typed** — overload on a degraded fleet is
+  shed at the door with ``AdmissionRejected`` (never a blown p99 or a
+  stack trace), and the fleet readmits itself once quarantine probes
+  pass.
+
+Scenarios (all recorded under ``BENCH_serve.json["fault_tolerance"]`` and
+gated in ``scripts/check_bench.py``):
+
+* ``healthy_baseline``   — the same trace and fleet with zero injected
+                           faults: the reference row for the chaos table.
+* ``kill_mid_trace``     — one of three instances crashes permanently
+                           mid-trace; retries re-apportion its frames.
+* ``straggler_storm``    — two instances hang past the shard deadline;
+                           timeouts quarantine them, the survivor carries
+                           the trace, stragglers readmit when the storm
+                           passes.
+* ``full_fleet_recovery`` — 2-of-3 instances stick mid-reconfiguration
+                           under a burst: SLO admission control sheds the
+                           excess (typed), probes readmit the fleet, and
+                           a later burst is fully admitted again.
+* ``concurrent_vs_sequential`` — device-paced fleet=2 concurrent dispatch
+                           vs the same shards run sequentially (the old
+                           regression): concurrency must win.
+
+Usage:  PYTHONPATH=src python -m benchmarks.chaos_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine, serve
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_serve.json"
+
+MODEL = "shufflenet_mini"       # smallest serving-zoo member: fast chaos
+#: the SLO scenario serves the model with the *heaviest* paper-scale
+#: simulator table instead: its modeled per-frame time (~7 ms at RMAM@1G)
+#: dominates host jitter, so the paced admission math is reproducible
+SLO_MODEL = "efficientnet_mini"
+
+
+def _inputs(model: str, n: int, seed: int) -> np.ndarray:
+    shape = serve.serving_input_shape(model)
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, *shape)).astype(np.float32)
+
+
+def _reference_outputs(xs: np.ndarray, model: str = MODEL,
+                       ) -> List[np.ndarray]:
+    """Healthy single-accelerator outputs, one per input (the oracle)."""
+    reg = serve.paper_cnn_registry()
+    srv = serve.CNNServer(reg, max_batch=4)
+    rids = [srv.submit(model, x) for x in xs]
+    out = srv.run_until_drained()
+    return [out[r] for r in rids]
+
+
+def _bitwise(result: Dict[int, np.ndarray], rids: List[int],
+             reference: List[np.ndarray]) -> bool:
+    return all((result[r] == ref).all() for r, ref in zip(rids, reference))
+
+
+def _prewarm(srv: "serve.CNNServer", model: str,
+             buckets: Tuple[int, ...] = (1, 2, 4)) -> None:
+    """Compile the model's pipeline for every shard bucket up front.
+
+    Chaos scenarios measure serving behavior, not XLA trace time: a
+    multi-second compile stall inside an 80 ms shard deadline would read
+    as a straggler and quarantine a perfectly healthy instance, and a
+    compile-inflated service-rate EMA would skew the SLO sizing.
+    """
+    entry = srv.registry.get(model)
+    shape = serve.serving_input_shape(model)
+    for b in buckets:
+        jax.block_until_ready(
+            engine.forward_jit(entry.plan,
+                               jnp.zeros((b, *shape), jnp.float32)))
+
+
+# ---------------------------------------------------------------------------
+# scenario: zero faults (the reference row)
+# ---------------------------------------------------------------------------
+
+def healthy_baseline(n_requests: int, seed: int) -> Dict:
+    """Same trace and fleet shape as kill_mid_trace, no injector."""
+    xs = _inputs(MODEL, n_requests, seed)
+    reference = _reference_outputs(xs)
+    fleet = serve.ShardedDispatcher(serve.default_fleet(3))
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet)
+    _prewarm(srv, MODEL)
+    # one warm dispatched batch: this scenario runs first in the harness,
+    # so it would otherwise absorb the pool spin-up + first-dispatch cost
+    # the fault scenarios never pay
+    for x in _inputs(MODEL, 4, seed + 1):
+        srv.submit(MODEL, x)
+    srv.run_until_drained()
+    srv.reset()
+    t0 = time.perf_counter()
+    rids = [srv.submit(MODEL, x) for x in xs]
+    out = srv.run_until_drained()
+    wall = time.perf_counter() - t0
+    fleet.close()
+    summ = srv.telemetry.summary()
+    ok = _bitwise(out, rids, reference)
+    row = {
+        "bitwise": ok,
+        "completed": len(rids),
+        "submitted": n_requests,
+        "images_per_s_wall": n_requests / wall,
+        "p99_ms": summ["latency_p99_s"] * 1e3,
+        "counters": dict(fleet.counters),
+    }
+    assert ok, "healthy_baseline: outputs diverged from healthy run"
+    assert fleet.counters["retries"] == 0
+    assert fleet.counters["quarantines"] == 0
+    print(f"chaos_bench,healthy_baseline,bitwise={ok},"
+          f"img_per_s={row['images_per_s_wall']:.1f}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# scenario: kill an instance mid-trace
+# ---------------------------------------------------------------------------
+
+def kill_mid_trace(n_requests: int, seed: int) -> Dict:
+    xs = _inputs(MODEL, n_requests, seed)
+    reference = _reference_outputs(xs)
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc1", serve.FaultKind.CRASH, start=2)])
+    fleet = serve.ShardedDispatcher(serve.default_fleet(3),
+                                    fault_injector=injector,
+                                    probe_cooldown_s=0.02)
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet)
+    _prewarm(srv, MODEL)
+    t0 = time.perf_counter()
+    rids = [srv.submit(MODEL, x) for x in xs]
+    out = srv.run_until_drained()
+    wall = time.perf_counter() - t0
+    fleet.close()
+    summ = srv.telemetry.summary()
+    ok = _bitwise(out, rids, reference)
+    row = {
+        "bitwise": ok,
+        "completed": len(rids),
+        "submitted": n_requests,
+        "images_per_s_wall": n_requests / wall,
+        "p99_ms": summ["latency_p99_s"] * 1e3,
+        "counters": dict(fleet.counters),
+        "killed_state": summ["fleet"]["instances"]["acc1"]["state"],
+    }
+    assert ok, "kill_mid_trace: outputs diverged from healthy run"
+    assert fleet.counters["retries"] >= 1, "crash never tripped a retry"
+    assert fleet.counters["quarantines"] >= 1
+    assert row["killed_state"] == "quarantined"
+    print(f"chaos_bench,kill_mid_trace,bitwise={ok},"
+          f"retries={fleet.counters['retries']},"
+          f"img_per_s={row['images_per_s_wall']:.1f}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# scenario: straggler storm (deadline-driven timeouts)
+# ---------------------------------------------------------------------------
+
+def straggler_storm(n_requests: int, seed: int) -> Dict:
+    xs = _inputs(MODEL, n_requests, seed)
+    reference = _reference_outputs(xs)
+    # two of three instances hang well past the shard deadline for a
+    # couple of dispatches each, then recover
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.STRAGGLE, start=1,
+                         duration=2, severity=0.30),
+        serve.FaultEvent("acc1", serve.FaultKind.STRAGGLE, start=2,
+                         duration=2, severity=0.30)])
+    fleet = serve.ShardedDispatcher(serve.default_fleet(3),
+                                    fault_injector=injector,
+                                    deadline_s=0.08,
+                                    probe_cooldown_s=0.02)
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet)
+    _prewarm(srv, MODEL)
+    t0 = time.perf_counter()
+    rids = [srv.submit(MODEL, x) for x in xs]
+    out = srv.run_until_drained()
+    wall = time.perf_counter() - t0
+    # give the storm time to pass, then confirm the fleet self-heals
+    deadline = time.perf_counter() + 5.0
+    while (len(fleet.active_instances()) < 3
+           and time.perf_counter() < deadline):
+        time.sleep(0.02)
+    healed = len(fleet.active_instances())
+    fleet.close()
+    summ = srv.telemetry.summary()
+    ok = _bitwise(out, rids, reference)
+    row = {
+        "bitwise": ok,
+        "completed": len(rids),
+        "submitted": n_requests,
+        "images_per_s_wall": n_requests / wall,
+        "p99_ms": summ["latency_p99_s"] * 1e3,
+        "counters": dict(fleet.counters),
+        "healed_instances": healed,
+    }
+    assert ok, "straggler_storm: outputs diverged from healthy run"
+    assert fleet.counters["timeouts"] >= 1, "no shard ever timed out"
+    assert healed == 3, f"fleet never healed (healthy={healed}/3)"
+    assert fleet.counters["readmissions"] >= 1
+    print(f"chaos_bench,straggler_storm,bitwise={ok},"
+          f"timeouts={fleet.counters['timeouts']},"
+          f"readmissions={fleet.counters['readmissions']}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# scenario: 2-of-3 loss under load -> shed, probe, readmit
+# ---------------------------------------------------------------------------
+
+def full_fleet_recovery(seed: int) -> Dict:
+    # decay traffic is sized in *batches* (EMA updates once per served
+    # batch of 4): 6 updates shrink the retry-inflated EMA by 0.7^6, and
+    # the final burst is shallow enough that even a 3x-of-warm residual
+    # EMA keeps its tail inside the deadline
+    warm_n, trip_n, storm_n, decay_n, burst_n = 8, 4, 24, 24, 8
+    xs = _inputs(SLO_MODEL,
+                 warm_n + trip_n + storm_n + decay_n + burst_n, seed)
+    reference = _reference_outputs(xs, SLO_MODEL)
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.STUCK_RECONFIG, start=2,
+                         duration=6),
+        serve.FaultEvent("acc1", serve.FaultKind.STUCK_RECONFIG, start=2,
+                         duration=6)])
+    # paced on modeled device time: the admission estimator's EMA then
+    # tracks the (stable) photonic service rate instead of 1-core host
+    # jitter, so the shed/admit boundary is reproducible across hosts
+    fleet = serve.ShardedDispatcher(serve.default_fleet(3),
+                                    fault_injector=injector,
+                                    probe_cooldown_s=0.02,
+                                    backoff_base_s=0.005,
+                                    pace="hardware")
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet)
+    _prewarm(srv, SLO_MODEL)
+    admitted_idx: List[int] = []
+    rids: List[int] = []
+    cursor = 0
+
+    def submit_burst(n: int) -> int:
+        nonlocal cursor
+        shed = 0
+        for _ in range(n):
+            try:
+                rids.append(srv.submit(SLO_MODEL, xs[cursor]))
+                admitted_idx.append(cursor)
+            except serve.AdmissionRejected:
+                shed += 1
+            cursor += 1
+        srv.run_until_drained()
+        return shed
+
+    # phase 1 — healthy warmup: establishes the service-rate EMA the
+    # admission estimator runs on, then sizes the SLO from the measurement
+    submit_burst(warm_n)
+    ema = srv._frame_s_ema
+    # deadline sized so the healthy fleet absorbs any burst here with 2x+
+    # headroom, while the 3x drain-time penalty of a 1/3-capacity fleet
+    # pushes a deep burst's tail past it
+    srv.slo = serve.ServeSLO(deadline_s=40 * ema, min_observations=1)
+    # phase 2a — tripwire: the next batch hits the stuck window on acc0
+    # and acc1 (their 3rd dispatch); both quarantine, the retry lands the
+    # frames on acc2, and the fleet drops to 1/3 capacity
+    submit_burst(trip_n)
+    assert len(fleet.active_instances()) == 1, "fault never tripped"
+    # phase 2b — burst against the degraded fleet: the admission
+    # estimator sees 3x the drain time and sheds the tail with a typed
+    # error instead of queueing it to blow the deadline
+    degraded_shed = submit_burst(storm_n)
+    degraded_counters = dict(fleet.counters)
+    # phase 3 — probes burn down the stuck window; wait for readmission
+    deadline = time.perf_counter() + 5.0
+    while (len(fleet.active_instances()) < 3
+           and time.perf_counter() < deadline):
+        time.sleep(0.02)
+    healed = len(fleet.active_instances())
+    # phase 4 — decay the retry-inflated EMA with healthy traffic, then a
+    # deep burst must be admitted in full again
+    submit_burst(decay_n)
+    recovered_shed = submit_burst(burst_n)
+    fleet.close()
+    ok = _bitwise(srv.results, rids,
+                  [reference[i] for i in admitted_idx])
+    row = {
+        "bitwise": ok,
+        "submitted": cursor,
+        "admitted": len(rids),
+        "degraded_shed": degraded_shed,
+        "recovered_shed": recovered_shed,
+        "healed_instances": healed,
+        "slo_deadline_ms": srv.slo.deadline_s * 1e3,
+        "counters": degraded_counters,
+        "admission": dict(srv.admission),
+    }
+    assert ok, "full_fleet_recovery: admitted outputs diverged"
+    assert degraded_shed > 0, "2-of-3 loss under load never shed"
+    assert recovered_shed == 0, (
+        f"recovered fleet still shedding ({recovered_shed}): "
+        f"ema={srv._frame_s_ema * 1e3:.3f}ms warm_ema={ema * 1e3:.3f}ms "
+        f"deadline={srv.slo.deadline_s * 1e3:.1f}ms "
+        f"frac={fleet.healthy_capacity_fraction():.2f}")
+    assert healed == 3, f"fleet never readmitted (healthy={healed}/3)"
+    assert fleet.counters["readmissions"] >= 2
+    print(f"chaos_bench,full_fleet_recovery,bitwise={ok},"
+          f"degraded_shed={degraded_shed},recovered_shed={recovered_shed},"
+          f"readmissions={fleet.counters['readmissions']}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# scenario: concurrent vs sequential dispatch (the reversed regression)
+# ---------------------------------------------------------------------------
+
+def concurrent_vs_sequential(reps: int, seed: int) -> Dict:
+    model = "efficientnet_mini"
+    reg = serve.paper_cnn_registry()
+    entry = reg.get(model)
+    rng = np.random.default_rng(seed)
+    xb = jnp.asarray(rng.normal(
+        size=(8, *entry.input_shape)).astype(np.float32))
+    single = np.asarray(engine.forward_jit(entry.plan, xb))
+
+    conc = serve.ShardedDispatcher(serve.default_fleet(2), pace="hardware")
+    res, runs = conc.run(entry.plan, xb, sim_specs=entry.sim_specs)  # warm
+    assert (np.asarray(res) == single).all()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        conc.run(entry.plan, xb, sim_specs=entry.sim_specs)
+    conc_img_s = 8 * reps / (time.perf_counter() - t0)
+
+    # sequential reference: identical shard split + device pacing, but the
+    # shards run one after the other — the pre-concurrency dispatcher
+    sizes = conc.shard_sizes(8)
+    insts = conc.instances
+
+    def sequential_once() -> None:
+        start = 0
+        for inst, size in zip(insts, sizes):
+            if size == 0:
+                continue
+            t_shard = time.perf_counter()
+            jax.block_until_ready(
+                engine.forward_jit(entry.plan, xb[start:start + size]))
+            floor = conc._paced_floor_s(inst, tuple(entry.sim_specs), size)
+            rest = floor - (time.perf_counter() - t_shard)
+            if rest > 0:
+                time.sleep(rest)
+            start += size
+
+    sequential_once()                                   # warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        sequential_once()
+    seq_img_s = 8 * reps / (time.perf_counter() - t0)
+    conc.close()
+    speedup = conc_img_s / seq_img_s
+    row = {
+        "bitwise": True,
+        "fleet": 2,
+        "concurrent_images_per_s": conc_img_s,
+        "sequential_images_per_s": seq_img_s,
+        "concurrent_speedup": speedup,
+    }
+    assert speedup > 1.0, (
+        f"concurrent fleet=2 dispatch did not beat sequential "
+        f"({speedup:.2f}x)")
+    print(f"chaos_bench,concurrent_vs_sequential,"
+          f"conc={conc_img_s:.1f},seq={seq_img_s:.1f},"
+          f"speedup={speedup:.2f}x")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def run(smoke: bool = True, seed: int = 0) -> Dict:
+    n = 12 if smoke else 48
+    reps = 3 if smoke else 8
+    scenarios = {
+        "healthy_baseline": healthy_baseline(n, seed),
+        "kill_mid_trace": kill_mid_trace(n, seed),
+        "straggler_storm": straggler_storm(n, seed + 1),
+        "full_fleet_recovery": full_fleet_recovery(seed + 2),
+        "concurrent_vs_sequential": concurrent_vs_sequential(reps, seed),
+    }
+    # merge-write: serve_bench owns the other families in the same JSON
+    doc = {}
+    if OUT_PATH.exists():
+        try:
+            doc = json.loads(OUT_PATH.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["fault_tolerance"] = {"smoke": smoke, "seed": seed,
+                              "scenarios": scenarios}
+    OUT_PATH.write_text(json.dumps(doc, indent=2, default=float) + "\n")
+    print(f"chaos_bench,json,{OUT_PATH}")
+    return scenarios
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small chaos traces for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

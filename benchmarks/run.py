@@ -9,9 +9,9 @@ import argparse
 import sys
 import time
 
-from . import (fig4_5_scalability, fig6_utilization, fig10_11_fps,
-               kernel_bench, noise_ablation, serve_bench, table2_vdpe_size,
-               table3_dkv_census, table4_comb_switch,
+from . import (chaos_bench, fig4_5_scalability, fig6_utilization,
+               fig10_11_fps, kernel_bench, noise_ablation, serve_bench,
+               table2_vdpe_size, table3_dkv_census, table4_comb_switch,
                table8_area_proportionate)
 
 BENCHES = {
@@ -25,6 +25,7 @@ BENCHES = {
     "kernel_bench": kernel_bench.run,
     "noise_ablation": noise_ablation.run,
     "serve_bench": serve_bench.run,     # smoke settings by default
+    "chaos_bench": chaos_bench.run,     # fault-injection scenarios
 }
 
 

@@ -1,17 +1,27 @@
 """Bench-regression gate: fresh smoke benches vs the committed baselines.
 
 Snapshots the committed ``BENCH_serve.json`` / ``BENCH_kernels.json``,
-re-runs the benches that write them — ``benchmarks.serve_bench --smoke``
+re-runs the benches that write them — ``benchmarks.serve_bench --smoke``,
+``benchmarks.chaos_bench --smoke`` (both merge-write BENCH_serve.json)
 plus the full ``kernel_bench`` (the smoke variant of kernel_bench is
 assertion-only and writes no JSON; budget ~2 min per round, and a
 first-round regression triggers a second confirming round — CI gives the
 job a 20-minute timeout) — and fails when a gated throughput family
 regresses by more than ``--threshold`` (default 30%).
 
-Tracked metrics are *same-run speedup ratios* (higher is better):
+Tracked metrics are *same-run speedup ratios* (higher is better) plus
+chaos invariants:
 
 * serve: whole-model-jit vs layer-loop images/s at batch 1 and 8, and
   the batch-8-vs-batch-1 amortization ratio
+* serve_fleet: device-paced fleet-K vs fleet-1 dispatch throughput and
+  concurrent-vs-sequential fleet=2 dispatch (GATED — these defend the
+  concurrency win that reversed the old fleet=2 regression)
+* serve_fault: chaos-harness invariants (GATED) — bitwise-identical
+  outputs under injected crash/straggle/stuck-reconfiguration faults,
+  typed load shedding on a degraded fleet with zero sheds after
+  recovery, and full fleet healing via quarantine probes; booleans are
+  encoded 1.0/0.01 so one violation craters its family geomean
 * kernels: zero-skipping vs block-diagonal Mode-2 GEMM per shape,
   implicit-GEMM vs im2col+GEMM per serving-zoo conv layer, and the
   quantized-domain int8 path vs the quantize-then-float oracle per
@@ -61,13 +71,21 @@ from typing import Dict, Iterator, Tuple
 REPO_ROOT = Path(__file__).resolve().parent.parent
 BENCH_FILES = ("BENCH_serve.json", "BENCH_kernels.json")
 SMOKE_COMMANDS = (
+    # order matters: serve_bench and chaos_bench both merge-write
+    # BENCH_serve.json (each preserves the other's sections)
     [sys.executable, "-m", "benchmarks.serve_bench", "--smoke"],
+    [sys.executable, "-m", "benchmarks.chaos_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.run", "--only", "kernel_bench"],
 )
 
 
-#: families whose geomean gates the PR; everything else is report-only
-GATED_FAMILY_PREFIXES = ("kernels.",)
+#: families whose geomean gates the PR; everything else is report-only.
+#: serve_fleet.* are same-run speedup ratios (paced fleet-K vs fleet-1,
+#: concurrent vs sequential) — host load cancels out of them like the
+#: kernel ratios.  serve_fault.* are pass/fail invariants from the chaos
+#: harness (bitwise under faults, typed shedding, fleet healing) encoded
+#: as 1.0/0.01 so any violation craters its family geomean.
+GATED_FAMILY_PREFIXES = ("kernels.", "serve_fleet.", "serve_fault.")
 
 
 def serve_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
@@ -76,6 +94,34 @@ def serve_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
         yield f"serve.jit_speedup.b{bs}", float(v)
     if "batch8_speedup_wall" in sweep:
         yield "serve.amortization.batch8", float(sweep["batch8_speedup_wall"])
+    # gated: device-paced fleet scaling (same-run ratio vs fleet=1) — the
+    # number that proves concurrent dispatch turned the old fleet=2
+    # regression into a speedup
+    fleets = doc.get("dispatch", {}).get("fleets", {})
+    for k, row in sorted(fleets.items(), key=lambda kv: int(kv[0])):
+        v = row.get("paced_speedup")
+        if v and int(k) > 1:
+            yield f"serve_fleet.paced_speedup.k{k}", float(v)
+    # gated: chaos-harness invariants (benchmarks/chaos_bench.py)
+    scen = doc.get("fault_tolerance", {}).get("scenarios", {})
+    for name, row in sorted(scen.items()):
+        if "bitwise" in row:
+            yield (f"serve_fault.bitwise.{name}",
+                   1.0 if row["bitwise"] else 0.01)
+    cvs = scen.get("concurrent_vs_sequential", {})
+    if "concurrent_speedup" in cvs:
+        yield ("serve_fleet.concurrent_speedup.k2",
+               float(cvs["concurrent_speedup"]))
+    rec = scen.get("full_fleet_recovery", {})
+    if rec:
+        yield ("serve_fault.shed_typed.full_fleet_recovery",
+               1.0 if (rec.get("degraded_shed", 0) > 0
+                       and rec.get("recovered_shed", 1) == 0) else 0.01)
+    for name in ("straggler_storm", "full_fleet_recovery"):
+        row = scen.get(name, {})
+        if "healed_instances" in row:
+            yield (f"serve_fault.healed.{name}",
+                   1.0 if row["healed_instances"] == 3 else 0.01)
 
 
 def kernel_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:

@@ -35,6 +35,7 @@ pipelines with its imprint (``evict``).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Callable, Dict, Tuple
 
@@ -58,6 +59,10 @@ CACHE_CAPACITY = 16
 _PIPELINES: "OrderedDict[int, Tuple[ModelPlan, Dict[bool, Callable]]]" = (
     OrderedDict())
 _STATS = {"hits": 0, "misses": 0, "compiles": 0, "evictions": 0}
+# the sharded dispatcher serves shards from a thread pool; cache lookups,
+# insertions and LRU reordering must not interleave (jit itself is
+# thread-safe — only this bookkeeping needs the lock)
+_LOCK = threading.RLock()
 
 
 def batch_bucket(b: int) -> int:
@@ -102,22 +107,23 @@ def get_pipeline(plan: ModelPlan, interpret: bool | None = None) -> Callable:
     """
     if interpret is None:
         interpret = ops.default_interpret()
-    entry = _PIPELINES.get(id(plan))
-    if entry is not None and entry[0] is plan:
-        _PIPELINES.move_to_end(id(plan))
-        fns = entry[1]
-        if interpret in fns:
-            _STATS["hits"] += 1
-            return fns[interpret]
-    else:
-        fns = {}
-        _PIPELINES[id(plan)] = (plan, fns)
-        while len(_PIPELINES) > CACHE_CAPACITY:
-            _PIPELINES.popitem(last=False)
-            _STATS["evictions"] += 1
-    _STATS["misses"] += 1
-    fns[interpret] = _build(plan, interpret)
-    return fns[interpret]
+    with _LOCK:
+        entry = _PIPELINES.get(id(plan))
+        if entry is not None and entry[0] is plan:
+            _PIPELINES.move_to_end(id(plan))
+            fns = entry[1]
+            if interpret in fns:
+                _STATS["hits"] += 1
+                return fns[interpret]
+        else:
+            fns = {}
+            _PIPELINES[id(plan)] = (plan, fns)
+            while len(_PIPELINES) > CACHE_CAPACITY:
+                _PIPELINES.popitem(last=False)
+                _STATS["evictions"] += 1
+        _STATS["misses"] += 1
+        fns[interpret] = _build(plan, interpret)
+        return fns[interpret]
 
 
 def forward_jit(plan: ModelPlan, x: jax.Array,
@@ -152,7 +158,8 @@ def forward_jit(plan: ModelPlan, x: jax.Array,
 def evict(plan: ModelPlan) -> None:
     """Drop a plan's compiled pipelines (the registry's LRU eviction hook —
     without it the pipeline cache would pin evicted imprints forever)."""
-    _PIPELINES.pop(id(plan), None)
+    with _LOCK:
+        _PIPELINES.pop(id(plan), None)
 
 
 def pipeline_cache_info() -> Dict[str, int]:

@@ -1,14 +1,23 @@
 """Fault tolerance & elasticity: heartbeats, stragglers, restart, re-mesh.
 
-1000+-node posture (DESIGN.md §5):
+1000+-node posture (DESIGN.md §5), reused by the serving fleet
+(serve/dispatch.py quarantine loop):
 
-* HeartbeatMonitor — every worker appends (host, step, t) beats; the
-  controller flags hosts silent for > timeout as suspected-dead.
+* HeartbeatMonitor — every worker appends (host, t) beats; the controller
+  flags hosts silent for > timeout as suspected-dead.  The clock is a
+  single injectable ``time_fn`` (matching ``CNNServer.time_fn``): beats
+  and deadness checks read the SAME clock, so virtual-clock tests and
+  trace replays are deterministic — there is no hidden
+  ``time.monotonic()`` mixed with caller-supplied timestamps.
 * StragglerDetector — per-step wall-time EMA; a host whose step time
   exceeds median x threshold is flagged so the controller can hot-swap it
-  (on TPU pods, slow HBM / thermal throttle shows up exactly this way).
-* run_with_restarts — wraps the train loop: on failure, restore from the
-  newest checkpoint and continue (bounded retries).
+  (on TPU pods, slow HBM / thermal throttle shows up exactly this way;
+  on a photonic fleet, thermal drift re-locks do).
+* run_with_restarts — wraps the train loop: on failure, back off
+  exponentially (capped), restore from the newest checkpoint and
+  continue; when the retry budget is exhausted the final exception is
+  raised chained from the previous one, so the post-mortem sees the
+  whole failure sequence instead of a bare retry-count overflow.
 * plan_elastic_remesh — on permanent node loss, shrink the data axis to
   the largest feasible size, keep the model axis intact (TP topology is
   wiring-constrained; DP is not), and return the re-layout plan; the
@@ -19,19 +28,28 @@ from __future__ import annotations
 import dataclasses
 import statistics
 import time
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, Hashable, List, Optional, Tuple
 
 
 class HeartbeatMonitor:
-    def __init__(self, timeout_s: float = 60.0):
+    """Liveness by silence: hosts with no beat for > timeout are suspect.
+
+    One clock, injected: ``time_fn`` stamps beats AND measures silence.
+    Tests drive a virtual clock by injecting their own callable; the
+    default is wall ``time.monotonic``.
+    """
+
+    def __init__(self, timeout_s: float = 60.0,
+                 time_fn: Callable[[], float] = time.monotonic):
         self.timeout_s = timeout_s
-        self.beats: Dict[int, float] = {}
+        self._time = time_fn
+        self.beats: Dict[Hashable, float] = {}
 
-    def beat(self, host: int, now: Optional[float] = None):
-        self.beats[host] = time.monotonic() if now is None else now
+    def beat(self, host: Hashable) -> None:
+        self.beats[host] = self._time()
 
-    def dead_hosts(self, now: Optional[float] = None) -> List[int]:
-        t = time.monotonic() if now is None else now
+    def dead_hosts(self) -> List[Hashable]:
+        t = self._time()
         return [h for h, last in self.beats.items()
                 if t - last > self.timeout_s]
 
@@ -42,13 +60,13 @@ class StragglerDetector:
     def __init__(self, threshold: float = 2.0, window: int = 20):
         self.threshold = threshold
         self.window = window
-        self.times: Dict[int, List[float]] = {}
+        self.times: Dict[Hashable, List[float]] = {}
 
-    def record(self, host: int, step_time_s: float):
+    def record(self, host: Hashable, step_time_s: float) -> None:
         self.times.setdefault(host, []).append(step_time_s)
         self.times[host] = self.times[host][-self.window:]
 
-    def stragglers(self) -> List[int]:
+    def stragglers(self) -> List[Hashable]:
         if len(self.times) < 2:
             return []
         medians = {h: statistics.median(v) for h, v in self.times.items()}
@@ -95,17 +113,35 @@ def plan_elastic_remesh(axes: Tuple[str, ...], shape: Tuple[int, ...],
 def run_with_restarts(step_fn: Callable[[int], None], start_step: int,
                       num_steps: int,
                       restore_fn: Callable[[], int],
-                      max_restarts: int = 3) -> int:
-    """Drive step_fn with restore-on-failure. Returns last completed step."""
+                      max_restarts: int = 3,
+                      backoff_base_s: float = 0.05,
+                      backoff_cap_s: float = 2.0,
+                      sleep_fn: Callable[[float], None] = time.sleep,
+                      ) -> int:
+    """Drive step_fn with restore-on-failure. Returns last completed step.
+
+    Each failure backs off exponentially (``backoff_base_s * 2**k``,
+    capped at ``backoff_cap_s``) before restoring — a crash loop must not
+    hammer the checkpoint store.  When ``max_restarts`` is exhausted the
+    final exception is raised chained from the *previous* recorded
+    failure (``raise exc from last_exc``), so nothing about the failure
+    history is swallowed between retries.
+    """
     restarts = 0
     step = start_step
+    last_exc: Optional[BaseException] = None
     while step < num_steps:
         try:
             step_fn(step)
             step += 1
-        except Exception:
+        except Exception as exc:
             restarts += 1
             if restarts > max_restarts:
+                if last_exc is not None:
+                    raise exc from last_exc
                 raise
+            sleep_fn(min(backoff_base_s * (2 ** (restarts - 1)),
+                         backoff_cap_s))
+            last_exc = exc
             step = restore_fn()
     return step

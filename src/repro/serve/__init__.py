@@ -10,25 +10,40 @@ realizes that stream:
 * batcher.py   — dynamic batcher: per-model queues, max-batch + max-wait
                  admission, mixed-model round-robin dispatch
 * server.py    — CNNServer: forms batches, runs them through the batched
-                 engine forward (engine/executor.py), splits results
-* dispatch.py  — multi-accelerator sharded dispatch: batches split across
-                 K simulated accelerator instances (possibly heterogeneous
-                 operating points), bitwise-equal to single-accelerator
+                 engine forward (engine/executor.py), splits results;
+                 SLO-aware admission control sheds load the surviving
+                 fleet cannot serve inside the deadline (ServeSLO)
+* dispatch.py  — concurrent multi-accelerator sharded dispatch: batches
+                 split across K simulated accelerator instances (possibly
+                 heterogeneous operating points) on a thread pool with
+                 per-shard deadlines, retry/backoff re-apportionment and
+                 quarantine/probe health — bitwise-equal to
+                 single-accelerator no matter which instances ran
+* faults.py    — photonic fault injection (crash, straggle, thermal
+                 drift, stuck reconfiguration) on deterministic seeded
+                 schedules, plus the typed serving-failure vocabulary
 * telemetry.py — hardware-time telemetry: every served batch is also
                  costed through core/simulator.simulate, so the server
                  reports wall-clock images/s AND modeled photonic FPS and
-                 FPS/W per accelerator operating point
+                 FPS/W per accelerator operating point — plus fleet
+                 health/retry/shed counters when dispatched
 * models.py    — serving model zoo: executable mini variants of the paper
                  CNNs plus their paper-scale simulator layer tables
 
-Closed-loop benchmark: benchmarks/serve_bench.py.
+Closed-loop benchmark: benchmarks/serve_bench.py.  Chaos harness
+(fault-injection scenarios, §fault_tolerance of BENCH_serve.json):
+benchmarks/chaos_bench.py.
 """
 from .batcher import DynamicBatcher, FormedBatch, Request  # noqa: F401
-from .dispatch import (AcceleratorInstance, ShardedDispatcher,  # noqa: F401
-                       ShardRun, default_fleet)
+from .dispatch import (AcceleratorInstance, InstanceHealth,  # noqa: F401
+                       ShardedDispatcher, ShardRun, default_fleet)
+from .faults import (AdmissionRejected, DispatchEffects,  # noqa: F401
+                     FaultEvent, FaultInjector, FaultKind, InstanceCrashed,
+                     NoHealthyInstances, ReconfigStuck, RetriesExhausted,
+                     ServingFault, ShardDeadlineExceeded, random_schedule)
 from .models import (SERVING_MODELS, serving_defs,  # noqa: F401
                      serving_input_shape, specs_for_defs)
 from .registry import PlanRegistry, ServingModel, paper_cnn_registry  # noqa: F401
-from .server import CNNServer  # noqa: F401
+from .server import CNNServer, ServeSLO  # noqa: F401
 from .telemetry import (DEFAULT_HW_POINTS, BatchRecord,  # noqa: F401
                         HardwarePoint, ShardCost, TelemetryLog)

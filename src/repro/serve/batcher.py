@@ -73,6 +73,21 @@ class DynamicBatcher:
             return len(self._queues.get(model, ()))
         return sum(len(self._queues[m]) for m in self._rr)
 
+    def oldest_wait_s(self, now: float,
+                      model: Optional[str] = None) -> Optional[float]:
+        """How long the oldest queued request has waited (None if empty).
+
+        The SLO flush signal: a server defending a completion deadline
+        dispatches a queue early once its head request has burned a
+        fraction of the budget waiting for batch-mates.
+        """
+        heads = [self._queues[m][0].t_submit
+                 for m in ([model] if model is not None else self._rr)
+                 if self._queues.get(m)]
+        if not heads:
+            return None
+        return now - min(heads)
+
     def _dispatchable(self, model: str, now: float, force: bool) -> bool:
         q = self._queues[model]
         if not q:

@@ -1,37 +1,61 @@
-"""Multi-accelerator sharded dispatch: one batch, K simulated accelerators.
+"""Concurrent multi-accelerator dispatch with deadlines, retries, quarantine.
 
 A deployment that outgrows one photonic accelerator scales out: K
 accelerator instances (possibly heterogeneous operating points — e.g. an
 RMAM@1G next to an RMAM@5G) serve shards of every formed batch in
 parallel, each against its own resident copy of the model's DKV imprint.
-``ShardedDispatcher`` models exactly that on the execution side:
+``ShardedDispatcher`` models that fleet end to end, failure handling
+included:
 
 * the batch is split contiguously into per-instance shards sized by each
-  instance's ``capacity`` weight (largest-remainder apportionment, so
-  shard sizes are deterministic and sum to the batch);
-* every non-empty shard runs through the whole-model jitted pipeline
-  (``engine.forward_jit``) — per-image quantization makes each image's
-  output independent of its shard, so the concatenated outputs are
-  bitwise-identical to serving the unsharded batch on one accelerator
-  (asserted in tests/test_dispatch.py, ragged batches included);
-* each shard reports its wall execution time and its instance, and the
-  telemetry layer (telemetry.record_batch ``shards=``) costs it through
-  the cycle-true simulator at that instance's hardware operating point.
+  *healthy* instance's ``capacity`` weight (largest-remainder
+  apportionment, so shard sizes are deterministic and sum to the batch);
+* shards execute **concurrently** on a thread pool (the XLA runtime
+  releases the GIL during execution), each watched by a per-shard
+  ``deadline_s``;
+* a shard that crashes, sticks, or misses its deadline quarantines its
+  instance and is **retried with exponential backoff**, re-apportioned
+  across the surviving healthy instances with the same largest-remainder
+  split — per-image quantization makes every image's output independent
+  of which instance ran it, so the concatenated outputs stay
+  bitwise-identical to the healthy single-accelerator run no matter how
+  the work was re-dealt (asserted in tests, ragged batches and chaos
+  schedules included);
+* quarantined instances are **probed back in** after a cooldown (each
+  probe consults the fault injector — a finite fault expires, the
+  instance readmits; a re-failed probe doubles the cooldown);
+* ``HeartbeatMonitor`` / ``StragglerDetector`` (runtime/fault_tolerance)
+  watch the fleet from the serve loop's own clock, and ``fleet_health()``
+  exports per-instance state plus retry/timeout/quarantine counters for
+  ``TelemetryLog.summary()["fleet"]``.
 
-``CNNServer`` routes through a dispatcher when one is configured;
-``PlanRegistry.warm_pipelines`` accepts the dispatcher so every
-(plan, shard-bucket) executable is pre-traced.
+Device pacing (``pace="hardware"``): each shard's service time is floored
+at the cycle-true simulator's modeled time for that shard at the
+instance's operating point — the host merely *feeds* simulated
+accelerators, so fleet throughput scales with fleet size exactly as K
+real devices would, instead of being an artifact of host-side XLA
+scheduling (on a small host, K concurrent XLA calls cannot beat one —
+the compute is the same; K photonic accelerators genuinely overlap).
+Raw (unpaced) mode remains the default for bit-exactness tests.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional, Sequence, Tuple
+from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor
+from concurrent.futures import wait as futures_wait
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .. import engine
+from ..cnn.layers import LayerSpec
+from ..core import simulator as sim
+from ..core.tpc import build_accelerator
+from ..runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
+from .faults import (FaultInjector, NoHealthyInstances, RetriesExhausted,
+                     ServingFault, ShardDeadlineExceeded)
 from .telemetry import HardwarePoint
 
 
@@ -54,7 +78,22 @@ class ShardRun:
     """One instance's share of a dispatched batch."""
     instance: AcceleratorInstance
     batch_size: int
-    exec_s: float             # wall-clock pipeline time for the shard
+    exec_s: float             # service time (paced to modeled hw if pacing)
+    attempt: int = 0          # 0 = first dispatch, >0 = retry round
+
+
+@dataclasses.dataclass
+class InstanceHealth:
+    """Mutable per-instance serving health (exported by fleet_health)."""
+    state: str = "healthy"            # healthy | quarantined
+    frames: int = 0
+    shards: int = 0
+    failures: int = 0                 # faults + deadline misses, lifetime
+    consecutive_failures: int = 0
+    quarantines: int = 0
+    probe_after: float = 0.0          # dispatcher-clock readmission time
+    cooldown_s: float = 0.0           # current quarantine window
+    last_beat: Optional[float] = None
 
 
 def default_fleet(k: int, hw: HardwarePoint = HardwarePoint(),
@@ -67,29 +106,161 @@ def default_fleet(k: int, hw: HardwarePoint = HardwarePoint(),
 
 
 class ShardedDispatcher:
-    """Shard batches across a fleet of simulated accelerator instances."""
+    """Shard batches across a fleet of simulated accelerator instances.
 
-    def __init__(self, instances: Sequence[AcceleratorInstance]):
+    With no faults, no deadline and no pacing this degrades to the plain
+    capacity-weighted sharded dispatch (now concurrent); the fault path
+    activates only when an injector/deadline is configured.
+    """
+
+    def __init__(self, instances: Sequence[AcceleratorInstance],
+                 fault_injector: Optional[FaultInjector] = None,
+                 deadline_s: Optional[float] = None,
+                 max_retries: int = 3,
+                 backoff_base_s: float = 0.01,
+                 backoff_cap_s: float = 0.25,
+                 probe_cooldown_s: float = 0.05,
+                 pace: Optional[str] = None,
+                 time_fn: Callable[[], float] = time.monotonic,
+                 sleep_fn: Callable[[float], None] = time.sleep,
+                 heartbeat: Optional[HeartbeatMonitor] = None,
+                 straggler: Optional[StragglerDetector] = None):
         if not instances:
             raise ValueError("dispatcher needs at least one instance")
         names = [i.name for i in instances]
         if len(set(names)) != len(names):
             raise ValueError(f"duplicate instance names: {names}")
+        if pace not in (None, "hardware"):
+            raise ValueError(f"pace must be None or 'hardware', got {pace!r}")
+        if max_retries < 0:
+            raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.instances = tuple(instances)
         self._total_capacity = sum(i.capacity for i in self.instances)
+        self.fault_injector = fault_injector
+        self.deadline_s = deadline_s
+        self.max_retries = max_retries
+        self.backoff_base_s = backoff_base_s
+        self.backoff_cap_s = backoff_cap_s
+        self.probe_cooldown_s = probe_cooldown_s
+        self.pace = pace
+        self._time = time_fn
+        self._sleep = sleep_fn
+        self.heartbeat = heartbeat or HeartbeatMonitor(
+            timeout_s=max(4 * (deadline_s or 0.0), 1.0), time_fn=time_fn)
+        self.straggler = straggler or StragglerDetector()
+        self.health: Dict[str, InstanceHealth] = {
+            i.name: InstanceHealth() for i in self.instances}
+        self.counters: Dict[str, int] = {
+            "dispatched_shards": 0, "completed_shards": 0, "retries": 0,
+            "timeouts": 0, "faults": 0, "quarantines": 0, "probes": 0,
+            "probe_failures": 0, "readmissions": 0}
+        self._pool: Optional[ThreadPoolExecutor] = None
+        self._pace_memo: Dict[Tuple[str, Tuple[LayerSpec, ...], int],
+                              float] = {}
 
-    def shard_sizes(self, batch: int) -> List[int]:
+    # -- fleet health -----------------------------------------------------
+
+    def _probe(self, inst: AcceleratorInstance) -> bool:
+        """One readmission probe: does the instance accept a dispatch?
+
+        A probe is a real dispatch attempt against the fault injector (so
+        finite-duration faults burn down under probing); with no injector
+        configured a probe always passes.
+        """
+        self.counters["probes"] += 1
+        if self.fault_injector is None:
+            return True
+        effects = self.fault_injector.on_dispatch(inst.name)
+        return effects.fault is None
+
+    def active_instances(self) -> List[AcceleratorInstance]:
+        """Healthy instances, after probing due quarantined ones back in."""
+        now = self._time()
+        out = []
+        for inst in self.instances:
+            h = self.health[inst.name]
+            if h.state == "quarantined" and now >= h.probe_after:
+                if self._probe(inst):
+                    h.state = "healthy"
+                    h.consecutive_failures = 0
+                    h.cooldown_s = 0.0
+                    self.counters["readmissions"] += 1
+                else:
+                    self.counters["probe_failures"] += 1
+                    h.cooldown_s = min(h.cooldown_s * 2,
+                                       max(self.backoff_cap_s,
+                                           self.probe_cooldown_s))
+                    h.probe_after = now + h.cooldown_s
+            if h.state == "healthy":
+                out.append(inst)
+        return out
+
+    def _quarantine(self, inst: AcceleratorInstance) -> None:
+        h = self.health[inst.name]
+        h.failures += 1
+        h.consecutive_failures += 1
+        if h.state != "quarantined":
+            h.state = "quarantined"
+            h.quarantines += 1
+            self.counters["quarantines"] += 1
+        h.cooldown_s = min(
+            self.probe_cooldown_s * (2 ** (h.consecutive_failures - 1)),
+            max(self.backoff_cap_s, self.probe_cooldown_s))
+        h.probe_after = self._time() + h.cooldown_s
+
+    def healthy_capacity_fraction(self) -> float:
+        """Surviving capacity share (probes due instances on the way)."""
+        act = self.active_instances()
+        return sum(i.capacity for i in act) / self._total_capacity
+
+    def fleet_health(self) -> Dict:
+        """Per-instance health + fleet counters (summary()["fleet"])."""
+        now = self._time()
+        stragglers = set(self.straggler.stragglers())
+        per = {}
+        for inst in self.instances:
+            h = self.health[inst.name]
+            per[inst.name] = {
+                "state": h.state,
+                "point": inst.hw.label,
+                "capacity": inst.capacity,
+                "frames": h.frames,
+                "shards": h.shards,
+                "failures": h.failures,
+                "quarantines": h.quarantines,
+                "straggler": inst.name in stragglers,
+                "last_beat_age_s": (None if h.last_beat is None
+                                    else now - h.last_beat),
+            }
+        return {"instances": per, "counters": dict(self.counters),
+                "healthy_fraction": sum(
+                    i.capacity for i in self.instances
+                    if self.health[i.name].state == "healthy")
+                / self._total_capacity,
+                "suspect_dead": list(self.heartbeat.dead_hosts())}
+
+    # -- apportionment ----------------------------------------------------
+
+    def shard_sizes(self, batch: int,
+                    active: Optional[Sequence[AcceleratorInstance]] = None,
+                    ) -> List[int]:
         """Deterministic capacity-proportional split summing to ``batch``.
 
-        Largest-remainder apportionment: every instance gets the floor of
-        its proportional share, the leftover frames go to the largest
-        fractional remainders (ties to the earlier instance).  Instances
-        may receive 0 frames for small batches.
+        Largest-remainder apportionment over ``active`` (default: the
+        whole fleet): every instance gets the floor of its proportional
+        share, the leftover frames go to the largest fractional
+        remainders (ties to the earlier instance).  Instances may receive
+        0 frames for small batches.  Quarantine passes the reduced
+        healthy set here, so a degraded fleet re-deals the same frames
+        deterministically.
         """
         if batch < 0:
             raise ValueError(f"batch must be >= 0, got {batch}")
-        quotas = [batch * i.capacity / self._total_capacity
-                  for i in self.instances]
+        insts = self.instances if active is None else tuple(active)
+        if not insts:
+            raise NoHealthyInstances("no instances to apportion over")
+        total = sum(i.capacity for i in insts)
+        quotas = [batch * i.capacity / total for i in insts]
         sizes = [int(q) for q in quotas]
         order = sorted(range(len(quotas)),
                        key=lambda j: (-(quotas[j] - sizes[j]), j))
@@ -97,32 +268,169 @@ class ShardedDispatcher:
             sizes[j] += 1
         return sizes
 
+    # -- shard execution --------------------------------------------------
+
+    def _paced_floor_s(self, inst: AcceleratorInstance,
+                       sim_specs: Optional[Tuple[LayerSpec, ...]],
+                       size: int) -> float:
+        """Modeled device time for a shard at the instance's point."""
+        if self.pace != "hardware" or not sim_specs:
+            return 0.0
+        key = (inst.hw.label, sim_specs, size)
+        t = self._pace_memo.get(key)
+        if t is None:
+            acc = build_accelerator(inst.hw.accelerator,
+                                    inst.hw.bit_rate_gbps)
+            rep = sim.simulate(acc, sim_specs, batch=size)
+            t = size / rep.fps
+            self._pace_memo[key] = t
+        return t
+
+    def _run_shard(self, inst: AcceleratorInstance, plan: engine.ModelPlan,
+                   shard: jax.Array, interpret: Optional[bool],
+                   pace_floor_s: float) -> Tuple[jax.Array, float]:
+        """Worker-thread body: inject faults, execute, pace to device time.
+
+        Raises typed faults (InstanceCrashed / ReconfigStuck) straight out
+        of the future; the coordinator turns them into retries.
+        """
+        t0 = time.perf_counter()
+        if self.fault_injector is not None:
+            effects = self.fault_injector.on_dispatch(inst.name)
+            if effects.delay_s > 0:
+                self._sleep(effects.delay_s)
+            if effects.fault is not None:
+                self.fault_injector.raise_for(effects.fault, inst.name)
+        out = engine.forward_jit(plan, shard, interpret=interpret)
+        out = jax.block_until_ready(out)
+        exec_s = time.perf_counter() - t0
+        if pace_floor_s > exec_s:
+            self._sleep(pace_floor_s - exec_s)
+            exec_s = pace_floor_s
+        return out, exec_s
+
+    def _ensure_pool(self) -> ThreadPoolExecutor:
+        if self._pool is None:
+            # 2x fleet size: a shard orphaned past its deadline keeps its
+            # worker until the injected hang ends; headroom keeps retry
+            # rounds from queueing behind a sleeping straggler thread
+            self._pool = ThreadPoolExecutor(
+                max_workers=max(2 * len(self.instances), 4),
+                thread_name_prefix="shard")
+        return self._pool
+
+    # -- dispatch ---------------------------------------------------------
+
     def run(self, plan: engine.ModelPlan, xb: jax.Array,
             interpret: Optional[bool] = None,
+            sim_specs: Optional[Sequence[LayerSpec]] = None,
             ) -> Tuple[jax.Array, List[ShardRun]]:
-        """Serve one batch sharded across the fleet.
+        """Serve one batch sharded across the fleet, surviving faults.
 
-        Returns the concatenated outputs (request order preserved) and
-        one ``ShardRun`` per non-empty shard.  Bitwise-identical to
-        ``engine.forward_jit(plan, xb)`` because quantization, GEMM rows
-        and epilogue scales are all per image.
+        Returns the concatenated outputs (request order preserved) and one
+        ``ShardRun`` per *successful* shard execution.  Bitwise-identical
+        to ``engine.forward_jit(plan, xb)`` regardless of which instances
+        ran, failed, or retried — quantization, GEMM rows and epilogue
+        scales are all per image.
+
+        ``sim_specs`` (the model's simulator layer table) enables
+        hardware pacing when the dispatcher was built with
+        ``pace="hardware"``.
         """
         b = xb.shape[0]
         if b == 0:
             raise ValueError("cannot dispatch an empty batch")
-        sizes = self.shard_sizes(b)
-        outs: List[jax.Array] = []
+        specs = tuple(sim_specs) if sim_specs else None
+        pool = self._ensure_pool()
+        segments: Dict[int, jax.Array] = {}      # offset -> shard output
         runs: List[ShardRun] = []
-        start = 0
-        for inst, size in zip(self.instances, sizes):
-            if size == 0:
-                continue
-            shard = xb[start:start + size]
-            start += size
-            t0 = time.perf_counter()
-            out = engine.forward_jit(plan, shard, interpret=interpret)
-            out = jax.block_until_ready(out)
-            runs.append(ShardRun(instance=inst, batch_size=size,
-                                 exec_s=time.perf_counter() - t0))
-            outs.append(out)
+        work: List[Tuple[int, int]] = [(0, b)]   # (offset, size) outstanding
+        attempt = 0
+        last_exc: Optional[BaseException] = None
+        while work:
+            active = self.active_instances()
+            if not active:
+                raise NoHealthyInstances(
+                    f"all {len(self.instances)} instances quarantined "
+                    f"with {sum(s for _, s in work)} frames outstanding"
+                ) from last_exc
+            # deal every outstanding range across the healthy set
+            tasks: List[Tuple[int, int, AcceleratorInstance]] = []
+            for off, size in work:
+                start = off
+                for inst, share in zip(
+                        active, self.shard_sizes(size, active=active)):
+                    if share == 0:
+                        continue
+                    tasks.append((start, share, inst))
+                    start += share
+            futures: Dict[Future, Tuple[int, int, AcceleratorInstance]] = {}
+            for off, size, inst in tasks:
+                shard = xb[off:off + size]
+                floor = self._paced_floor_s(inst, specs, size)
+                self.counters["dispatched_shards"] += 1
+                futures[pool.submit(self._run_shard, inst, plan, shard,
+                                    interpret, floor)] = (off, size, inst)
+            failed: List[Tuple[int, int]] = []
+            pending = set(futures)
+            t_submit = time.perf_counter()
+            while pending:
+                timeout = None
+                if self.deadline_s is not None:
+                    timeout = max(
+                        0.0,
+                        self.deadline_s - (time.perf_counter() - t_submit))
+                done, pending = futures_wait(pending, timeout=timeout,
+                                             return_when=FIRST_COMPLETED)
+                if not done:       # deadline expired for every pending shard
+                    for fut in pending:
+                        off, size, inst = futures[fut]
+                        fut.cancel()   # drop if not started; else orphan it
+                        exc = ShardDeadlineExceeded(inst.name,
+                                                    self.deadline_s)
+                        last_exc = exc
+                        self.counters["timeouts"] += 1
+                        self._quarantine(inst)
+                        failed.append((off, size))
+                    break
+                for fut in done:
+                    off, size, inst = futures[fut]
+                    exc = fut.exception()
+                    if exc is None:
+                        out, exec_s = fut.result()
+                        segments[off] = out
+                        runs.append(ShardRun(instance=inst, batch_size=size,
+                                             exec_s=exec_s, attempt=attempt))
+                        h = self.health[inst.name]
+                        h.frames += size
+                        h.shards += 1
+                        h.consecutive_failures = 0
+                        h.last_beat = self._time()
+                        self.heartbeat.beat(inst.name)
+                        self.straggler.record(inst.name, exec_s)
+                        self.counters["completed_shards"] += 1
+                    elif isinstance(exc, ServingFault):
+                        last_exc = exc
+                        self.counters["faults"] += 1
+                        self._quarantine(inst)
+                        failed.append((off, size))
+                    else:            # programming error, not a chaos fault
+                        raise exc
+            if failed:
+                attempt += 1
+                self.counters["retries"] += 1
+                if attempt > self.max_retries:
+                    raise RetriesExhausted(
+                        f"{sum(s for _, s in failed)} frames still failing "
+                        f"after {self.max_retries} retries") from last_exc
+                self._sleep(min(self.backoff_base_s * (2 ** (attempt - 1)),
+                                self.backoff_cap_s))
+            work = sorted(failed)
+        outs = [segments[off] for off in sorted(segments)]
         return jnp.concatenate(outs, axis=0), runs
+
+    def close(self) -> None:
+        """Shut down the shard thread pool (idempotent)."""
+        if self._pool is not None:
+            self._pool.shutdown(wait=False, cancel_futures=True)
+            self._pool = None

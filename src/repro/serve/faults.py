@@ -1,0 +1,236 @@
+"""Photonic fault injection + the serving stack's typed failure domain.
+
+Real MRR accelerators fail in characteristic ways: thermal drift detunes
+rings until the comb must re-lock (HEANA, arxiv 2402.03247, models the
+tuning cost), a comb-switch can stick mid-reconfiguration (the switching
+latencies of arxiv 2402.03149), a control host can hang or die outright.
+A serving fleet has to keep producing *correct* results at degraded
+throughput through all of them — which is only testable if the failures
+themselves are injectable and replayable.
+
+``FaultInjector`` is that layer: a deterministic schedule of
+``FaultEvent``s keyed by each instance's *dispatch count* (not wall time),
+so a chaos run replays bit-identically — the Nth shard sent to ``acc1``
+always hits the same fault regardless of host speed.  The dispatcher
+consults the injector once per shard dispatch (and once per quarantine
+probe — a probe IS a dispatch attempt, which is how finite-duration
+faults expire and instances earn readmission).
+
+Fault modes and their serving semantics:
+
+* ``CRASH``          — the instance is gone: the shard raises
+                       ``InstanceCrashed``; permanent unless ``duration``
+                       bounds it.
+* ``STUCK_RECONFIG`` — the comb-switch is stuck: the shard raises
+                       ``ReconfigStuck``; typically transient (the
+                       controller re-locks after ``duration`` attempts).
+* ``STRAGGLE``       — the host hangs: the shard sleeps ``severity``
+                       seconds before executing, tripping the
+                       dispatcher's per-shard deadline.
+* ``THERMAL_DRIFT``  — rings drifted off resonance: every dispatch pays
+                       ``severity`` seconds of re-lock/retune delay but
+                       still completes correctly (degradation, not
+                       failure).
+
+The typed errors double as the public failure vocabulary of the whole
+serve package (``AdmissionRejected`` is what SLO shedding raises).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# typed failure domain
+# ---------------------------------------------------------------------------
+
+class ServingFault(RuntimeError):
+    """Base of every typed serving failure."""
+
+
+class InstanceCrashed(ServingFault):
+    """A fleet instance died while (or before) executing a shard."""
+
+    def __init__(self, instance: str):
+        super().__init__(f"instance {instance!r} crashed")
+        self.instance = instance
+
+
+class ReconfigStuck(ServingFault):
+    """The instance's comb-switch stuck mid-reconfiguration (transient)."""
+
+    def __init__(self, instance: str):
+        super().__init__(
+            f"instance {instance!r}: comb-switch reconfiguration stuck")
+        self.instance = instance
+
+
+class ShardDeadlineExceeded(ServingFault):
+    """A shard missed its per-shard deadline (straggler/hang)."""
+
+    def __init__(self, instance: str, deadline_s: float):
+        super().__init__(f"instance {instance!r} missed the "
+                         f"{deadline_s * 1e3:.0f}ms shard deadline")
+        self.instance = instance
+        self.deadline_s = deadline_s
+
+
+class NoHealthyInstances(ServingFault):
+    """Every instance is quarantined/dead; the batch cannot be served."""
+
+
+class RetriesExhausted(ServingFault):
+    """A batch kept failing past the dispatcher's retry budget."""
+
+
+class AdmissionRejected(ServingFault):
+    """SLO admission control shed this request (typed, catchable).
+
+    Raised at ``submit`` time when the surviving fleet cannot plausibly
+    serve the request inside the SLO deadline; carries the estimate that
+    justified the rejection so clients can back off intelligently.
+    """
+
+    def __init__(self, model: str, est_s: float, deadline_s: float,
+                 healthy_fraction: float):
+        super().__init__(
+            f"request for {model!r} shed: estimated completion "
+            f"{est_s * 1e3:.0f}ms exceeds the {deadline_s * 1e3:.0f}ms SLO "
+            f"(healthy fleet fraction {healthy_fraction:.2f})")
+        self.model = model
+        self.est_s = est_s
+        self.deadline_s = deadline_s
+        self.healthy_fraction = healthy_fraction
+
+
+# ---------------------------------------------------------------------------
+# fault schedule
+# ---------------------------------------------------------------------------
+
+class FaultKind(enum.Enum):
+    CRASH = "crash"
+    STUCK_RECONFIG = "stuck_reconfig"
+    STRAGGLE = "straggle"
+    THERMAL_DRIFT = "thermal_drift"
+
+
+#: kinds that fail the shard outright (vs merely delaying it)
+FAILING_KINDS = (FaultKind.CRASH, FaultKind.STUCK_RECONFIG)
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault on one instance.
+
+    Activation is by the instance's dispatch count: the fault is live for
+    dispatch indices ``start <= n < start + duration`` (``duration=None``
+    means forever).  ``severity`` is the injected delay in seconds for
+    STRAGGLE / THERMAL_DRIFT and ignored for the failing kinds.
+    """
+    instance: str
+    kind: FaultKind
+    start: int
+    duration: Optional[int] = None
+    severity: float = 0.0
+
+    def __post_init__(self) -> None:
+        if self.start < 0:
+            raise ValueError(f"start must be >= 0, got {self.start}")
+        if self.duration is not None and self.duration < 1:
+            raise ValueError(f"duration must be >= 1, got {self.duration}")
+        if self.severity < 0:
+            raise ValueError(f"severity must be >= 0, got {self.severity}")
+
+    def active_at(self, n: int) -> bool:
+        if n < self.start:
+            return False
+        return self.duration is None or n < self.start + self.duration
+
+
+@dataclasses.dataclass(frozen=True)
+class DispatchEffects:
+    """What the injector does to one dispatch: delay, then maybe fail."""
+    delay_s: float = 0.0
+    fault: Optional[FaultKind] = None     # a FAILING_KINDS member, or None
+
+
+class FaultInjector:
+    """Deterministic, replayable fault schedule over a fleet.
+
+    Stateful only in per-instance dispatch counters; two injectors built
+    from the same schedule replay identically against the same dispatch
+    sequence.  ``trips`` counts every fault activation by kind (the chaos
+    harness's ground truth for "the faults actually fired").
+    """
+
+    def __init__(self, schedule: Sequence[FaultEvent] = ()):
+        self.schedule: Tuple[FaultEvent, ...] = tuple(schedule)
+        self.dispatches: Dict[str, int] = {}
+        self.trips: Dict[str, int] = {k.value: 0 for k in FaultKind}
+        # shard workers dispatch concurrently; counters must not tear
+        self._lock = threading.Lock()
+
+    def events_for(self, instance: str) -> List[FaultEvent]:
+        return [e for e in self.schedule if e.instance == instance]
+
+    def peek(self, instance: str) -> List[FaultEvent]:
+        """Faults that WOULD be live for the instance's next dispatch."""
+        n = self.dispatches.get(instance, 0)
+        return [e for e in self.events_for(instance) if e.active_at(n)]
+
+    def on_dispatch(self, instance: str) -> DispatchEffects:
+        """Advance the instance's dispatch counter and report effects.
+
+        Delays accumulate across simultaneously-live delay faults; a
+        failing fault (crash/stuck-reconfig) wins over delays — the shard
+        never executes.
+        """
+        with self._lock:
+            n = self.dispatches.get(instance, 0)
+            self.dispatches[instance] = n + 1
+            delay = 0.0
+            failing: Optional[FaultKind] = None
+            for e in self.events_for(instance):
+                if not e.active_at(n):
+                    continue
+                self.trips[e.kind.value] += 1
+                if e.kind in FAILING_KINDS:
+                    failing = failing or e.kind
+                else:
+                    delay += e.severity
+        return DispatchEffects(delay_s=delay, fault=failing)
+
+    @staticmethod
+    def raise_for(fault: FaultKind, instance: str) -> None:
+        if fault is FaultKind.CRASH:
+            raise InstanceCrashed(instance)
+        if fault is FaultKind.STUCK_RECONFIG:
+            raise ReconfigStuck(instance)
+        raise ValueError(f"{fault} is not a failing fault kind")
+
+
+def random_schedule(seed: int, instances: Sequence[str], n_events: int = 3,
+                    max_start: int = 8, max_duration: int = 4,
+                    kinds: Sequence[FaultKind] = tuple(FaultKind),
+                    max_severity_s: float = 0.05,
+                    ) -> Tuple[FaultEvent, ...]:
+    """A seeded chaos schedule: same seed -> same faults, replayable."""
+    if not instances:
+        raise ValueError("need at least one instance to schedule faults on")
+    rng = np.random.default_rng(seed)
+    events = []
+    for _ in range(n_events):
+        kind = kinds[int(rng.integers(len(kinds)))]
+        events.append(FaultEvent(
+            instance=instances[int(rng.integers(len(instances)))],
+            kind=kind,
+            start=int(rng.integers(max_start)),
+            duration=int(rng.integers(1, max_duration + 1)),
+            severity=(0.0 if kind in FAILING_KINDS
+                      else float(rng.uniform(0.0, max_severity_s)))))
+    return tuple(events)

@@ -6,17 +6,30 @@ batch, runs it through the whole-model jitted pipeline
 (engine.forward_jit) — the entire layer chain against the resident DKV
 imprint in ONE XLA dispatch — and splits the outputs back to their
 requests.  With a ``dispatcher`` (serve/dispatch.py) the batch is instead
-sharded across the fleet's simulated accelerator instances,
-bitwise-identically.  Wall-clock and modeled-hardware telemetry is
-recorded per batch — per shard and instance operating point when sharded
-(telemetry.py); pipeline compile stalls are counted per
-(plan, batch bucket) in ``pipeline_compiles``.
+sharded *concurrently* across the fleet's simulated accelerator
+instances, bitwise-identically — surviving injected crashes, stragglers
+and stuck reconfigurations via the dispatcher's retry/quarantine loop.
+Wall-clock and modeled-hardware telemetry is recorded per batch — per
+shard and instance operating point when sharded (telemetry.py); pipeline
+compile stalls are counted per (plan, batch bucket) in
+``pipeline_compiles``; fleet health and admission counters surface in
+``telemetry.summary()["fleet"]``.
+
+SLO-aware admission control (``slo=ServeSLO(...)``): every ``submit``
+estimates time-to-completion from the queue depth ahead, the measured
+per-frame service rate (EMA over served batches), and the *surviving*
+fleet capacity; a request the degraded fleet cannot plausibly serve
+inside the deadline is shed at the door with a typed
+``AdmissionRejected`` instead of being queued to blow the p99.  When
+quarantined instances probe back in, the capacity estimate recovers and
+admission resumes — graceful degradation, then graceful recovery.
 
 The clock is injectable (``time_fn``) so tests and trace replays can drive
 a virtual clock; by default everything is wall time.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Any, Callable, Dict, Optional, Sequence
 
@@ -27,8 +40,34 @@ import numpy as np
 from .. import engine
 from .batcher import DynamicBatcher
 from .dispatch import ShardedDispatcher
+from .faults import AdmissionRejected
 from .registry import PlanRegistry
 from .telemetry import DEFAULT_HW_POINTS, HardwarePoint, TelemetryLog
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSLO:
+    """The serving contract admission control defends.
+
+    ``deadline_s``   — target submit-to-result completion time.
+    ``flush_fraction`` — force-dispatch a queue once its oldest request
+                       has burned this fraction of the deadline waiting
+                       (don't let batching eat the whole budget).
+    ``min_observations`` — batches to observe before shedding anything
+                       (the rate estimate needs data; admit until then).
+    """
+    deadline_s: float
+    flush_fraction: float = 0.5
+    min_observations: int = 1
+
+    def __post_init__(self) -> None:
+        if self.deadline_s <= 0:
+            raise ValueError(
+                f"deadline_s must be > 0, got {self.deadline_s}")
+        if not 0 < self.flush_fraction <= 1:
+            raise ValueError(
+                f"flush_fraction must be in (0, 1], got "
+                f"{self.flush_fraction}")
 
 
 class CNNServer:
@@ -37,21 +76,67 @@ class CNNServer:
                  hw_points: Sequence[HardwarePoint] = DEFAULT_HW_POINTS,
                  interpret: Optional[bool] = None,
                  time_fn: Callable[[], float] = time.monotonic,
-                 dispatcher: Optional[ShardedDispatcher] = None):
+                 dispatcher: Optional[ShardedDispatcher] = None,
+                 slo: Optional[ServeSLO] = None):
         self.registry = registry
         self.batcher = DynamicBatcher(max_batch=max_batch,
                                       max_wait_s=max_wait_s)
         self.telemetry = TelemetryLog(hw_points)
         self.interpret = interpret
         self.dispatcher = dispatcher
+        self.slo = slo
         self._time = time_fn
         self.results: Dict[int, np.ndarray] = {}
         #: pipeline trace+compile stalls paid inside step() so far — one
         #: per (plan, batch-size bucket), like the registry's plan misses
         self.pipeline_compiles = 0
+        #: admission-control state: shed/admitted counters + the EMA of
+        #: measured per-frame service time the estimator runs on
+        self.admission = {"admitted": 0, "shed": 0}
+        self._frame_s_ema: Optional[float] = None
+        self._observed_batches = 0
+        if dispatcher is not None or slo is not None:
+            self.telemetry.attach_fleet(self._fleet_report)
+
+    # -- fleet / admission reporting -------------------------------------
+
+    def _fleet_report(self) -> Dict:
+        """summary()["fleet"]: dispatcher health + admission counters."""
+        out = (self.dispatcher.fleet_health()
+               if self.dispatcher is not None else {})
+        out["admission"] = dict(
+            self.admission,
+            slo_deadline_s=(self.slo.deadline_s if self.slo else None),
+            est_frame_s=self._frame_s_ema)
+        return out
 
     def _now(self, now: Optional[float]) -> float:
         return self._time() if now is None else now
+
+    # -- admission control ------------------------------------------------
+
+    def _healthy_fraction(self) -> float:
+        if self.dispatcher is None:
+            return 1.0
+        return self.dispatcher.healthy_capacity_fraction()
+
+    def estimated_completion_s(self) -> Optional[float]:
+        """Expected submit-to-result time for a request arriving now.
+
+        Queue depth ahead (plus this request) times the measured
+        per-frame service time, inflated by the surviving fleet capacity
+        — a 2-of-3 instance loss means a third of the throughput, three
+        times the drain time.  ``None`` until enough batches have been
+        observed to trust the rate.
+        """
+        if (self._frame_s_ema is None or self.slo is None
+                or self._observed_batches < self.slo.min_observations):
+            return None
+        frac = self._healthy_fraction()
+        if frac <= 0:
+            return float("inf")
+        frames_ahead = self.batcher.pending() + 1
+        return frames_ahead * self._frame_s_ema / frac
 
     def submit(self, model: str, x: Any,
                now: Optional[float] = None) -> int:
@@ -59,7 +144,12 @@ class CNNServer:
 
         Shape is validated here, at the door: a malformed image must not
         reach a formed batch, where it would fail the whole batch's stack
-        after its requests have already left the queue.
+        after its requests have already left the queue.  An unregistered
+        model raises ``KeyError`` here too — never deep inside ``step()``
+        after the request is already queued.  Under an SLO, admission
+        control runs here as well: a request the surviving fleet cannot
+        serve inside the deadline is shed with ``AdmissionRejected`` and
+        nothing is queued.
         """
         if model not in self.registry.registered:
             raise KeyError(f"model {model!r} not registered "
@@ -69,6 +159,14 @@ class CNNServer:
         if got != expect:
             raise ValueError(f"model {model!r} expects input shape "
                              f"{expect}, got {got}")
+        if self.slo is not None:
+            est = self.estimated_completion_s()
+            if est is not None and est > self.slo.deadline_s:
+                self.admission["shed"] += 1
+                raise AdmissionRejected(
+                    model=model, est_s=est, deadline_s=self.slo.deadline_s,
+                    healthy_fraction=self._healthy_fraction())
+        self.admission["admitted"] += 1
         return self.batcher.submit(model, x, self._now(now))
 
     def pending(self) -> int:
@@ -80,7 +178,9 @@ class CNNServer:
         ``results`` and the telemetry records otherwise grow for the
         server's lifetime — callers running multiple traces against one
         server (or consuming results incrementally) should reset between
-        traces, after harvesting what they need.
+        traces, after harvesting what they need.  Admission counters and
+        the service-rate EMA survive (they describe the server, not the
+        trace).
         """
         if self.batcher.pending():
             raise RuntimeError(
@@ -88,6 +188,14 @@ class CNNServer:
                 f"before resetting")
         self.results.clear()
         self.telemetry.records.clear()
+
+    def _slo_flush_due(self, now: float) -> bool:
+        """Dispatch early once queue wait eats into the SLO deadline."""
+        if self.slo is None:
+            return False
+        oldest = self.batcher.oldest_wait_s(now)
+        return (oldest is not None
+                and oldest >= self.slo.flush_fraction * self.slo.deadline_s)
 
     def step(self, now: Optional[float] = None, force: bool = False) -> int:
         """Serve at most one batch; returns the number of requests served.
@@ -97,15 +205,17 @@ class CNNServer:
         chain, batch size bucketed to the next power of two.  The recorded
         per-batch ``exec_s`` is full service time: plan fetch (a registry
         miss pays compile/LRU-reload here, where the requester actually
-        waits), batch stacking, kernel execution, and — for the first
-        batch in a (plan, bucket) — the pipeline trace+compile stall,
-        which ``pipeline_compiles`` counts.  Request latencies are taken
-        on the server's own clock (``time_fn``), so a virtual-clock replay
-        stays in one unit system; on the default wall clock they include
-        the compile stall too.
+        waits), batch stacking, kernel execution — including any fault
+        retries/re-apportionment when dispatched across a fleet — and,
+        for the first batch in a (plan, bucket), the pipeline
+        trace+compile stall, which ``pipeline_compiles`` counts.  Request
+        latencies are taken on the server's own clock (``time_fn``), so a
+        virtual-clock replay stays in one unit system; on the default
+        wall clock they include the compile stall too.
         """
         now = self._now(now)
-        fb = self.batcher.pop_batch(now, force=force)
+        fb = self.batcher.pop_batch(now,
+                                    force=force or self._slo_flush_due(now))
         if fb is None:
             return 0
         t0 = time.perf_counter()
@@ -119,13 +229,22 @@ class CNNServer:
             out = jax.block_until_ready(out)
         else:
             # shard the batch across the fleet; outputs keep request order
+            # (sim_specs lets a hardware-paced fleet floor each shard at
+            # its instance's modeled device time)
             out, runs = self.dispatcher.run(entry.plan, xb,
-                                            interpret=self.interpret)
+                                            interpret=self.interpret,
+                                            sim_specs=entry.sim_specs)
             shard_info = [(r.instance.name, r.batch_size, r.instance.hw,
                            r.exec_s) for r in runs]
         self.pipeline_compiles += (engine.pipeline_cache_info()["compiles"]
                                    - compiles_before)
         exec_s = time.perf_counter() - t0
+        # service-rate EMA feeds admission control; fault retries inflate
+        # exec_s, which is exactly the backpressure the estimator needs
+        per_frame = exec_s / fb.size
+        self._frame_s_ema = (per_frame if self._frame_s_ema is None
+                             else 0.3 * per_frame + 0.7 * self._frame_s_ema)
+        self._observed_batches += 1
         done = self._now(None)
         out_np = np.asarray(out)
         lats = []

@@ -12,7 +12,7 @@ the batch's frames exactly as Section VI-A describes.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -122,6 +122,19 @@ class TelemetryLog:
         # never re-walks a paper-scale layer table for a repeat batch shape
         self._hw_memo: Dict[Tuple[str, int, str], HwCost] = {}
         self._model_specs: Dict[str, Tuple[LayerSpec, ...]] = {}
+        # live fleet-health provider (dispatcher + admission control);
+        # summary() snapshots it so the report carries retry/timeout/
+        # shed/quarantine counters and per-instance state
+        self._fleet_source: Optional[Callable[[], Dict]] = None
+
+    def attach_fleet(self, source: Callable[[], Dict]) -> None:
+        """Register the live fleet-health provider for summary()["fleet"].
+
+        ``source`` is called at summary time (a snapshot, not a copy), so
+        the report always reflects the fleet's current quarantine state
+        and cumulative retry/timeout/shed counters.
+        """
+        self._fleet_source = source
 
     def _accelerator(self, point: HardwarePoint) -> AcceleratorConfig:
         """The built accelerator for a point (fleet points added lazily)."""
@@ -273,6 +286,8 @@ class TelemetryLog:
             "latency_p99_s": self.latency_percentile(99),
             "hardware": self._hw_summary(self.records),
             "dispatch": self._dispatch_summary(self.records),
+            "fleet": (self._fleet_source() if self._fleet_source is not None
+                      else {}),
             "activation_stream": self._act_stream_summary(self.records),
             "models": {},
         }

@@ -1,12 +1,20 @@
 """Sharded multi-accelerator dispatch tests: apportionment, bitwise
 identity vs the single-accelerator path on ragged batches, per-shard
 telemetry costing, and server/registry routing."""
+import math
+
 import jax
 import numpy as np
 import pytest
 
 from repro import engine, serve
 from repro.serve import models as zoo
+
+try:                       # optional dev dep (requirements-dev.txt)
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:        # pragma: no cover
+    given = None
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -44,6 +52,52 @@ def test_shard_sizes_sum_and_proportionality():
 def test_shard_sizes_deterministic():
     d = _fleet((1.0, 1.0, 1.0))
     assert d.shard_sizes(7) == d.shard_sizes(7) == [3, 2, 2]
+
+
+def test_shard_sizes_over_reduced_active_set():
+    """Quarantine re-deals over the healthy subset: same invariants."""
+    d = _fleet((2.0, 1.0, 1.0))
+    healthy = [d.instances[0], d.instances[2]]       # acc1 quarantined
+    for b in range(0, 17):
+        sizes = d.shard_sizes(b, active=healthy)
+        assert len(sizes) == 2 and sum(sizes) == b
+        assert all(s >= 0 for s in sizes)
+    assert d.shard_sizes(9, active=healthy) == [6, 3]   # 2:1 capacities
+    with pytest.raises(serve.NoHealthyInstances):
+        d.shard_sizes(4, active=[])
+
+
+if given is not None:
+    @settings(max_examples=120, deadline=None)
+    @given(batch=st.integers(0, 64),
+           caps=st.lists(st.floats(0.25, 8.0), min_size=1, max_size=6),
+           mask=st.lists(st.booleans(), min_size=6, max_size=6))
+    def test_shard_sizes_property(batch, caps, mask):
+        """Largest-remainder apportionment invariants, any fleet shape:
+        sizes sum to the batch, are deterministic, never negative, and
+        stay within one frame of each instance's exact quota — including
+        over a reduced (quarantine-survivor) active subset."""
+        d = _fleet(tuple(caps))
+        sizes = d.shard_sizes(batch)
+        assert sum(sizes) == batch
+        assert sizes == d.shard_sizes(batch)         # deterministic
+        total = sum(caps)
+        for s, c in zip(sizes, caps):
+            quota = batch * c / total
+            assert math.floor(quota) - 1e-9 <= s <= math.ceil(quota) + 1e-9
+        active = [i for i, m in zip(d.instances, mask) if m]
+        if active:
+            reduced = d.shard_sizes(batch, active=active)
+            assert len(reduced) == len(active)
+            assert sum(reduced) == batch
+            assert all(s >= 0 for s in reduced)
+        else:
+            with pytest.raises(serve.NoHealthyInstances):
+                d.shard_sizes(batch, active=active)
+else:                      # pragma: no cover
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_shard_sizes_property():
+        pass
 
 
 def test_dispatcher_validates_instances():
@@ -90,6 +144,38 @@ def test_sharded_dispatch_bitwise_with_planner_plan():
     out, _ = _fleet((2.0, 1.0), [RMAM1, RMAM5]).run(planned, xb)
     np.testing.assert_array_equal(np.asarray(out),
                                   np.asarray(engine.forward_jit(fixed, xb)))
+
+
+def test_hardware_pacing_floors_shard_service_time():
+    """pace="hardware" floors each shard at the cycle-true simulator's
+    modeled device time for that shard size at the instance's operating
+    point — fleet throughput then scales like K real accelerators instead
+    of K threads fighting over the host."""
+    from repro.core import simulator as sim
+    from repro.core.tpc import build_accelerator
+    name = "shufflenet_mini"
+    plan = engine.compile_model(f"{name}#pace", zoo.serving_defs(name))
+    specs = tuple(zoo.paper_scale_specs(name))
+    rng = np.random.default_rng(11)
+    xb = rng.normal(size=(4, *zoo.serving_input_shape(name))).astype(
+        np.float32)
+    single = np.asarray(engine.forward_jit(plan, xb))
+    d = serve.ShardedDispatcher(serve.default_fleet(2, hw=RMAM1),
+                                pace="hardware")
+    out, runs = d.run(plan, xb, sim_specs=specs)
+    d.close()
+    np.testing.assert_array_equal(np.asarray(out), single)   # pacing only
+    acc = build_accelerator("RMAM", 1.0)
+    for r in runs:
+        floor = r.batch_size / sim.simulate(acc, specs,
+                                            batch=r.batch_size).fps
+        assert r.exec_s >= floor - 1e-6
+    # without sim_specs there is nothing to pace against: still bitwise
+    d2 = serve.ShardedDispatcher(serve.default_fleet(2, hw=RMAM1),
+                                 pace="hardware")
+    out2, _ = d2.run(plan, xb)
+    d2.close()
+    np.testing.assert_array_equal(np.asarray(out2), single)
 
 
 # ---------------------------------------------------------------------------

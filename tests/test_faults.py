@@ -1,0 +1,219 @@
+"""Fault-injection tests: deterministic schedules, typed faults, and the
+dispatcher's retry/quarantine/readmission loop staying bitwise-identical
+to the healthy single-accelerator path under injected chaos."""
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro import engine, serve
+from repro.serve import models as zoo
+from repro.serve.faults import FAILING_KINDS
+
+jax.config.update("jax_platform_name", "cpu")
+
+MODEL = "shufflenet_mini"
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    engine.plan_cache_clear()
+    yield
+    engine.plan_cache_clear()
+
+
+def _plan(key):
+    return engine.compile_model(f"{MODEL}#{key}", zoo.serving_defs(MODEL))
+
+
+def _batch(b, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(b, *zoo.serving_input_shape(MODEL))).astype(
+        np.float32)
+
+
+# ---------------------------------------------------------------------------
+# fault schedule semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_event_windows():
+    finite = serve.FaultEvent("a", serve.FaultKind.CRASH, start=2,
+                              duration=3)
+    assert [finite.active_at(n) for n in range(7)] == \
+        [False, False, True, True, True, False, False]
+    forever = serve.FaultEvent("a", serve.FaultKind.CRASH, start=1)
+    assert not forever.active_at(0)
+    assert all(forever.active_at(n) for n in (1, 5, 1000))
+
+
+def test_injector_deterministic_by_dispatch_count():
+    """Replay is keyed on per-instance dispatch counts, never wall time."""
+    schedule = [
+        serve.FaultEvent("a", serve.FaultKind.STRAGGLE, start=1,
+                         duration=2, severity=0.25),
+        serve.FaultEvent("a", serve.FaultKind.CRASH, start=4),
+        serve.FaultEvent("b", serve.FaultKind.THERMAL_DRIFT, start=0,
+                         duration=1, severity=0.125),
+    ]
+    trace = []
+    for _ in range(2):
+        inj = serve.FaultInjector(schedule)
+        run = [(inst, e.delay_s, e.fault)
+               for inst in ("a", "a", "b", "a", "b", "a", "a")
+               for e in [inj.on_dispatch(inst)]]
+        trace.append(run)
+    assert trace[0] == trace[1]
+    # a: n=0 clean, n=1..2 straggle 0.25s, n=3 clean, n=4+ crash
+    assert trace[0][0] == ("a", 0.0, None)
+    assert trace[0][1] == ("a", 0.25, None)          # a's n=1
+    assert trace[0][3] == ("a", 0.25, None)          # a's n=2
+    assert trace[0][5] == ("a", 0.0, None)           # a's n=3
+    assert trace[0][6] == ("a", 0.0, serve.FaultKind.CRASH)   # a's n=4
+    # b: n=0 drifts, n=1 clean
+    assert trace[0][2] == ("b", 0.125, None)
+    assert trace[0][4] == ("b", 0.0, None)
+
+
+def test_random_schedule_is_seeded():
+    names = ("acc0", "acc1", "acc2")
+    a = serve.random_schedule(7, names, n_events=6)
+    b = serve.random_schedule(7, names, n_events=6)
+    assert a == b
+    assert len(a) == 6
+    assert {e.instance for e in a} <= set(names)
+    assert all(isinstance(e.kind, serve.FaultKind) for e in a)
+    c = serve.random_schedule(8, names, n_events=6)
+    assert c != a
+
+
+def test_typed_faults_and_raise_for():
+    inj = serve.FaultInjector([])
+    with pytest.raises(serve.InstanceCrashed):
+        inj.raise_for(serve.FaultKind.CRASH, "a")
+    with pytest.raises(serve.ReconfigStuck):
+        inj.raise_for(serve.FaultKind.STUCK_RECONFIG, "a")
+    for kind in FAILING_KINDS:
+        with pytest.raises(serve.ServingFault):
+            inj.raise_for(kind, "a")
+    assert issubclass(serve.AdmissionRejected, serve.ServingFault)
+    assert issubclass(serve.ShardDeadlineExceeded, serve.ServingFault)
+
+
+def test_overlapping_delays_accumulate_and_failing_fault_wins():
+    inj = serve.FaultInjector([
+        serve.FaultEvent("a", serve.FaultKind.STRAGGLE, start=0,
+                         duration=2, severity=0.2),
+        serve.FaultEvent("a", serve.FaultKind.THERMAL_DRIFT, start=0,
+                         duration=1, severity=0.05),
+        serve.FaultEvent("a", serve.FaultKind.CRASH, start=1, duration=1),
+    ])
+    e0 = inj.on_dispatch("a")
+    assert e0.delay_s == pytest.approx(0.25) and e0.fault is None
+    e1 = inj.on_dispatch("a")              # straggle + crash overlap
+    assert e1.delay_s == pytest.approx(0.2)
+    assert e1.fault is serve.FaultKind.CRASH
+    e2 = inj.on_dispatch("a")              # everything expired
+    assert e2.delay_s == 0.0 and e2.fault is None
+
+
+# ---------------------------------------------------------------------------
+# chaos dispatch: bitwise identity + health loop
+# ---------------------------------------------------------------------------
+
+def test_crash_retry_is_bitwise_and_counts():
+    plan = _plan("crash")
+    xb = _batch(5, seed=1)
+    single = np.asarray(engine.forward_jit(plan, xb))
+    inj = serve.FaultInjector([
+        serve.FaultEvent("acc1", serve.FaultKind.CRASH, start=0)])
+    d = serve.ShardedDispatcher(serve.default_fleet(3), fault_injector=inj,
+                                probe_cooldown_s=60.0)
+    out, runs = d.run(plan, xb)
+    d.close()
+    np.testing.assert_array_equal(np.asarray(out), single)
+    assert sum(r.batch_size for r in runs) == 5
+    assert any(r.attempt > 0 for r in runs)          # retried frames ran
+    assert d.counters["faults"] == 1
+    assert d.counters["retries"] == 1
+    assert d.counters["quarantines"] == 1
+    assert d.health["acc1"].state == "quarantined"
+    assert d.health["acc1"].frames == 0              # never served a frame
+
+
+def test_all_instances_lost_raises_no_healthy_with_cause():
+    plan = _plan("lost")
+    inj = serve.FaultInjector([
+        serve.FaultEvent(f"acc{i}", serve.FaultKind.CRASH, start=0)
+        for i in range(2)])
+    d = serve.ShardedDispatcher(serve.default_fleet(2), fault_injector=inj,
+                                probe_cooldown_s=60.0)
+    with pytest.raises(serve.NoHealthyInstances) as ei:
+        d.run(plan, _batch(4))
+    d.close()
+    assert isinstance(ei.value.__cause__, serve.InstanceCrashed)
+
+
+def test_persistent_deadline_misses_exhaust_retries():
+    """A fleet that keeps missing its deadline fails typed, with the
+    last shard failure chained as the cause."""
+    plan = _plan("exhaust")
+    engine.forward_jit(plan, _batch(2))              # pay compile up front
+    inj = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.STRAGGLE, start=0,
+                         severity=0.2)])             # forever
+    d = serve.ShardedDispatcher(
+        serve.default_fleet(1), fault_injector=inj, deadline_s=0.03,
+        max_retries=2, backoff_base_s=0.001, probe_cooldown_s=0.0)
+    with pytest.raises(serve.RetriesExhausted) as ei:
+        d.run(plan, _batch(2))
+    d.close()
+    assert isinstance(ei.value.__cause__, serve.ShardDeadlineExceeded)
+    assert d.counters["timeouts"] >= 3               # initial + 2 retries
+    # probes passed (straggle is a delay, not a refusal) so the instance
+    # kept being readmitted — and kept missing the deadline
+    assert d.counters["readmissions"] >= 2
+
+
+def test_finite_fault_expires_through_probes_and_readmits():
+    plan = _plan("readmit")
+    xb = _batch(4, seed=2)
+    single = np.asarray(engine.forward_jit(plan, xb))
+    inj = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.STUCK_RECONFIG, start=0,
+                         duration=2)])
+    d = serve.ShardedDispatcher(serve.default_fleet(2), fault_injector=inj,
+                                probe_cooldown_s=0.005)
+    out, _ = d.run(plan, xb)                         # acc0 faults, acc1 serves
+    np.testing.assert_array_equal(np.asarray(out), single)
+    assert d.health["acc0"].state == "quarantined"
+    deadline = time.monotonic() + 5.0
+    while (len(d.active_instances()) < 2 and time.monotonic() < deadline):
+        time.sleep(0.005)
+    assert d.health["acc0"].state == "healthy"
+    assert d.counters["readmissions"] == 1
+    assert d.counters["probe_failures"] >= 1         # n=1 probe still stuck
+    out2, runs2 = d.run(plan, xb)                    # both instances serve
+    d.close()
+    np.testing.assert_array_equal(np.asarray(out2), single)
+    assert {r.instance.name for r in runs2} == {"acc0", "acc1"}
+    assert d.health["acc0"].frames > 0
+
+
+def test_fleet_health_export_shape():
+    inj = serve.FaultInjector([
+        serve.FaultEvent("acc1", serve.FaultKind.CRASH, start=0)])
+    d = serve.ShardedDispatcher(serve.default_fleet(2), fault_injector=inj,
+                                probe_cooldown_s=60.0)
+    plan = _plan("health")
+    d.run(plan, _batch(3))
+    d.close()
+    h = d.fleet_health()
+    assert set(h) == {"instances", "counters", "healthy_fraction",
+                      "suspect_dead"}
+    assert h["healthy_fraction"] == pytest.approx(0.5)
+    assert h["instances"]["acc1"]["state"] == "quarantined"
+    assert h["instances"]["acc0"]["state"] == "healthy"
+    assert h["instances"]["acc0"]["frames"] == 3
+    assert h["counters"]["completed_shards"] >= 2
+    assert h["instances"]["acc0"]["last_beat_age_s"] is not None

@@ -156,11 +156,19 @@ def test_checkpoint_atomicity_no_partial_dirs():
 # ---------------------------------------------------------------------------
 
 def test_heartbeat_monitor():
-    hb = HeartbeatMonitor(timeout_s=10.0)
-    hb.beat(0, now=100.0)
-    hb.beat(1, now=105.0)
-    assert hb.dead_hosts(now=108.0) == []
-    assert hb.dead_hosts(now=112.0) == [0]
+    # single injectable clock: beats and deadness checks read time_fn —
+    # there is no caller-supplied `now` mixed with a hidden wall clock
+    clock = {"t": 100.0}
+    hb = HeartbeatMonitor(timeout_s=10.0, time_fn=lambda: clock["t"])
+    hb.beat(0)
+    clock["t"] = 105.0
+    hb.beat(1)
+    clock["t"] = 108.0
+    assert hb.dead_hosts() == []
+    clock["t"] = 112.0
+    assert hb.dead_hosts() == [0]
+    hb.beat(0)                         # a fresh beat clears suspicion
+    assert hb.dead_hosts() == []
 
 
 def test_straggler_detector():
@@ -196,6 +204,40 @@ def test_run_with_restarts_recovers():
     last = run_with_restarts(step, 0, 5, restore, max_restarts=2)
     assert last == 5
     assert calls["restores"] == 1
+
+
+def test_run_with_restarts_backoff_doubles_to_cap():
+    sleeps = []
+    calls = {"n": 0}
+
+    def step(i):
+        calls["n"] += 1
+        if calls["n"] <= 4:
+            raise RuntimeError(f"crash {calls['n']}")
+
+    last = run_with_restarts(step, 0, 2, lambda: 0, max_restarts=4,
+                             backoff_base_s=0.1, backoff_cap_s=0.25,
+                             sleep_fn=sleeps.append)
+    assert last == 2
+    # exponential from the base, saturating at the cap; one sleep per
+    # restart, taken BEFORE hitting the checkpoint store again
+    assert sleeps == [0.1, 0.2, 0.25, 0.25]
+
+
+def test_run_with_restarts_exhaustion_chains_failure_history():
+    calls = {"n": 0}
+
+    def step(i):
+        calls["n"] += 1
+        raise RuntimeError(f"crash {calls['n']}")
+
+    with pytest.raises(RuntimeError, match="crash 3") as ei:
+        run_with_restarts(step, 0, 5, lambda: 0, max_restarts=2,
+                          sleep_fn=lambda s: None)
+    # the terminal exception chains the previous attempt explicitly
+    # (`raise exc from last_exc`) — the post-mortem sees the sequence
+    assert isinstance(ei.value.__cause__, RuntimeError)
+    assert "crash 2" in str(ei.value.__cause__)
 
 
 # ---------------------------------------------------------------------------

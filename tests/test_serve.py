@@ -213,6 +213,88 @@ def test_server_rejects_malformed_input_at_submit():
     assert set(outs) == {good}
 
 
+def test_server_unknown_model_rejected_at_submit_leaves_queue_empty():
+    """An unregistered model must fail at submit — if the request were
+    queued, step() would crash mid-loop with the batch already popped and
+    every other request in it silently dropped."""
+    reg = _tiny_registry(["m1"])
+    srv = serve.CNNServer(reg, max_batch=2, max_wait_s=0.0)
+    with pytest.raises(KeyError, match="not registered"):
+        srv.submit("ghost", np.zeros((4, 4, 5), np.float32))
+    assert srv.pending() == 0             # nothing queued by the bad submit
+    assert srv.run_until_drained() == {}
+    # same contract for the malformed-shape path
+    with pytest.raises(ValueError, match="expects input shape"):
+        srv.submit("m1", np.zeros((3, 3, 5), np.float32))
+    assert srv.pending() == 0
+    assert srv.telemetry.summary()["requests"] == 0
+
+
+# ---------------------------------------------------------------------------
+# SLO admission control + fleet degradation
+# ---------------------------------------------------------------------------
+
+def test_slo_flush_dispatches_before_batching_eats_the_deadline():
+    """With an SLO, a ragged queue force-flushes once the oldest request
+    has waited flush_fraction of the deadline — batching must not eat
+    the whole latency budget waiting for a full batch."""
+    reg = _tiny_registry(["m1"])
+    srv = serve.CNNServer(reg, max_batch=8, max_wait_s=60.0,
+                          slo=serve.ServeSLO(deadline_s=1.0,
+                                             flush_fraction=0.5))
+    rid = srv.submit("m1", np.zeros((4, 4, 5), np.float32), now=0.0)
+    assert srv.step(now=0.1) == 0         # under the flush threshold: hold
+    assert srv.step(now=0.6) == 1         # 0.6s >= 0.5 * 1.0s: dispatch
+    assert rid in srv.results
+
+
+def test_admission_sheds_typed_on_degraded_fleet_then_recovers():
+    """ISSUE acceptance: under an injected 2-of-3 instance loss, submit
+    sheds with a typed AdmissionRejected (carrying the estimate that
+    justified it) instead of queueing the request to blow p99 — and
+    readmits the fleet (and the traffic) when quarantine probes pass."""
+    clock = {"t": 0.0}
+    fleet = serve.ShardedDispatcher(
+        serve.default_fleet(3), probe_cooldown_s=5.0,
+        time_fn=lambda: clock["t"], sleep_fn=lambda s: None)
+    reg = _tiny_registry(["m1"])
+    srv = serve.CNNServer(reg, max_batch=2, max_wait_s=0.0,
+                          dispatcher=fleet, time_fn=lambda: clock["t"])
+    x = np.zeros((4, 4, 5), np.float32)
+    srv.submit("m1", x)
+    srv.submit("m1", x)
+    srv.run_until_drained()               # seeds the service-rate EMA
+    ema = srv._frame_s_ema
+    assert ema is not None and ema > 0
+    srv.slo = serve.ServeSLO(deadline_s=2 * ema)
+    # healthy fleet, empty queue: one frame ahead at full capacity
+    assert srv.estimated_completion_s() == pytest.approx(ema)
+    fleet._quarantine(fleet.instances[0])     # injected 2-of-3 loss
+    fleet._quarantine(fleet.instances[1])
+    assert fleet.healthy_capacity_fraction() == pytest.approx(1 / 3)
+    with pytest.raises(serve.AdmissionRejected) as ei:
+        srv.submit("m1", x)
+    err = ei.value
+    assert err.model == "m1"
+    assert err.deadline_s == pytest.approx(2 * ema)
+    assert err.est_s == pytest.approx(3 * ema)    # 1/3 capacity, 3x drain
+    assert err.healthy_fraction == pytest.approx(1 / 3)
+    assert srv.pending() == 0             # shed at the door, never queued
+    assert srv.admission["shed"] == 1
+    flt = srv.telemetry.summary()["fleet"]
+    assert flt["admission"]["shed"] == 1
+    assert flt["admission"]["slo_deadline_s"] == pytest.approx(2 * ema)
+    assert flt["healthy_fraction"] == pytest.approx(1 / 3)
+    clock["t"] = 10.0                     # probes come due — and pass
+    assert len(fleet.active_instances()) == 3
+    assert fleet.counters["readmissions"] == 2
+    rid = srv.submit("m1", x)             # capacity back: admission resumes
+    outs = srv.run_until_drained()
+    assert rid in outs
+    assert srv.admission["shed"] == 1     # no further sheds
+    fleet.close()
+
+
 def test_server_reset_starts_a_fresh_trace():
     reg = _tiny_registry(["m1"])
     srv = serve.CNNServer(reg, max_batch=2, max_wait_s=0.0)
