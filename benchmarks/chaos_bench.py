@@ -369,7 +369,8 @@ def concurrent_vs_sequential(reps: int, seed: int) -> Dict:
             t_shard = time.perf_counter()
             jax.block_until_ready(
                 engine.forward_jit(entry.plan, xb[start:start + size]))
-            floor = conc._paced_floor_s(inst, tuple(entry.sim_specs), size)
+            floor = conc._modeled_shard_s(inst, tuple(entry.sim_specs),
+                                          size)
             rest = floor - (time.perf_counter() - t_shard)
             if rest > 0:
                 time.sleep(rest)

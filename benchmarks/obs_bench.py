@@ -1,0 +1,206 @@
+"""Observability bench: traced chaos serving + tracing-overhead gate.
+
+Two measurements, recorded under ``BENCH_serve.json["observability"]`` and
+gated in ``scripts/check_bench.py``:
+
+* ``traced_chaos`` — drives the real fault-injected serving stack
+  (CNNServer -> concurrent ShardedDispatcher, crash + thermal-drift
+  schedule) with the span tracer enabled, then exports the dual-clock
+  Chrome trace (host wall time next to modeled photonic hardware time,
+  per fleet instance) to ``experiments/obs/chaos_trace.json`` and the
+  metrics snapshot to ``experiments/obs/metrics.json``.  Asserts the
+  trace validates against the event schema, carries per-shard spans and
+  fault instants on both clocks, and that ``summary()["layers"]``
+  attributes >= 95% of the modeled time to named layers.
+* ``overhead`` — the same single-instance serving trace back-to-back with
+  tracing disabled (the no-op path) and enabled; the throughput ratio
+  enabled/disabled is the ``obs.overhead.ratio`` metric check_bench
+  floors at 0.95.
+
+Usage:  PYTHONPATH=src python -m benchmarks.obs_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict
+
+import numpy as np
+
+from repro import obs, serve
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_serve.json"
+OBS_DIR = REPO_ROOT / "experiments" / "obs"
+TRACE_PATH = OBS_DIR / "chaos_trace.json"
+METRICS_PATH = OBS_DIR / "metrics.json"
+
+MODEL = "shufflenet_mini"       # smallest serving-zoo member
+
+
+def _inputs(model: str, n: int, seed: int) -> np.ndarray:
+    shape = serve.serving_input_shape(model)
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=(n, *shape)).astype(np.float32)
+
+
+def _drain(srv: "serve.CNNServer", xs: np.ndarray) -> float:
+    t0 = time.perf_counter()
+    for x in xs:
+        srv.submit(MODEL, x)
+    srv.run_until_drained()
+    return time.perf_counter() - t0
+
+
+# ---------------------------------------------------------------------------
+# traced chaos trace -> dual-clock Perfetto export
+# ---------------------------------------------------------------------------
+
+def traced_chaos(n_requests: int, seed: int) -> Dict:
+    """Serve a fault-injected trace with tracing on; export both clocks."""
+    xs = _inputs(MODEL, n_requests, seed)
+    tracer = obs.Tracer(capacity=65536)
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc1", serve.FaultKind.CRASH, start=2,
+                         duration=3),
+        serve.FaultEvent("acc2", serve.FaultKind.THERMAL_DRIFT, start=1,
+                         duration=2, severity=0.005)])
+    fleet = serve.ShardedDispatcher(serve.default_fleet(3),
+                                    fault_injector=injector,
+                                    probe_cooldown_s=0.02)
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet, tracer=tracer)
+    # prewarm compiles outside the trace: the spans should show serving,
+    # not XLA trace time
+    warm = _inputs(MODEL, 4, seed + 1)
+    _drain(srv, warm)
+    srv.reset()
+    tracer.clear()
+    wall = _drain(srv, xs)
+    fleet.close()
+
+    OBS_DIR.mkdir(parents=True, exist_ok=True)
+    records = tracer.events()
+    doc = obs.write_trace(TRACE_PATH, records)
+    n_events = obs.validate_chrome_trace(doc, require_dual_clock=True)
+    census = obs.category_census(records)
+    summ = srv.telemetry.summary()
+    METRICS_PATH.write_text(
+        json.dumps(srv.telemetry.metrics.snapshot(), indent=2) + "\n")
+
+    layers = summ["layers"][MODEL]
+    occupancy = obs.hw_occupancy(doc)
+    row = {
+        "completed": summ["requests"],
+        "submitted": n_requests,
+        "images_per_s_wall": n_requests / wall,
+        "trace_events": n_events,
+        "trace_path": str(TRACE_PATH.relative_to(REPO_ROOT)),
+        "metrics_path": str(METRICS_PATH.relative_to(REPO_ROOT)),
+        "category_census": census,
+        "shard_spans": census.get("shard", 0),
+        "fault_instants": census.get("fault", 0),
+        "hw_busy_s": occupancy,
+        "tracer": tracer.stats(),
+        "layers_coverage": layers["coverage"],
+        "top_hotspots": layers["top"],
+        "counters": dict(fleet.counters),
+    }
+    assert summ["requests"] == n_requests, "trace did not drain"
+    assert row["shard_spans"] > 0, "no per-shard spans recorded"
+    assert row["fault_instants"] > 0, "injected faults left no instants"
+    assert census.get("request", 0) >= 2 * n_requests, (
+        "request async begin/end pairs missing")
+    assert occupancy, "no modeled hardware occupancy exported"
+    assert layers["coverage"] >= 0.95, (
+        f"per-layer attribution covers only {layers['coverage']:.3f} "
+        f"of the modeled time")
+    print(f"obs_bench,traced_chaos,events={n_events},"
+          f"shard_spans={row['shard_spans']},"
+          f"faults={row['fault_instants']},"
+          f"coverage={layers['coverage']:.4f}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# tracing overhead: enabled vs disabled serving throughput
+# ---------------------------------------------------------------------------
+
+def overhead(n_requests: int, rounds: int, seed: int) -> Dict:
+    """Enabled-vs-disabled serving throughput on the no-dispatcher path.
+
+    Both servers share one registry (and therefore one set of compiled
+    pipelines); each round serves the same trace disabled then enabled.
+    The gated ratio divides *best-of-rounds* throughputs: host noise
+    (scheduler hiccups, other tenants) only ever adds wall time, so the
+    minimum wall time per mode is the low-noise estimate of what each
+    path actually costs — medians of interleaved rounds still swung
+    +-14% on shared hosts, far past the 5% overhead bar.
+    """
+    reg = serve.paper_cnn_registry()
+    xs = _inputs(MODEL, n_requests, seed)
+    srv_off = serve.CNNServer(reg, max_batch=8)
+    srv_on = serve.CNNServer(reg, max_batch=8, tracer=obs.Tracer())
+    # warm both servers through the shared compiled pipeline
+    for srv in (srv_off, srv_on):
+        _drain(srv, xs[: min(8, len(xs))])
+        srv.reset()
+    off_s, on_s = [], []
+    for _ in range(rounds):
+        off_s.append(_drain(srv_off, xs))
+        srv_off.reset()
+        on_s.append(_drain(srv_on, xs))
+        srv_on.reset()
+        srv_on.tracer.clear()
+    off_img_s = n_requests / min(off_s)
+    on_img_s = n_requests / min(on_s)
+    ratio = on_img_s / off_img_s
+    row = {
+        "disabled_images_per_s": off_img_s,
+        "enabled_images_per_s": on_img_s,
+        "ratio": ratio,
+        "rounds": rounds,
+        "requests_per_round": n_requests,
+    }
+    print(f"obs_bench,overhead,disabled={off_img_s:.1f},"
+          f"enabled={on_img_s:.1f},ratio={ratio:.4f}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def run(smoke: bool = True, seed: int = 0) -> Dict:
+    n = 12 if smoke else 48
+    rounds = 3 if smoke else 7
+    results = {
+        "traced_chaos": traced_chaos(n, seed),
+        "overhead": overhead(4 * n, rounds, seed),
+    }
+    # merge-write: serve_bench/chaos_bench own the other families here
+    doc = {}
+    if OUT_PATH.exists():
+        try:
+            doc = json.loads(OUT_PATH.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["observability"] = dict(results, smoke=smoke, seed=seed)
+    OUT_PATH.write_text(json.dumps(doc, indent=2, default=float) + "\n")
+    print(f"obs_bench,json,{OUT_PATH}")
+    return results
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small traces for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

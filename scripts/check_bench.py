@@ -2,12 +2,14 @@
 
 Snapshots the committed ``BENCH_serve.json`` / ``BENCH_kernels.json``,
 re-runs the benches that write them — ``benchmarks.serve_bench --smoke``,
-``benchmarks.chaos_bench --smoke`` (both merge-write BENCH_serve.json)
-plus the full ``kernel_bench`` (the smoke variant of kernel_bench is
-assertion-only and writes no JSON; budget ~2 min per round, and a
-first-round regression triggers a second confirming round — CI gives the
-job a 20-minute timeout) — and fails when a gated throughput family
-regresses by more than ``--threshold`` (default 30%).
+``benchmarks.chaos_bench --smoke``, ``benchmarks.obs_bench --smoke`` (all
+three merge-write BENCH_serve.json) plus the full ``kernel_bench`` (the
+smoke variant of kernel_bench is assertion-only and writes no JSON;
+budget ~2 min per round, and a first-round regression triggers a second
+confirming round — CI gives the job a 20-minute timeout) — and fails when
+a gated throughput family regresses by more than ``--threshold`` (default
+30%), or when a metric with an absolute floor (``ABS_FLOORS`` — e.g. the
+tracing-overhead ratio ``obs.overhead.ratio`` >= 0.95) lands below it.
 
 Tracked metrics are *same-run speedup ratios* (higher is better) plus
 chaos invariants:
@@ -26,6 +28,10 @@ chaos invariants:
   implicit-GEMM vs im2col+GEMM per serving-zoo conv layer, and the
   quantized-domain int8 path vs the quantize-then-float oracle per
   serving-zoo layer (conv and FC)
+* obs: tracing enabled-vs-disabled throughput ratio and per-layer
+  hardware-time attribution coverage — gated against fixed ABS_FLOORS
+  (the values are already same-run normalized ratios, so a fixed bar is
+  meaningful where a baseline drift bound would let them erode)
 
 Absolute wall img/s swings several-fold with host load on shared CI
 runners (and on a laptop), which would page people for nothing; each
@@ -71,10 +77,11 @@ from typing import Dict, Iterator, Tuple
 REPO_ROOT = Path(__file__).resolve().parent.parent
 BENCH_FILES = ("BENCH_serve.json", "BENCH_kernels.json")
 SMOKE_COMMANDS = (
-    # order matters: serve_bench and chaos_bench both merge-write
-    # BENCH_serve.json (each preserves the other's sections)
+    # order matters: serve_bench, chaos_bench and obs_bench all
+    # merge-write BENCH_serve.json (each preserves the others' sections)
     [sys.executable, "-m", "benchmarks.serve_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.chaos_bench", "--smoke"],
+    [sys.executable, "-m", "benchmarks.obs_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.run", "--only", "kernel_bench"],
 )
 
@@ -86,6 +93,18 @@ SMOKE_COMMANDS = (
 #: harness (bitwise under faults, typed shedding, fleet healing) encoded
 #: as 1.0/0.01 so any violation craters its family geomean.
 GATED_FAMILY_PREFIXES = ("kernels.", "serve_fleet.", "serve_fault.")
+
+#: metrics gated by an absolute floor on the FRESH value instead of a
+#: ratio against the baseline.  The overhead ratio and attribution
+#: coverage are already normalized (enabled/disabled throughput on the
+#: same host in the same process; fraction of modeled time attributed),
+#: so the bar is a fixed number, not a drift bound: tracing disabled must
+#: keep >= 95% of untraced throughput, and the per-layer attribution must
+#: cover >= 95% of the modeled hardware time.
+ABS_FLOORS = {
+    "obs.overhead.ratio": 0.95,
+    "obs.attribution.coverage": 0.95,
+}
 
 
 def serve_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
@@ -122,6 +141,14 @@ def serve_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
         if "healed_instances" in row:
             yield (f"serve_fault.healed.{name}",
                    1.0 if row["healed_instances"] == 3 else 0.01)
+    # floor-gated observability metrics (benchmarks/obs_bench.py)
+    observ = doc.get("observability", {})
+    ov = observ.get("overhead", {})
+    if "ratio" in ov:
+        yield "obs.overhead.ratio", float(ov["ratio"])
+    tc = observ.get("traced_chaos", {})
+    if "layers_coverage" in tc:
+        yield "obs.attribution.coverage", float(tc["layers_coverage"])
 
 
 def kernel_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
@@ -202,18 +229,54 @@ def regressions(baseline: Dict[str, float], fresh: Dict[str, float],
     return out
 
 
+def floor_failures(fresh: Dict[str, float], verbose: bool = True,
+                   ) -> Dict[str, float]:
+    """Fresh metrics below their ABS_FLOORS bar: {metric: value}.
+
+    Unlike ``regressions`` this checks the fresh value against a fixed
+    floor, not against the committed baseline — a slow erosion of an
+    already-normalized ratio should fail the gate even if each PR's drop
+    stays under the drift threshold.  A metric absent from the fresh run
+    is reported but never fails (schema evolution must not break CI).
+    """
+    out: Dict[str, float] = {}
+    for name, floor in sorted(ABS_FLOORS.items()):
+        value = fresh.get(name)
+        if value is None:
+            if verbose:
+                print(f"check_bench: {name}: absent — floor {floor} "
+                      f"not checked")
+            continue
+        ok = value >= floor
+        if verbose:
+            print(f"check_bench: {name}: value={value:.4f} "
+                  f"floor={floor} [{'ok' if ok else 'BELOW FLOOR'}]")
+        if not ok:
+            out[name] = value
+    return out
+
+
 def report(failures: Dict[str, Tuple[float, int]], threshold: float,
-           n_metrics: int) -> int:
+           n_metrics: int, floored: Dict[str, float]) -> int:
+    rc = 0
     if failures:
         print(f"check_bench: FAIL — {len(failures)} metric famil"
               f"{'y' if len(failures) == 1 else 'ies'} regressed more "
               f"than {threshold:.0%}:")
         for fam, (gm, n) in sorted(failures.items()):
             print(f"  {fam}: geomean {gm:.2f}x over {n} metric(s)")
-        return 1
-    print(f"check_bench: PASS — no metric family regressed more than "
-          f"{threshold:.0%} ({n_metrics} baseline metrics)")
-    return 0
+        rc = 1
+    if floored:
+        print(f"check_bench: FAIL — {len(floored)} metric(s) below "
+              f"their absolute floor:")
+        for name, value in sorted(floored.items()):
+            print(f"  {name}: {value:.4f} < floor {ABS_FLOORS[name]}")
+        rc = 1
+    if rc == 0:
+        print(f"check_bench: PASS — no metric family regressed more than "
+              f"{threshold:.0%} ({n_metrics} baseline metrics, "
+              f"{len(ABS_FLOORS)} floor-gated)")
+    return rc
 
 
 def main() -> int:
@@ -248,20 +311,30 @@ def main() -> int:
             print("check_bench: no baseline metrics found — nothing to gate")
             return 0
         failed = regressions(baseline, fresh, args.threshold)
-        if failed and not args.no_run:
+        floored = floor_failures(fresh)
+        if (failed or floored) and not args.no_run:
             # confirm before failing the PR: a single interpret-mode round
             # can flake past the bar; a real regression reproduces
             print(f"check_bench: {len(failed)} first-round family "
-                  f"regression(s) — re-running the smoke benches to confirm")
+                  f"regression(s), {len(floored)} floor miss(es) — "
+                  f"re-running the smoke benches to confirm")
             run_smoke_benches()
-            second = regressions(baseline, collect(REPO_ROOT),
-                                 args.threshold, verbose=False)
+            fresh2 = collect(REPO_ROOT)
+            second = regressions(baseline, fresh2, args.threshold,
+                                 verbose=False)
             confirmed = {k: second[k] for k in failed if k in second}
             for k in sorted(set(failed) - set(confirmed)):
                 print(f"check_bench: family {k}: not reproduced on re-run "
                       f"(first geomean {failed[k][0]:.2f}x) — treated as "
                       f"noise")
             failed = confirmed
+            second_floor = floor_failures(fresh2, verbose=False)
+            for k in sorted(set(floored) - set(second_floor)):
+                print(f"check_bench: {k}: floor miss not reproduced on "
+                      f"re-run (first value {floored[k]:.4f}) — treated "
+                      f"as noise")
+            floored = {k: second_floor[k] for k in floored
+                       if k in second_floor}
         if not args.no_run:
             # put the committed baselines back: the gate's bench runs must
             # not leave this host's smoke output in the working tree,
@@ -273,7 +346,7 @@ def main() -> int:
                     shutil.copy(snap, REPO_ROOT / fname)
             print("check_bench: restored committed BENCH_*.json baselines "
                   "to the working tree")
-    return report(failed, args.threshold, len(baseline))
+    return report(failed, args.threshold, len(baseline), floored)
 
 
 if __name__ == "__main__":

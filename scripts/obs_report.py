@@ -1,0 +1,133 @@
+"""Observability report: inspect the exported trace + metrics artifacts.
+
+Reads the artifacts the obs bench leaves under ``experiments/obs/`` (and
+the ``observability`` section of ``BENCH_serve.json``) and prints the
+human view of them:
+
+* trace validation — the Chrome trace-event schema check that Perfetto
+  runs implicitly, including the dual-clock requirement (events on both
+  the host process and the modeled-hardware process);
+* an event census per category and per phase, plus the modeled hardware
+  occupancy (busy seconds per fleet instance from the hw tracks);
+* the per-layer hardware-time hotspot table (top-K layers by attributed
+  modeled time, with kind / operating point / share columns);
+* with ``--prom``, the metrics snapshot re-rendered as Prometheus text
+  exposition via ``MetricsRegistry.from_snapshot`` — exactly what a
+  scrape endpoint would serve.
+
+``--check`` turns the report into a gate: any validation failure or a
+missing artifact exits nonzero (CI's obs-smoke job runs this after the
+bench to prove the committed artifacts stay loadable).
+
+Usage:
+    PYTHONPATH=src python scripts/obs_report.py [--trace PATH]
+        [--metrics PATH] [--bench PATH] [--top 5] [--prom] [--check]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO_ROOT / "src"))
+
+from repro.obs import (                                       # noqa: E402
+    MetricsRegistry, event_census, hw_occupancy, load_trace,
+    validate_chrome_trace)
+
+DEFAULT_TRACE = REPO_ROOT / "experiments" / "obs" / "chaos_trace.json"
+DEFAULT_METRICS = REPO_ROOT / "experiments" / "obs" / "metrics.json"
+DEFAULT_BENCH = REPO_ROOT / "BENCH_serve.json"
+
+
+def report_trace(path: Path) -> int:
+    """Validate + summarize the trace; returns the number of problems."""
+    if not path.exists():
+        print(f"obs_report: trace missing: {path}")
+        return 1
+    doc = load_trace(path)
+    try:
+        n = validate_chrome_trace(doc, require_dual_clock=True)
+    except ValueError as exc:
+        print(f"obs_report: INVALID trace {path}: {exc}")
+        return 1
+    print(f"obs_report: trace {path.relative_to(REPO_ROOT)}: {n} events, "
+          f"valid dual-clock Perfetto trace")
+    census = event_census(doc)
+    for cat, count in census.items():
+        print(f"  cat {cat:<16} {count:>6} event(s)")
+    busy = hw_occupancy(doc)
+    for inst, s in busy.items():
+        print(f"  hw occupancy {inst:<12} {s * 1e3:9.3f} ms modeled busy")
+    if not busy:
+        print("obs_report: no modeled-hardware occupancy tracks")
+        return 1
+    return 0
+
+
+def report_hotspots(bench_path: Path, top: int) -> int:
+    """Print the per-layer hotspot table from the bench's obs section."""
+    if not bench_path.exists():
+        print(f"obs_report: bench file missing: {bench_path}")
+        return 1
+    doc = json.loads(bench_path.read_text())
+    tc = doc.get("observability", {}).get("traced_chaos", {})
+    hotspots = tc.get("top_hotspots")
+    if not hotspots:
+        print(f"obs_report: no observability.traced_chaos.top_hotspots "
+              f"in {bench_path}")
+        return 1
+    cov = tc.get("layers_coverage")
+    print(f"obs_report: per-layer hardware-time hotspots "
+          f"(coverage {cov:.4f})" if cov is not None else
+          "obs_report: per-layer hardware-time hotspots")
+    print(f"  {'layer':<14} {'kind':<5} {'point':<10} "
+          f"{'time':>10} {'share':>7}")
+    for row in hotspots[:top]:
+        t_us = row.get("time_s", 0.0) * 1e6
+        print(f"  {row.get('layer', '?'):<14} {row.get('kind', '?'):<5} "
+              f"{row.get('point', '?'):<10} {t_us:8.1f}us "
+              f"{row.get('share', 0.0):6.1%}")
+    return 0
+
+
+def report_prom(metrics_path: Path) -> int:
+    """Re-render the metrics snapshot as Prometheus text exposition."""
+    if not metrics_path.exists():
+        print(f"obs_report: metrics snapshot missing: {metrics_path}")
+        return 1
+    snap = json.loads(metrics_path.read_text())
+    reg = MetricsRegistry.from_snapshot(snap)
+    sys.stdout.write(reg.prometheus_text())
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trace", type=Path, default=DEFAULT_TRACE)
+    ap.add_argument("--metrics", type=Path, default=DEFAULT_METRICS)
+    ap.add_argument("--bench", type=Path, default=DEFAULT_BENCH)
+    ap.add_argument("--top", type=int, default=5,
+                    help="hotspot rows to print")
+    ap.add_argument("--prom", action="store_true",
+                    help="also dump the Prometheus text exposition")
+    ap.add_argument("--check", action="store_true",
+                    help="exit nonzero on any missing/invalid artifact")
+    args = ap.parse_args()
+
+    problems = report_trace(args.trace)
+    problems += report_hotspots(args.bench, args.top)
+    if args.prom:
+        problems += report_prom(args.metrics)
+    if problems and args.check:
+        print(f"obs_report: CHECK FAILED — {problems} problem(s)")
+        return 1
+    if args.check:
+        print("obs_report: CHECK PASSED")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -10,7 +10,8 @@ from .executor import (forward, forward_f32, forward_im2col,  # noqa: F401
                        forward_layer, forward_layer_f32,
                        forward_layer_im2col, layer_route)
 from .pipeline import (batch_bucket, forward_jit, get_pipeline,  # noqa: F401
-                       pipeline_cache_clear, pipeline_cache_info)
+                       pipeline_cache_clear, pipeline_cache_info,
+                       pipeline_dispatch_counts)
 from .pipeline import evict as pipeline_evict  # noqa: F401
 from .plan import (DEFAULT_POINT, EnginePoint, LayerChoice,  # noqa: F401
                    LayerDef, LayerPlan, MODE_DENSE, MODE_DEPTHWISE,

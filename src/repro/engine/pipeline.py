@@ -58,7 +58,11 @@ CACHE_CAPACITY = 16
 # aliasing).
 _PIPELINES: "OrderedDict[int, Tuple[ModelPlan, Dict[bool, Callable]]]" = (
     OrderedDict())
-_STATS = {"hits": 0, "misses": 0, "compiles": 0, "evictions": 0}
+_STATS = {"hits": 0, "misses": 0, "compiles": 0, "evictions": 0,
+          "dispatches": 0}
+# (plan name, batch bucket) -> served-dispatch count; the obs layer reads
+# this to show which compiled buckets actually carry serving traffic
+_DISPATCH_COUNTS: Dict[Tuple[str, int], int] = {}
 # the sharded dispatcher serves shards from a thread pool; cache lookups,
 # insertions and LRU reordering must not interleave (jit itself is
 # thread-safe — only this bookkeeping needs the lock)
@@ -142,6 +146,10 @@ def forward_jit(plan: ModelPlan, x: jax.Array,
     fn = get_pipeline(plan, interpret)
     b = x.shape[0]
     bucket = batch_bucket(b)
+    with _LOCK:
+        _STATS["dispatches"] += 1
+        key = (plan.name, bucket)
+        _DISPATCH_COUNTS[key] = _DISPATCH_COUNTS.get(key, 0) + 1
     if bucket != b:
         pad = [(0, bucket - b)] + [(0, 0)] * (x.ndim - 1)
         x = jnp.pad(x, pad)                   # fresh buffer: safe to donate
@@ -166,7 +174,14 @@ def pipeline_cache_info() -> Dict[str, int]:
     return dict(_STATS, size=len(_PIPELINES))
 
 
+def pipeline_dispatch_counts() -> Dict[Tuple[str, int], int]:
+    """Served dispatches per (plan name, batch bucket)."""
+    with _LOCK:
+        return dict(_DISPATCH_COUNTS)
+
+
 def pipeline_cache_clear() -> None:
     _PIPELINES.clear()
+    _DISPATCH_COUNTS.clear()
     for k in _STATS:
         _STATS[k] = 0

@@ -151,6 +151,23 @@ class ModelPlan:
         return None if self.planner is None else self.planner.labels
 
     @property
+    def layer_points(self) -> Dict[str, str]:
+        """Operating point by layer name, for per-layer attribution.
+
+        Empty for non-planner plans — every layer sits at the base point,
+        so there is nothing layer-specific to report.
+        """
+        if self.planner is None:
+            return {}
+        return {c.name: c.option.label for c in self.planner.choices}
+
+    @property
+    def reconfig_switches(self) -> int:
+        """Operating-point changes the plan pays between consecutive
+        layers (0 for fixed-geometry plans)."""
+        return 0 if self.planner is None else self.planner.switches
+
+    @property
     def weight_bytes(self) -> int:
         """Resident HBM bytes of the whole imprint (int8 operands + f32
         scale/bias metadata) — what the serving registry reports."""

@@ -1,0 +1,34 @@
+"""Observability: hardware-time tracing, attribution, streaming metrics.
+
+The instrumentation spine of the serving stack, in four pieces:
+
+* :mod:`~repro.obs.tracer` — request/batch/shard spans in a bounded ring
+  buffer with per-category sampling and a free no-op path when disabled;
+* :mod:`~repro.obs.export` — Chrome trace-event JSON (Perfetto-loadable)
+  on two clocks: host wall time and modeled photonic hardware time;
+* :mod:`~repro.obs.attribution` — per-layer modeled time/energy/
+  utilization accounting for every served batch, with operating points
+  and reconfiguration switches from the Viterbi plan;
+* :mod:`~repro.obs.metrics` — log-bucketed streaming histograms,
+  counters, gauges; Prometheus text and JSON snapshot export.
+
+Pure standard library + the repo's own simulator reports: importable
+anywhere without pulling in jax.
+"""
+from .attribution import LayerAttribution, LayerStat
+from .export import (HW_PROCESS_NAME, PID_HOST, PID_HW, chrome_trace,
+                     event_census, hw_occupancy, load_trace,
+                     validate_chrome_trace, write_trace)
+from .metrics import (DEFAULT_GROWTH, Counter, Gauge, LogHistogram,
+                      MetricsRegistry)
+from .tracer import (NOOP_TRACER, NoopTracer, SpanRecord, Tracer,
+                     category_census)
+
+__all__ = [
+    "LayerAttribution", "LayerStat",
+    "HW_PROCESS_NAME", "PID_HOST", "PID_HW", "chrome_trace",
+    "event_census", "hw_occupancy", "load_trace", "validate_chrome_trace",
+    "write_trace",
+    "DEFAULT_GROWTH", "Counter", "Gauge", "LogHistogram", "MetricsRegistry",
+    "NOOP_TRACER", "NoopTracer", "SpanRecord", "Tracer", "category_census",
+]

@@ -1,0 +1,186 @@
+"""Chrome trace-event export with a dual wall-clock / hardware-clock view.
+
+``chrome_trace`` turns a tracer's :class:`~repro.obs.tracer.SpanRecord`
+stream into the Chrome trace-event JSON object format, loadable in
+Perfetto (https://ui.perfetto.dev) or ``chrome://tracing``.  The trace
+carries **two processes**:
+
+* pid 1 — *host (wall clock)*: spans as they actually ran on the host,
+  one track per thread, request lifetimes as async begin/end pairs,
+  fault/shed/probe instants.
+* pid 2 — *photonic hardware (modeled)*: every span that was annotated
+  with ``span.hw(instance, seconds)`` is mirrored as a complete event of
+  the *modeled* duration from ``core/simulator``, one track per fleet
+  instance.  Events on a track are laid end-to-end behind a per-instance
+  occupancy cursor (an event starts at the later of its wall start and
+  the instance's cursor), so each track reads as cycle-true device
+  occupancy: gaps are host overhead, back-to-back blocks are the device
+  saturated.
+
+Timestamps are microseconds relative to the earliest event, per the
+trace-event spec.  ``tid`` strings are mapped to small integers with
+``thread_name`` metadata so strict importers are happy.
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence
+
+from .tracer import SpanRecord
+
+PID_HOST = 1
+PID_HW = 2
+
+HOST_PROCESS_NAME = "host (wall clock)"
+HW_PROCESS_NAME = "photonic hardware (modeled)"
+
+_VALID_PHASES = frozenset("XibeM")
+
+
+class _TidMap:
+    """First-seen-order mapping of track names to integer tids."""
+
+    def __init__(self) -> None:
+        self._ids: Dict[str, int] = {}
+
+    def __call__(self, name: str) -> int:
+        tid = self._ids.get(name)
+        if tid is None:
+            tid = self._ids[name] = len(self._ids) + 1
+        return tid
+
+    def items(self):
+        return self._ids.items()
+
+
+def chrome_trace(records: Sequence[SpanRecord]) -> Dict:
+    """Render records as a Chrome trace-event JSON document (dict)."""
+    events: List[Dict] = []
+    if records:
+        t_base = min(r.t0 for r in records)
+        host_tids = _TidMap()
+        hw_tids = _TidMap()
+        hw_cursor: Dict[str, float] = {}
+        for r in sorted(records, key=lambda r: r.t0):
+            ts_us = (r.t0 - t_base) * 1e6
+            ev: Dict = {"name": r.name, "cat": r.cat, "ph": r.ph,
+                        "pid": PID_HOST, "tid": host_tids(r.tid),
+                        "ts": round(ts_us, 3), "args": dict(r.args)}
+            if r.ph == "X":
+                ev["dur"] = round(r.dur * 1e6, 3)
+            elif r.ph == "i":
+                ev["s"] = "t"
+            elif r.ph in ("b", "e"):
+                ev["id"] = r.aid
+            events.append(ev)
+            if r.ph == "X" and r.hw_instance is not None and r.hw_s:
+                # hardware clock: pack onto the instance's occupancy track
+                cursor = hw_cursor.get(r.hw_instance, 0.0)
+                start = max(ts_us, cursor)
+                dur_us = r.hw_s * 1e6
+                hw_cursor[r.hw_instance] = start + dur_us
+                events.append({
+                    "name": r.name, "cat": "hw." + r.cat, "ph": "X",
+                    "pid": PID_HW, "tid": hw_tids(r.hw_instance),
+                    "ts": round(start, 3), "dur": round(dur_us, 3),
+                    "args": dict(r.args, modeled_s=r.hw_s,
+                                 instance=r.hw_instance)})
+        meta: List[Dict] = [
+            {"name": "process_name", "ph": "M", "pid": PID_HOST, "tid": 0,
+             "args": {"name": HOST_PROCESS_NAME}},
+            {"name": "process_name", "ph": "M", "pid": PID_HW, "tid": 0,
+             "args": {"name": HW_PROCESS_NAME}},
+        ]
+        for name, tid in host_tids.items():
+            meta.append({"name": "thread_name", "ph": "M", "pid": PID_HOST,
+                         "tid": tid, "args": {"name": name}})
+        for name, tid in hw_tids.items():
+            meta.append({"name": "thread_name", "ph": "M", "pid": PID_HW,
+                         "tid": tid, "args": {"name": name}})
+        events = meta + events
+    return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+
+def validate_chrome_trace(doc: Dict, require_dual_clock: bool = False) -> int:
+    """Check a trace document against the event schema Perfetto expects.
+
+    Raises ``ValueError`` on the first violation; returns the number of
+    events otherwise.  With ``require_dual_clock=True`` the trace must
+    carry non-metadata events on both the host and hardware processes.
+    """
+    if not isinstance(doc, dict) or "traceEvents" not in doc:
+        raise ValueError("trace must be an object with a traceEvents list")
+    events = doc["traceEvents"]
+    if not isinstance(events, list):
+        raise ValueError("traceEvents must be a list")
+    pids_seen = set()
+    for i, ev in enumerate(events):
+        where = f"traceEvents[{i}]"
+        if not isinstance(ev, dict):
+            raise ValueError(f"{where}: event must be an object")
+        ph = ev.get("ph")
+        if ph not in _VALID_PHASES:
+            raise ValueError(f"{where}: bad phase {ph!r}")
+        if not isinstance(ev.get("name"), str) or not ev["name"]:
+            raise ValueError(f"{where}: missing/empty name")
+        for field in ("pid", "tid"):
+            if not isinstance(ev.get(field), int):
+                raise ValueError(f"{where}: {field} must be an int")
+        if "args" in ev and not isinstance(ev["args"], dict):
+            raise ValueError(f"{where}: args must be an object")
+        if ph == "M":
+            continue
+        ts = ev.get("ts")
+        if not isinstance(ts, (int, float)) or ts < 0:
+            raise ValueError(f"{where}: ts must be a number >= 0")
+        if not isinstance(ev.get("cat"), str):
+            raise ValueError(f"{where}: missing cat")
+        if ph == "X":
+            dur = ev.get("dur")
+            if not isinstance(dur, (int, float)) or dur < 0:
+                raise ValueError(f"{where}: dur must be a number >= 0")
+        if ph in ("b", "e") and ev.get("id") is None:
+            raise ValueError(f"{where}: async event needs an id")
+        pids_seen.add(ev["pid"])
+    if require_dual_clock and not {PID_HOST, PID_HW} <= pids_seen:
+        raise ValueError(
+            f"dual-clock trace needs events on pids {PID_HOST} and "
+            f"{PID_HW}, saw {sorted(pids_seen)}")
+    return len(events)
+
+
+def hw_occupancy(doc: Dict) -> Dict[str, float]:
+    """Total modeled busy seconds per hardware-track instance."""
+    busy: Dict[str, float] = {}
+    for ev in doc.get("traceEvents", []):
+        if ev.get("pid") == PID_HW and ev.get("ph") == "X":
+            inst = ev.get("args", {}).get("instance", f"tid{ev['tid']}")
+            busy[inst] = busy.get(inst, 0.0) + ev.get("dur", 0.0) / 1e6
+    return dict(sorted(busy.items()))
+
+
+def write_trace(path, records_or_doc,
+                indent: Optional[int] = None) -> Dict:
+    """Serialize records (or a prebuilt document) to a trace JSON file."""
+    if isinstance(records_or_doc, dict):
+        doc = records_or_doc
+    else:
+        doc = chrome_trace(tuple(records_or_doc))
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=indent, sort_keys=False)
+        f.write("\n")
+    return doc
+
+
+def load_trace(path) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def event_census(doc: Dict) -> Dict[str, int]:
+    """Event counts per category (metadata events under ``"M"``)."""
+    out: Dict[str, int] = {}
+    for ev in doc.get("traceEvents", []):
+        key = "M" if ev.get("ph") == "M" else ev.get("cat", "?")
+        out[key] = out.get(key, 0) + 1
+    return dict(sorted(out.items()))

@@ -1,0 +1,352 @@
+"""Streaming metrics: log-bucketed histograms, counters, gauges, Prometheus.
+
+The serving telemetry used to keep every request latency in an unbounded
+Python list — fine for a 96-request bench, fatal for a fleet serving
+millions of requests.  ``LogHistogram`` replaces those lists with
+log-bucketed streaming histograms:
+
+* **bounded memory** — bucket indices are ``floor(log(v) / log(growth))``
+  clamped to [``min_value``, ``max_value``], so the sparse bucket dict can
+  never exceed a few hundred entries no matter how many samples stream
+  through;
+* **bounded error** — a percentile query returns the geometric midpoint of
+  the bucket holding the exact rank, so p50/p99 land within one bucket
+  (a ``growth``-factor relative band) of the exact value;
+* **mergeable** — two histograms with the same geometry add bucket-wise,
+  so per-shard or per-instance histograms roll up losslessly.
+
+``Counter`` / ``Gauge`` / ``MetricsRegistry`` are the matching scrape
+surface: the registry renders the Prometheus text exposition format
+(counters/gauges as samples, histograms as cumulative ``_bucket``/
+``_sum``/``_count`` series) and JSON snapshots that round-trip through
+``MetricsRegistry.from_snapshot`` — which is how ``scripts/obs_report.py``
+re-renders a finished run's metrics offline.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, Iterable, List, Optional, Tuple
+
+#: default bucket growth factor: ~7% wide buckets, so any percentile is
+#: reported within a ±7% band of exact (one bucket)
+DEFAULT_GROWTH = 1.07
+
+
+class LogHistogram:
+    """Log-bucketed streaming histogram with bounded memory.
+
+    Values are assigned to bucket ``floor(log(v)/log(growth))``; values at
+    or below ``min_value`` share one underflow bucket, values above
+    ``max_value`` share one overflow bucket, so the index range — and the
+    sparse bucket dict — is bounded regardless of the stream length.
+    Exact ``count``/``sum``/``min``/``max`` ride along for free.
+    """
+
+    __slots__ = ("growth", "min_value", "max_value", "_log_g", "_idx_lo",
+                 "_idx_hi", "buckets", "count", "total", "vmin", "vmax",
+                 "_lock")
+
+    def __init__(self, growth: float = DEFAULT_GROWTH,
+                 min_value: float = 1e-9, max_value: float = 1e9):
+        if growth <= 1.0:
+            raise ValueError(f"growth must be > 1, got {growth}")
+        if not 0 < min_value < max_value:
+            raise ValueError(
+                f"need 0 < min_value < max_value, got "
+                f"{min_value}, {max_value}")
+        self.growth = growth
+        self.min_value = min_value
+        self.max_value = max_value
+        self._log_g = math.log(growth)
+        self._idx_lo = self._raw_index(min_value)
+        self._idx_hi = self._raw_index(max_value)
+        self.buckets: Dict[int, int] = {}
+        self.count = 0
+        self.total = 0.0
+        self.vmin = math.inf
+        self.vmax = -math.inf
+        self._lock = threading.Lock()
+
+    def _raw_index(self, v: float) -> int:
+        return int(math.floor(math.log(v) / self._log_g))
+
+    def index(self, v: float) -> int:
+        """Clamped bucket index of a value (underflow/overflow inclusive)."""
+        if v <= self.min_value:
+            return self._idx_lo
+        if v >= self.max_value:
+            return self._idx_hi
+        return self._raw_index(v)
+
+    def record(self, v: float) -> None:
+        v = float(v)
+        idx = self.index(v)
+        with self._lock:
+            self.buckets[idx] = self.buckets.get(idx, 0) + 1
+            self.count += 1
+            self.total += v
+            if v < self.vmin:
+                self.vmin = v
+            if v > self.vmax:
+                self.vmax = v
+
+    def record_many(self, values: Iterable[float]) -> None:
+        for v in values:
+            self.record(v)
+
+    def bucket_upper(self, idx: int) -> float:
+        """Upper edge of a bucket (Prometheus ``le`` bound)."""
+        if idx >= self._idx_hi:
+            return math.inf
+        return self.growth ** (idx + 1)
+
+    def _representative(self, idx: int) -> float:
+        """Geometric midpoint of a bucket, clamped to the observed range."""
+        if idx <= self._idx_lo:
+            rep = self.min_value
+        elif idx >= self._idx_hi:
+            rep = self.max_value
+        else:
+            rep = self.growth ** (idx + 0.5)
+        return min(max(rep, self.vmin), self.vmax)
+
+    def percentile(self, q: float) -> float:
+        """The q-th percentile, within one bucket of the exact value."""
+        if not 0 <= q <= 100:
+            raise ValueError(f"percentile q must be in [0, 100], got {q}")
+        with self._lock:
+            if self.count == 0:
+                raise ValueError("percentile of an empty histogram")
+            target = max(1, math.ceil(q / 100.0 * self.count))
+            cum = 0
+            for idx in sorted(self.buckets):
+                cum += self.buckets[idx]
+                if cum >= target:
+                    return self._representative(idx)
+            return self.vmax       # unreachable, kept for safety
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def merge(self, other: "LogHistogram") -> "LogHistogram":
+        """Add another histogram's buckets into this one (same geometry)."""
+        if (other.growth != self.growth
+                or other.min_value != self.min_value
+                or other.max_value != self.max_value):
+            raise ValueError("cannot merge histograms of different geometry")
+        with self._lock:
+            for idx, n in other.buckets.items():
+                self.buckets[idx] = self.buckets.get(idx, 0) + n
+            self.count += other.count
+            self.total += other.total
+            self.vmin = min(self.vmin, other.vmin)
+            self.vmax = max(self.vmax, other.vmax)
+        return self
+
+    def clear(self) -> None:
+        with self._lock:
+            self.buckets.clear()
+            self.count = 0
+            self.total = 0.0
+            self.vmin = math.inf
+            self.vmax = -math.inf
+
+    def to_dict(self) -> Dict:
+        return {"growth": self.growth, "min_value": self.min_value,
+                "max_value": self.max_value, "count": self.count,
+                "sum": self.total,
+                "min": None if self.count == 0 else self.vmin,
+                "max": None if self.count == 0 else self.vmax,
+                "buckets": {str(i): n for i, n in sorted(self.buckets.items())}}
+
+    @classmethod
+    def from_dict(cls, doc: Dict) -> "LogHistogram":
+        h = cls(growth=doc["growth"], min_value=doc["min_value"],
+                max_value=doc["max_value"])
+        h.buckets = {int(i): int(n) for i, n in doc["buckets"].items()}
+        h.count = int(doc["count"])
+        h.total = float(doc["sum"])
+        if doc.get("min") is not None:
+            h.vmin = float(doc["min"])
+        if doc.get("max") is not None:
+            h.vmax = float(doc["max"])
+        return h
+
+
+class Counter:
+    """Monotonic counter (Prometheus ``counter`` type)."""
+
+    __slots__ = ("value", "_lock")
+
+    def __init__(self) -> None:
+        self.value = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, n: float = 1.0) -> None:
+        if n < 0:
+            raise ValueError(f"counters only go up, got inc({n})")
+        with self._lock:
+            self.value += n
+
+    def clear(self) -> None:
+        with self._lock:
+            self.value = 0.0
+
+
+class Gauge:
+    """Set-to-current-value metric (Prometheus ``gauge`` type)."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0.0
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+    def clear(self) -> None:
+        self.value = 0.0
+
+
+LabelsKey = Tuple[Tuple[str, str], ...]
+
+
+def _labels_key(labels: Dict[str, str]) -> LabelsKey:
+    return tuple(sorted((str(k), str(v)) for k, v in labels.items()))
+
+
+def _render_labels(key: LabelsKey, extra: Optional[Tuple[str, str]] = None,
+                   ) -> str:
+    pairs = list(key) + ([extra] if extra else [])
+    if not pairs:
+        return ""
+    return "{" + ",".join(f'{k}="{v}"' for k, v in pairs) + "}"
+
+
+class MetricsRegistry:
+    """Named, labeled metric families with Prometheus + JSON export.
+
+    ``counter``/``gauge``/``histogram`` are get-or-create: the first call
+    fixes the family's type (re-declaring a name with another type is a
+    ``ValueError``), later calls with the same (name, labels) return the
+    existing series — callers hold no references, the registry is the
+    single source of truth the scrape renders.
+    """
+
+    def __init__(self) -> None:
+        self._types: Dict[str, str] = {}
+        self._help: Dict[str, str] = {}
+        self._series: Dict[str, Dict[LabelsKey, object]] = {}
+        self._lock = threading.Lock()
+
+    def _family(self, name: str, kind: str, help: str):
+        seen = self._types.get(name)
+        if seen is None:
+            self._types[name] = kind
+            self._help[name] = help
+            self._series[name] = {}
+        elif seen != kind:
+            raise ValueError(
+                f"metric {name!r} already registered as {seen}, not {kind}")
+        elif help and not self._help[name]:
+            self._help[name] = help
+        return self._series[name]
+
+    def counter(self, name: str, help: str = "", **labels: str) -> Counter:
+        with self._lock:
+            fam = self._family(name, "counter", help)
+            return fam.setdefault(_labels_key(labels), Counter())
+
+    def gauge(self, name: str, help: str = "", **labels: str) -> Gauge:
+        with self._lock:
+            fam = self._family(name, "gauge", help)
+            return fam.setdefault(_labels_key(labels), Gauge())
+
+    def histogram(self, name: str, help: str = "",
+                  growth: float = DEFAULT_GROWTH,
+                  **labels: str) -> LogHistogram:
+        with self._lock:
+            fam = self._family(name, "histogram", help)
+            return fam.setdefault(_labels_key(labels),
+                                  LogHistogram(growth=growth))
+
+    def reset(self) -> None:
+        """Zero every series (families and label sets stay registered)."""
+        with self._lock:
+            for fam in self._series.values():
+                for metric in fam.values():
+                    metric.clear()
+
+    # -- export -----------------------------------------------------------
+
+    def prometheus_text(self) -> str:
+        """The Prometheus text exposition format of every family."""
+        lines: List[str] = []
+        with self._lock:
+            for name in sorted(self._types):
+                kind = self._types[name]
+                if self._help.get(name):
+                    lines.append(f"# HELP {name} {self._help[name]}")
+                lines.append(f"# TYPE {name} {kind}")
+                for key in sorted(self._series[name]):
+                    metric = self._series[name][key]
+                    if kind in ("counter", "gauge"):
+                        lines.append(
+                            f"{name}{_render_labels(key)} {metric.value:g}")
+                        continue
+                    # histogram: cumulative le buckets + _sum/_count
+                    cum = 0
+                    for idx in sorted(metric.buckets):
+                        cum += metric.buckets[idx]
+                        le = metric.bucket_upper(idx)
+                        le_s = "+Inf" if math.isinf(le) else f"{le:.6g}"
+                        lines.append(
+                            f"{name}_bucket"
+                            f"{_render_labels(key, ('le', le_s))} {cum}")
+                    lines.append(f"{name}_bucket"
+                                 f"{_render_labels(key, ('le', '+Inf'))} "
+                                 f"{metric.count}")
+                    lines.append(
+                        f"{name}_sum{_render_labels(key)} {metric.total:g}")
+                    lines.append(
+                        f"{name}_count{_render_labels(key)} {metric.count}")
+        return "\n".join(lines) + "\n"
+
+    def snapshot(self) -> Dict:
+        """JSON-able snapshot that round-trips via ``from_snapshot``."""
+        out: Dict = {}
+        with self._lock:
+            for name in sorted(self._types):
+                kind = self._types[name]
+                series = []
+                for key in sorted(self._series[name]):
+                    metric = self._series[name][key]
+                    row: Dict = {"labels": dict(key)}
+                    if kind == "histogram":
+                        row["hist"] = metric.to_dict()
+                    else:
+                        row["value"] = metric.value
+                    series.append(row)
+                out[name] = {"type": kind, "help": self._help.get(name, ""),
+                             "series": series}
+        return out
+
+    @classmethod
+    def from_snapshot(cls, doc: Dict) -> "MetricsRegistry":
+        reg = cls()
+        for name, fam in doc.items():
+            kind, help = fam["type"], fam.get("help", "")
+            for row in fam["series"]:
+                labels = row.get("labels", {})
+                if kind == "counter":
+                    reg.counter(name, help, **labels).inc(row["value"])
+                elif kind == "gauge":
+                    reg.gauge(name, help, **labels).set(row["value"])
+                else:
+                    h = LogHistogram.from_dict(row["hist"])
+                    with reg._lock:
+                        reg._family(name, "histogram", help)[
+                            _labels_key(labels)] = h
+        return reg

@@ -53,6 +53,10 @@ class DynamicBatcher:
         self._rr: List[str] = []     # model rotation, first-submission order
         self._rr_next = 0
         self._next_rid = 0
+        #: optional obs.MetricsRegistry; when set (the server wires its
+        #: telemetry registry in), the batcher keeps a queue-depth gauge
+        #: and a batches-formed counter current
+        self.metrics = None
 
     def submit(self, model: str, x: Any, now: float) -> int:
         rid = self._next_rid
@@ -61,6 +65,9 @@ class DynamicBatcher:
             self._queues[model] = deque()
             self._rr.append(model)
         self._queues[model].append(Request(rid, model, x, now))
+        if self.metrics is not None:
+            self.metrics.gauge("serve_queue_depth",
+                               "queued requests").set(self.pending())
         return rid
 
     @property
@@ -116,5 +123,10 @@ class DynamicBatcher:
             reqs = tuple(q.popleft()
                          for _ in range(min(self.max_batch, len(q))))
             self._rr_next = (self._rr_next + i + 1) % n
+            if self.metrics is not None:
+                self.metrics.counter("serve_batches_formed_total",
+                                     "batches formed", model=model).inc()
+                self.metrics.gauge("serve_queue_depth",
+                                   "queued requests").set(self.pending())
             return FormedBatch(model=model, requests=reqs, t_formed=now)
         return None

@@ -53,6 +53,7 @@ from .. import engine
 from ..cnn.layers import LayerSpec
 from ..core import simulator as sim
 from ..core.tpc import build_accelerator
+from ..obs.tracer import NOOP_TRACER
 from ..runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
 from .faults import (FaultInjector, NoHealthyInstances, RetriesExhausted,
                      ServingFault, ShardDeadlineExceeded)
@@ -155,8 +156,24 @@ class ShardedDispatcher:
             "timeouts": 0, "faults": 0, "quarantines": 0, "probes": 0,
             "probe_failures": 0, "readmissions": 0}
         self._pool: Optional[ThreadPoolExecutor] = None
-        self._pace_memo: Dict[Tuple[str, Tuple[LayerSpec, ...], int],
-                              float] = {}
+        self._model_memo: Dict[Tuple[str, Tuple[LayerSpec, ...], int],
+                               float] = {}
+        self._tracer = NOOP_TRACER
+        if fault_injector is not None:
+            fault_injector.tracer = self._tracer
+
+    @property
+    def tracer(self):
+        """Span tracer; shard exec/retry/probe/quarantine events land here
+        (the server wires its tracer in; fault instants come from the
+        injector, which shares this tracer)."""
+        return self._tracer
+
+    @tracer.setter
+    def tracer(self, tr) -> None:
+        self._tracer = tr
+        if self.fault_injector is not None:
+            self.fault_injector.tracer = tr
 
     # -- fleet health -----------------------------------------------------
 
@@ -169,9 +186,13 @@ class ShardedDispatcher:
         """
         self.counters["probes"] += 1
         if self.fault_injector is None:
-            return True
-        effects = self.fault_injector.on_dispatch(inst.name)
-        return effects.fault is None
+            ok = True
+        else:
+            effects = self.fault_injector.on_dispatch(inst.name)
+            ok = effects.fault is None
+        self._tracer.instant("probe", cat="probe", tid=inst.name,
+                             instance=inst.name, ok=ok)
+        return ok
 
     def active_instances(self) -> List[AcceleratorInstance]:
         """Healthy instances, after probing due quarantined ones back in."""
@@ -185,6 +206,8 @@ class ShardedDispatcher:
                     h.consecutive_failures = 0
                     h.cooldown_s = 0.0
                     self.counters["readmissions"] += 1
+                    self._tracer.instant("readmit", cat="probe",
+                                         tid=inst.name, instance=inst.name)
                 else:
                     self.counters["probe_failures"] += 1
                     h.cooldown_s = min(h.cooldown_s * 2,
@@ -203,6 +226,9 @@ class ShardedDispatcher:
             h.state = "quarantined"
             h.quarantines += 1
             self.counters["quarantines"] += 1
+            self._tracer.instant("quarantine", cat="probe", tid=inst.name,
+                                 instance=inst.name,
+                                 consecutive_failures=h.consecutive_failures)
         h.cooldown_s = min(
             self.probe_cooldown_s * (2 ** (h.consecutive_failures - 1)),
             max(self.backoff_cap_s, self.probe_cooldown_s))
@@ -270,44 +296,56 @@ class ShardedDispatcher:
 
     # -- shard execution --------------------------------------------------
 
-    def _paced_floor_s(self, inst: AcceleratorInstance,
-                       sim_specs: Optional[Tuple[LayerSpec, ...]],
-                       size: int) -> float:
-        """Modeled device time for a shard at the instance's point."""
-        if self.pace != "hardware" or not sim_specs:
+    def _modeled_shard_s(self, inst: AcceleratorInstance,
+                         sim_specs: Optional[Tuple[LayerSpec, ...]],
+                         size: int) -> float:
+        """Modeled device time for a shard at the instance's point (0.0
+        without sim_specs).  Feeds both the hardware pacing floor and the
+        tracer's hardware-clock spans."""
+        if not sim_specs:
             return 0.0
         key = (inst.hw.label, sim_specs, size)
-        t = self._pace_memo.get(key)
+        t = self._model_memo.get(key)
         if t is None:
             acc = build_accelerator(inst.hw.accelerator,
                                     inst.hw.bit_rate_gbps)
             rep = sim.simulate(acc, sim_specs, batch=size)
             t = size / rep.fps
-            self._pace_memo[key] = t
+            self._model_memo[key] = t
         return t
 
     def _run_shard(self, inst: AcceleratorInstance, plan: engine.ModelPlan,
                    shard: jax.Array, interpret: Optional[bool],
-                   pace_floor_s: float) -> Tuple[jax.Array, float]:
+                   pace_floor_s: float, modeled_s: float,
+                   off: int, attempt: int) -> Tuple[jax.Array, float]:
         """Worker-thread body: inject faults, execute, pace to device time.
 
         Raises typed faults (InstanceCrashed / ReconfigStuck) straight out
-        of the future; the coordinator turns them into retries.
+        of the future; the coordinator turns them into retries.  The whole
+        attempt — fault injection included — is one ``shard.exec`` span on
+        the instance's track; a successful attempt mirrors its modeled
+        device time onto the hardware clock.
         """
-        t0 = time.perf_counter()
-        if self.fault_injector is not None:
-            effects = self.fault_injector.on_dispatch(inst.name)
-            if effects.delay_s > 0:
-                self._sleep(effects.delay_s)
-            if effects.fault is not None:
-                self.fault_injector.raise_for(effects.fault, inst.name)
-        out = engine.forward_jit(plan, shard, interpret=interpret)
-        out = jax.block_until_ready(out)
-        exec_s = time.perf_counter() - t0
-        if pace_floor_s > exec_s:
-            self._sleep(pace_floor_s - exec_s)
-            exec_s = pace_floor_s
-        return out, exec_s
+        with self._tracer.span("shard.exec", cat="shard", tid=inst.name,
+                               instance=inst.name, point=inst.hw.label,
+                               offset=off, size=int(shard.shape[0]),
+                               attempt=attempt) as sp:
+            t0 = time.perf_counter()
+            if self.fault_injector is not None:
+                effects = self.fault_injector.on_dispatch(inst.name)
+                if effects.delay_s > 0:
+                    self._sleep(effects.delay_s)
+                if effects.fault is not None:
+                    self.fault_injector.raise_for(effects.fault, inst.name)
+            out = engine.forward_jit(plan, shard, interpret=interpret)
+            out = jax.block_until_ready(out)
+            exec_s = time.perf_counter() - t0
+            if pace_floor_s > exec_s:
+                self._sleep(pace_floor_s - exec_s)
+                exec_s = pace_floor_s
+            if modeled_s > 0:
+                sp.hw(inst.name, modeled_s)
+            return out, exec_s
 
     def _ensure_pool(self) -> ThreadPoolExecutor:
         if self._pool is None:
@@ -367,10 +405,12 @@ class ShardedDispatcher:
             futures: Dict[Future, Tuple[int, int, AcceleratorInstance]] = {}
             for off, size, inst in tasks:
                 shard = xb[off:off + size]
-                floor = self._paced_floor_s(inst, specs, size)
+                modeled = self._modeled_shard_s(inst, specs, size)
+                floor = modeled if self.pace == "hardware" else 0.0
                 self.counters["dispatched_shards"] += 1
                 futures[pool.submit(self._run_shard, inst, plan, shard,
-                                    interpret, floor)] = (off, size, inst)
+                                    interpret, floor, modeled,
+                                    off, attempt)] = (off, size, inst)
             failed: List[Tuple[int, int]] = []
             pending = set(futures)
             t_submit = time.perf_counter()
@@ -390,6 +430,10 @@ class ShardedDispatcher:
                                                     self.deadline_s)
                         last_exc = exc
                         self.counters["timeouts"] += 1
+                        self._tracer.instant(
+                            "fault.deadline", cat="fault", tid=inst.name,
+                            instance=inst.name, deadline_s=self.deadline_s,
+                            offset=off, size=size)
                         self._quarantine(inst)
                         failed.append((off, size))
                     break
@@ -419,6 +463,9 @@ class ShardedDispatcher:
             if failed:
                 attempt += 1
                 self.counters["retries"] += 1
+                self._tracer.instant(
+                    "retry", cat="shard", tid="dispatcher", round=attempt,
+                    frames=sum(s for _, s in failed))
                 if attempt > self.max_retries:
                     raise RetriesExhausted(
                         f"{sum(s for _, s in failed)} frames still failing "

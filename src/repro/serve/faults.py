@@ -44,6 +44,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs.tracer import NOOP_TRACER
+
 
 # ---------------------------------------------------------------------------
 # typed failure domain
@@ -174,6 +176,9 @@ class FaultInjector:
         self.trips: Dict[str, int] = {k.value: 0 for k in FaultKind}
         # shard workers dispatch concurrently; counters must not tear
         self._lock = threading.Lock()
+        #: span tracer; every fault activation becomes a ``fault.<kind>``
+        #: instant on the instance's track (the dispatcher wires this)
+        self.tracer = NOOP_TRACER
 
     def events_for(self, instance: str) -> List[FaultEvent]:
         return [e for e in self.schedule if e.instance == instance]
@@ -190,6 +195,7 @@ class FaultInjector:
         failing fault (crash/stuck-reconfig) wins over delays — the shard
         never executes.
         """
+        fired: List[FaultEvent] = []
         with self._lock:
             n = self.dispatches.get(instance, 0)
             self.dispatches[instance] = n + 1
@@ -199,10 +205,15 @@ class FaultInjector:
                 if not e.active_at(n):
                     continue
                 self.trips[e.kind.value] += 1
+                fired.append(e)
                 if e.kind in FAILING_KINDS:
                     failing = failing or e.kind
                 else:
                     delay += e.severity
+        for e in fired:      # outside the lock: the tracer locks its ring
+            self.tracer.instant(f"fault.{e.kind.value}", cat="fault",
+                                tid=instance, instance=instance,
+                                dispatch_index=n, severity=e.severity)
         return DispatchEffects(delay_s=delay, fault=failing)
 
     @staticmethod

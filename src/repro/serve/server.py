@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .. import engine
+from ..obs.tracer import NOOP_TRACER, Tracer
 from .batcher import DynamicBatcher
 from .dispatch import ShardedDispatcher
 from .faults import AdmissionRejected
@@ -77,7 +78,8 @@ class CNNServer:
                  interpret: Optional[bool] = None,
                  time_fn: Callable[[], float] = time.monotonic,
                  dispatcher: Optional[ShardedDispatcher] = None,
-                 slo: Optional[ServeSLO] = None):
+                 slo: Optional[ServeSLO] = None,
+                 tracer: Optional[Tracer] = None):
         self.registry = registry
         self.batcher = DynamicBatcher(max_batch=max_batch,
                                       max_wait_s=max_wait_s)
@@ -85,6 +87,13 @@ class CNNServer:
         self.interpret = interpret
         self.dispatcher = dispatcher
         self.slo = slo
+        #: span tracer (obs.Tracer); defaults to the free no-op path, and
+        #: is propagated to the dispatcher (and its fault injector) so
+        #: request, batch, shard and fault events land in one ring
+        self.tracer = tracer if tracer is not None else NOOP_TRACER
+        self.batcher.metrics = self.telemetry.metrics
+        if dispatcher is not None and tracer is not None:
+            dispatcher.tracer = self.tracer
         self._time = time_fn
         self.results: Dict[int, np.ndarray] = {}
         #: pipeline trace+compile stalls paid inside step() so far — one
@@ -163,11 +172,16 @@ class CNNServer:
             est = self.estimated_completion_s()
             if est is not None and est > self.slo.deadline_s:
                 self.admission["shed"] += 1
+                self.tracer.instant(
+                    "admission.shed", cat="admission", model=model,
+                    est_s=est, deadline_s=self.slo.deadline_s)
                 raise AdmissionRejected(
                     model=model, est_s=est, deadline_s=self.slo.deadline_s,
                     healthy_fraction=self._healthy_fraction())
         self.admission["admitted"] += 1
-        return self.batcher.submit(model, x, self._now(now))
+        rid = self.batcher.submit(model, x, self._now(now))
+        self.tracer.async_begin("request", aid=rid, model=model)
+        return rid
 
     def pending(self) -> int:
         return self.batcher.pending()
@@ -187,7 +201,7 @@ class CNNServer:
                 f"{self.batcher.pending()} requests still queued; drain "
                 f"before resetting")
         self.results.clear()
-        self.telemetry.records.clear()
+        self.telemetry.reset()
 
     def _slo_flush_due(self, now: float) -> bool:
         """Dispatch early once queue wait eats into the SLO deadline."""
@@ -218,44 +232,70 @@ class CNNServer:
                                     force=force or self._slo_flush_due(now))
         if fb is None:
             return 0
-        t0 = time.perf_counter()
-        entry = self.registry.get(fb.model)
-        xb = jnp.stack([jnp.asarray(r.x, jnp.float32) for r in fb.requests])
-        compiles_before = engine.pipeline_cache_info()["compiles"]
-        shard_info = ()
-        if self.dispatcher is None:
-            out = engine.forward_jit(entry.plan, xb,
-                                     interpret=self.interpret)
-            out = jax.block_until_ready(out)
-        else:
-            # shard the batch across the fleet; outputs keep request order
-            # (sim_specs lets a hardware-paced fleet floor each shard at
-            # its instance's modeled device time)
-            out, runs = self.dispatcher.run(entry.plan, xb,
-                                            interpret=self.interpret,
-                                            sim_specs=entry.sim_specs)
-            shard_info = [(r.instance.name, r.batch_size, r.instance.hw,
-                           r.exec_s) for r in runs]
-        self.pipeline_compiles += (engine.pipeline_cache_info()["compiles"]
-                                   - compiles_before)
-        exec_s = time.perf_counter() - t0
-        # service-rate EMA feeds admission control; fault retries inflate
-        # exec_s, which is exactly the backpressure the estimator needs
-        per_frame = exec_s / fb.size
-        self._frame_s_ema = (per_frame if self._frame_s_ema is None
-                             else 0.3 * per_frame + 0.7 * self._frame_s_ema)
-        self._observed_batches += 1
-        done = self._now(None)
-        out_np = np.asarray(out)
-        lats = []
-        for i, req in enumerate(fb.requests):
-            self.results[req.rid] = out_np[i]
-            lats.append(done - req.t_submit)
-        self.telemetry.record_batch(
-            model=fb.model, sim_specs=entry.sim_specs, batch_size=fb.size,
-            t_formed=now, exec_s=exec_s, queue_waits_s=fb.queue_waits(),
-            latencies_s=lats, shards=shard_info,
-            exec_specs=entry.exec_specs)
+        tr = self.tracer
+        with tr.span("batch", cat="batch", model=fb.model, size=fb.size,
+                     bucket=engine.batch_bucket(fb.size)) as bsp:
+            t0 = time.perf_counter()
+            with tr.span("plan.fetch", cat="batch", model=fb.model):
+                entry = self.registry.get(fb.model)
+            with tr.span("stack", cat="batch"):
+                xb = jnp.stack([jnp.asarray(r.x, jnp.float32)
+                                for r in fb.requests])
+            compiles_before = engine.pipeline_cache_info()["compiles"]
+            shard_info = ()
+            with tr.span("exec", cat="batch", model=fb.model):
+                if self.dispatcher is None:
+                    out = engine.forward_jit(entry.plan, xb,
+                                             interpret=self.interpret)
+                    out = jax.block_until_ready(out)
+                else:
+                    # shard the batch across the fleet; outputs keep
+                    # request order (sim_specs lets a hardware-paced fleet
+                    # floor each shard at its instance's modeled device
+                    # time)
+                    out, runs = self.dispatcher.run(
+                        entry.plan, xb, interpret=self.interpret,
+                        sim_specs=entry.sim_specs)
+                    shard_info = [(r.instance.name, r.batch_size,
+                                   r.instance.hw, r.exec_s) for r in runs]
+            compiled = (engine.pipeline_cache_info()["compiles"]
+                        - compiles_before)
+            self.pipeline_compiles += compiled
+            exec_s = time.perf_counter() - t0
+            # service-rate EMA feeds admission control; fault retries
+            # inflate exec_s, which is exactly the backpressure the
+            # estimator needs
+            per_frame = exec_s / fb.size
+            self._frame_s_ema = (per_frame if self._frame_s_ema is None
+                                 else 0.3 * per_frame
+                                 + 0.7 * self._frame_s_ema)
+            self._observed_batches += 1
+            done = self._now(None)
+            with tr.span("epilogue", cat="batch"):
+                out_np = np.asarray(out)
+                lats = []
+                for i, req in enumerate(fb.requests):
+                    self.results[req.rid] = out_np[i]
+                    lat = done - req.t_submit
+                    lats.append(lat)
+                    tr.async_end("request", aid=req.rid, model=fb.model,
+                                 latency_s=lat)
+                self.telemetry.record_batch(
+                    model=fb.model, sim_specs=entry.sim_specs,
+                    batch_size=fb.size, t_formed=now, exec_s=exec_s,
+                    queue_waits_s=fb.queue_waits(), latencies_s=lats,
+                    shards=shard_info, exec_specs=entry.exec_specs,
+                    op_points=entry.plan.layer_points,
+                    reconfig_switches=entry.plan.reconfig_switches)
+            bsp.set(compiles=compiled, exec_s=exec_s)
+            if self.dispatcher is None:
+                # unsharded: the whole batch's modeled device time lands
+                # on one "local" hardware track (sharded batches annotate
+                # per-shard hardware time in the dispatcher instead)
+                primary = self.telemetry.points[0]
+                cost = self.telemetry._hw_cost(
+                    fb.model, entry.sim_specs, fb.size, primary)
+                bsp.hw("local", cost.frame_latency_s * fb.size)
         return fb.size
 
     def run_until_drained(self, max_steps: int = 100_000,

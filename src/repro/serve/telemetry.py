@@ -8,9 +8,21 @@ headline metrics (FPS, FPS/W, Figs. 10-11) therefore fall out of serving
 telemetry directly, amortization over the batch included: ``simulate``
 spreads per-round overheads (retune + weight-DAC writes + TIA fill) over
 the batch's frames exactly as Section VI-A describes.
+
+The log is built to run unbounded: every aggregate ``summary()`` reports
+is maintained incrementally as batches stream in, request latencies and
+queue waits go into log-bucketed streaming histograms
+(:class:`repro.obs.metrics.LogHistogram` — bounded memory, p50/p99 within
+one bucket of exact), and the per-batch ``records`` list keeps only the
+newest ``max_records`` entries for inspection.  Each batch additionally
+accrues per-layer hardware attribution
+(:class:`repro.obs.attribution.LayerAttribution`): modeled time, energy
+and VDPE utilization by named layer, the Viterbi plan's operating points
+and reconfiguration switches — surfaced as ``summary()["layers"]``.
 """
 from __future__ import annotations
 
+import copy
 import dataclasses
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
@@ -19,6 +31,8 @@ import numpy as np
 from ..cnn.layers import ConvKind, LayerSpec
 from ..core import simulator as sim
 from ..core.tpc import AcceleratorConfig, build_accelerator
+from ..obs.attribution import LayerAttribution
+from ..obs.metrics import LogHistogram, MetricsRegistry
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,29 +124,64 @@ def activation_stream_bytes(specs: Sequence[LayerSpec]) -> Tuple[int, int]:
     return q, f32
 
 
+@dataclasses.dataclass
+class _Agg:
+    """Running per-scope aggregates (one global, one per model)."""
+    requests: int = 0
+    batches: int = 0
+    t0: float = np.inf
+    t1: float = -np.inf
+    # point label -> [fps*frames, fps_per_watt*frames, frames]
+    hw: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
+    act_int8: int = 0
+    act_f32: int = 0
+
+
 class TelemetryLog:
-    def __init__(self, points: Sequence[HardwarePoint] = DEFAULT_HW_POINTS):
+    def __init__(self, points: Sequence[HardwarePoint] = DEFAULT_HW_POINTS,
+                 max_records: int = 4096,
+                 metrics: Optional[MetricsRegistry] = None):
         self.points = tuple(points)
         self._acc: Dict[str, AcceleratorConfig] = {
             p.label: build_accelerator(p.accelerator, p.bit_rate_gbps)
             for p in self.points}
+        #: newest ``max_records`` batches, for inspection/debugging; every
+        #: summary aggregate is maintained incrementally and stays exact
+        #: after old records fall off
         self.records: List[BatchRecord] = []
+        self.max_records = max_records
+        self._dropped_records = 0
         # (model, batch_size, point label) fully determines the modeled
         # cost (a model's sim_specs are fixed); memo so the serving loop
         # never re-walks a paper-scale layer table for a repeat batch shape
         self._hw_memo: Dict[Tuple[str, int, str], HwCost] = {}
+        # same key at the primary point -> per-frame LayerCost rows
+        self._layer_memo: Dict[Tuple[str, int, str],
+                               Tuple[sim.LayerCost, ...]] = {}
         self._model_specs: Dict[str, Tuple[LayerSpec, ...]] = {}
         # live fleet-health provider (dispatcher + admission control);
-        # summary() snapshots it so the report carries retry/timeout/
-        # shed/quarantine counters and per-instance state
+        # summary() deep-copies its report so serialized summaries can't
+        # race with in-flight dispatch mutating the counters
         self._fleet_source: Optional[Callable[[], Dict]] = None
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self.layers = LayerAttribution()
+        self._agg = _Agg()
+        self._model_agg: Dict[str, _Agg] = {}
+        self._dispatch_agg: Dict[str, Dict] = {}
+        self._lat_hist = self.metrics.histogram(
+            "serve_request_latency_seconds",
+            "submit-to-results request latency")
+        self._wait_hist = self.metrics.histogram(
+            "serve_queue_wait_seconds", "submit-to-batch-formed queue wait")
+        self._model_lat_hist: Dict[str, LogHistogram] = {}
 
     def attach_fleet(self, source: Callable[[], Dict]) -> None:
         """Register the live fleet-health provider for summary()["fleet"].
 
-        ``source`` is called at summary time (a snapshot, not a copy), so
-        the report always reflects the fleet's current quarantine state
-        and cumulative retry/timeout/shed counters.
+        ``source`` is called at summary time and its report deep-copied,
+        so the summary reflects the fleet's current quarantine state and
+        cumulative retry/timeout/shed counters without handing callers a
+        live reference into the dispatcher's mutable state.
         """
         self._fleet_source = source
 
@@ -144,14 +193,19 @@ class TelemetryLog:
             self._acc[point.label] = acc
         return acc
 
-    def _hw_cost(self, model: str, sim_specs: Sequence[LayerSpec],
-                 batch_size: int, point: HardwarePoint) -> HwCost:
+    def _check_specs(self, model: str,
+                     sim_specs: Sequence[LayerSpec]) -> Tuple[LayerSpec, ...]:
         specs = tuple(sim_specs)
         seen = self._model_specs.setdefault(model, specs)
         if seen != specs:
             raise ValueError(
                 f"model {model!r} recorded with a different sim_specs "
                 f"table than before; one spec table per model name")
+        return specs
+
+    def _hw_cost(self, model: str, sim_specs: Sequence[LayerSpec],
+                 batch_size: int, point: HardwarePoint) -> HwCost:
+        self._check_specs(model, sim_specs)
         key = (model, batch_size, point.label)
         cost = self._hw_memo.get(key)
         if cost is None:
@@ -163,6 +217,20 @@ class TelemetryLog:
             self._hw_memo[key] = cost
         return cost
 
+    def _layer_rows(self, model: str, sim_specs: Sequence[LayerSpec],
+                    batch_size: int, point: HardwarePoint,
+                    ) -> Tuple[sim.LayerCost, ...]:
+        """Per-frame LayerCost rows at a point (simulate_layer is memoized
+        upstream, so the repeat-batch-shape case costs a dict lookup)."""
+        key = (model, batch_size, point.label)
+        rows = self._layer_memo.get(key)
+        if rows is None:
+            rep = sim.simulate(self._accelerator(point), tuple(sim_specs),
+                               batch=batch_size)
+            rows = tuple(rep.layer_costs())
+            self._layer_memo[key] = rows
+        return rows
+
     def record_batch(self, model: str, sim_specs: Sequence[LayerSpec],
                      batch_size: int, t_formed: float, exec_s: float,
                      queue_waits_s: Sequence[float],
@@ -170,6 +238,8 @@ class TelemetryLog:
                      shards: Sequence[Tuple[str, int, HardwarePoint,
                                             float]] = (),
                      exec_specs: Optional[Sequence[LayerSpec]] = None,
+                     op_points: Optional[Dict[str, str]] = None,
+                     reconfig_switches: int = 0,
                      ) -> BatchRecord:
         """Record one served batch (and, when sharded, each shard).
 
@@ -183,6 +253,10 @@ class TelemetryLog:
         activation-stream bytes are recorded as int8 (what the
         quantized-domain kernels stream) vs the f32 estimate of the same
         stream, so the HBM saving shows up in ``summary()``.
+
+        ``op_points``/``reconfig_switches`` carry the Viterbi plan's
+        per-layer operating points and switch count into the per-layer
+        attribution (``summary()["layers"]``).
         """
         hw = {p.label: self._hw_cost(model, sim_specs, batch_size, p)
               for p in self.points}
@@ -202,7 +276,82 @@ class TelemetryLog:
                           act_stream_bytes_int8=batch_size * by_q,
                           act_stream_bytes_f32=batch_size * by_f)
         self.records.append(rec)
+        if len(self.records) > self.max_records:
+            drop = len(self.records) - self.max_records
+            del self.records[:drop]
+            self._dropped_records += drop
+        self._accrue(rec, op_points, reconfig_switches, sim_specs)
         return rec
+
+    def _accrue(self, rec: BatchRecord, op_points: Optional[Dict[str, str]],
+                reconfig_switches: int,
+                sim_specs: Sequence[LayerSpec]) -> None:
+        """Fold one record into every running aggregate."""
+        for agg in (self._agg, self._model_agg.setdefault(rec.model,
+                                                          _Agg())):
+            agg.requests += rec.batch_size
+            agg.batches += 1
+            agg.t0 = min(agg.t0, rec.t_formed)
+            agg.t1 = max(agg.t1, rec.t_formed + rec.exec_s)
+            for label, cost in rec.hw.items():
+                row = agg.hw.setdefault(label, [0.0, 0.0, 0])
+                row[0] += cost.fps * rec.batch_size
+                row[1] += cost.fps_per_watt * rec.batch_size
+                row[2] += rec.batch_size
+            agg.act_int8 += rec.act_stream_bytes_int8
+            agg.act_f32 += rec.act_stream_bytes_f32
+        for s in rec.shards:
+            d = self._dispatch_agg.setdefault(s.instance, {
+                "point": s.point, "frames": 0, "shards": 0,
+                "exec_s": 0.0, "fps_frames": 0.0, "fpw_frames": 0.0})
+            d["frames"] += s.batch_size
+            d["shards"] += 1
+            d["exec_s"] += s.exec_s
+            d["fps_frames"] += s.cost.fps * s.batch_size
+            d["fpw_frames"] += s.cost.fps_per_watt * s.batch_size
+        # streaming histograms + counters (bounded, scrape-ready)
+        mhist = self._model_lat_hist.get(rec.model)
+        if mhist is None:
+            mhist = self._model_lat_hist[rec.model] = self.metrics.histogram(
+                "serve_request_latency_seconds", model=rec.model)
+        for lat in rec.latencies_s:
+            self._lat_hist.record(lat)
+            mhist.record(lat)
+        for w in rec.queue_waits_s:
+            self._wait_hist.record(w)
+        self.metrics.counter("serve_requests_total",
+                             "requests served to completion",
+                             model=rec.model).inc(rec.batch_size)
+        self.metrics.counter("serve_batches_total", "batches served",
+                             model=rec.model).inc()
+        for s in rec.shards:
+            self.metrics.counter("serve_shard_frames_total",
+                                 "frames dispatched per fleet instance",
+                                 instance=s.instance).inc(s.batch_size)
+        # per-layer hardware attribution at the primary operating point
+        primary = self.points[0]
+        rows = self._layer_rows(rec.model, sim_specs, rec.batch_size,
+                                primary)
+        self.layers.record(
+            rec.model, primary.label, rows, frames=rec.batch_size,
+            frame_latency_s=rec.hw[primary.label].frame_latency_s,
+            op_points=op_points, reconfig_switches=reconfig_switches)
+
+    def reset(self) -> None:
+        """Forget everything served (model spec tables and memos stay)."""
+        self.records.clear()
+        self._dropped_records = 0
+        self._agg = _Agg()
+        self._model_agg.clear()
+        self._dispatch_agg.clear()
+        self._model_lat_hist.clear()
+        self.layers.reset()
+        self.metrics.reset()
+        self._lat_hist = self.metrics.histogram(
+            "serve_request_latency_seconds",
+            "submit-to-results request latency")
+        self._wait_hist = self.metrics.histogram(
+            "serve_queue_wait_seconds", "submit-to-batch-formed queue wait")
 
     # -- aggregation ------------------------------------------------------
 
@@ -213,94 +362,105 @@ class TelemetryLog:
 
     def latency_percentile(self, q: float,
                            model: Optional[str] = None) -> float:
-        lats = self._latencies(model)
-        if not lats:
-            raise ValueError("no served requests to take a percentile of")
-        return float(np.percentile(np.asarray(lats), q))
+        """Request-latency percentile.
 
-    def _hw_summary(self, records: List[BatchRecord]) -> Dict[str, Dict]:
-        """Frame-weighted modeled metrics per operating point."""
+        Exact (numpy over the retained records) while no records have been
+        dropped; once the record ring has trimmed, falls back to the
+        streaming histogram — still within one bucket of exact.
+        """
+        if self._dropped_records == 0:
+            lats = self._latencies(model)
+            if not lats:
+                raise ValueError("no served requests to take a percentile of")
+            return float(np.percentile(np.asarray(lats), q))
+        hist = (self._lat_hist if model is None
+                else self._model_lat_hist.get(model))
+        if hist is None or hist.count == 0:
+            raise ValueError("no served requests to take a percentile of")
+        return hist.percentile(q)
+
+    @staticmethod
+    def _hw_summary(agg: _Agg) -> Dict[str, Dict]:
+        """Frame-weighted modeled metrics per operating point.
+
+        (The frame total is per point-row here by construction — the old
+        per-record walk recomputed the same ``frames`` sum once per point.)
+        """
         out: Dict[str, Dict] = {}
-        for p in self.points:
-            frames = sum(r.batch_size for r in records)
+        for label, (fps_frames, fpw_frames, frames) in agg.hw.items():
             if frames == 0:
                 continue
-            fps = sum(r.hw[p.label].fps * r.batch_size
-                      for r in records) / frames
-            fpw = sum(r.hw[p.label].fps_per_watt * r.batch_size
-                      for r in records) / frames
-            out[p.label] = {"modeled_fps": fps, "modeled_fps_per_watt": fpw}
+            out[label] = {"modeled_fps": fps_frames / frames,
+                          "modeled_fps_per_watt": fpw_frames / frames}
         return out
 
-    def _dispatch_summary(self, records: List[BatchRecord]) -> Dict[str, Dict]:
+    def _dispatch_summary(self) -> Dict[str, Dict]:
         """Per-instance view of sharded dispatch (empty when unsharded)."""
         out: Dict[str, Dict] = {}
-        for r in records:
-            for s in r.shards:
-                d = out.setdefault(s.instance, {
-                    "point": s.point, "frames": 0, "shards": 0,
-                    "exec_s": 0.0, "_fps_frames": 0.0, "_fpw_frames": 0.0})
-                d["frames"] += s.batch_size
-                d["shards"] += 1
-                d["exec_s"] += s.exec_s
-                d["_fps_frames"] += s.cost.fps * s.batch_size
-                d["_fpw_frames"] += s.cost.fps_per_watt * s.batch_size
-        for d in out.values():
-            d["modeled_fps"] = d.pop("_fps_frames") / d["frames"]
-            d["modeled_fps_per_watt"] = d.pop("_fpw_frames") / d["frames"]
+        for inst, d in self._dispatch_agg.items():
+            out[inst] = {
+                "point": d["point"], "frames": d["frames"],
+                "shards": d["shards"], "exec_s": d["exec_s"],
+                "modeled_fps": d["fps_frames"] / d["frames"],
+                "modeled_fps_per_watt": d["fpw_frames"] / d["frames"]}
         return out
 
     @staticmethod
-    def _act_stream_summary(records: List[BatchRecord]) -> Dict[str, float]:
+    def _act_stream_summary(int8: int, f32: int) -> Dict[str, object]:
         """Total activation-stream bytes served: quantized lattice vs f32.
 
         Records without exec_specs contribute zero to both sides; the
         ratio reports the modeled stream saving of quantized-domain
-        execution (activation_stream_bytes).
+        execution (activation_stream_bytes).  With no quantized bytes
+        recorded there is no measured saving, so the ratio is ``None``
+        rather than a 0.0 that reads as "no saving" downstream.
         """
-        int8 = sum(r.act_stream_bytes_int8 for r in records)
-        f32 = sum(r.act_stream_bytes_f32 for r in records)
         return {"int8_bytes": int8, "f32_bytes": f32,
-                "ratio": f32 / int8 if int8 else 0.0}
+                "ratio": f32 / int8 if int8 else None}
 
-    def summary(self) -> Dict:
+    def summary(self, top_k: int = 5) -> Dict:
         """Serving report: wall-clock throughput/latency + modeled hardware.
 
         ``images_per_s_wall`` is sustained throughput over the serving span
         (first batch formed -> last batch done); per-model blocks carry the
-        same metrics restricted to that model's batches.
+        same metrics restricted to that model's batches.  ``layers`` is the
+        per-layer hardware attribution (modeled time/energy/utilization by
+        named layer, operating points, reconfiguration switches, top-k
+        hotspots).  Every block is a snapshot the caller owns.
         """
-        if not self.records:
+        agg = self._agg
+        if agg.batches == 0:
             return {"requests": 0, "batches": 0}
-        n_req = sum(r.batch_size for r in self.records)
-        t0 = min(r.t_formed for r in self.records)
-        t1 = max(r.t_formed + r.exec_s for r in self.records)
-        span = max(t1 - t0, 1e-9)
+        span = max(agg.t1 - agg.t0, 1e-9)
         out = {
-            "requests": n_req,
-            "batches": len(self.records),
-            "mean_batch_size": n_req / len(self.records),
+            "requests": agg.requests,
+            "batches": agg.batches,
+            "mean_batch_size": agg.requests / agg.batches,
             "span_s": span,
-            "images_per_s_wall": n_req / span,
+            "images_per_s_wall": agg.requests / span,
             "latency_p50_s": self.latency_percentile(50),
             "latency_p99_s": self.latency_percentile(99),
-            "hardware": self._hw_summary(self.records),
-            "dispatch": self._dispatch_summary(self.records),
-            "fleet": (self._fleet_source() if self._fleet_source is not None
-                      else {}),
-            "activation_stream": self._act_stream_summary(self.records),
+            "queue_wait_p50_s": (self._wait_hist.percentile(50)
+                                 if self._wait_hist.count else None),
+            "hardware": self._hw_summary(agg),
+            "dispatch": self._dispatch_summary(),
+            "fleet": (copy.deepcopy(self._fleet_source())
+                      if self._fleet_source is not None else {}),
+            "activation_stream": self._act_stream_summary(agg.act_int8,
+                                                          agg.act_f32),
+            "layers": self.layers.summary(top_k),
             "models": {},
         }
-        for model in sorted({r.model for r in self.records}):
-            recs = [r for r in self.records if r.model == model]
-            imgs = sum(r.batch_size for r in recs)
+        for model in sorted(self._model_agg):
+            m = self._model_agg[model]
             out["models"][model] = {
-                "requests": imgs,
-                "batches": len(recs),
-                "mean_batch_size": imgs / len(recs),
+                "requests": m.requests,
+                "batches": m.batches,
+                "mean_batch_size": m.requests / m.batches,
                 "latency_p50_s": self.latency_percentile(50, model),
                 "latency_p99_s": self.latency_percentile(99, model),
-                "hardware": self._hw_summary(recs),
-                "activation_stream": self._act_stream_summary(recs),
+                "hardware": self._hw_summary(m),
+                "activation_stream": self._act_stream_summary(m.act_int8,
+                                                              m.act_f32),
             }
         return out

@@ -1,0 +1,594 @@
+"""Observability subsystem tests: streaming histograms vs exact
+percentiles on adversarial distributions, the metrics registry's
+Prometheus/snapshot surfaces, span tracer semantics (nesting, ring
+bound, sampling, the free no-op path), Chrome trace export validation
+with the dual host/hardware clock, per-layer hardware attribution, the
+telemetry satellites (deep-copied fleet snapshots, None activation
+ratio, bounded records with histogram fallback), and an end-to-end
+traced fault-injected fleet."""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro import engine, obs, serve
+from repro.core import simulator as sim
+from repro.core.tpc import build_accelerator
+from repro.obs.metrics import DEFAULT_GROWTH
+from repro.serve import models as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+RMAM1 = serve.HardwarePoint("RMAM", 1.0)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    engine.plan_cache_clear()
+    yield
+    engine.plan_cache_clear()
+
+
+def _fake_clock(step=1.0):
+    t = [0.0]
+
+    def now():
+        t[0] += step
+        return t[0]
+    return now
+
+
+# ---------------------------------------------------------------------------
+# LogHistogram vs exact percentiles
+# ---------------------------------------------------------------------------
+
+def _adversarial_distributions():
+    rng = np.random.default_rng(7)
+    return {
+        "heavy_tail": rng.lognormal(mean=-3.0, sigma=2.0, size=20_000),
+        "bimodal": np.concatenate([rng.normal(1e-3, 1e-4, 10_000),
+                                   rng.normal(10.0, 1.0, 10_000)]).clip(1e-6),
+        "uniform": rng.uniform(0.01, 0.02, 5_000),
+        "constant": np.full(1_000, 0.125),
+    }
+
+
+@pytest.mark.parametrize("name", sorted(_adversarial_distributions()))
+def test_histogram_percentile_within_one_bucket_of_exact(name):
+    values = _adversarial_distributions()[name]
+    h = obs.LogHistogram()
+    h.record_many(values)
+    ordered = np.sort(values)
+    for q in (1, 25, 50, 90, 99, 99.9):
+        # the histogram's guarantee is against the order statistic at the
+        # target rank (numpy's default interpolates between samples —
+        # between a bimodal's modes that lands where no sample exists)
+        rank = max(1, int(np.ceil(q / 100.0 * len(values))))
+        exact = float(ordered[rank - 1])
+        approx = h.percentile(q)
+        # the representative is the geometric bucket midpoint: one
+        # growth-factor relative band of the exact rank value
+        assert approx == pytest.approx(exact, rel=DEFAULT_GROWTH - 1.0)
+    assert h.count == len(values)
+    assert h.total == pytest.approx(float(values.sum()))
+    assert h.vmin == pytest.approx(float(values.min()))
+    assert h.vmax == pytest.approx(float(values.max()))
+
+
+def test_histogram_constant_and_single_sample_are_exact():
+    h = obs.LogHistogram()
+    h.record(0.125)
+    for q in (0, 50, 100):
+        # representatives clamp to [vmin, vmax], so one sample is exact
+        assert h.percentile(q) == 0.125
+    c = obs.LogHistogram()
+    c.record_many([3.7] * 999)
+    assert c.percentile(50) == 3.7 and c.percentile(99) == 3.7
+
+
+def test_histogram_bounded_buckets_and_range_clamp():
+    h = obs.LogHistogram(min_value=1e-9, max_value=1e9)
+    rng = np.random.default_rng(0)
+    h.record_many(np.exp(rng.uniform(np.log(1e-12), np.log(1e12), 50_000)))
+    # index range is fixed by the geometry, not the stream length
+    assert len(h.buckets) <= h.index(1e9) - h.index(1e-9) + 1
+    assert h.index(1e-30) == h.index(1e-9)          # underflow clamp
+    assert h.index(1e30) == h.index(1e9)            # overflow clamp
+    assert h.percentile(100) <= h.vmax
+
+
+def test_histogram_merge_matches_concatenation():
+    rng = np.random.default_rng(3)
+    a, b = rng.lognormal(size=4_000), rng.lognormal(mean=2.0, size=6_000)
+    ha, hb, hall = obs.LogHistogram(), obs.LogHistogram(), obs.LogHistogram()
+    ha.record_many(a)
+    hb.record_many(b)
+    hall.record_many(np.concatenate([a, b]))
+    ha.merge(hb)
+    assert ha.count == hall.count and ha.buckets == hall.buckets
+    for q in (10, 50, 99):
+        assert ha.percentile(q) == hall.percentile(q)
+    with pytest.raises(ValueError):
+        ha.merge(obs.LogHistogram(growth=1.5))
+
+
+def test_histogram_serialization_roundtrip_through_json():
+    h = obs.LogHistogram()
+    h.record_many(np.random.default_rng(1).lognormal(size=500))
+    doc = json.loads(json.dumps(h.to_dict()))
+    h2 = obs.LogHistogram.from_dict(doc)
+    assert h2.count == h.count and h2.buckets == h.buckets
+    assert h2.percentile(95) == h.percentile(95)
+    assert h2.vmin == h.vmin and h2.vmax == h.vmax
+
+
+def test_histogram_validation():
+    with pytest.raises(ValueError):
+        obs.LogHistogram(growth=1.0)
+    with pytest.raises(ValueError):
+        obs.LogHistogram(min_value=2.0, max_value=1.0)
+    h = obs.LogHistogram()
+    with pytest.raises(ValueError):
+        h.percentile(50)                 # empty
+    h.record(1.0)
+    with pytest.raises(ValueError):
+        h.percentile(101)
+
+
+# ---------------------------------------------------------------------------
+# MetricsRegistry: Prometheus text + snapshot round-trip
+# ---------------------------------------------------------------------------
+
+def test_registry_get_or_create_and_type_conflicts():
+    reg = obs.MetricsRegistry()
+    c = reg.counter("reqs_total", "requests", model="a")
+    assert reg.counter("reqs_total", model="a") is c
+    assert reg.counter("reqs_total", model="b") is not c
+    with pytest.raises(ValueError):
+        reg.gauge("reqs_total")          # name already a counter
+    with pytest.raises(ValueError):
+        c.inc(-1)                        # counters only go up
+
+
+def test_prometheus_text_exposition_shape():
+    reg = obs.MetricsRegistry()
+    reg.counter("served_total", "frames served", model="m").inc(7)
+    reg.gauge("depth", "queue depth").set(3)
+    h = reg.histogram("lat_seconds", "latency")
+    h.record_many([0.001, 0.002, 0.004, 0.1])
+    text = reg.prometheus_text()
+    assert "# TYPE served_total counter" in text
+    assert 'served_total{model="m"} 7' in text
+    assert "# TYPE depth gauge" in text and "\ndepth 3" in text
+    assert "# HELP lat_seconds latency" in text
+    assert 'lat_seconds_bucket{le="+Inf"} 4' in text
+    assert "lat_seconds_count 4" in text
+    # cumulative bucket counts never decrease
+    cums = [int(line.rsplit(" ", 1)[1]) for line in text.splitlines()
+            if line.startswith("lat_seconds_bucket")]
+    assert cums == sorted(cums)
+
+
+def test_registry_snapshot_roundtrip():
+    reg = obs.MetricsRegistry()
+    reg.counter("a_total", "a", k="v").inc(5)
+    reg.gauge("g").set(-2.5)
+    reg.histogram("h_seconds", "h").record_many([0.01, 0.5, 2.0])
+    snap = json.loads(json.dumps(reg.snapshot()))
+    reg2 = obs.MetricsRegistry.from_snapshot(snap)
+    assert reg2.prometheus_text() == reg.prometheus_text()
+    reg.reset()
+    assert reg.counter("a_total", k="v").value == 0
+    assert reg.histogram("h_seconds").count == 0
+
+
+# ---------------------------------------------------------------------------
+# Tracer
+# ---------------------------------------------------------------------------
+
+def test_tracer_nesting_and_attributes():
+    tr = obs.Tracer(time_fn=_fake_clock())
+    with tr.span("batch", cat="batch", model="m") as outer:
+        with tr.span("exec", cat="batch") as inner:
+            inner.set(size=4)
+        tr.instant("shed", cat="admission")
+        outer.set(compiles=1)
+    recs = tr.events()
+    by_name = {r.name: r for r in recs}
+    assert by_name["exec"].parent_id == by_name["batch"].span_id
+    assert by_name["shed"].parent_id == by_name["batch"].span_id
+    assert by_name["batch"].parent_id is None
+    assert by_name["exec"].args == {"size": 4}
+    assert by_name["batch"].args == {"model": "m", "compiles": 1}
+    assert by_name["batch"].dur > by_name["exec"].dur > 0
+
+
+def test_tracer_exception_annotates_span():
+    tr = obs.Tracer()
+    with pytest.raises(KeyError):
+        with tr.span("boom"):
+            raise KeyError("x")
+    (rec,) = tr.events()
+    assert rec.args["error"] == "KeyError"
+
+
+def test_tracer_ring_is_bounded():
+    tr = obs.Tracer(capacity=8)
+    for i in range(20):
+        tr.instant(f"e{i}")
+    recs = tr.events()
+    assert [r.name for r in recs] == [f"e{i}" for i in range(12, 20)]
+    st = tr.stats()
+    assert st["retained"] == 8 and st["dropped_ring"] == 12
+    assert st["emitted"] == 20
+    tr.clear()
+    assert tr.events() == () and tr.stats()["emitted"] == 0
+    with pytest.raises(ValueError):
+        obs.Tracer(capacity=0)
+
+
+def test_tracer_sampling_is_deterministic_per_category():
+    def run():
+        tr = obs.Tracer(sample={"shard": 0.25})
+        for i in range(16):
+            with tr.span(f"s{i}", cat="shard"):
+                pass
+            tr.instant(f"k{i}", cat="fault")     # unlisted: always kept
+        return tr
+    tr = run()
+    shard = tr.events_by_cat("shard")
+    assert [r.name for r in shard] == ["s0", "s4", "s8", "s12"]
+    assert len(tr.events_by_cat("fault")) == 16
+    assert tr.stats()["sampled_out"] == 12
+    assert [r.name for r in run().events_by_cat("shard")] \
+        == [r.name for r in shard]               # replayable
+    with pytest.raises(ValueError):
+        obs.Tracer(sample={"shard": 0.0})
+
+
+def test_noop_tracer_is_free_and_shared():
+    tr = obs.NOOP_TRACER
+    assert tr.enabled is False
+    s1 = tr.span("a", model="m")
+    with s1 as s:
+        s.set(x=1)
+        s.hw("acc0", 1.0)
+    assert tr.span("b") is s1                    # shared stateless span
+    tr.instant("i")
+    tr.async_begin("r", aid=1)
+    tr.async_end("r", aid=1)
+    assert tr.events() == ()
+    assert tr.stats() == {"enabled": False, "emitted": 0, "retained": 0,
+                          "dropped_ring": 0, "sampled_out": 0}
+
+
+def test_async_pairs_and_census():
+    tr = obs.Tracer(time_fn=_fake_clock())
+    tr.async_begin("request", aid=11, model="m")
+    tr.async_end("request", aid=11, latency_s=0.5)
+    recs = tr.events()
+    assert [r.ph for r in recs] == ["b", "e"]
+    assert recs[0].aid == recs[1].aid == 11
+    assert recs[0].tid == "requests"
+    assert obs.category_census(recs) == {"request": 2}
+
+
+# ---------------------------------------------------------------------------
+# Chrome trace export
+# ---------------------------------------------------------------------------
+
+def _traced_records():
+    tr = obs.Tracer(time_fn=_fake_clock(0.5))
+    with tr.span("batch", cat="batch", model="m"):
+        with tr.span("shard", cat="shard", tid="acc0") as sp:
+            sp.hw("acc0", 2.0)
+        with tr.span("shard", cat="shard", tid="acc1") as sp:
+            sp.hw("acc1", 1.5)
+    tr.instant("fault.crash", cat="fault", tid="acc0")
+    tr.async_begin("request", aid=1)
+    tr.async_end("request", aid=1)
+    return tr.events()
+
+
+def test_chrome_trace_export_validates_dual_clock():
+    doc = obs.chrome_trace(_traced_records())
+    n = obs.validate_chrome_trace(doc, require_dual_clock=True)
+    assert n == len(doc["traceEvents"])
+    for ev in doc["traceEvents"]:
+        assert isinstance(ev["pid"], int) and isinstance(ev["tid"], int)
+    pids = {ev["pid"] for ev in doc["traceEvents"] if ev["ph"] != "M"}
+    assert pids == {obs.PID_HOST, obs.PID_HW}
+    # every track is named for Perfetto via thread_name metadata
+    named = {(ev["pid"], ev["tid"]) for ev in doc["traceEvents"]
+             if ev["ph"] == "M" and ev["name"] == "thread_name"}
+    used = {(ev["pid"], ev["tid"]) for ev in doc["traceEvents"]
+            if ev["ph"] != "M"}
+    assert used <= named
+    busy = obs.hw_occupancy(doc)
+    assert busy == {"acc0": pytest.approx(2.0), "acc1": pytest.approx(1.5)}
+    census = obs.event_census(doc)
+    assert census["fault"] == 1 and census["request"] == 2
+    assert census["hw.shard"] == 2
+
+
+def test_hw_events_never_overlap_per_instance():
+    """The occupancy cursor lays hw events end-to-end per instance even
+    when their wall-clock spans overlap."""
+    recs = [sim_rec for i, sim_rec in enumerate(
+        obs.SpanRecord(name=f"s{i}", cat="shard", ph="X", t0=1.0,
+                       dur=0.1, tid="w", span_id=i + 1, parent_id=None,
+                       args={}, hw_instance="acc0", hw_s=3.0)
+        for i in range(4))]
+    doc = obs.chrome_trace(recs)
+    hw = sorted((ev["ts"], ev["dur"]) for ev in doc["traceEvents"]
+                if ev.get("pid") == obs.PID_HW and ev["ph"] == "X")
+    for (ts0, d0), (ts1, _) in zip(hw, hw[1:]):
+        assert ts1 >= ts0 + d0 - 1e-6
+    assert obs.hw_occupancy(doc)["acc0"] == pytest.approx(12.0)
+
+
+@pytest.mark.parametrize("mutate, err", [
+    (lambda d: d.pop("traceEvents"), "traceEvents"),
+    (lambda d: d["traceEvents"].append({"name": "x", "ph": "Z", "pid": 1,
+                                        "tid": 1}), "phase"),
+    (lambda d: d["traceEvents"].append({"name": "", "ph": "i", "pid": 1,
+                                        "tid": 1, "ts": 0, "cat": "c"}),
+     "name"),
+    (lambda d: d["traceEvents"].append({"name": "x", "ph": "i", "pid": 1,
+                                        "tid": "w", "ts": 0, "cat": "c"}),
+     "tid"),
+    (lambda d: d["traceEvents"].append({"name": "x", "ph": "i", "pid": 1,
+                                        "tid": 1, "ts": -5, "cat": "c"}),
+     "ts"),
+    (lambda d: d["traceEvents"].append({"name": "x", "ph": "X", "pid": 1,
+                                        "tid": 1, "ts": 0, "cat": "c"}),
+     "dur"),
+    (lambda d: d["traceEvents"].append({"name": "x", "ph": "b", "pid": 1,
+                                        "tid": 1, "ts": 0, "cat": "c"}),
+     "id"),
+])
+def test_validate_rejects_malformed_events(mutate, err):
+    doc = obs.chrome_trace(_traced_records())
+    mutate(doc)
+    with pytest.raises(ValueError, match=err):
+        obs.validate_chrome_trace(doc)
+
+
+def test_validate_dual_clock_requires_hw_process():
+    tr = obs.Tracer(time_fn=_fake_clock())
+    with tr.span("batch"):                       # no .hw() annotation
+        pass
+    doc = obs.chrome_trace(tr.events())
+    assert obs.validate_chrome_trace(doc) == len(doc["traceEvents"])
+    with pytest.raises(ValueError, match="dual-clock"):
+        obs.validate_chrome_trace(doc, require_dual_clock=True)
+
+
+def test_write_load_trace_roundtrip(tmp_path):
+    path = tmp_path / "t.json"
+    doc = obs.write_trace(path, _traced_records())
+    assert obs.load_trace(path) == doc
+
+
+# ---------------------------------------------------------------------------
+# per-layer costs (simulator) and attribution
+# ---------------------------------------------------------------------------
+
+def test_layer_costs_decompose_report_exactly():
+    specs = tuple(zoo.paper_scale_specs("shufflenet_mini"))
+    rep = sim.simulate(build_accelerator("RMAM", 1.0), specs, batch=3)
+    rows = rep.layer_costs()
+    assert [r.name for r in rows] == [s.name for s in specs]
+    assert sum(r.time_s for r in rows) \
+        == pytest.approx(rep.frame_latency_s, rel=1e-9)
+    assert sum(r.energy_j for r in rows) \
+        == pytest.approx(rep.energy_per_frame_j, rel=1e-9)
+    assert {r.kind for r in rows} <= {"SC", "DC", "PC", "FC"}
+    # reports without names (old pickles, hand-built) degrade gracefully
+    bare = dataclasses.replace(rep, layer_names=None)
+    assert bare.layer_costs()[0].name == "layer0"
+
+
+def test_layer_attribution_coverage_and_hotspots():
+    specs = tuple(zoo.paper_scale_specs("shufflenet_mini"))
+    rep = sim.simulate(build_accelerator("RMAM", 1.0), specs, batch=2)
+    rows = rep.layer_costs()
+    att = obs.LayerAttribution()
+    att.record("m", "RMAM@1G", rows, frames=2,
+               frame_latency_s=rep.frame_latency_s,
+               op_points={specs[0].name: "MAM@5G"}, reconfig_switches=3)
+    att.record("m", "RMAM@1G", rows, frames=4,
+               frame_latency_s=rep.frame_latency_s)
+    assert att.coverage("m") == pytest.approx(1.0, rel=1e-9)
+    summ = att.summary(top_k=3)["m"]
+    assert summ["frames"] == 6 and summ["reconfig_switches"] == 3
+    assert summ["operating_points"] == {specs[0].name: "MAM@5G"}
+    top = summ["top"]
+    assert len(top) == 3
+    assert [t["time_s"] for t in top] \
+        == sorted((t["time_s"] for t in top), reverse=True)
+    assert sum(r["share"] for r in summ["top"]) <= 1.0 + 1e-9
+    # per-row operating point: the plan's per-layer point when known,
+    # else the model's primary point
+    by_layer = {t["layer"]: t for t in top}
+    for t in top:
+        expect = "MAM@5G" if t["layer"] == specs[0].name else "RMAM@1G"
+        assert t["point"] == expect
+    assert by_layer  # non-empty sanity
+    att.reset()
+    assert att.models() == []
+
+
+# ---------------------------------------------------------------------------
+# telemetry satellites
+# ---------------------------------------------------------------------------
+
+def _record(log, model="m", size=4, lat=0.1, shards=(), t0=0.0):
+    specs = tuple(zoo.paper_scale_specs("shufflenet_mini"))
+    return log.record_batch(
+        model=model, sim_specs=specs, batch_size=size, t_formed=t0,
+        exec_s=0.05, queue_waits_s=[0.01] * size,
+        latencies_s=[lat] * size, shards=shards)
+
+
+def test_summary_fleet_snapshot_is_deep_copied():
+    log = serve.TelemetryLog(points=(RMAM1,))
+    state = {"instances": {"acc0": {"healthy": True}}, "sheds": 0}
+    log.attach_fleet(lambda: state)
+    _record(log)
+    summ = log.summary()
+    summ["fleet"]["instances"]["acc0"]["healthy"] = False
+    summ["fleet"]["sheds"] = 99
+    assert log.summary()["fleet"] == state     # caller owns the snapshot
+    assert state["sheds"] == 0
+    bare = serve.TelemetryLog(points=(RMAM1,))
+    _record(bare)
+    assert bare.summary()["fleet"] == {}       # no fleet attached
+
+
+def test_activation_ratio_is_none_without_exec_specs():
+    log = serve.TelemetryLog(points=(RMAM1,))
+    _record(log)                               # no exec_specs passed
+    act = log.summary()["activation_stream"]
+    assert act["int8_bytes"] == 0 and act["ratio"] is None
+    assert log.summary()["models"]["m"]["activation_stream"]["ratio"] is None
+
+
+def test_single_request_percentiles():
+    log = serve.TelemetryLog(points=(RMAM1,))
+    specs = tuple(zoo.paper_scale_specs("shufflenet_mini"))
+    log.record_batch(model="only", sim_specs=specs, batch_size=1,
+                     t_formed=0.0, exec_s=0.01, queue_waits_s=[0.0],
+                     latencies_s=[0.25])
+    assert log.latency_percentile(50, "only") == 0.25
+    assert log.latency_percentile(99, "only") == 0.25
+    assert log.summary()["models"]["only"]["latency_p99_s"] == 0.25
+
+
+def test_bounded_records_fall_back_to_histogram_percentiles():
+    log = serve.TelemetryLog(points=(RMAM1,), max_records=2)
+    lats = [0.01, 0.02, 0.04, 0.08, 0.16]
+    for i, lat in enumerate(lats):
+        _record(log, size=2, lat=lat, t0=float(i))
+    assert len(log.records) == 2               # ring trimmed
+    assert log._dropped_records == 3
+    summ = log.summary()
+    assert summ["requests"] == 10              # aggregates stay exact
+    exact = float(np.percentile(np.repeat(lats, 2), 50))
+    assert summ["latency_p50_s"] \
+        == pytest.approx(exact, rel=DEFAULT_GROWTH - 1.0)
+    # the per-model histogram backs model percentiles too
+    assert log.latency_percentile(99, "m") \
+        == pytest.approx(0.16, rel=DEFAULT_GROWTH - 1.0)
+    with pytest.raises(ValueError):
+        log.latency_percentile(50, "never_served")
+
+
+def test_hw_summary_is_frame_weighted():
+    log = serve.TelemetryLog(points=(RMAM1,))
+    r1 = _record(log, size=1, t0=0.0)
+    r8 = _record(log, size=8, t0=1.0)
+    hw = log.summary()["hardware"]["RMAM@1G"]
+    f1, f8 = r1.hw["RMAM@1G"].fps, r8.hw["RMAM@1G"].fps
+    assert hw["modeled_fps"] == pytest.approx((f1 + 8 * f8) / 9)
+    assert f8 > f1                             # batch amortization
+
+
+def test_mixed_sharded_and_unsharded_batches():
+    log = serve.TelemetryLog(points=(RMAM1,))
+    _record(log, size=4, shards=[("acc0", 3, RMAM1, 0.02),
+                                 ("acc1", 1, RMAM1, 0.01)])
+    _record(log, size=2, t0=1.0)               # unsharded
+    summ = log.summary()
+    assert summ["requests"] == 6
+    assert summ["dispatch"]["acc0"]["frames"] == 3
+    assert summ["dispatch"]["acc1"]["frames"] == 1
+    assert sum(d["frames"] for d in summ["dispatch"].values()) == 4
+    assert summ["layers"]["m"]["coverage"] == pytest.approx(1.0, rel=1e-9)
+    # scrape counters follow the same split
+    text = log.metrics.prometheus_text()
+    assert 'serve_shard_frames_total{instance="acc0"} 3' in text
+    assert 'serve_requests_total{model="m"} 6' in text
+
+
+def test_pipeline_dispatch_counts():
+    plan = engine.compile_model("obs_counts",
+                                zoo.serving_defs("shufflenet_mini"))
+    engine.pipeline_cache_clear()
+    rng = np.random.default_rng(2)
+    shape = zoo.serving_input_shape("shufflenet_mini")
+    for size in (1, 1, 3):
+        engine.forward_jit(plan, rng.normal(size=(size, *shape))
+                           .astype(np.float32))
+    counts = engine.pipeline_dispatch_counts()
+    assert counts[("obs_counts", engine.batch_bucket(1))] == 2
+    assert counts[("obs_counts", engine.batch_bucket(3))] == 1
+    engine.pipeline_cache_clear()
+    assert engine.pipeline_dispatch_counts() == {}
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: traced fault-injected fleet
+# ---------------------------------------------------------------------------
+
+def test_traced_fleet_end_to_end(tmp_path):
+    tracer = obs.Tracer()
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.CRASH, start=1,
+                         duration=2)])
+    fleet = serve.ShardedDispatcher(serve.default_fleet(2),
+                                    fault_injector=injector,
+                                    probe_cooldown_s=0.01)
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=3,
+                          dispatcher=fleet, tracer=tracer)
+    rng = np.random.default_rng(4)
+    n = 6
+    shape = zoo.serving_input_shape("shufflenet_mini")
+    for x in rng.normal(size=(n, *shape)).astype(np.float32):
+        srv.submit("shufflenet_mini", x)
+    out = srv.run_until_drained()
+    fleet.close()
+    assert len(out) == n
+
+    recs = tracer.events()
+    census = obs.category_census(recs)
+    assert census.get("shard", 0) > 0
+    assert census.get("fault", 0) > 0          # the crash left instants
+    assert census.get("request", 0) >= 2 * n   # async begin/end pairs
+    batch_spans = [r for r in recs if r.cat == "batch" and r.ph == "X"]
+    assert any(r.name == "shard.exec" and r.args.get("error")
+               for r in recs)                  # the crash annotated a span
+    assert batch_spans and all("model" in r.args or r.parent_id
+                               for r in batch_spans)
+
+    doc = obs.write_trace(tmp_path / "trace.json", recs)
+    obs.validate_chrome_trace(doc, require_dual_clock=True)
+    assert obs.hw_occupancy(doc)               # modeled clock populated
+
+    summ = srv.telemetry.summary()
+    assert summ["layers"]["shufflenet_mini"]["coverage"] >= 0.95
+    assert summ["fleet"]["instances"]        # health snapshot attached
+    text = srv.telemetry.metrics.prometheus_text()
+    assert "serve_requests_total" in text
+    assert "serve_request_latency_seconds_bucket" in text
+
+    # reset forgets the trace's telemetry but keeps serving viable
+    srv.reset()
+    assert srv.telemetry.summary() == {"requests": 0, "batches": 0}
+
+
+def test_server_unsharded_traces_local_hw_clock():
+    tracer = obs.Tracer()
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          tracer=tracer)
+    rng = np.random.default_rng(6)
+    shape = zoo.serving_input_shape("shufflenet_mini")
+    for x in rng.normal(size=(4, *shape)).astype(np.float32):
+        srv.submit("shufflenet_mini", x)
+    srv.run_until_drained()
+    doc = obs.chrome_trace(tracer.events())
+    obs.validate_chrome_trace(doc, require_dual_clock=True)
+    busy = obs.hw_occupancy(doc)
+    assert set(busy) == {"local"} and busy["local"] > 0
