@@ -3,28 +3,80 @@
 The paper fixes 4-bit precision because Eq. 9's SNR budget collapses above
 it (Sec. III-B). This benchmark injects the photodetector noise at the
 summation elements and reports the integer-domain RMS error of VDP results
-per (bits, BR) — the 4-bit/1-Gbps operating point stays ~1 LSB while
-higher precisions blow past their own LSB, reproducing the design logic.
+per (bits, BR) — the 4-bit/1-Gbps operating point stays well under
+``FLOOR_LSB`` RMS while higher precisions either blow past their own LSB
+or are flat-out infeasible under the SNR budget
+(``core.photonics.InfeasiblePrecisionError``, reported as
+``feasible: false`` rows rather than silently-clean results).
+
+The table is merge-written into ``BENCH_kernels.json["analog_noise"]``
+(kernel_bench owns the other families in the same JSON) and the
+4-bit/1-Gbps RMS floor is gated in ``scripts/check_bench.py``.
+
+Usage:  PYTHONPATH=src python -m benchmarks.noise_ablation
 """
+import json
+from pathlib import Path
+from typing import Dict
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import vdp
 from repro.core.mapping import TPCConfig
+from repro.core.photonics import InfeasiblePrecisionError
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_kernels.json"
 
 RMAM = TPCConfig("MAM", 43, 43, True)
 
+#: the design point's noise budget: 4-bit/1-Gbps must stay under this
+#: integer-domain RMS (in LSBs) for the paper's precision choice to hold
+FLOOR_LSB = 1.5
 
-def run() -> None:
+
+def run() -> Dict:
     rng = np.random.default_rng(0)
     divs = jnp.asarray(rng.integers(-7, 8, (256, 43)), jnp.int8)
     dkvs = jnp.asarray(rng.integers(-7, 8, (16, 43)), jnp.int8)
     clean = np.asarray(vdp.sliced_vdp_gemm(divs, dkvs, RMAM), np.float64)
-    for bits in (2, 4, 6):
+    rows: Dict[str, Dict] = {}
+    for bits in (2, 4, 6, 8):
         for br in (1e9, 5e9):
-            noisy = vdp.noisy_vdp_gemm(jax.random.PRNGKey(1), divs, dkvs,
-                                       RMAM, br_hz=br, bits=bits)
-            err = np.asarray(noisy, np.float64) - clean
-            rms = float(np.sqrt(np.mean(err ** 2)))
-            print(f"noise,bits={bits},br={br/1e9:g}Gbps,rms_lsb={rms:.3f}")
+            key = f"b{bits}_br{br / 1e9:g}"
+            row: Dict = {"bits": bits, "br_gbps": br / 1e9}
+            try:
+                noisy = vdp.noisy_vdp_gemm(jax.random.PRNGKey(1), divs,
+                                           dkvs, RMAM, br_hz=br, bits=bits)
+            except InfeasiblePrecisionError as e:
+                row.update(feasible=False, reason=str(e))
+                print(f"noise,bits={bits},br={br / 1e9:g}Gbps,infeasible")
+            else:
+                err = np.asarray(noisy, np.float64) - clean
+                rms = float(np.sqrt(np.mean(err ** 2)))
+                row.update(feasible=True, rms_lsb=rms)
+                print(f"noise,bits={bits},br={br / 1e9:g}Gbps,"
+                      f"rms_lsb={rms:.3f}")
+            rows[key] = row
+    design = rows["b4_br1"]
+    assert design["feasible"], "the paper's 4-bit/1-Gbps point must work"
+    assert design["rms_lsb"] <= FLOOR_LSB, (
+        f"4-bit/1-Gbps RMS noise {design['rms_lsb']:.3f} LSB blew the "
+        f"{FLOOR_LSB} LSB design budget")
+    # merge-write: kernel_bench owns the other families in the same JSON
+    doc = {}
+    if OUT_PATH.exists():
+        try:
+            doc = json.loads(OUT_PATH.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["analog_noise"] = {"rows": rows, "floor_lsb_b4_br1": FLOOR_LSB}
+    OUT_PATH.write_text(json.dumps(doc, indent=2, default=float) + "\n")
+    print(f"noise_ablation,json,{OUT_PATH}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -10,9 +10,9 @@ import sys
 import time
 
 from . import (chaos_bench, fig4_5_scalability, fig6_utilization,
-               fig10_11_fps, kernel_bench, noise_ablation, serve_bench,
-               table2_vdpe_size, table3_dkv_census, table4_comb_switch,
-               table8_area_proportionate)
+               fig10_11_fps, kernel_bench, noise_ablation, sdc_bench,
+               serve_bench, table2_vdpe_size, table3_dkv_census,
+               table4_comb_switch, table8_area_proportionate)
 
 BENCHES = {
     "table2_vdpe_size": table2_vdpe_size.run,
@@ -26,6 +26,7 @@ BENCHES = {
     "noise_ablation": noise_ablation.run,
     "serve_bench": serve_bench.run,     # smoke settings by default
     "chaos_bench": chaos_bench.run,     # fault-injection scenarios
+    "sdc_bench": sdc_bench.run,         # silent-data-corruption defense
 }
 
 

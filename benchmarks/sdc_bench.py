@@ -1,0 +1,366 @@
+"""SDC harness: silent-data-corruption defense scenarios, replayable by seed.
+
+PR-6's chaos harness (chaos_bench.py) injects *availability* faults —
+crashes, stragglers, stuck reconfigurations — whose worst case is a late
+or missing answer.  This harness injects *integrity* faults that corrupt
+the photonic datapath's values in flight (analog PD noise, thermal MRR
+detune, stuck weight rings, ADC bit flips) and asserts the three
+properties the SDC defense owes its clients:
+
+* **corruption is real** — with the defense off, a corrupting instance
+  silently poisons outputs (the ``silent_corruption`` row is the threat
+  model, not a regression);
+* **detection is near-certain and cheap** — ABFT row/column checksums +
+  the accumulation-range guard + the weight-imprint checksum flag
+  corrupted shards (``OutputCorrupted``) at >=99% of corrupted
+  dispatches, costing <=5% of batch-8 serving throughput;
+* **recovery is bitwise** — flagged shards re-execute on healthy
+  instances and every admitted request's output is bitwise-identical to
+  the fault-free trace; a corrupted-frame-rate SLO sheds (typed) while
+  the fleet is poisoned and readmits after quarantine + decay.
+
+Scenarios (recorded under ``BENCH_serve.json["sdc"]`` and gated in
+``scripts/check_bench.py``):
+
+* ``silent_corruption`` — defense OFF: analog noise on one instance is
+                          served to clients undetected (bitwise=False).
+* ``detect_recover``    — defense ON against a 4-kind corruption
+                          schedule: detection rate, bitwise recovery,
+                          detection latency.
+* ``detection_overhead`` — healthy fleet, guarded vs unguarded batch-8
+                          serving throughput (the <=5% overhead gate).
+* ``canary_sweep``      — persistent stuck-MRR weight corruption with
+                          inline checks OFF: per-instance canary probes
+                          against golden outputs catch and quarantine
+                          the corrupter.
+* ``corruption_slo``    — corrupted-frame-rate SLO: typed
+                          ``CorruptionBudgetExceeded`` shedding while
+                          corruption is live, admission resumes after
+                          quarantine + EMA decay.
+
+Usage:  PYTHONPATH=src python -m benchmarks.sdc_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine, serve
+from repro.obs.metrics import MetricsRegistry
+
+from .chaos_bench import _bitwise, _inputs, _prewarm, _reference_outputs
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_serve.json"
+
+MODEL = "shufflenet_mini"       # smallest serving-zoo member: fast traces
+
+
+def _prewarm_guarded(srv: "serve.CNNServer", model: str,
+                     policy: "engine.IntegrityPolicy",
+                     buckets=(1, 2, 4, 8)) -> None:
+    """Compile the guarded pipeline for every shard bucket up front."""
+    entry = srv.registry.get(model)
+    shape = serve.serving_input_shape(model)
+    cargs = engine.null_corruption_args()
+    for b in buckets:
+        out, _ = engine.forward_jit_guarded(
+            entry.plan, jnp.zeros((b, *shape), jnp.float32), cargs=cargs,
+            policy=policy)
+        jax.block_until_ready(out)
+
+
+# ---------------------------------------------------------------------------
+# scenario: defense off — the threat model
+# ---------------------------------------------------------------------------
+
+def silent_corruption(n_requests: int, seed: int) -> Dict:
+    """Analog noise on one instance, NO integrity checks: silent poison."""
+    xs = _inputs(MODEL, n_requests, seed)
+    reference = _reference_outputs(xs)
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.ANALOG_NOISE, start=0,
+                         severity=3.0)])
+    fleet = serve.ShardedDispatcher(serve.default_fleet(3),
+                                    fault_injector=injector)
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet)
+    _prewarm(srv, MODEL)
+    rids = [srv.submit(MODEL, x) for x in xs]
+    out = srv.run_until_drained()
+    fleet.close()
+    ok = _bitwise(out, rids, reference)
+    row = {
+        "bitwise": ok,
+        "corrupted_dispatches": injector.corrupted_dispatches,
+        "detections": fleet.counters["sdc_detections"],
+    }
+    assert not ok, ("silent_corruption: analog noise left every output "
+                    "bit-identical — the injected fault is a no-op")
+    assert fleet.counters["sdc_detections"] == 0
+    assert injector.corrupted_dispatches >= 1
+    print(f"sdc_bench,silent_corruption,bitwise={ok},"
+          f"corrupted={injector.corrupted_dispatches},detections=0")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# scenario: defense on — detect every corrupted dispatch, recover bitwise
+# ---------------------------------------------------------------------------
+
+def detect_recover(n_requests: int, seed: int) -> Dict:
+    """All four corruption kinds across the fleet; ABFT+guards catch them."""
+    xs = _inputs(MODEL, n_requests, seed)
+    reference = _reference_outputs(xs)
+    # one event of each integrity kind, staggered across instances and
+    # dispatch windows (a detected corrupter stays quarantined until its
+    # window burns down, so fully-overlapping windows would empty the
+    # fleet); severities are kind-appropriate and strong enough that a
+    # corrupted dispatch always actually perturbs the accumulators
+    schedule = [
+        serve.FaultEvent("acc0", serve.FaultKind.ANALOG_NOISE, start=1,
+                         duration=2, severity=3.0),
+        serve.FaultEvent("acc1", serve.FaultKind.THERMAL_DETUNE, start=3,
+                         duration=2, severity=0.10),
+        serve.FaultEvent("acc2", serve.FaultKind.ADC_BITFLIP, start=5,
+                         duration=2, severity=0.01),
+        serve.FaultEvent("acc0", serve.FaultKind.STUCK_MRR, start=5,
+                         duration=2, severity=2.0),
+    ]
+    injector = serve.FaultInjector(schedule, seed=seed)
+    # generous retry budget: overlapping quarantines can transiently empty
+    # the fleet; the dispatcher waits for probes instead of giving up
+    fleet = serve.ShardedDispatcher(
+        serve.default_fleet(3), fault_injector=injector,
+        probe_cooldown_s=0.01, max_retries=8,
+        integrity=serve.IntegrityConfig(check_every=1))
+    fleet.metrics = MetricsRegistry()
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet)
+    _prewarm(srv, MODEL)
+    _prewarm_guarded(srv, MODEL, fleet.integrity.policy())
+    rids = [srv.submit(MODEL, x) for x in xs]
+    out = srv.run_until_drained()
+    fleet.close()
+    ok = _bitwise(out, rids, reference)
+    corrupted = injector.corrupted_dispatches
+    detections = fleet.counters["sdc_detections"]
+    rate = detections / corrupted if corrupted else 1.0
+    hist = fleet.metrics.histogram("serve_sdc_detection_latency_seconds",
+                                   model=MODEL)
+    row = {
+        "bitwise": ok,
+        "completed": len(rids),
+        "corrupted_dispatches": corrupted,
+        "detections": detections,
+        "detection_rate": rate,
+        "detection_latency_p50_ms": (hist.percentile(0.5) * 1e3
+                                     if hist.count else None),
+        "counters": dict(fleet.counters),
+    }
+    assert corrupted >= 3, f"schedule barely fired ({corrupted} dispatches)"
+    assert rate >= 0.99, (
+        f"detection rate {rate:.3f} < 0.99 "
+        f"({detections}/{corrupted} corrupted dispatches flagged)")
+    assert ok, "detect_recover: recovered outputs diverged from fault-free"
+    assert fleet.counters["quarantines"] >= 1
+    print(f"sdc_bench,detect_recover,bitwise={ok},rate={rate:.3f},"
+          f"detections={detections}/{corrupted}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# scenario: detection overhead on a healthy fleet
+# ---------------------------------------------------------------------------
+
+def detection_overhead(reps: int, seed: int) -> Dict:
+    """Guarded vs unguarded batch-8 throughput on a healthy instance."""
+    reg = serve.paper_cnn_registry()
+    entry = reg.get(MODEL)
+    rng = np.random.default_rng(seed)
+    xb = jnp.asarray(rng.normal(
+        size=(8, *entry.input_shape)).astype(np.float32))
+
+    plain = serve.ShardedDispatcher(serve.default_fleet(1))
+    guarded = serve.ShardedDispatcher(
+        serve.default_fleet(1),
+        integrity=serve.IntegrityConfig(check_every=1))
+
+    def throughput(disp: "serve.ShardedDispatcher") -> float:
+        res, _ = disp.run(entry.plan, xb)                       # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            disp.run(entry.plan, xb)
+        return 8 * reps / (time.perf_counter() - t0)
+
+    plain_img_s = throughput(plain)
+    guarded_img_s = throughput(guarded)
+    res_p, _ = plain.run(entry.plan, xb)
+    res_g, _ = guarded.run(entry.plan, xb)
+    plain.close()
+    guarded.close()
+    ratio = guarded_img_s / plain_img_s
+    row = {
+        "bitwise": bool((np.asarray(res_p) == np.asarray(res_g)).all()),
+        "plain_images_per_s": plain_img_s,
+        "guarded_images_per_s": guarded_img_s,
+        "throughput_ratio": ratio,
+    }
+    assert row["bitwise"], "guarded path diverged on a healthy instance"
+    assert ratio >= 0.95, (
+        f"integrity checking cost {(1 - ratio) * 100:.1f}% of batch-8 "
+        f"throughput (budget: 5%)")
+    print(f"sdc_bench,detection_overhead,ratio={ratio:.3f},"
+          f"plain={plain_img_s:.1f},guarded={guarded_img_s:.1f}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# scenario: canary probes vs persistent weight corruption
+# ---------------------------------------------------------------------------
+
+def canary_sweep(n_requests: int, seed: int) -> Dict:
+    """Stuck-MRR weights, inline checks OFF: the canary is the last line."""
+    xs = _inputs(MODEL, n_requests, seed)
+    reference = _reference_outputs(xs)
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc1", serve.FaultKind.STUCK_MRR, start=0,
+                         severity=2.0)])
+    fleet = serve.ShardedDispatcher(
+        serve.default_fleet(3), fault_injector=injector,
+        probe_cooldown_s=0.02,
+        integrity=serve.IntegrityConfig(check_every=0, canary_every=1))
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet)
+    _prewarm(srv, MODEL)
+    _prewarm_guarded(srv, MODEL, engine.DISABLED_POLICY, buckets=(1, 2, 4))
+    rids = [srv.submit(MODEL, x) for x in xs]
+    out = srv.run_until_drained()
+    fleet.close()
+    ok = _bitwise(out, rids, reference)
+    row = {
+        "bitwise": ok,
+        "canary_probes": fleet.counters["canary_probes"],
+        "canary_failures": fleet.counters["canary_failures"],
+        "quarantines": fleet.counters["quarantines"],
+    }
+    assert ok, "canary_sweep: corrupted outputs reached clients"
+    assert fleet.counters["canary_failures"] >= 1, (
+        "the canary never caught the stuck-MRR instance")
+    assert fleet.counters["quarantines"] >= 1
+    print(f"sdc_bench,canary_sweep,bitwise={ok},"
+          f"probes={fleet.counters['canary_probes']},"
+          f"failures={fleet.counters['canary_failures']}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# scenario: corrupted-frame-rate SLO — typed shed, then recovery
+# ---------------------------------------------------------------------------
+
+def corruption_slo(seed: int) -> Dict:
+    """Shed (typed) while the fleet is poisoned; readmit after decay."""
+    halflife = 0.2
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.ANALOG_NOISE, start=0,
+                         duration=2, severity=3.0)])
+    fleet = serve.ShardedDispatcher(
+        serve.default_fleet(3), fault_injector=injector,
+        probe_cooldown_s=0.02,
+        integrity=serve.IntegrityConfig(check_every=1))
+    slo = serve.ServeSLO(deadline_s=30.0, max_corrupted_frame_rate=0.25,
+                         corruption_halflife_s=halflife)
+    srv = serve.CNNServer(serve.paper_cnn_registry(), max_batch=4,
+                          dispatcher=fleet, slo=slo)
+    _prewarm(srv, MODEL)
+    _prewarm_guarded(srv, MODEL, fleet.integrity.policy())
+    xs = _inputs(MODEL, 32, seed)
+    reference = _reference_outputs(xs)
+    admitted_idx: List[int] = []
+    rids: List[int] = []
+
+    def submit_burst(lo: int, hi: int) -> int:
+        shed = 0
+        for i in range(lo, hi):
+            try:
+                rids.append(srv.submit(MODEL, xs[i]))
+                admitted_idx.append(i)
+            except serve.CorruptionBudgetExceeded:
+                shed += 1
+            srv.step(force=True)
+        return shed
+
+    # phase 1 — corruption window: detections push the corrupted-frame
+    # EMA over budget; the tail of the burst sheds with a typed error
+    poisoned_shed = submit_burst(0, 12)
+    detections = fleet.counters["sdc_detections"]
+    # phase 2 — the fault window has passed and the EMA half-life decays
+    # the rate under budget: admission must resume
+    time.sleep(4 * halflife)
+    recovered_shed = submit_burst(12, 32)
+    fleet.close()
+    ok = _bitwise(srv.results, rids, [reference[i] for i in admitted_idx])
+    row = {
+        "bitwise": ok,
+        "submitted": 32,
+        "admitted": len(rids),
+        "poisoned_shed": poisoned_shed,
+        "recovered_shed": recovered_shed,
+        "detections": detections,
+        "integrity_shed": srv.admission["integrity_shed"],
+    }
+    assert detections >= 1, "corruption window never tripped a detection"
+    assert poisoned_shed > 0, "SLO never shed during the poisoned window"
+    assert recovered_shed == 0, (
+        f"admission never recovered ({recovered_shed} shed after decay)")
+    assert ok, "corruption_slo: admitted outputs diverged from fault-free"
+    print(f"sdc_bench,corruption_slo,bitwise={ok},"
+          f"poisoned_shed={poisoned_shed},recovered_shed={recovered_shed}")
+    return row
+
+
+# ---------------------------------------------------------------------------
+# harness
+# ---------------------------------------------------------------------------
+
+def run(smoke: bool = True, seed: int = 0) -> Dict:
+    n = 12 if smoke else 48
+    reps = 3 if smoke else 8
+    scenarios = {
+        "silent_corruption": silent_corruption(n, seed),
+        "detect_recover": detect_recover(max(n * 2, 32), seed),
+        "detection_overhead": detection_overhead(reps, seed),
+        "canary_sweep": canary_sweep(n, seed + 1),
+        "corruption_slo": corruption_slo(seed + 2),
+    }
+    # merge-write: serve_bench/chaos_bench own the other families
+    doc = {}
+    if OUT_PATH.exists():
+        try:
+            doc = json.loads(OUT_PATH.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["sdc"] = {"smoke": smoke, "seed": seed, "scenarios": scenarios}
+    OUT_PATH.write_text(json.dumps(doc, indent=2, default=float) + "\n")
+    print(f"sdc_bench,json,{OUT_PATH}")
+    return scenarios
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small SDC traces for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

@@ -2,11 +2,13 @@
 
 Snapshots the committed ``BENCH_serve.json`` / ``BENCH_kernels.json``,
 re-runs the benches that write them — ``benchmarks.serve_bench --smoke``,
-``benchmarks.chaos_bench --smoke``, ``benchmarks.obs_bench --smoke`` (all
-three merge-write BENCH_serve.json) plus the full ``kernel_bench`` (the
-smoke variant of kernel_bench is assertion-only and writes no JSON;
-budget ~2 min per round, and a first-round regression triggers a second
-confirming round — CI gives the job a 20-minute timeout) — and fails when
+``benchmarks.chaos_bench --smoke``, ``benchmarks.sdc_bench --smoke``,
+``benchmarks.obs_bench --smoke`` (all four merge-write BENCH_serve.json)
+plus the full ``kernel_bench`` and ``noise_ablation`` (both merge-write
+BENCH_kernels.json; the smoke variant of kernel_bench is assertion-only
+and writes no JSON; budget ~2 min per round, and a first-round regression
+triggers a second confirming round — CI gives the job a 20-minute
+timeout) — and fails when
 a gated throughput family regresses by more than ``--threshold`` (default
 30%), or when a metric with an absolute floor (``ABS_FLOORS`` — e.g. the
 tracing-overhead ratio ``obs.overhead.ratio`` >= 0.95) lands below it.
@@ -81,8 +83,10 @@ SMOKE_COMMANDS = (
     # merge-write BENCH_serve.json (each preserves the others' sections)
     [sys.executable, "-m", "benchmarks.serve_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.chaos_bench", "--smoke"],
+    [sys.executable, "-m", "benchmarks.sdc_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.obs_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.run", "--only", "kernel_bench"],
+    [sys.executable, "-m", "benchmarks.noise_ablation"],
 )
 
 
@@ -92,7 +96,8 @@ SMOKE_COMMANDS = (
 #: kernel ratios.  serve_fault.* are pass/fail invariants from the chaos
 #: harness (bitwise under faults, typed shedding, fleet healing) encoded
 #: as 1.0/0.01 so any violation craters its family geomean.
-GATED_FAMILY_PREFIXES = ("kernels.", "serve_fleet.", "serve_fault.")
+GATED_FAMILY_PREFIXES = ("kernels.", "serve_fleet.", "serve_fault.",
+                         "serve_sdc.")
 
 #: metrics gated by an absolute floor on the FRESH value instead of a
 #: ratio against the baseline.  The overhead ratio and attribution
@@ -104,6 +109,16 @@ GATED_FAMILY_PREFIXES = ("kernels.", "serve_fleet.", "serve_fault.")
 ABS_FLOORS = {
     "obs.overhead.ratio": 0.95,
     "obs.attribution.coverage": 0.95,
+    # SDC defense (benchmarks/sdc_bench.py): >=99% of corrupted dispatches
+    # flagged, recovered outputs bitwise-identical to the fault-free
+    # trace, integrity checking keeps >=95% of batch-8 throughput
+    "serve_sdc.detection.rate": 0.99,
+    "serve_sdc.recovery.bitwise": 0.99,
+    "serve_sdc.overhead.ratio": 0.95,
+    # analog-noise ablation (benchmarks/noise_ablation.py): headroom of
+    # the 4-bit/1-Gbps design point under its 1.5-LSB RMS noise budget
+    # (floor_lsb / measured rms; 1.0 = exactly at budget)
+    "kernels.analog_noise.headroom.b4_br1": 1.0,
 }
 
 
@@ -141,6 +156,35 @@ def serve_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
         if "healed_instances" in row:
             yield (f"serve_fault.healed.{name}",
                    1.0 if row["healed_instances"] == 3 else 0.01)
+    # gated: SDC-defense invariants (benchmarks/sdc_bench.py) — booleans
+    # as 1.0/0.01 like the chaos rows; rate/ratio also floor-gated
+    sdc = doc.get("sdc", {}).get("scenarios", {})
+    dr = sdc.get("detect_recover", {})
+    if "detection_rate" in dr:
+        yield "serve_sdc.detection.rate", float(dr["detection_rate"])
+    if "bitwise" in dr:
+        yield ("serve_sdc.recovery.bitwise",
+               1.0 if dr["bitwise"] else 0.01)
+    ov_sdc = sdc.get("detection_overhead", {})
+    if "throughput_ratio" in ov_sdc:
+        yield "serve_sdc.overhead.ratio", float(ov_sdc["throughput_ratio"])
+    sc = sdc.get("silent_corruption", {})
+    if "bitwise" in sc:
+        # the threat-model row: corruption with the defense OFF must
+        # actually corrupt (bitwise=False is the pass state)
+        yield ("serve_sdc.threat.corrupts",
+               1.0 if not sc["bitwise"] else 0.01)
+    cy = sdc.get("canary_sweep", {})
+    if "bitwise" in cy:
+        yield ("serve_sdc.canary.bitwise",
+               1.0 if (cy["bitwise"]
+                       and cy.get("canary_failures", 0) > 0) else 0.01)
+    slo_row = sdc.get("corruption_slo", {})
+    if slo_row:
+        yield ("serve_sdc.slo.shed_typed",
+               1.0 if (slo_row.get("poisoned_shed", 0) > 0
+                       and slo_row.get("recovered_shed", 1) == 0
+                       and slo_row.get("bitwise")) else 0.01)
     # floor-gated observability metrics (benchmarks/obs_bench.py)
     observ = doc.get("observability", {})
     ov = observ.get("overhead", {})
@@ -166,6 +210,14 @@ def kernel_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
         v = row.get("q8_speedup")
         if v:
             yield f"kernels.q8_speedup.{layer}", float(v)
+    # analog-noise ablation (benchmarks/noise_ablation.py): design-point
+    # noise headroom = budget / measured RMS, floor-gated at 1.0
+    noise = doc.get("analog_noise", {})
+    design = noise.get("rows", {}).get("b4_br1", {})
+    floor = noise.get("floor_lsb_b4_br1")
+    if floor and design.get("feasible") and design.get("rms_lsb"):
+        yield ("kernels.analog_noise.headroom.b4_br1",
+               float(floor) / float(design["rms_lsb"]))
 
 
 def collect(bench_dir: Path) -> Dict[str, float]:

@@ -140,6 +140,23 @@ def watt_to_dbm(watt: float) -> float:
 # Eq. 9 / Eq. 10 — photodetector precision vs received optical power
 # ---------------------------------------------------------------------------
 
+class InfeasiblePrecisionError(ValueError):
+    """A (bits, BR) operating point whose Eq. 9 SNR budget cannot close.
+
+    Raised instead of silently degrading to a noise-free/zero-sigma model:
+    above the RIN ceiling no received power resolves the requested
+    precision, so any computation claiming that point is fiction.
+    """
+
+    def __init__(self, bits: float, br_hz: float, detail: str = ""):
+        msg = (f"{bits}-bit precision is not achievable at "
+               f"{br_hz / 1e9:g} Gbps under the Eq. 9 SNR budget"
+               f"{': ' + detail if detail else ''}")
+        super().__init__(msg)
+        self.bits = bits
+        self.br_hz = br_hz
+
+
 def noise_current_rms(p: PhotonicParams, pd_power_w: float, br_hz: float) -> float:
     """Eq. 10 noise (A, rms) integrated over noise bandwidth BR/sqrt(2)."""
     bw = br_hz / math.sqrt(2.0)
@@ -181,6 +198,32 @@ def pd_power_for_precision(
         else:
             lo = mid
     return hi
+
+
+def integer_noise_sigma_lsb(p: PhotonicParams, n_bits: int,
+                            br_hz: float) -> float:
+    """Eq. 9/10 PD noise as an integer-domain sigma, in LSBs.
+
+    At the minimum received power that resolves ``n_bits`` (Eq. 9
+    inverted), the Eq. 10 noise current maps onto the integer lattice
+    through the LSB current step — the signal swing divided into
+    ``2**n_bits - 1`` levels.  This is the per-summation-element sigma the
+    analog noise model (core/vdp.noisy_vdp_gemm) and the serving stack's
+    ANALOG_NOISE fault injection both derive from.
+
+    Raises :class:`InfeasiblePrecisionError` when the RIN ceiling makes
+    the precision unattainable at any power (pd_power_for_precision
+    returns None) — the old behavior of silently reporting sigma 0.0
+    meant an infeasible point masqueraded as a *noise-free* one.
+    """
+    pd_w = pd_power_for_precision(p, n_bits, br_hz)
+    if pd_w is None:
+        raise InfeasiblePrecisionError(
+            n_bits, br_hz, "RIN ceiling exceeded at any received power")
+    noise_a = noise_current_rms(p, pd_w, br_hz)
+    signal_a = p.responsivity * pd_w
+    lsb = signal_a / (2 ** n_bits - 1)
+    return noise_a / lsb
 
 
 # ---------------------------------------------------------------------------

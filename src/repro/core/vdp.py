@@ -28,6 +28,7 @@ import numpy as np
 
 from .mapping import TPCConfig, slice_plan
 from . import photonics as ph
+from .photonics import InfeasiblePrecisionError  # noqa: F401  (re-export)
 
 
 # ---------------------------------------------------------------------------
@@ -234,17 +235,16 @@ def noisy_vdp_gemm(key: jax.Array, divs_q: jax.Array, dkvs_q: jax.Array,
 
     The PD noise current (Eq. 10) at the operating received power maps to an
     equivalent integer-domain sigma via the LSB size at the photodetector:
-    one LSB corresponds to the minimum resolvable power step for ``bits``.
+    one LSB corresponds to the minimum resolvable power step for ``bits``
+    (ph.integer_noise_sigma_lsb).
+
+    Raises :class:`repro.core.photonics.InfeasiblePrecisionError` when the
+    (bits, BR) point violates the Eq. 9 RIN ceiling — such a point used to
+    silently return the *noise-free* result (sigma 0.0), the exact opposite
+    of what infeasibility means.
     """
     p = params or ph.PhotonicParams()
-    pd_w = ph.pd_power_for_precision(p, bits, br_hz)
-    sigma_lsb = 0.0
-    if pd_w is not None:
-        noise_a = ph.noise_current_rms(p, pd_w, br_hz)
-        signal_a = p.responsivity * pd_w
-        # LSB in current domain for `bits` levels over the signal swing
-        lsb = signal_a / (2 ** bits - 1)
-        sigma_lsb = noise_a / lsb
+    sigma_lsb = ph.integer_noise_sigma_lsb(p, bits, br_hz)
     acc = sliced_vdp_gemm(divs_q, dkvs_q, tpc).astype(jnp.float32)
     n_slices = sum(c for _, _, c in slice_plan(tpc, divs_q.shape[1]))
     noise = (jax.random.normal(key, acc.shape)

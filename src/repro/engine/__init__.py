@@ -5,11 +5,22 @@ activation epilogue fused into the Pallas kernels (kernels/vdpe_gemm.py,
 kernels/vdpe_conv.py; eager oracle: kernels/ref.epilogue_ref).  Conv layers
 run implicit-GEMM kernels (no materialized im2col); the serving hot path
 serves whole batches through one jitted dispatch (pipeline.forward_jit).
+The guarded twin (pipeline.forward_jit_guarded) materializes the int32
+accumulators for value-corruption injection and ABFT/guard verification —
+bit-identical to forward_jit on clean dispatches.
 """
-from .executor import (forward, forward_f32, forward_im2col,  # noqa: F401
-                       forward_layer, forward_layer_f32,
-                       forward_layer_im2col, layer_route)
-from .pipeline import (batch_bucket, forward_jit, get_pipeline,  # noqa: F401
+from .executor import (CorruptionArgs, DEFAULT_POLICY,  # noqa: F401
+                       DET_ABFT_COL, DET_ABFT_ROW, DET_RANGE, DET_WEIGHT,
+                       DISABLED_POLICY, IntegrityPolicy, abft_flags,
+                       corrupt_accumulators, corruption_args,
+                       detector_names, forward, forward_f32,
+                       forward_im2col, forward_layer, forward_layer_f32,
+                       forward_layer_guarded, forward_layer_im2col,
+                       layer_route, null_corruption_args,
+                       weight_imprint_checksum)
+from .pipeline import (batch_bucket, corrupted_layer_params,  # noqa: F401
+                       forward_jit, forward_jit_guarded,
+                       get_guarded_pipeline, get_pipeline,
                        pipeline_cache_clear, pipeline_cache_info,
                        pipeline_dispatch_counts)
 from .pipeline import evict as pipeline_evict  # noqa: F401
@@ -18,4 +29,4 @@ from .plan import (DEFAULT_POINT, EnginePoint, LayerChoice,  # noqa: F401
                    MODE_PACKED, ModelPlan, PlannerReport, compile_layer,
                    compile_model, defs_to_specs, get_plan, plan_cache_clear,
                    plan_cache_info, plan_model, search_cache_evict,
-                   search_points)
+                   search_points, snr_feasible_options)

@@ -60,7 +60,8 @@ engine/pipeline.py.
 """
 from __future__ import annotations
 
-from typing import Tuple
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -70,8 +71,8 @@ from ..core import vdp
 from ..kernels import ops, ref
 from ..kernels import vdpe_conv as kconv
 from ..kernels import vdpe_gemm as kern
-from ..kernels.common import (quantize_tile, round_up as _round_up,
-                              stable_scale)
+from ..kernels.common import (qmax_for, quantize_tile,
+                              round_up as _round_up, stable_scale)
 from .plan import (LayerPlan, MODE_DENSE, MODE_DEPTHWISE, MODE_PACKED,
                    ModelPlan)
 
@@ -556,3 +557,346 @@ def forward_im2col(plan: ModelPlan, x: jax.Array,
     for lp in plan.layers:
         x = forward_layer_im2col(plan, lp, x, interpret=interpret)
     return x
+
+
+# ---------------------------------------------------------------------------
+# Guarded execution path: value-corruption hook + ABFT/guard detection (SDC)
+# ---------------------------------------------------------------------------
+#
+# The serving hot path fuses the int32 accumulators inside the Pallas
+# kernels — they never exist as host-visible arrays, so there is nowhere to
+# corrupt them or checksum them.  The guarded path is a fourth execution
+# path with the SAME numerics contract as the three above: the im2col
+# quantize prologue (shared helpers), an *explicit* XLA int32 GEMM whose
+# accumulators are materialized, and the identical fused-epilogue
+# expression (ref.epilogue_ref).  Integer accumulation is order-invariant
+# (int32 addition is associative and commutative, wraparound included), so
+# the guarded path is bit-identical to `forward` / `forward_jit` when the
+# corruption arguments are null — which is what lets the dispatcher serve
+# real traffic through it and lets recovery claim *bitwise* equality with
+# the fault-free run.
+#
+# Between GEMM and epilogue the path (a) applies the fault injector's
+# value corruption to the accumulators (deterministic under the dispatch
+# seed; exactly zero effect when the corruption args are null) and (b)
+# verifies the accumulators with Huang-Abraham-style ABFT checksums, a
+# B-bit accumulation range guard, and a weight-imprint checksum, returning
+# a per-layer detector bitmask alongside the activations.
+#
+# Detector algebra (all exact in the ring Z/2^32 — int32 wraparound is
+# deterministic two's-complement, and GEMM is linear mod 2^32):
+#   column check:  (sum_r lhs[r, :]) @ rhs == sum_r acc[r, :]
+#   row check:     lhs @ (sum_f rhs[:, f]) == sum_f acc[:, f]
+# A single corrupted element acc[i, j] += d (d != 0 mod 2^32) shifts
+# column-sum j and row-sum i by exactly d, so it is ALWAYS detected by
+# both checks — no false negatives for single-element corruption, and no
+# false positives ever (the checks are identities, not tolerances).  Note
+# the checks verify acc *against the rhs as loaded*: a corrupted weight
+# imprint yields a GEMM that is self-consistent with the wrong weights,
+# which is exactly why the weight-imprint checksum (vs a trace-time golden
+# of the pristine rhs) exists as a separate detector.
+
+#: detector bitmask bits (per-layer flags word)
+DET_ABFT_COL = 1     # column-checksum mismatch
+DET_ABFT_ROW = 2     # row-checksum mismatch
+DET_RANGE = 4        # accumulator outside the B-bit accumulation bound
+DET_WEIGHT = 8       # resident weight imprint differs from golden
+
+_DETECTOR_NAMES = {DET_ABFT_COL: "abft_col", DET_ABFT_ROW: "abft_row",
+                   DET_RANGE: "range_guard", DET_WEIGHT: "weight_checksum"}
+
+
+def detector_names(mask: int) -> Tuple[str, ...]:
+    """Human-readable detector names for a flags bitmask."""
+    return tuple(name for bit, name in sorted(_DETECTOR_NAMES.items())
+                 if mask & bit)
+
+
+@dataclasses.dataclass(frozen=True)
+class IntegrityPolicy:
+    """Which detectors run, and how often (hashable: keys jit caches).
+
+    ``check_every=k`` checksums layers 0, k, 2k, ... (cadence trades
+    detection latency against overhead); ``check_every=0`` disables all
+    verification (the silent-corruption baseline).  The ABFT identity
+    catches any single corrupted accumulator element exactly; the range
+    guard bounds |acc| by qmax^2 * depth (a cheap always-on sanity net);
+    the weight checksum compares the resident imprint against a trace-time
+    golden (the only detector that can see STUCK_MRR weight corruption —
+    ABFT verifies the GEMM against the weights *as loaded*).
+    """
+    abft: bool = True
+    range_guard: bool = True
+    weight_checksum: bool = True
+    check_every: int = 1
+
+    def __post_init__(self) -> None:
+        if self.check_every < 0:
+            raise ValueError(
+                f"check_every must be >= 0, got {self.check_every}")
+
+
+DEFAULT_POLICY = IntegrityPolicy()
+DISABLED_POLICY = IntegrityPolicy(abft=False, range_guard=False,
+                                  weight_checksum=False, check_every=0)
+
+
+class CorruptionArgs(NamedTuple):
+    """Traced corruption parameters (jit *arguments*, not constants: one
+    guarded executable serves both clean and corrupted dispatches)."""
+    key: jax.Array        # PRNG key; folded with the layer index
+    sigma_lsb: jax.Array  # ANALOG_NOISE: Gaussian sigma in LSBs
+    gain: jax.Array       # THERMAL_DETUNE: multiplicative drift
+    bias_lsb: jax.Array   # THERMAL_DETUNE: additive drift in LSBs
+    flip_prob: jax.Array  # ADC_BITFLIP: per-element flip probability
+
+
+def corruption_args(seed: int = 0, sigma_lsb: float = 0.0, gain: float = 1.0,
+                    bias_lsb: float = 0.0, flip_prob: float = 0.0,
+                    ) -> CorruptionArgs:
+    return CorruptionArgs(
+        key=jax.random.PRNGKey(seed),
+        sigma_lsb=jnp.float32(sigma_lsb), gain=jnp.float32(gain),
+        bias_lsb=jnp.float32(bias_lsb), flip_prob=jnp.float32(flip_prob))
+
+
+def null_corruption_args() -> CorruptionArgs:
+    """The identity corruption (a clean dispatch)."""
+    return corruption_args()
+
+
+def corrupt_accumulators(acc: jax.Array, cargs: CorruptionArgs,
+                         salt: int) -> jax.Array:
+    """Apply the analog fault model to materialized int32 accumulators.
+
+    Three physically-motivated corruptions, each an *exact identity* when
+    its parameter is at rest (so a null CorruptionArgs returns ``acc``
+    unchanged, bit for bit):
+
+    * ANALOG_NOISE:   acc += round(N(0, sigma_lsb))       per element
+    * THERMAL_DETUNE: acc += round(acc*(gain-1) + bias)   (gain/offset)
+    * ADC_BITFLIP:    acc ^= (1 << low_bit)               w.p. flip_prob
+
+    All RNG derives from fold_in(cargs.key, salt) — the layer index salts
+    the per-dispatch key, so replaying a dispatch corrupts identically.
+    The whole block sits under a lax.cond on the traced activity
+    predicate: clean dispatches skip the RNG entirely.
+    """
+    def _apply(a: jax.Array) -> jax.Array:
+        key = jax.random.fold_in(cargs.key, salt)
+        k_noise, k_flip, k_bit = jax.random.split(key, 3)
+        noise = jnp.round(jax.random.normal(k_noise, a.shape)
+                          * cargs.sigma_lsb).astype(jnp.int32)
+        detune = jnp.round(a.astype(jnp.float32) * (cargs.gain - 1.0)
+                           + cargs.bias_lsb).astype(jnp.int32)
+        flips = jax.random.uniform(k_flip, a.shape) < cargs.flip_prob
+        bit = jax.random.randint(k_bit, a.shape, 0, 12)
+        mask = jnp.where(flips, jnp.int32(1) << bit, jnp.int32(0))
+        return jax.lax.bitwise_xor(a + noise + detune, mask)
+
+    active = ((cargs.sigma_lsb > 0) | (cargs.gain != 1.0)
+              | (cargs.bias_lsb != 0) | (cargs.flip_prob > 0))
+    return jax.lax.cond(active, _apply, lambda a: a, acc)
+
+
+def abft_flags(lhs: jax.Array, rhs: jax.Array, acc: jax.Array) -> jax.Array:
+    """ABFT row/column checksum verification of ``acc == lhs @ rhs``.
+
+    Exact identities in Z/2^32 (module comment); cost is two rank-1
+    checks, O(BF + BS + SF) vs the GEMM's O(BSF).  Returns an int32
+    DET_ABFT_* bitmask (0 when both checks pass).
+    """
+    li = lhs.astype(jnp.int32)
+    ri = rhs.astype(jnp.int32)
+    col_ok = jnp.all(jnp.matmul(jnp.sum(li, axis=0), ri)
+                     == jnp.sum(acc, axis=0))
+    row_ok = jnp.all(jnp.matmul(li, jnp.sum(ri, axis=1))
+                     == jnp.sum(acc, axis=1))
+    return (jnp.where(col_ok, 0, DET_ABFT_COL)
+            | jnp.where(row_ok, 0, DET_ABFT_ROW)).astype(jnp.int32)
+
+
+def range_guard_flag(acc: jax.Array, bound: int) -> jax.Array:
+    """DET_RANGE iff any |acc| exceeds the B-bit accumulation bound.
+
+    A depth-S contraction of qmax-bounded integers satisfies
+    |acc| <= qmax^2 * S exactly (equality reachable, so the guard is
+    strict).  Two comparisons, not abs(): |INT32_MIN| wraps negative.
+    """
+    b = jnp.int32(bound)
+    exceeds = jnp.any((acc > b) | (acc < -b))
+    return jnp.where(exceeds, DET_RANGE, 0).astype(jnp.int32)
+
+
+def weight_imprint_checksum(rhs: jax.Array) -> jax.Array:
+    """Position-weighted int32 checksum of a resident weight imprint.
+
+    The (i mod 97)+1 weights make the sum sensitive to *where* an element
+    changed, not just its value (a plain sum misses compensating swaps).
+    Compared against a golden computed from the pristine rhs at guarded-
+    pipeline build time — the one detector that catches STUCK_MRR faults,
+    since ABFT verifies the GEMM against the weights as loaded.
+    """
+    flat = rhs.astype(jnp.int32).ravel()
+    pos = (jnp.arange(flat.shape[0], dtype=jnp.int32) % 97) + 1
+    return jnp.sum(flat * pos)
+
+
+def _integrity_flags(lhs: jax.Array, rhs: jax.Array, acc: jax.Array,
+                     bound: int, policy: IntegrityPolicy,
+                     golden: Optional[int]) -> jax.Array:
+    flags = jnp.int32(0)
+    if policy.abft:
+        flags = flags | abft_flags(lhs, rhs, acc)
+    if policy.range_guard:
+        flags = flags | range_guard_flag(acc, bound)
+    if policy.weight_checksum and golden is not None:
+        ok = weight_imprint_checksum(rhs) == jnp.int32(golden)
+        flags = flags | jnp.where(ok, 0, DET_WEIGHT).astype(jnp.int32)
+    return flags
+
+
+def _guarded_conv(lp: LayerPlan, x4: jax.Array, cargs: CorruptionArgs,
+                  salt: int, check: bool, policy: IntegrityPolicy,
+                  golden: Optional[int]) -> Tuple[jax.Array, jax.Array]:
+    """SC/PC conv: the im2col structure with a materialized int32 GEMM.
+
+    Bitwise-identical to the kernel paths: shared quantize helpers, exact
+    integer GEMM (order-invariant), identical epilogue expression.  The
+    packed Mode-2 rhs (ops.pack_mode2_segments) is a dense (x, F) matrix
+    with each column's weights at natural offset, so the same plain GEMM
+    covers MODE_PACKED and MODE_DENSE.
+    """
+    point = lp.point
+    divs = _im2col_batch(x4, lp.k, lp.stride, lp.padding)   # (B, P, S)
+    spatial = vdp.out_hw(x4.shape[1], x4.shape[2], lp.k, lp.stride,
+                         lp.padding)
+    if divs.shape[2] != lp.s:
+        raise ValueError(f"layer {lp.name!r} expects contraction {lp.s}, "
+                         f"got input stream of width {divs.shape[2]}")
+    b, p, _ = divs.shape
+    divs_q, a_scale = _quantize_per_image(divs, point.bits)
+    ss = lp.rhs.shape[0]                       # x (packed) or S_pad (dense)
+    lhs = jnp.pad(divs_q.reshape(b * p, lp.s),
+                  ((0, 0), (0, ss - lp.s))).astype(jnp.int32)
+    rhs = lp.rhs.astype(jnp.int32)
+    acc = jnp.matmul(lhs, rhs)                 # (B*P, F_pad) int32
+    acc = corrupt_accumulators(acc, cargs, salt)
+    qmax = qmax_for(point.bits)
+    flags = (_integrity_flags(lhs, rhs, acc, qmax * qmax * lp.s,
+                              policy, golden)
+             if check else jnp.int32(0))
+    acc3 = acc[:, :lp.f].reshape(b, p, lp.f)
+    out = ref.epilogue_ref(
+        acc3, (a_scale * lp.w_scale)[:, None, None],
+        None if lp.bias is None else lp.bias[0][None, None, :lp.f],
+        lp.act)
+    return out.reshape(b, *spatial, lp.f), flags
+
+
+def _guarded_depthwise(lp: LayerPlan, x4: jax.Array, cargs: CorruptionArgs,
+                       salt: int, check: bool, policy: IntegrityPolicy,
+                       golden: Optional[int],
+                       ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise: the windowed VPU path with materialized tap windows.
+
+    The ABFT analogue checksums the position axis: summing the tap-sum
+    identity over all spatial positions gives
+        sum_p acc[b, p, c] == sum_kk (sum_p win_kk[b, p, c]) * rhs[c, kk]
+    — linear mod 2^32, so any single corrupted accumulator shifts its
+    (b, c) checksum by its nonzero delta and is always detected.
+    """
+    point = lp.point
+    b, h, w, d = x4.shape
+    k = lp.k
+    ho, wo = vdp.out_hw(h, w, k, lp.stride, lp.padding)
+    x4p = _pad_spatial(x4, k, lp.stride, lp.padding)
+    a_scale = _stable_scale(
+        jnp.maximum(_window_absmax(x4p, k, lp.stride, ho, wo,
+                                   per_channel=True),
+                    1e-12) * vdp.inv_qmax(point.bits))           # (B, D)
+    x_q = quantize_tile(x4p, a_scale[:, None, None, :],
+                        point.bits).astype(jnp.int32)
+    rhs = lp.rhs.astype(jnp.int32)
+    wins = []
+    acc = jnp.zeros((b, ho, wo, d), jnp.int32)
+    for kk in range(k * k):
+        di, dj = divmod(kk, k)
+        win = kconv.tap_window(x_q, di, dj, lp.stride, ho, wo)
+        wins.append(win)
+        acc = acc + win * rhs[:, kk][None, None, None]
+    acc = corrupt_accumulators(acc, cargs, salt)
+    if check:
+        flags = jnp.int32(0)
+        if policy.abft:
+            expect = sum(wins[kk].sum(axis=(1, 2)) * rhs[:, kk][None]
+                         for kk in range(k * k))
+            ok = jnp.all(expect == acc.sum(axis=(1, 2)))
+            flags = flags | jnp.where(ok, 0, DET_ABFT_COL).astype(jnp.int32)
+        if policy.range_guard:
+            qmax = qmax_for(point.bits)
+            flags = flags | range_guard_flag(acc, qmax * qmax * k * k)
+        if policy.weight_checksum and golden is not None:
+            ok = weight_imprint_checksum(rhs) == jnp.int32(golden)
+            flags = flags | jnp.where(ok, 0, DET_WEIGHT).astype(jnp.int32)
+    else:
+        flags = jnp.int32(0)
+    out = ref.epilogue_ref(
+        acc, (a_scale * lp.w_scale[None, :])[:, None, None, :],
+        None if lp.bias is None else lp.bias[None, None, None, :],
+        lp.act)
+    return out, flags
+
+
+def _guarded_fc(lp: LayerPlan, x: jax.Array, cargs: CorruptionArgs,
+                salt: int, check: bool, policy: IntegrityPolicy,
+                golden: Optional[int]) -> Tuple[jax.Array, jax.Array]:
+    """FC: the pre-quantized GEMM structure with materialized accumulators."""
+    point = lp.point
+    flat = _fc_flatten(lp, x)
+    divs_q, a_scale = _quantize_per_image(flat[:, None, :], point.bits)
+    b = flat.shape[0]
+    ss = lp.rhs.shape[0]                       # x (packed) or S_pad (dense)
+    lhs = jnp.pad(divs_q.reshape(b, lp.s),
+                  ((0, 0), (0, ss - lp.s))).astype(jnp.int32)
+    rhs = lp.rhs.astype(jnp.int32)
+    acc = jnp.matmul(lhs, rhs)                 # (B, F_pad) int32
+    acc = corrupt_accumulators(acc, cargs, salt)
+    qmax = qmax_for(point.bits)
+    flags = (_integrity_flags(lhs, rhs, acc, qmax * qmax * lp.s,
+                              policy, golden)
+             if check else jnp.int32(0))
+    out = ref.epilogue_ref(
+        acc[:, :lp.f], (a_scale * lp.w_scale)[:, None],
+        None if lp.bias is None else lp.bias[:, :lp.f], lp.act)
+    return out, flags
+
+
+def forward_layer_guarded(plan: ModelPlan, lp: LayerPlan, x: jax.Array,
+                          cargs: CorruptionArgs, salt: int = 0,
+                          check: bool = True,
+                          policy: IntegrityPolicy = DEFAULT_POLICY,
+                          golden: Optional[int] = None,
+                          ) -> Tuple[jax.Array, jax.Array]:
+    """One layer through the guarded path: (activations, detector flags).
+
+    Bit-identical to ``forward_layer`` when ``cargs`` is null (the module
+    comment's argument); with active corruption the int32 accumulators are
+    corrupted *before* the epilogue — exactly where the analog faults land
+    in hardware — and the detectors (when ``check``) verify them.  ``salt``
+    (normally the layer index) decorrelates per-layer corruption under one
+    dispatch key; ``golden`` is the trace-time weight-imprint checksum.
+    ``check``/``policy``/``golden``/``salt`` are static: the flags math
+    traces away entirely for unchecked layers.
+    """
+    if lp.kind is ConvKind.FC:
+        return _guarded_fc(lp, x, cargs, salt, check, policy, golden)
+    batched = x.ndim == 4
+    x4 = x if batched else x[None]
+    if lp.mode == MODE_DEPTHWISE:
+        out, flags = _guarded_depthwise(lp, x4, cargs, salt, check, policy,
+                                        golden)
+    else:
+        out, flags = _guarded_conv(lp, x4, cargs, salt, check, policy,
+                                   golden)
+    return (out if batched else out[0]), flags

@@ -37,10 +37,11 @@ from __future__ import annotations
 import dataclasses
 import threading
 from collections import OrderedDict
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels import ops
 from . import executor
@@ -161,6 +162,134 @@ def forward_jit(plan: ModelPlan, x: jax.Array,
         x = jnp.array(x, copy=True)
     out = fn(_layer_params(plan), x)
     return out[:b]
+
+
+# ---------------------------------------------------------------------------
+# Guarded pipeline: the SDC corruption/detection path, whole-model jitted
+# ---------------------------------------------------------------------------
+
+def _build_guarded(plan: ModelPlan,
+                   policy: executor.IntegrityPolicy) -> Callable:
+    """Jit the guarded layer chain (executor.forward_layer_guarded).
+
+    The weight-imprint goldens are computed HERE, from the pristine plan
+    arrays, and baked into the traced program as Python int constants —
+    the comparison point a corrupted resident imprint is caught against.
+    Corruption parameters are jit *arguments* (CorruptionArgs), so one
+    executable serves clean and corrupted dispatches alike.  No donation:
+    the dispatcher may retry the same batch buffer after a detection.
+    """
+    goldens = tuple(int(executor.weight_imprint_checksum(lp.rhs))
+                    for lp in plan.layers)
+
+    def run(params, xb, cargs):
+        _STATS["compiles"] += 1
+        x = xb
+        flags = []
+        for i, (lp, (rhs, w_scale, bias)) in enumerate(zip(plan.layers,
+                                                           params)):
+            lp = dataclasses.replace(lp, rhs=rhs, w_scale=w_scale,
+                                     bias=bias)
+            check = policy.check_every > 0 and i % policy.check_every == 0
+            x, fl = executor.forward_layer_guarded(
+                plan, lp, x, cargs, salt=i, check=check, policy=policy,
+                golden=goldens[i])
+            flags.append(fl)
+        return x, jnp.stack(flags)
+
+    return jax.jit(run)
+
+
+def get_guarded_pipeline(plan: ModelPlan,
+                         policy: executor.IntegrityPolicy =
+                         executor.DEFAULT_POLICY) -> Callable:
+    """The plan's guarded jitted callable, memoized beside the plain one.
+
+    Shares the LRU pipeline store (same eviction lifetime as the plain
+    executables); the fns dict keys guarded variants by their (hashable)
+    policy, so different cadences coexist.
+    """
+    with _LOCK:
+        entry = _PIPELINES.get(id(plan))
+        if entry is not None and entry[0] is plan:
+            _PIPELINES.move_to_end(id(plan))
+            fns = entry[1]
+            key = ("guarded", policy)
+            if key in fns:
+                _STATS["hits"] += 1
+                return fns[key]
+        else:
+            fns = {}
+            _PIPELINES[id(plan)] = (plan, fns)
+            while len(_PIPELINES) > CACHE_CAPACITY:
+                _PIPELINES.popitem(last=False)
+                _STATS["evictions"] += 1
+            key = ("guarded", policy)
+        _STATS["misses"] += 1
+        fns[key] = _build_guarded(plan, policy)
+        return fns[key]
+
+
+def forward_jit_guarded(plan: ModelPlan, x: jax.Array,
+                        cargs: Optional[executor.CorruptionArgs] = None,
+                        policy: executor.IntegrityPolicy =
+                        executor.DEFAULT_POLICY,
+                        params: Optional[tuple] = None,
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Serve a batch through the guarded pipeline.
+
+    Returns (outputs, flags): outputs as ``forward_jit`` (bit-identical to
+    it when ``cargs`` is null and ``params`` are the plan's own — asserted
+    in tests/test_sdc.py), flags an (L,) int32 vector of per-layer
+    detector bitmasks (executor.DET_*; all zero on a clean dispatch).
+    ``params`` overrides the resident weight arrays — the STUCK_MRR
+    injection point (engine.corrupted_layer_params builds a corrupted
+    imprint) — and defaults to the plan's pristine arrays.
+    """
+    if x.ndim not in (2, 4):
+        raise ValueError(
+            f"forward_jit_guarded serves batches: expected (B, H, W, D) or "
+            f"(B, S), got shape {tuple(x.shape)}")
+    if cargs is None:
+        cargs = executor.null_corruption_args()
+    fn = get_guarded_pipeline(plan, policy)
+    b = x.shape[0]
+    bucket = batch_bucket(b)
+    with _LOCK:
+        _STATS["dispatches"] += 1
+        key = (plan.name, bucket)
+        _DISPATCH_COUNTS[key] = _DISPATCH_COUNTS.get(key, 0) + 1
+    if bucket != b:
+        pad = [(0, bucket - b)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, pad)
+    out, flags = fn(params if params is not None else _layer_params(plan),
+                    x, cargs)
+    return out[:b], flags
+
+
+def corrupted_layer_params(plan: ModelPlan, seed: int,
+                           stuck_rings: int) -> tuple:
+    """A copy of the plan's packed weight imprint with stuck MRR elements.
+
+    Models STUCK_MRR: ``stuck_rings`` weight elements (uniformly random
+    over layers and positions under ``seed``) are pinned to full
+    transmission (+qmax; an already-+qmax element flips to -qmax so the
+    corruption is never a no-op on the stored value).  Deterministic:
+    (plan, seed, stuck_rings) always corrupts the same elements.  Feed the
+    result to ``forward_jit_guarded(..., params=...)`` — ABFT cannot see
+    this fault (the GEMM faithfully computes with the wrong weights); the
+    weight-imprint checksum is the detector that catches it.
+    """
+    rng = np.random.default_rng(seed)
+    rhss = [np.array(lp.rhs) for lp in plan.layers]
+    for _ in range(max(0, int(stuck_rings))):
+        li = int(rng.integers(len(rhss)))
+        flat = rhss[li].reshape(-1)
+        idx = int(rng.integers(flat.size))
+        qmax = 2 ** (plan.layers[li].point.bits - 1) - 1
+        flat[idx] = -qmax if flat[idx] == qmax else qmax
+    return tuple((jnp.asarray(r), lp.w_scale, lp.bias)
+                 for r, lp in zip(rhss, plan.layers))
 
 
 def evict(plan: ModelPlan) -> None:

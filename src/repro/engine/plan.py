@@ -38,7 +38,9 @@ import jax.numpy as jnp
 
 from ..cnn.layers import ConvKind, LayerSpec, dc, fc, pc, sc
 from ..core import mapping, vdp
+from ..core import photonics as ph
 from ..core import simulator as sim
+from ..core.photonics import InfeasiblePrecisionError
 from ..core.tpc import (AcceleratorConfig, RECONFIG_SWITCH_LATENCY_S,
                         accelerator_at, build_accelerator)
 from ..kernels import ops
@@ -314,6 +316,11 @@ class PlannerReport:
     fixed_time_s: float       # every layer at the fixed Mode-1 geometry
     fixed_utilization: float  # time-weighted, at the fixed geometry
     batch: int
+    #: option labels excluded by the Eq. 9 SNR feasibility filter (their
+    #: comb-switch insertion loss starves the PD below the precision's
+    #: minimum received power) — empty when the filter was off or nothing
+    #: was dropped
+    snr_excluded: Tuple[str, ...] = ()
 
     @property
     def fps(self) -> float:
@@ -353,11 +360,59 @@ def _score_layer(acc: AcceleratorConfig, opt: mapping.PointOption,
                        modes=tuple(sorted(rep.mapping.modes)))
 
 
+def snr_feasible_options(acc: AcceleratorConfig,
+                         options: Sequence[mapping.PointOption],
+                         bits: int,
+                         params: Optional[ph.PhotonicParams] = None,
+                         ) -> Tuple[Tuple[mapping.PointOption, ...],
+                                    Tuple[mapping.PointOption, ...]]:
+    """Split operating points by the Eq. 9 SNR budget at ``bits``.
+
+    An operating point is feasible when the laser power minus the link
+    loss *at that point's comb-switch count* still delivers at least the
+    minimum PD power the precision needs (``pd_power_for_precision``) —
+    i.e. the received power closes the Eq. 9 SNR budget for ``bits``-bit
+    ENOB at the accelerator's bit rate.  Each reconfigurable point pays
+    its own y = n//x comb-switch insertion-loss pairs (the term that
+    separates the points; link_loss_db's reconfigurable branch hardcodes
+    the paper's x=9, so the CS term is rebuilt per option here).  The
+    fixed Mode-1 point pays none, so it is feasible whenever anything is.
+
+    Returns (kept, dropped), both preserving the input order — subsetting
+    the candidate list never reorders ties, so Viterbi plans that avoided
+    the dropped options are label-identical to unfiltered ones.
+
+    Raises :class:`InfeasiblePrecisionError` when ``bits`` cannot close
+    the budget at ANY received power (the RIN ceiling) — no operating
+    point of any geometry can help there.
+    """
+    p = params if params is not None else ph.PhotonicParams()
+    br_hz = acc.br_gbps * 1e9
+    pd_w = ph.pd_power_for_precision(p, bits, br_hz)
+    if pd_w is None:
+        raise InfeasiblePrecisionError(
+            bits, br_hz, "RIN ceiling exceeded at any received power")
+    pd_dbm = ph.watt_to_dbm(pd_w)
+    arch = ph.ARCHS[acc.name]
+    base_loss = ph.link_loss_db(
+        p, dataclasses.replace(arch, reconfigurable=False), acc.n, br_hz)
+    kept, dropped = [], []
+    for opt in options:
+        y = accelerator_at(acc, opt).y
+        loss = base_loss + y * arch.il_cs_db
+        if p.laser_power_dbm - loss >= pd_dbm:
+            kept.append(opt)
+        else:
+            dropped.append(opt)
+    return tuple(kept), tuple(dropped)
+
+
 def search_points(specs: Sequence[LayerSpec],
                   acc: Optional[AcceleratorConfig] = None,
                   options: Optional[Sequence[mapping.PointOption]] = None,
                   switch_penalty_s: Optional[float] = None,
-                  batch: int = 1) -> PlannerReport:
+                  batch: int = 1, bits: int = DEFAULT_POINT.bits,
+                  snr_filter: bool = True) -> PlannerReport:
     """Per-layer operating-point search over a layer table (Viterbi).
 
     For every layer the candidate comb-switch points are scored by
@@ -369,6 +424,16 @@ def search_points(specs: Sequence[LayerSpec],
     drives the sequence toward fewer switches.  Ties keep the earlier
     option (the canonical geometry leads the candidate list) and prefer
     not switching, which makes the search deterministic in its inputs.
+
+    With ``snr_filter`` (the default) the candidate points are first
+    vetted against the Eq. 9 SNR budget at ``bits``
+    (``snr_feasible_options``): a point whose comb-switch insertion loss
+    starves the photodetector below the precision's minimum received
+    power is excluded *before* the search, so emitted plans are
+    noise-feasible by construction (dropped labels are recorded in
+    ``PlannerReport.snr_excluded``).  Filtering only ever removes options
+    — a search whose optimal path avoided them is unchanged — and raises
+    :class:`InfeasiblePrecisionError` if no candidate survives.
 
     The DP objective is ``time_s / utilization`` per layer plus the raw
     switch penalty in seconds: dividing by utilization deliberately biases
@@ -384,6 +449,17 @@ def search_points(specs: Sequence[LayerSpec],
             else tuple(options))
     if not opts:
         raise ValueError("search_points needs at least one PointOption")
+    snr_excluded: Tuple[str, ...] = ()
+    if snr_filter:
+        kept, dropped = snr_feasible_options(acc, opts, bits)
+        if not kept:
+            raise InfeasiblePrecisionError(
+                bits, acc.br_gbps * 1e9,
+                "no operating point closes the SNR budget "
+                f"(all of {[o.label for o in opts]} excluded)")
+        if dropped:
+            snr_excluded = tuple(o.label for o in dropped)
+            opts = kept
     penalty = (RECONFIG_SWITCH_LATENCY_S if switch_penalty_s is None
                else switch_penalty_s)
     specs = tuple(specs)
@@ -441,7 +517,7 @@ def search_points(specs: Sequence[LayerSpec],
                          switch_penalty_s=penalty, switches=switches,
                          total_time_s=total, fixed_time_s=fixed_t,
                          fixed_utilization=_time_weighted_utilization(fixed),
-                         batch=batch)
+                         batch=batch, snr_excluded=snr_excluded)
 
 
 def _engine_point_for(base: EnginePoint, ld: LayerDef, spec: LayerSpec,
@@ -474,12 +550,13 @@ def cached_search(name: str, specs: Sequence[LayerSpec],
                   acc: Optional[AcceleratorConfig] = None,
                   options: Optional[Sequence[mapping.PointOption]] = None,
                   switch_penalty_s: Optional[float] = None,
-                  batch: int = 1) -> PlannerReport:
+                  batch: int = 1, bits: int = DEFAULT_POINT.bits,
+                  snr_filter: bool = True) -> PlannerReport:
     """Memoized ``search_points``, keyed like ``get_plan`` (model name =
     identity, spec table as the structural guard)."""
     specs = tuple(specs)
     key = (name, acc, None if options is None else tuple(options),
-           switch_penalty_s, batch)
+           switch_penalty_s, batch, bits, snr_filter)
     cached = _SEARCH_CACHE.get(key)
     if cached is not None:
         cached_specs, report = cached
@@ -492,7 +569,8 @@ def cached_search(name: str, specs: Sequence[LayerSpec],
         return report
     _SEARCH_STATS["misses"] += 1
     report = search_points(specs, acc=acc, options=options,
-                           switch_penalty_s=switch_penalty_s, batch=batch)
+                           switch_penalty_s=switch_penalty_s, batch=batch,
+                           bits=bits, snr_filter=snr_filter)
     _SEARCH_CACHE[key] = (specs, report)
     return report
 
@@ -522,7 +600,8 @@ def plan_model(name: str, layer_defs: Sequence[LayerDef],
     """
     specs = defs_to_specs(layer_defs, input_shape)
     report = cached_search(name, specs, acc=acc, options=options,
-                           switch_penalty_s=switch_penalty_s)
+                           switch_penalty_s=switch_penalty_s,
+                           bits=point.bits)
     layers = tuple(
         compile_layer(ld, _engine_point_for(point, ld, spec, choice))
         for ld, spec, choice in zip(layer_defs, specs, report.choices))

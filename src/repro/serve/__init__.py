@@ -18,10 +18,17 @@ realizes that stream:
                  heterogeneous operating points) on a thread pool with
                  per-shard deadlines, retry/backoff re-apportionment and
                  quarantine/probe health — bitwise-equal to
-                 single-accelerator no matter which instances ran
-* faults.py    — photonic fault injection (crash, straggle, thermal
-                 drift, stuck reconfiguration) on deterministic seeded
-                 schedules, plus the typed serving-failure vocabulary
+                 single-accelerator no matter which instances ran; with
+                 an IntegrityConfig, every shard's integer accumulators
+                 are ABFT/range/weight-checksum verified and flagged
+                 shards re-execute bitwise-identically on healthy
+                 instances (SDC defense)
+* faults.py    — photonic fault injection on deterministic seeded
+                 schedules: availability-class faults (crash, straggle,
+                 thermal drift, stuck reconfiguration) AND
+                 integrity-class value corruption (analog noise, thermal
+                 detune, stuck MRR weights, ADC bit flips), plus the
+                 typed serving-failure vocabulary
 * telemetry.py — hardware-time telemetry: every served batch is also
                  costed through core/simulator.simulate, so the server
                  reports wall-clock images/s AND modeled photonic FPS and
@@ -36,10 +43,13 @@ benchmarks/chaos_bench.py.
 """
 from .batcher import DynamicBatcher, FormedBatch, Request  # noqa: F401
 from .dispatch import (AcceleratorInstance, InstanceHealth,  # noqa: F401
-                       ShardedDispatcher, ShardRun, default_fleet)
-from .faults import (AdmissionRejected, DispatchEffects,  # noqa: F401
-                     FaultEvent, FaultInjector, FaultKind, InstanceCrashed,
-                     NoHealthyInstances, ReconfigStuck, RetriesExhausted,
+                       IntegrityConfig, ShardedDispatcher, ShardRun,
+                       default_fleet)
+from .faults import (AVAILABILITY_KINDS, AdmissionRejected,  # noqa: F401
+                     CorruptionBudgetExceeded, CorruptionSpec,
+                     DispatchEffects, FaultEvent, FaultInjector, FaultKind,
+                     INTEGRITY_KINDS, InstanceCrashed, NoHealthyInstances,
+                     OutputCorrupted, ReconfigStuck, RetriesExhausted,
                      ServingFault, ShardDeadlineExceeded, random_schedule)
 from .models import (SERVING_MODELS, serving_defs,  # noqa: F401
                      serving_input_shape, specs_for_defs)

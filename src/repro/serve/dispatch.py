@@ -24,6 +24,13 @@ included:
 * quarantined instances are **probed back in** after a cooldown (each
   probe consults the fault injector — a finite fault expires, the
   instance readmits; a re-failed probe doubles the cooldown);
+* with an ``IntegrityConfig``, shards execute through the engine's
+  *guarded* path: injected value corruption (integrity-class FaultKinds)
+  lands on the int32 accumulators, ABFT/range/weight-checksum detectors
+  verify them, and a detection raises ``OutputCorrupted`` — handled by
+  the same quarantine + re-execution machinery, so recovered outputs are
+  *bitwise-identical* to the fault-free run; per-instance canary probes
+  (golden-frame bitwise compare) back the detectors up at any cadence;
 * ``HeartbeatMonitor`` / ``StragglerDetector`` (runtime/fault_tolerance)
   watch the fleet from the serve loop's own clock, and ``fleet_health()``
   exports per-instance state plus retry/timeout/quarantine counters for
@@ -41,6 +48,7 @@ Raw (unpaced) mode remains the default for bit-exactness tests.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from concurrent.futures import FIRST_COMPLETED, Future, ThreadPoolExecutor
 from concurrent.futures import wait as futures_wait
@@ -48,6 +56,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import engine
 from ..cnn.layers import LayerSpec
@@ -55,8 +64,9 @@ from ..core import simulator as sim
 from ..core.tpc import build_accelerator
 from ..obs.tracer import NOOP_TRACER
 from ..runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
-from .faults import (FaultInjector, NoHealthyInstances, RetriesExhausted,
-                     ServingFault, ShardDeadlineExceeded)
+from .faults import (CorruptionSpec, FaultInjector, NoHealthyInstances,
+                     OutputCorrupted, RetriesExhausted, ServingFault,
+                     ShardDeadlineExceeded)
 from .telemetry import HardwarePoint
 
 
@@ -97,6 +107,42 @@ class InstanceHealth:
     last_beat: Optional[float] = None
 
 
+@dataclasses.dataclass(frozen=True)
+class IntegrityConfig:
+    """The dispatcher's SDC defense configuration.
+
+    With integrity on, every shard executes through the *guarded* engine
+    path (engine.forward_jit_guarded — bit-identical to the plain path on
+    clean dispatches) and its int32 accumulators are verified per
+    ``check_every`` layers; a detection raises ``OutputCorrupted``, which
+    the coordinator handles exactly like an availability fault: quarantine
+    the instance and re-execute the shard on healthy ones (per-image
+    quantization makes the recovered outputs bitwise-identical to the
+    fault-free run).  ``canary_every=k`` additionally probes each instance
+    with a golden-reference frame every k shards — defense-in-depth that
+    catches persistent corruption even at ``check_every=0``.
+    """
+    check_every: int = 1
+    abft: bool = True
+    range_guard: bool = True
+    weight_checksum: bool = True
+    canary_every: int = 0        # 0 disables canary probes
+
+    def __post_init__(self) -> None:
+        if self.check_every < 0:
+            raise ValueError(
+                f"check_every must be >= 0, got {self.check_every}")
+        if self.canary_every < 0:
+            raise ValueError(
+                f"canary_every must be >= 0, got {self.canary_every}")
+
+    def policy(self) -> engine.IntegrityPolicy:
+        return engine.IntegrityPolicy(
+            abft=self.abft, range_guard=self.range_guard,
+            weight_checksum=self.weight_checksum,
+            check_every=self.check_every)
+
+
 def default_fleet(k: int, hw: HardwarePoint = HardwarePoint(),
                   ) -> Tuple[AcceleratorInstance, ...]:
     """K homogeneous instances at one hardware operating point."""
@@ -125,7 +171,8 @@ class ShardedDispatcher:
                  time_fn: Callable[[], float] = time.monotonic,
                  sleep_fn: Callable[[float], None] = time.sleep,
                  heartbeat: Optional[HeartbeatMonitor] = None,
-                 straggler: Optional[StragglerDetector] = None):
+                 straggler: Optional[StragglerDetector] = None,
+                 integrity: Optional[IntegrityConfig] = None):
         if not instances:
             raise ValueError("dispatcher needs at least one instance")
         names = [i.name for i in instances]
@@ -154,7 +201,20 @@ class ShardedDispatcher:
         self.counters: Dict[str, int] = {
             "dispatched_shards": 0, "completed_shards": 0, "retries": 0,
             "timeouts": 0, "faults": 0, "quarantines": 0, "probes": 0,
-            "probe_failures": 0, "readmissions": 0}
+            "probe_failures": 0, "readmissions": 0,
+            "integrity_checks": 0, "sdc_detections": 0,
+            "corrupted_shards": 0, "canary_probes": 0, "canary_failures": 0}
+        self.integrity = integrity
+        #: metrics registry (the server wires telemetry's in); detection
+        #: latencies land in serve_sdc_detection_latency_seconds
+        self.metrics = None
+        # shard workers update the SDC counters concurrently
+        self._counter_lock = threading.Lock()
+        # id(plan) -> (reference frame, golden output) for canary probes;
+        # the golden is computed ONCE through the plain (un-injected)
+        # engine path at first dispatch of the plan
+        self._canary: Dict[int, Tuple[jax.Array, jax.Array]] = {}
+        self._since_canary: Dict[str, int] = {}
         self._pool: Optional[ThreadPoolExecutor] = None
         self._model_memo: Dict[Tuple[str, Tuple[LayerSpec, ...], int],
                                float] = {}
@@ -182,14 +242,17 @@ class ShardedDispatcher:
 
         A probe is a real dispatch attempt against the fault injector (so
         finite-duration faults burn down under probing); with no injector
-        configured a probe always passes.
+        configured a probe always passes.  An instance that would still
+        *corrupt values* fails its probe too — readmitting a poisoning
+        instance on a timing-only health check would hand it fresh shards.
         """
         self.counters["probes"] += 1
         if self.fault_injector is None:
             ok = True
         else:
-            effects = self.fault_injector.on_dispatch(inst.name)
-            ok = effects.fault is None
+            effects = self.fault_injector.on_dispatch(inst.name,
+                                                      probe=True)
+            ok = effects.fault is None and effects.corruption is None
         self._tracer.instant("probe", cat="probe", tid=inst.name,
                              instance=inst.name, ok=ok)
         return ok
@@ -331,13 +394,18 @@ class ShardedDispatcher:
                                offset=off, size=int(shard.shape[0]),
                                attempt=attempt) as sp:
             t0 = time.perf_counter()
+            corruption: Optional[CorruptionSpec] = None
             if self.fault_injector is not None:
                 effects = self.fault_injector.on_dispatch(inst.name)
                 if effects.delay_s > 0:
                     self._sleep(effects.delay_s)
                 if effects.fault is not None:
                     self.fault_injector.raise_for(effects.fault, inst.name)
-            out = engine.forward_jit(plan, shard, interpret=interpret)
+                corruption = effects.corruption
+            if corruption is None and self.integrity is None:
+                out = engine.forward_jit(plan, shard, interpret=interpret)
+            else:
+                out = self._run_guarded(inst, plan, shard, corruption, t0)
             out = jax.block_until_ready(out)
             exec_s = time.perf_counter() - t0
             if pace_floor_s > exec_s:
@@ -346,6 +414,121 @@ class ShardedDispatcher:
             if modeled_s > 0:
                 sp.hw(inst.name, modeled_s)
             return out, exec_s
+
+    def _run_guarded(self, inst: AcceleratorInstance, plan: engine.ModelPlan,
+                     shard: jax.Array, corruption: Optional[CorruptionSpec],
+                     t0: float) -> jax.Array:
+        """Guarded shard execution: apply injected corruption, verify.
+
+        With integrity configured, the guarded pipeline's per-layer
+        detector flags turn any corruption into a typed
+        ``OutputCorrupted`` (the coordinator quarantines + re-executes);
+        with integrity ``None`` but corruption active, the corrupted
+        outputs pass through SILENTLY — the undefended baseline the SDC
+        bench measures the defense against.
+        """
+        policy = (self.integrity.policy() if self.integrity is not None
+                  else engine.DISABLED_POLICY)
+        cargs = None
+        params = None
+        if corruption is not None:
+            cargs = engine.corruption_args(
+                seed=corruption.seed, sigma_lsb=corruption.sigma_lsb,
+                gain=corruption.gain, bias_lsb=corruption.bias_lsb,
+                flip_prob=corruption.flip_prob)
+            if corruption.stuck_rings > 0:
+                params = engine.corrupted_layer_params(
+                    plan, corruption.seed, corruption.stuck_rings)
+        out, flags = engine.forward_jit_guarded(plan, shard, cargs=cargs,
+                                                policy=policy, params=params)
+        if self.integrity is not None and policy.check_every > 0:
+            with self._counter_lock:
+                self.counters["integrity_checks"] += 1
+            masks = np.asarray(flags)
+            bad = int(np.argmax(masks != 0))
+            if masks[bad]:
+                detect_s = time.perf_counter() - t0
+                detectors = engine.detector_names(int(masks[bad]))
+                with self._counter_lock:
+                    self.counters["sdc_detections"] += 1
+                if self.metrics is not None:
+                    self.metrics.histogram(
+                        "serve_sdc_detection_latency_seconds",
+                        "dispatch-to-detection latency of corrupted shards",
+                        model=plan.name).record(detect_s)
+                self._tracer.instant(
+                    "sdc.detected", cat="fault", tid=inst.name,
+                    instance=inst.name, layer=bad,
+                    detectors=",".join(detectors), latency_s=detect_s)
+                raise OutputCorrupted(inst.name, bad, detectors)
+        return out
+
+    # -- canary probes ----------------------------------------------------
+
+    def _ensure_canary(self, plan: engine.ModelPlan, xb: jax.Array,
+                       interpret: Optional[bool]) -> None:
+        """Bootstrap the plan's golden canary from the first served batch.
+
+        The golden runs through the plain engine path on the host — NOT
+        through the fault injector — so it is the fault-free reference the
+        probes compare against bitwise.
+        """
+        if id(plan) not in self._canary:
+            xref = xb[:1]
+            yref = jax.block_until_ready(
+                engine.forward_jit(plan, xref, interpret=interpret))
+            self._canary[id(plan)] = (xref, yref)
+
+    def _canary_ok(self, inst: AcceleratorInstance, plan: engine.ModelPlan,
+                   ) -> bool:
+        """Probe an instance with the golden frame if its canary is due.
+
+        The probe is a real dispatch against the injector (finite faults
+        burn down, like quarantine probes); the probe frame executes with
+        whatever corruption is live on the instance and its output is
+        compared bitwise against the golden — a mismatch quarantines the
+        instance, whatever the detectors would have said.  This is the
+        layer that catches persistent corruption at ``check_every=0``.
+        """
+        cfg = self.integrity
+        if (cfg is None or cfg.canary_every <= 0
+                or id(plan) not in self._canary):
+            return True
+        if self._since_canary.get(inst.name, 0) < cfg.canary_every:
+            return True
+        self._since_canary[inst.name] = 0
+        with self._counter_lock:
+            self.counters["canary_probes"] += 1
+        corruption: Optional[CorruptionSpec] = None
+        if self.fault_injector is not None:
+            effects = self.fault_injector.on_dispatch(inst.name)
+            if effects.fault is not None:
+                self._quarantine(inst)
+                return False
+            corruption = effects.corruption
+        xref, yref = self._canary[id(plan)]
+        cargs = None
+        params = None
+        if corruption is not None:
+            cargs = engine.corruption_args(
+                seed=corruption.seed, sigma_lsb=corruption.sigma_lsb,
+                gain=corruption.gain, bias_lsb=corruption.bias_lsb,
+                flip_prob=corruption.flip_prob)
+            if corruption.stuck_rings > 0:
+                params = engine.corrupted_layer_params(
+                    plan, corruption.seed, corruption.stuck_rings)
+        out, _ = engine.forward_jit_guarded(
+            plan, xref, cargs=cargs, policy=engine.DISABLED_POLICY,
+            params=params)
+        ok = bool(jnp.array_equal(out, yref))
+        self._tracer.instant("sdc.canary", cat="probe", tid=inst.name,
+                             instance=inst.name, ok=ok)
+        if not ok:
+            with self._counter_lock:
+                self.counters["canary_failures"] += 1
+                self.counters["sdc_detections"] += 1
+            self._quarantine(inst)
+        return ok
 
     def _ensure_pool(self) -> ThreadPoolExecutor:
         if self._pool is None:
@@ -380,18 +563,29 @@ class ShardedDispatcher:
             raise ValueError("cannot dispatch an empty batch")
         specs = tuple(sim_specs) if sim_specs else None
         pool = self._ensure_pool()
+        if self.integrity is not None and self.integrity.canary_every > 0:
+            self._ensure_canary(plan, xb, interpret)
         segments: Dict[int, jax.Array] = {}      # offset -> shard output
         runs: List[ShardRun] = []
         work: List[Tuple[int, int]] = [(0, b)]   # (offset, size) outstanding
         attempt = 0
         last_exc: Optional[BaseException] = None
         while work:
-            active = self.active_instances()
+            active = [inst for inst in self.active_instances()
+                      if self._canary_ok(inst, plan)]
             if not active:
-                raise NoHealthyInstances(
-                    f"all {len(self.instances)} instances quarantined "
-                    f"with {sum(s for _, s in work)} frames outstanding"
-                ) from last_exc
+                # transiently empty fleet: burn a retry round waiting for
+                # quarantine probes to readmit someone before giving up
+                attempt += 1
+                if attempt > self.max_retries:
+                    raise NoHealthyInstances(
+                        f"all {len(self.instances)} instances quarantined "
+                        f"with {sum(s for _, s in work)} frames outstanding"
+                    ) from last_exc
+                self.counters["retries"] += 1
+                self._sleep(min(self.backoff_base_s * (2 ** (attempt - 1)),
+                                self.backoff_cap_s))
+                continue
             # deal every outstanding range across the healthy set
             tasks: List[Tuple[int, int, AcceleratorInstance]] = []
             for off, size in work:
@@ -408,6 +602,8 @@ class ShardedDispatcher:
                 modeled = self._modeled_shard_s(inst, specs, size)
                 floor = modeled if self.pace == "hardware" else 0.0
                 self.counters["dispatched_shards"] += 1
+                self._since_canary[inst.name] = (
+                    self._since_canary.get(inst.name, 0) + 1)
                 futures[pool.submit(self._run_shard, inst, plan, shard,
                                     interpret, floor, modeled,
                                     off, attempt)] = (off, size, inst)
@@ -456,6 +652,8 @@ class ShardedDispatcher:
                     elif isinstance(exc, ServingFault):
                         last_exc = exc
                         self.counters["faults"] += 1
+                        if isinstance(exc, OutputCorrupted):
+                            self.counters["corrupted_shards"] += 1
                         self._quarantine(inst)
                         failed.append((off, size))
                     else:            # programming error, not a chaos fault

@@ -3,47 +3,86 @@
 Real MRR accelerators fail in characteristic ways: thermal drift detunes
 rings until the comb must re-lock (HEANA, arxiv 2402.03247, models the
 tuning cost), a comb-switch can stick mid-reconfiguration (the switching
-latencies of arxiv 2402.03149), a control host can hang or die outright.
-A serving fleet has to keep producing *correct* results at degraded
-throughput through all of them — which is only testable if the failures
-themselves are injectable and replayable.
+latencies of arxiv 2402.03149), a control host can hang or die outright —
+and, scariest of all for a serving system, a detuned analog datapath can
+keep *completing* while returning plausible-but-wrong integers.  A fleet
+has to keep producing correct results at degraded throughput through all
+of them — which is only testable if the failures themselves are
+injectable and replayable.
 
 ``FaultInjector`` is that layer: a deterministic schedule of
 ``FaultEvent``s keyed by each instance's *dispatch count* (not wall time),
 so a chaos run replays bit-identically — the Nth shard sent to ``acc1``
 always hits the same fault regardless of host speed.  The dispatcher
 consults the injector once per shard dispatch (and once per quarantine
-probe — a probe IS a dispatch attempt, which is how finite-duration
-faults expire and instances earn readmission).
+probe or canary — a probe IS a dispatch attempt, which is how
+finite-duration faults expire and instances earn readmission).
 
-Fault modes and their serving semantics:
+The fault taxonomy splits into two classes with distinct ``severity``
+semantics:
+
+**Availability-class** (``AVAILABILITY_KINDS`` — the PR-6 domain; every
+one of these either delays a shard or fails it outright, but a completed
+shard is always *correct*):
 
 * ``CRASH``          — the instance is gone: the shard raises
                        ``InstanceCrashed``; permanent unless ``duration``
-                       bounds it.
+                       bounds it.  ``severity`` is ignored.
 * ``STUCK_RECONFIG`` — the comb-switch is stuck: the shard raises
                        ``ReconfigStuck``; typically transient (the
                        controller re-locks after ``duration`` attempts).
-* ``STRAGGLE``       — the host hangs: the shard sleeps ``severity``
-                       seconds before executing, tripping the
+                       ``severity`` is ignored.
+* ``STRAGGLE``       — the host hangs: ``severity`` is the injected delay
+                       in *seconds* before executing, tripping the
                        dispatcher's per-shard deadline.
 * ``THERMAL_DRIFT``  — rings drifted off resonance: every dispatch pays
-                       ``severity`` seconds of re-lock/retune delay but
+                       ``severity`` *seconds* of re-lock/retune delay but
                        still completes correctly (degradation, not
                        failure).
 
+**Integrity-class** (``INTEGRITY_KINDS`` — silent data corruption; the
+shard completes on time and returns *wrong int32 accumulators* unless the
+ABFT/guard layer catches it):
+
+* ``ANALOG_NOISE``   — Eq. 9/10 photodetector noise above the design
+                       floor: ``severity`` is the Gaussian sigma in
+                       integer *LSBs* added to every accumulator element
+                       (schedule builders derive it from
+                       ``photonics.integer_noise_sigma_lsb``).
+* ``THERMAL_DETUNE`` — rings detuned but still resolving: ``severity`` is
+                       the fractional *gain drift* g; accumulators see
+                       ``round(acc * g + bias)`` with a proportional bias
+                       drift (``DETUNE_BIAS_LSB_PER_DRIFT`` LSBs per unit
+                       g).
+* ``STUCK_MRR``      — weight ring(s) stuck at full transmission: the
+                       resident DKV imprint itself is wrong.  ``severity``
+                       is the (rounded) *count* of stuck weight elements.
+* ``ADC_BITFLIP``    — marginal ADC sampling: ``severity`` is the
+                       per-element *probability* of a random low-order
+                       bit flipping in the digitized accumulator.
+
+Corruption is deterministic and seed-replayable: each corrupted dispatch
+derives its RNG seed from (injector seed, instance name CRC, dispatch
+index), so the same schedule against the same dispatch sequence corrupts
+the same elements the same way — which is what lets the recovery tests
+assert *bitwise* identity with the fault-free run after re-execution.
+
 The typed errors double as the public failure vocabulary of the whole
-serve package (``AdmissionRejected`` is what SLO shedding raises).
+serve package (``AdmissionRejected`` is what SLO shedding raises;
+``OutputCorrupted`` is what the ABFT/guard layer raises when a shard's
+integer outputs fail verification).
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import threading
+import zlib
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..core import photonics as ph
 from ..obs.tracer import NOOP_TRACER
 
 
@@ -82,6 +121,28 @@ class ShardDeadlineExceeded(ServingFault):
         self.deadline_s = deadline_s
 
 
+class OutputCorrupted(ServingFault):
+    """A shard's integer outputs failed integrity verification (SDC).
+
+    Raised by the dispatcher when the guarded execution path's ABFT
+    checksums, range guards, weight-imprint checksums, or a canary probe
+    flag a shard — the detection that turns *silent* data corruption into
+    a typed, recoverable fault.  Carries the first flagged layer index and
+    the detector names that fired so chaos harnesses (and operators) can
+    attribute the catch.
+    """
+
+    def __init__(self, instance: str, layer: int = -1,
+                 detectors: Tuple[str, ...] = ()):
+        det = ", ".join(detectors) if detectors else "canary"
+        super().__init__(
+            f"instance {instance!r} returned corrupted outputs "
+            f"(layer {layer}, detected by {det})")
+        self.instance = instance
+        self.layer = layer
+        self.detectors = tuple(detectors)
+
+
 class NoHealthyInstances(ServingFault):
     """Every instance is quarantined/dead; the batch cannot be served."""
 
@@ -110,19 +171,62 @@ class AdmissionRejected(ServingFault):
         self.healthy_fraction = healthy_fraction
 
 
+class CorruptionBudgetExceeded(ServingFault):
+    """Integrity SLO shedding: the corrupted-frame rate blew its budget.
+
+    The integrity twin of ``AdmissionRejected``: raised at ``submit`` time
+    when the EMA of detected-corruption frames per served frame exceeds
+    ``ServeSLO.max_corrupted_frame_rate`` — a fleet detecting this much
+    SDC should stop admitting until quarantine/recovery bring the rate
+    back down (the EMA decays under clean traffic, so admission resumes).
+    """
+
+    def __init__(self, model: str, rate: float, budget: float):
+        super().__init__(
+            f"request for {model!r} shed: corrupted-frame rate "
+            f"{rate:.3f} exceeds the {budget:.3f} integrity SLO budget")
+        self.model = model
+        self.rate = rate
+        self.budget = budget
+
+
 # ---------------------------------------------------------------------------
 # fault schedule
 # ---------------------------------------------------------------------------
 
 class FaultKind(enum.Enum):
+    # availability class (PR-6): delay or fail a shard; results stay correct
     CRASH = "crash"
     STUCK_RECONFIG = "stuck_reconfig"
     STRAGGLE = "straggle"
     THERMAL_DRIFT = "thermal_drift"
+    # integrity class: the shard completes with corrupted int32 accumulators
+    ANALOG_NOISE = "analog_noise"
+    THERMAL_DETUNE = "thermal_detune"
+    STUCK_MRR = "stuck_mrr"
+    ADC_BITFLIP = "adc_bitflip"
 
 
 #: kinds that fail the shard outright (vs merely delaying it)
 FAILING_KINDS = (FaultKind.CRASH, FaultKind.STUCK_RECONFIG)
+
+#: the PR-6 fault domain: timing/availability only — a completed shard is
+#: always correct.  ``severity`` is a delay in seconds (or ignored for the
+#: failing kinds).
+AVAILABILITY_KINDS = (FaultKind.CRASH, FaultKind.STUCK_RECONFIG,
+                      FaultKind.STRAGGLE, FaultKind.THERMAL_DRIFT)
+
+#: value-corrupting kinds: the shard completes but its integer outputs are
+#: wrong.  ``severity`` is kind-specific (module docstring): sigma in LSBs
+#: (ANALOG_NOISE), fractional gain drift (THERMAL_DETUNE), stuck-element
+#: count (STUCK_MRR), per-element flip probability (ADC_BITFLIP).
+INTEGRITY_KINDS = (FaultKind.ANALOG_NOISE, FaultKind.THERMAL_DETUNE,
+                   FaultKind.STUCK_MRR, FaultKind.ADC_BITFLIP)
+
+#: bias drift accompanying a THERMAL_DETUNE gain drift: LSBs of additive
+#: offset per unit of fractional gain error (a detuned ring shifts its
+#: operating point, not just its slope).
+DETUNE_BIAS_LSB_PER_DRIFT = 8.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,8 +235,10 @@ class FaultEvent:
 
     Activation is by the instance's dispatch count: the fault is live for
     dispatch indices ``start <= n < start + duration`` (``duration=None``
-    means forever).  ``severity`` is the injected delay in seconds for
-    STRAGGLE / THERMAL_DRIFT and ignored for the failing kinds.
+    means forever).  ``severity`` semantics depend on the kind's class —
+    seconds of delay for the availability delay kinds, ignored for the
+    failing kinds, and the kind-specific corruption magnitude for the
+    integrity kinds (module docstring).
     """
     instance: str
     kind: FaultKind
@@ -155,25 +261,57 @@ class FaultEvent:
 
 
 @dataclasses.dataclass(frozen=True)
+class CorruptionSpec:
+    """The value-corruption a dispatch must apply (all integrity faults
+    live on the instance for this dispatch, folded together).
+
+    The engine's guarded execution path turns this into traced corruption
+    of the int32 accumulators (engine/executor.corrupt_accumulators) and,
+    for ``stuck_rings``, host-side corruption of the packed weight params
+    (engine/pipeline.corrupted_layer_params).  ``seed`` is derived
+    deterministically from (injector seed, instance, dispatch index) so
+    replay is bitwise.
+    """
+    seed: int = 0
+    sigma_lsb: float = 0.0     # ANALOG_NOISE: Gaussian sigma in LSBs
+    gain: float = 1.0          # THERMAL_DETUNE: multiplicative drift
+    bias_lsb: float = 0.0      # THERMAL_DETUNE: additive drift in LSBs
+    flip_prob: float = 0.0     # ADC_BITFLIP: per-element flip probability
+    stuck_rings: int = 0       # STUCK_MRR: corrupted weight elements
+
+    @property
+    def active(self) -> bool:
+        return (self.sigma_lsb > 0 or self.gain != 1.0
+                or self.bias_lsb != 0 or self.flip_prob > 0
+                or self.stuck_rings > 0)
+
+
+@dataclasses.dataclass(frozen=True)
 class DispatchEffects:
-    """What the injector does to one dispatch: delay, then maybe fail."""
+    """What the injector does to one dispatch: delay, corrupt, maybe fail."""
     delay_s: float = 0.0
     fault: Optional[FaultKind] = None     # a FAILING_KINDS member, or None
+    corruption: Optional[CorruptionSpec] = None   # live integrity faults
 
 
 class FaultInjector:
     """Deterministic, replayable fault schedule over a fleet.
 
     Stateful only in per-instance dispatch counters; two injectors built
-    from the same schedule replay identically against the same dispatch
-    sequence.  ``trips`` counts every fault activation by kind (the chaos
-    harness's ground truth for "the faults actually fired").
+    from the same schedule (and seed) replay identically against the same
+    dispatch sequence — corruption RNG included.  ``trips`` counts every
+    fault activation by kind (the chaos harness's ground truth for "the
+    faults actually fired") and ``corrupted_dispatches`` counts dispatches
+    that returned an active ``CorruptionSpec`` (the denominator of the SDC
+    detection rate).
     """
 
-    def __init__(self, schedule: Sequence[FaultEvent] = ()):
+    def __init__(self, schedule: Sequence[FaultEvent] = (), seed: int = 0):
         self.schedule: Tuple[FaultEvent, ...] = tuple(schedule)
+        self.seed = seed
         self.dispatches: Dict[str, int] = {}
         self.trips: Dict[str, int] = {k.value: 0 for k in FaultKind}
+        self.corrupted_dispatches = 0
         # shard workers dispatch concurrently; counters must not tear
         self._lock = threading.Lock()
         #: span tracer; every fault activation becomes a ``fault.<kind>``
@@ -188,12 +326,31 @@ class FaultInjector:
         n = self.dispatches.get(instance, 0)
         return [e for e in self.events_for(instance) if e.active_at(n)]
 
-    def on_dispatch(self, instance: str) -> DispatchEffects:
+    def _corruption_seed(self, instance: str, n: int) -> int:
+        """Deterministic per-dispatch corruption seed.
+
+        (injector seed, CRC32 of the instance name, dispatch index) through
+        numpy's SeedSequence — stable across processes and Python hash
+        randomization, so a replayed schedule corrupts identically.
+        """
+        ss = np.random.SeedSequence(
+            [self.seed, zlib.crc32(instance.encode()), n])
+        return int(ss.generate_state(1)[0])
+
+    def on_dispatch(self, instance: str,
+                    probe: bool = False) -> DispatchEffects:
         """Advance the instance's dispatch counter and report effects.
 
         Delays accumulate across simultaneously-live delay faults; a
-        failing fault (crash/stuck-reconfig) wins over delays — the shard
-        never executes.
+        failing fault (crash/stuck-reconfig) wins over delays AND over
+        corruption — the shard never executes.  Live integrity faults fold
+        into one ``CorruptionSpec`` (sigmas add, gains multiply, flip
+        probabilities combine independently, stuck counts add).
+
+        ``probe=True`` marks a readmission health check: it burns down the
+        instance's fault windows like any dispatch but is excluded from
+        ``corrupted_dispatches`` (the SDC detection-rate denominator counts
+        shard executions, not health checks).
         """
         fired: List[FaultEvent] = []
         with self._lock:
@@ -201,6 +358,7 @@ class FaultInjector:
             self.dispatches[instance] = n + 1
             delay = 0.0
             failing: Optional[FaultKind] = None
+            integrity: List[FaultEvent] = []
             for e in self.events_for(instance):
                 if not e.active_at(n):
                     continue
@@ -208,13 +366,38 @@ class FaultInjector:
                 fired.append(e)
                 if e.kind in FAILING_KINDS:
                     failing = failing or e.kind
+                elif e.kind in INTEGRITY_KINDS:
+                    integrity.append(e)
                 else:
                     delay += e.severity
+            corruption: Optional[CorruptionSpec] = None
+            if integrity and failing is None:
+                sigma, gain, bias, flip, stuck = 0.0, 1.0, 0.0, 0.0, 0
+                for e in integrity:
+                    if e.kind is FaultKind.ANALOG_NOISE:
+                        sigma += e.severity
+                    elif e.kind is FaultKind.THERMAL_DETUNE:
+                        gain *= 1.0 + e.severity
+                        bias += DETUNE_BIAS_LSB_PER_DRIFT * e.severity
+                    elif e.kind is FaultKind.ADC_BITFLIP:
+                        flip = 1.0 - (1.0 - flip) * (1.0 - e.severity)
+                    elif e.kind is FaultKind.STUCK_MRR:
+                        stuck += max(1, int(round(e.severity)))
+                corruption = CorruptionSpec(
+                    seed=self._corruption_seed(instance, n),
+                    sigma_lsb=sigma, gain=gain, bias_lsb=bias,
+                    flip_prob=flip, stuck_rings=stuck)
+                if corruption.active:
+                    if not probe:
+                        self.corrupted_dispatches += 1
+                else:
+                    corruption = None
         for e in fired:      # outside the lock: the tracer locks its ring
             self.tracer.instant(f"fault.{e.kind.value}", cat="fault",
                                 tid=instance, instance=instance,
                                 dispatch_index=n, severity=e.severity)
-        return DispatchEffects(delay_s=delay, fault=failing)
+        return DispatchEffects(delay_s=delay, fault=failing,
+                               corruption=corruption)
 
     @staticmethod
     def raise_for(fault: FaultKind, instance: str) -> None:
@@ -225,23 +408,72 @@ class FaultInjector:
         raise ValueError(f"{fault} is not a failing fault kind")
 
 
+# memo of the Eq. 9/10 design-floor sigma at the paper's default operating
+# point (4-bit, 1 Gbps) — the base magnitude ANALOG_NOISE severities are
+# scaled from in random schedules
+_BASE_SIGMA_MEMO: Dict[Tuple[int, float], float] = {}
+
+
+def _design_floor_sigma_lsb(bits: int = 4, br_hz: float = 1e9) -> float:
+    key = (bits, br_hz)
+    sigma = _BASE_SIGMA_MEMO.get(key)
+    if sigma is None:
+        sigma = ph.integer_noise_sigma_lsb(ph.PhotonicParams(), bits, br_hz)
+        _BASE_SIGMA_MEMO[key] = sigma
+    return sigma
+
+
+def integrity_severity(kind: FaultKind, u: float,
+                       bits: int = 4, br_hz: float = 1e9) -> float:
+    """Map one uniform draw u in [0, 1) to a kind-appropriate severity.
+
+    ANALOG_NOISE severities are SNR-derived: 1-4x the Eq. 9/10 integer
+    sigma at the design point, so an injected noise fault is "the analog
+    floor got worse", not an arbitrary number.  THERMAL_DETUNE spans
+    2-20% gain drift, ADC_BITFLIP 1e-4..1e-2 flip probability, STUCK_MRR
+    1-3 stuck weight elements.
+    """
+    if kind is FaultKind.ANALOG_NOISE:
+        return _design_floor_sigma_lsb(bits, br_hz) * (1.0 + 3.0 * u)
+    if kind is FaultKind.THERMAL_DETUNE:
+        return 0.02 + 0.18 * u
+    if kind is FaultKind.ADC_BITFLIP:
+        return 10.0 ** (-4.0 + 2.0 * u)
+    if kind is FaultKind.STUCK_MRR:
+        return float(1 + int(3.0 * u))
+    raise ValueError(f"{kind} is not an integrity fault kind")
+
+
 def random_schedule(seed: int, instances: Sequence[str], n_events: int = 3,
                     max_start: int = 8, max_duration: int = 4,
-                    kinds: Sequence[FaultKind] = tuple(FaultKind),
+                    kinds: Sequence[FaultKind] = AVAILABILITY_KINDS,
                     max_severity_s: float = 0.05,
                     ) -> Tuple[FaultEvent, ...]:
-    """A seeded chaos schedule: same seed -> same faults, replayable."""
+    """A seeded chaos schedule: same seed -> same faults, replayable.
+
+    Defaults to the availability-class kinds (the PR-6 domain), which
+    keeps historical (seed, kinds-defaulted) schedules bit-identical.
+    Pass ``kinds=INTEGRITY_KINDS`` (or a mix, or ``tuple(FaultKind)``) to
+    schedule value-corrupting faults; their severities are drawn through
+    ``integrity_severity`` (kind-appropriate, SNR-derived for noise)
+    instead of the seconds-of-delay range.
+    """
     if not instances:
         raise ValueError("need at least one instance to schedule faults on")
     rng = np.random.default_rng(seed)
     events = []
     for _ in range(n_events):
         kind = kinds[int(rng.integers(len(kinds)))]
+        if kind in FAILING_KINDS:
+            severity = 0.0
+        elif kind in INTEGRITY_KINDS:
+            severity = integrity_severity(kind, float(rng.uniform()))
+        else:
+            severity = float(rng.uniform(0.0, max_severity_s))
         events.append(FaultEvent(
             instance=instances[int(rng.integers(len(instances)))],
             kind=kind,
             start=int(rng.integers(max_start)),
             duration=int(rng.integers(1, max_duration + 1)),
-            severity=(0.0 if kind in FAILING_KINDS
-                      else float(rng.uniform(0.0, max_severity_s)))))
+            severity=severity))
     return tuple(events)

@@ -41,7 +41,7 @@ from .. import engine
 from ..obs.tracer import NOOP_TRACER, Tracer
 from .batcher import DynamicBatcher
 from .dispatch import ShardedDispatcher
-from .faults import AdmissionRejected
+from .faults import AdmissionRejected, CorruptionBudgetExceeded
 from .registry import PlanRegistry
 from .telemetry import DEFAULT_HW_POINTS, HardwarePoint, TelemetryLog
 
@@ -56,10 +56,25 @@ class ServeSLO:
                        (don't let batching eat the whole budget).
     ``min_observations`` — batches to observe before shedding anything
                        (the rate estimate needs data; admit until then).
+    ``max_corrupted_frame_rate`` — integrity budget: the tolerated EMA of
+                       detected-corrupted frames per served frame.  While
+                       the fleet's corruption rate exceeds it, ``submit``
+                       sheds with ``CorruptionBudgetExceeded``; the EMA
+                       decays as clean batches are served, so admission
+                       resumes once the datapath heals.  ``None`` (the
+                       default) disables integrity shedding.
+    ``corruption_halflife_s`` — the corrupted-frame-rate EMA also ages on
+                       the server clock with this half-life, so integrity
+                       shedding is a circuit breaker, not a latch: once
+                       the corrupting instance is quarantined, admission
+                       resumes even if no traffic is being served to
+                       decay the rate.
     """
     deadline_s: float
     flush_fraction: float = 0.5
     min_observations: int = 1
+    max_corrupted_frame_rate: Optional[float] = None
+    corruption_halflife_s: float = 0.5
 
     def __post_init__(self) -> None:
         if self.deadline_s <= 0:
@@ -69,6 +84,15 @@ class ServeSLO:
             raise ValueError(
                 f"flush_fraction must be in (0, 1], got "
                 f"{self.flush_fraction}")
+        if (self.max_corrupted_frame_rate is not None
+                and not 0 < self.max_corrupted_frame_rate <= 1):
+            raise ValueError(
+                f"max_corrupted_frame_rate must be in (0, 1], got "
+                f"{self.max_corrupted_frame_rate}")
+        if self.corruption_halflife_s <= 0:
+            raise ValueError(
+                f"corruption_halflife_s must be > 0, got "
+                f"{self.corruption_halflife_s}")
 
 
 class CNNServer:
@@ -92,6 +116,11 @@ class CNNServer:
         #: request, batch, shard and fault events land in one ring
         self.tracer = tracer if tracer is not None else NOOP_TRACER
         self.batcher.metrics = self.telemetry.metrics
+        if dispatcher is not None:
+            # one scrape registry for the whole stack: batcher depth,
+            # request latencies AND the dispatcher's SDC detection
+            # latencies land in telemetry.metrics
+            dispatcher.metrics = self.telemetry.metrics
         if dispatcher is not None and tracer is not None:
             dispatcher.tracer = self.tracer
         self._time = time_fn
@@ -101,9 +130,16 @@ class CNNServer:
         self.pipeline_compiles = 0
         #: admission-control state: shed/admitted counters + the EMA of
         #: measured per-frame service time the estimator runs on
-        self.admission = {"admitted": 0, "shed": 0}
+        self.admission = {"admitted": 0, "shed": 0, "integrity_shed": 0}
         self._frame_s_ema: Optional[float] = None
         self._observed_batches = 0
+        #: EMA of detected-corrupted frames per served frame — the
+        #: corrupted-frame-rate SLO (``slo.max_corrupted_frame_rate``)
+        #: sheds against this; decays toward 0 over clean batches AND on
+        #: the server clock (corruption_halflife_s), so shedding lifts
+        #: after the corrupting instance is quarantined
+        self._corruption_ema = 0.0
+        self._corruption_t: Optional[float] = None
         if dispatcher is not None or slo is not None:
             self.telemetry.attach_fleet(self._fleet_report)
 
@@ -117,10 +153,24 @@ class CNNServer:
             self.admission,
             slo_deadline_s=(self.slo.deadline_s if self.slo else None),
             est_frame_s=self._frame_s_ema)
+        out["sdc"] = {
+            "corrupted_frame_rate_ema": self._corruption_ema,
+            "budget": (self.slo.max_corrupted_frame_rate
+                       if self.slo else None),
+        }
         return out
 
     def _now(self, now: Optional[float]) -> float:
         return self._time() if now is None else now
+
+    def _decay_corruption(self, now: float) -> None:
+        """Age the corrupted-frame-rate EMA on the server clock."""
+        if self._corruption_t is not None and now > self._corruption_t:
+            half = (self.slo.corruption_halflife_s
+                    if self.slo is not None else 0.5)
+            self._corruption_ema *= 0.5 ** (
+                (now - self._corruption_t) / half)
+        self._corruption_t = now
 
     # -- admission control ------------------------------------------------
 
@@ -168,6 +218,20 @@ class CNNServer:
         if got != expect:
             raise ValueError(f"model {model!r} expects input shape "
                              f"{expect}, got {got}")
+        now = self._now(now)
+        if self.slo is not None and self.slo.max_corrupted_frame_rate:
+            self._decay_corruption(now)
+        if (self.slo is not None
+                and self.slo.max_corrupted_frame_rate is not None
+                and self._corruption_ema > self.slo.max_corrupted_frame_rate):
+            self.admission["integrity_shed"] += 1
+            self.tracer.instant(
+                "admission.integrity_shed", cat="admission", model=model,
+                rate=self._corruption_ema,
+                budget=self.slo.max_corrupted_frame_rate)
+            raise CorruptionBudgetExceeded(
+                model=model, rate=self._corruption_ema,
+                budget=self.slo.max_corrupted_frame_rate)
         if self.slo is not None:
             est = self.estimated_completion_s()
             if est is not None and est > self.slo.deadline_s:
@@ -179,7 +243,7 @@ class CNNServer:
                     model=model, est_s=est, deadline_s=self.slo.deadline_s,
                     healthy_fraction=self._healthy_fraction())
         self.admission["admitted"] += 1
-        rid = self.batcher.submit(model, x, self._now(now))
+        rid = self.batcher.submit(model, x, now)
         self.tracer.async_begin("request", aid=rid, model=model)
         return rid
 
@@ -242,6 +306,8 @@ class CNNServer:
                 xb = jnp.stack([jnp.asarray(r.x, jnp.float32)
                                 for r in fb.requests])
             compiles_before = engine.pipeline_cache_info()["compiles"]
+            sdc_before = (self.dispatcher.counters["sdc_detections"]
+                          if self.dispatcher is not None else 0)
             shard_info = ()
             with tr.span("exec", cat="batch", model=fb.model):
                 if self.dispatcher is None:
@@ -270,7 +336,28 @@ class CNNServer:
                                  else 0.3 * per_frame
                                  + 0.7 * self._frame_s_ema)
             self._observed_batches += 1
+            # corrupted-frame-rate EMA: detections this batch (integrity
+            # checks flagged a shard; it was re-executed bitwise-clean)
+            # attributed to the batch's frames pro-rata by shard count.
+            # Clean batches decay the EMA, so integrity shedding lifts
+            # once the datapath heals.
+            detections = ((self.dispatcher.counters["sdc_detections"]
+                           - sdc_before)
+                          if self.dispatcher is not None else 0)
+            corrupted_frames = 0
+            if detections:
+                shards = max(1, len(shard_info))
+                corrupted_frames = min(
+                    fb.size,
+                    int(np.ceil(detections * fb.size / shards)))
             done = self._now(None)
+            self._decay_corruption(done)
+            rate = corrupted_frames / fb.size
+            self._corruption_ema = (0.3 * rate
+                                    + 0.7 * self._corruption_ema)
+            if detections:
+                self.telemetry.record_sdc(fb.model, detections,
+                                          corrupted_frames)
             with tr.span("epilogue", cat="batch"):
                 out_np = np.asarray(out)
                 lats = []

@@ -337,6 +337,27 @@ class TelemetryLog:
             frame_latency_s=rec.hw[primary.label].frame_latency_s,
             op_points=op_points, reconfig_switches=reconfig_switches)
 
+    def record_sdc(self, model: str, detections: int,
+                   corrupted_frames: int) -> None:
+        """Fold one batch's silent-data-corruption outcome into counters.
+
+        ``detections`` — shards flagged by the dispatcher's integrity
+        checks (ABFT / range guard / weight checksum / canary) during the
+        batch; each was re-executed on a healthy instance before results
+        reached requesters.  ``corrupted_frames`` — the batch frames
+        attributed to those flagged shards.
+        """
+        if detections:
+            self.metrics.counter(
+                "serve_sdc_detections_total",
+                "shards flagged corrupted by integrity checks",
+                model=model).inc(detections)
+        if corrupted_frames:
+            self.metrics.counter(
+                "serve_sdc_corrupted_frames_total",
+                "frames attributed to flagged-and-recovered shards",
+                model=model).inc(corrupted_frames)
+
     def reset(self) -> None:
         """Forget everything served (model spec tables and memos stay)."""
         self.records.clear()

@@ -1,0 +1,472 @@
+"""Silent-data-corruption defense tests.
+
+Covers the whole inject -> detect -> contain -> recover chain:
+
+* ABFT row/column checksums detect ANY single corrupted accumulator
+  element (property-based under hypothesis when installed, a seeded
+  sweep otherwise — the container does not ship hypothesis);
+* the guarded execution twin is bitwise-identical to the plain jitted
+  pipeline on clean dispatches, and corruption injection is
+  deterministic under seed replay;
+* the dispatcher flags corrupted shards (``OutputCorrupted``),
+  re-executes them bitwise-identically on healthy instances, and
+  records detection latency;
+* readmission probes reject instances that would still corrupt values;
+* the planner's SNR budget filter (Eq. 9) excludes infeasible operating
+  points without perturbing plans that never used them;
+* the server's corrupted-frame-rate SLO sheds typed and recovers.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine, serve
+from repro.core import photonics as ph
+from repro.core import vdp
+from repro.core.mapping import TPCConfig
+from repro.core.tpc import build_accelerator
+from repro.engine import plan as plan_mod
+from repro.obs.metrics import MetricsRegistry
+from repro.serve import models as zoo
+from repro.serve.faults import (AVAILABILITY_KINDS, FAILING_KINDS,
+                                INTEGRITY_KINDS, CorruptionSpec)
+
+jax.config.update("jax_platform_name", "cpu")
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # container ships no hypothesis; seeded sweep
+    HAVE_HYPOTHESIS = False
+
+MODEL = "shufflenet_mini"
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    engine.plan_cache_clear()
+    engine.pipeline_cache_clear()
+    yield
+    engine.plan_cache_clear()
+    engine.pipeline_cache_clear()
+
+
+def _plan(key):
+    return engine.compile_model(f"sdc-{key}", zoo.serving_defs(MODEL))
+
+
+def _batch(b, seed=0, model=MODEL):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(
+        size=(b, *zoo.serving_input_shape(model))).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# ABFT: any single corrupted element is detected (exactly, no tolerances)
+# ---------------------------------------------------------------------------
+
+def _check_abft_single_corruption(seed: int) -> None:
+    rng = np.random.default_rng(seed)
+    b = int(rng.integers(1, 6))
+    s = int(rng.integers(1, 9))
+    f = int(rng.integers(1, 7))
+    lhs = rng.integers(-7, 8, (b, s)).astype(np.int32)
+    rhs = rng.integers(-7, 8, (s, f)).astype(np.int32)
+    acc = lhs @ rhs
+    clean = int(engine.abft_flags(jnp.asarray(lhs), jnp.asarray(rhs),
+                                  jnp.asarray(acc)))
+    assert clean == 0, "ABFT flagged a clean GEMM"
+    i, j = int(rng.integers(b)), int(rng.integers(f))
+    # any nonzero delta, including ones that wrap int32 (the checksum
+    # identities hold in Z/2^32, so wraparound is not an escape hatch)
+    delta = int(rng.integers(1, 2 ** 31))
+    bad = acc.copy()
+    bad[i, j] = np.int32(((int(acc[i, j]) + delta + 2 ** 31) % 2 ** 32)
+                         - 2 ** 31)
+    if bad[i, j] == acc[i, j]:
+        return                       # delta was a multiple of 2^32: no-op
+    flags = int(engine.abft_flags(jnp.asarray(lhs), jnp.asarray(rhs),
+                                  jnp.asarray(bad)))
+    assert flags & engine.DET_ABFT_COL, f"column checksum missed ({seed})"
+    assert flags & engine.DET_ABFT_ROW, f"row checksum missed ({seed})"
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=200, deadline=None)
+    @given(st.integers(min_value=0, max_value=2 ** 32 - 1))
+    def test_abft_detects_any_single_corruption(seed):
+        _check_abft_single_corruption(seed)
+else:
+    @pytest.mark.parametrize("seed", range(0, 200, 2))
+    def test_abft_detects_any_single_corruption(seed):
+        _check_abft_single_corruption(seed)
+
+
+def test_detector_names_roundtrip():
+    mask = engine.DET_ABFT_COL | engine.DET_RANGE
+    names = engine.detector_names(mask)
+    assert "abft_col" in "".join(names) or names  # non-empty, stable
+    assert engine.detector_names(0) == ()
+
+
+# ---------------------------------------------------------------------------
+# guarded twin: bitwise on clean dispatches, deterministic under corruption
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("model", sorted(zoo.SERVING_MODELS))
+def test_guarded_twin_bitwise_clean(model):
+    plan = engine.compile_model(f"sdc-twin-{model}",
+                                zoo.serving_defs(model))
+    xb = _batch(2, seed=1, model=model)
+    ref = np.asarray(engine.forward_jit(plan, xb))
+    out, flags = engine.forward_jit_guarded(
+        plan, xb, cargs=engine.null_corruption_args())
+    assert (np.asarray(out) == ref).all(), \
+        f"guarded twin diverged on clean dispatch ({model})"
+    assert not np.asarray(flags).any(), \
+        f"false positive on clean dispatch ({model}): {np.asarray(flags)}"
+
+
+def test_corruption_deterministic_replay():
+    plan = _plan("replay")
+    xb = _batch(2)
+    cargs = engine.corruption_args(seed=7, sigma_lsb=2.0)
+    out1, fl1 = engine.forward_jit_guarded(plan, xb, cargs=cargs)
+    out2, fl2 = engine.forward_jit_guarded(plan, xb, cargs=cargs)
+    assert (np.asarray(out1) == np.asarray(out2)).all()
+    assert (np.asarray(fl1) == np.asarray(fl2)).all()
+    assert np.asarray(fl1).any(), "sigma=2 LSB never flagged"
+
+
+@pytest.mark.parametrize("kw", [
+    {"sigma_lsb": 3.0},               # ANALOG_NOISE
+    {"gain": 1.05, "bias_lsb": 4.0},  # THERMAL_DETUNE
+    {"flip_prob": 0.01},              # ADC_BITFLIP
+])
+def test_value_corruption_detected_and_visible(kw):
+    plan = _plan("kinds")
+    xb = _batch(2)
+    ref = np.asarray(engine.forward_jit(plan, xb))
+    out, flags = engine.forward_jit_guarded(
+        plan, xb, cargs=engine.corruption_args(seed=3, **kw))
+    assert np.asarray(flags).any(), f"{kw} never flagged"
+    assert not (np.asarray(out) == ref).all(), f"{kw} was a silent no-op"
+
+
+def test_weight_checksum_catches_stuck_mrr():
+    plan = _plan("stuck")
+    xb = _batch(2)
+    params = engine.corrupted_layer_params(plan, seed=3, stuck_rings=2)
+    out, flags = engine.forward_jit_guarded(
+        plan, xb, cargs=engine.null_corruption_args(), params=params)
+    masks = np.asarray(flags)
+    assert (masks & engine.DET_WEIGHT).any(), (
+        f"stuck-MRR weights escaped the imprint checksum: {masks}")
+
+
+def test_integrity_policy_validation():
+    with pytest.raises(ValueError):
+        engine.IntegrityPolicy(check_every=-1)
+    assert engine.DISABLED_POLICY.check_every == 0
+    assert engine.DEFAULT_POLICY.check_every == 1
+
+
+# ---------------------------------------------------------------------------
+# fault taxonomy + injector semantics
+# ---------------------------------------------------------------------------
+
+def test_fault_kind_taxonomy_partitions():
+    assert set(AVAILABILITY_KINDS) & set(INTEGRITY_KINDS) == set()
+    assert (set(AVAILABILITY_KINDS) | set(INTEGRITY_KINDS)
+            == set(serve.FaultKind))
+    assert set(FAILING_KINDS) <= set(AVAILABILITY_KINDS)
+
+
+def test_random_schedule_default_stays_availability_only():
+    """PR-6 seeded schedules replay bit-identically: the default kinds
+    never include the new integrity faults."""
+    ev = serve.random_schedule(3, ["a", "b"], n_events=8)
+    assert all(e.kind in AVAILABILITY_KINDS for e in ev)
+    assert serve.random_schedule(3, ["a", "b"], n_events=8) == ev
+
+
+def test_random_schedule_integrity_severities_kind_appropriate():
+    events = serve.random_schedule(5, ["a"], n_events=24,
+                                   kinds=INTEGRITY_KINDS)
+    seen = set()
+    for e in events:
+        seen.add(e.kind)
+        if e.kind is serve.FaultKind.ANALOG_NOISE:
+            assert e.severity >= 0.5          # >= the Eq. 9 design floor
+        elif e.kind is serve.FaultKind.ADC_BITFLIP:
+            assert 1e-4 <= e.severity <= 1e-2
+        elif e.kind is serve.FaultKind.STUCK_MRR:
+            assert e.severity >= 1.0
+        elif e.kind is serve.FaultKind.THERMAL_DETUNE:
+            assert 0.0 < e.severity <= 0.25
+    assert len(seen) >= 3                     # the draw actually mixes
+
+
+def test_corruption_spec_active_and_fold():
+    assert not CorruptionSpec().active
+    assert CorruptionSpec(sigma_lsb=0.1).active
+    inj = serve.FaultInjector([
+        serve.FaultEvent("a", serve.FaultKind.ANALOG_NOISE, start=0,
+                         duration=2, severity=1.5),
+        serve.FaultEvent("a", serve.FaultKind.THERMAL_DETUNE, start=0,
+                         duration=2, severity=0.1)])
+    eff = inj.on_dispatch("a")
+    assert eff.corruption is not None
+    assert eff.corruption.sigma_lsb == pytest.approx(1.5)
+    assert eff.corruption.gain == pytest.approx(1.1)
+    assert inj.corrupted_dispatches == 1
+
+
+def test_probe_dispatches_excluded_and_reject_corrupters():
+    inj = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.ANALOG_NOISE, start=0,
+                         duration=3, severity=2.0)])
+    eff = inj.on_dispatch("acc0", probe=True)
+    assert eff.corruption is not None          # the probe SEES corruption
+    assert inj.corrupted_dispatches == 0       # but doesn't count it
+    assert inj.on_dispatch("acc0").corruption is not None
+    assert inj.corrupted_dispatches == 1
+    # dispatcher probes fail while the instance would corrupt values
+    fleet = serve.ShardedDispatcher(serve.default_fleet(1),
+                                    fault_injector=inj)
+    assert not fleet._probe(fleet.instances[0])
+    fleet.close()
+
+
+def test_injector_corruption_seed_replay():
+    sched = [serve.FaultEvent("a", serve.FaultKind.ANALOG_NOISE, start=0,
+                              duration=4, severity=2.0)]
+    a = serve.FaultInjector(sched, seed=9)
+    b = serve.FaultInjector(sched, seed=9)
+    for _ in range(3):
+        ea, eb = a.on_dispatch("a"), b.on_dispatch("a")
+        assert ea.corruption == eb.corruption
+    # a different injector seed draws different corruption seeds
+    c = serve.FaultInjector(sched, seed=10)
+    d = serve.FaultInjector(sched, seed=9)
+    assert c.on_dispatch("a").corruption.seed \
+        != d.on_dispatch("a").corruption.seed
+
+
+# ---------------------------------------------------------------------------
+# dispatcher: detect, contain, recover bitwise
+# ---------------------------------------------------------------------------
+
+def test_dispatch_detects_and_recovers_bitwise():
+    plan = _plan("recover")
+    xb = _batch(4, seed=2)
+    ref = np.asarray(engine.forward_jit(plan, xb))
+    schedule = [
+        serve.FaultEvent("acc0", serve.FaultKind.ANALOG_NOISE, start=0,
+                         duration=1, severity=3.0),
+        serve.FaultEvent("acc1", serve.FaultKind.ADC_BITFLIP, start=1,
+                         duration=1, severity=0.01),
+    ]
+    injector = serve.FaultInjector(schedule, seed=4)
+    fleet = serve.ShardedDispatcher(
+        serve.default_fleet(3), fault_injector=injector,
+        probe_cooldown_s=0.01, max_retries=8,
+        integrity=serve.IntegrityConfig(check_every=1))
+    fleet.metrics = MetricsRegistry()
+    for _ in range(3):
+        out, _ = fleet.run(plan, xb)
+    fleet.close()
+    assert (np.asarray(out) == ref).all(), \
+        "recovered outputs diverged from the fault-free run"
+    assert fleet.counters["sdc_detections"] >= 1
+    assert fleet.counters["sdc_detections"] == injector.corrupted_dispatches
+    assert fleet.counters["corrupted_shards"] >= 1
+    assert fleet.counters["quarantines"] >= 1
+    hist = fleet.metrics.histogram("serve_sdc_detection_latency_seconds",
+                                   model=plan.name)
+    assert hist.count == fleet.counters["sdc_detections"]
+    assert hist.percentile(0.5) > 0.0
+
+
+def test_dispatch_silent_without_integrity_config():
+    """The baseline the defense exists for: corruption flows through."""
+    plan = _plan("silent")
+    xb = _batch(4, seed=2)
+    ref = np.asarray(engine.forward_jit(plan, xb))
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.ANALOG_NOISE, start=0,
+                         severity=3.0)])
+    fleet = serve.ShardedDispatcher(serve.default_fleet(3),
+                                    fault_injector=injector)
+    out, _ = fleet.run(plan, xb)
+    fleet.close()
+    assert not (np.asarray(out) == ref).all()
+    assert fleet.counters["sdc_detections"] == 0
+
+
+def test_canary_quarantines_persistent_corrupter():
+    plan = _plan("canary")
+    xb = _batch(4, seed=5)
+    ref = np.asarray(engine.forward_jit(plan, xb))
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc1", serve.FaultKind.STUCK_MRR, start=0,
+                         severity=2.0)])
+    fleet = serve.ShardedDispatcher(
+        serve.default_fleet(3), fault_injector=injector,
+        probe_cooldown_s=0.01,
+        integrity=serve.IntegrityConfig(check_every=0, canary_every=1))
+    for _ in range(3):
+        out, _ = fleet.run(plan, xb)
+    fleet.close()
+    assert (np.asarray(out) == ref).all(), \
+        "stuck-MRR outputs reached the caller"
+    assert fleet.counters["canary_failures"] >= 1
+    assert fleet.counters["quarantines"] >= 1
+
+
+def test_integrity_config_validation():
+    with pytest.raises(ValueError):
+        serve.IntegrityConfig(check_every=-1)
+    with pytest.raises(ValueError):
+        serve.IntegrityConfig(canary_every=-2)
+    pol = serve.IntegrityConfig(check_every=2, abft=False).policy()
+    assert pol.check_every == 2 and not pol.abft
+
+
+def test_output_corrupted_is_typed_serving_fault():
+    exc = serve.OutputCorrupted("acc0", layer=3,
+                                detectors=("abft_col",))
+    assert isinstance(exc, serve.ServingFault)
+    assert exc.instance == "acc0" and exc.layer == 3
+    budget = serve.CorruptionBudgetExceeded(MODEL, rate=0.4, budget=0.25)
+    assert isinstance(budget, serve.ServingFault)
+
+
+# ---------------------------------------------------------------------------
+# planner: the Eq. 9 SNR budget filters operating points
+# ---------------------------------------------------------------------------
+
+def test_snr_filter_excludes_infeasible_points():
+    acc = build_accelerator("RMAM", 1.0)
+    specs = zoo.paper_scale_specs("xception_mini")
+    rep = plan_mod.search_points(specs, acc)
+    assert "x7" in rep.snr_excluded
+    labels = tuple(c.option.label for c in rep.choices)
+    assert "x7" not in labels
+    unfiltered = plan_mod.search_points(specs, acc, snr_filter=False)
+    assert unfiltered.snr_excluded == ()
+
+
+@pytest.mark.parametrize("model", ["efficientnet_mini", MODEL])
+def test_snr_filter_preserves_feasible_plans(model):
+    """Where every operating point meets the SNR budget (2-bit weights on
+    RMAM@1G), the filter is a no-op and plans are identical."""
+    acc = build_accelerator("RMAM", 1.0)
+    specs = zoo.paper_scale_specs(model)
+    with_f = plan_mod.search_points(specs, acc, bits=2)
+    without = plan_mod.search_points(specs, acc, bits=2, snr_filter=False)
+    assert with_f.snr_excluded == ()
+    assert (tuple(c.option for c in with_f.choices)
+            == tuple(c.option for c in without.choices))
+    assert with_f.switches == without.switches
+    assert with_f.total_time_s == without.total_time_s
+
+
+def test_snr_filter_never_schedules_excluded_points():
+    """The surviving plan is drawn only from SNR-feasible points, and the
+    schedule-time penalty of losing a point stays marginal."""
+    acc = build_accelerator("RMAM", 1.0)
+    specs = zoo.paper_scale_specs(MODEL)
+    with_f = plan_mod.search_points(specs, acc)
+    without = plan_mod.search_points(specs, acc, snr_filter=False)
+    assert with_f.snr_excluded == ("x7",)
+    assert all(c.option.label not in with_f.snr_excluded
+               for c in with_f.choices)
+    assert with_f.total_time_s == pytest.approx(without.total_time_s,
+                                                rel=0.05)
+
+
+def test_snr_filter_raises_when_nothing_survives():
+    acc = build_accelerator("RMAM", 5.0)
+    specs = zoo.paper_scale_specs(MODEL)
+    with pytest.raises(ph.InfeasiblePrecisionError):
+        plan_mod.search_points(specs, acc, bits=8)
+
+
+def test_snr_feasible_options_drops_high_y():
+    acc = build_accelerator("RMAM", 1.0)
+    rep = plan_mod.search_points(zoo.paper_scale_specs(MODEL), acc,
+                                 snr_filter=False)
+    kept, dropped = plan_mod.snr_feasible_options(acc, rep.options,
+                                                  bits=4)
+    assert kept, "the SNR filter dropped every operating point"
+    assert set(kept).isdisjoint(dropped)
+    assert {o.label for o in dropped} == {"x7"}
+
+
+def test_noisy_vdp_infeasible_precision_raises():
+    rng = np.random.default_rng(0)
+    divs = jnp.asarray(rng.integers(-7, 8, (8, 43)), jnp.int8)
+    dkvs = jnp.asarray(rng.integers(-7, 8, (4, 43)), jnp.int8)
+    tpc = TPCConfig("MAM", 43, 43, True)
+    with pytest.raises(vdp.InfeasiblePrecisionError):
+        vdp.noisy_vdp_gemm(jax.random.PRNGKey(0), divs, dkvs, tpc,
+                           br_hz=5e9, bits=8)
+
+
+# ---------------------------------------------------------------------------
+# server: corrupted-frame-rate SLO
+# ---------------------------------------------------------------------------
+
+def test_serve_slo_corruption_budget_validation():
+    with pytest.raises(ValueError):
+        serve.ServeSLO(deadline_s=1.0, max_corrupted_frame_rate=0.0)
+    with pytest.raises(ValueError):
+        serve.ServeSLO(deadline_s=1.0, max_corrupted_frame_rate=1.5)
+    with pytest.raises(ValueError):
+        serve.ServeSLO(deadline_s=1.0, corruption_halflife_s=0.0)
+
+
+def test_server_sheds_typed_on_corruption_and_recovers():
+    reg = serve.paper_cnn_registry()
+    injector = serve.FaultInjector([
+        serve.FaultEvent("acc0", serve.FaultKind.ANALOG_NOISE, start=0,
+                         duration=2, severity=3.0)])
+    fleet = serve.ShardedDispatcher(
+        serve.default_fleet(3), fault_injector=injector,
+        probe_cooldown_s=0.01, max_retries=8,
+        integrity=serve.IntegrityConfig(check_every=1))
+    slo = serve.ServeSLO(deadline_s=30.0, max_corrupted_frame_rate=0.25,
+                         corruption_halflife_s=0.1)
+    srv = serve.CNNServer(reg, max_batch=4, dispatcher=fleet, slo=slo)
+    xs = np.asarray(_batch(10, seed=6))
+    shed = 0
+    for x in xs[:6]:
+        try:
+            srv.submit(MODEL, x)
+        except serve.CorruptionBudgetExceeded as e:
+            assert e.rate > e.budget
+            shed += 1
+        srv.step(force=True)
+    assert fleet.counters["sdc_detections"] >= 1
+    assert shed >= 1, "corruption never tripped the frame-rate SLO"
+    assert srv.admission["integrity_shed"] == shed
+    time.sleep(0.5)                       # several half-lives
+    admitted_after = 0
+    for x in xs[6:]:
+        try:
+            srv.submit(MODEL, x)
+            admitted_after += 1
+        except serve.CorruptionBudgetExceeded:
+            pass
+        srv.step(force=True)
+    fleet.close()
+    assert admitted_after >= 1, "admission never recovered after decay"
+    sdc = srv.telemetry.summary()["fleet"]["sdc"]
+    assert sdc["budget"] == pytest.approx(0.25)
+    text = srv.telemetry.metrics.prometheus_text()
+    assert "serve_sdc_detections_total" in text
