@@ -78,8 +78,7 @@ def batch_sweep(model: str, sizes: Tuple[int, ...] = (1, 8),
               f"jit_speedup={jit_speedup[str(bs)]:.2f}x")
     modeled: Dict[str, Dict[str, Dict[str, float]]] = {}
     for p in serve.DEFAULT_HW_POINTS:
-        acc = serve.telemetry.build_accelerator(p.accelerator,
-                                               p.bit_rate_gbps)
+        acc = p.to_accelerator()
         modeled[p.label] = {}
         for bs in sizes:
             rep = sim.simulate(acc, entry.sim_specs, batch=bs)

@@ -1,14 +1,15 @@
 """Bench-regression gate: fresh smoke benches vs the committed baselines.
 
-Snapshots the committed ``BENCH_serve.json`` / ``BENCH_kernels.json``,
-re-runs the benches that write them — ``benchmarks.serve_bench --smoke``,
-``benchmarks.chaos_bench --smoke``, ``benchmarks.sdc_bench --smoke``,
-``benchmarks.obs_bench --smoke`` (all four merge-write BENCH_serve.json)
-plus the full ``kernel_bench`` and ``noise_ablation`` (both merge-write
-BENCH_kernels.json; the smoke variant of kernel_bench is assertion-only
-and writes no JSON; budget ~2 min per round, and a first-round regression
-triggers a second confirming round — CI gives the job a 20-minute
-timeout) — and fails when
+Snapshots the committed ``BENCH_serve.json`` / ``BENCH_kernels.json`` /
+``BENCH_fps.json``, re-runs the benches that write them —
+``benchmarks.serve_bench --smoke``, ``benchmarks.chaos_bench --smoke``,
+``benchmarks.sdc_bench --smoke``, ``benchmarks.obs_bench --smoke`` (all
+four merge-write BENCH_serve.json) plus the full ``kernel_bench`` and
+``noise_ablation`` (both merge-write BENCH_kernels.json; the smoke
+variant of kernel_bench is assertion-only and writes no JSON) and the
+``fig10_11_fps`` calibration sweep (writes BENCH_fps.json; budget ~2 min
+per round, and a first-round regression triggers a second confirming
+round — CI gives the job a 20-minute timeout) — and fails when
 a gated throughput family regresses by more than ``--threshold`` (default
 30%), or when a metric with an absolute floor (``ABS_FLOORS`` — e.g. the
 tracing-overhead ratio ``obs.overhead.ratio`` >= 0.95) lands below it.
@@ -34,6 +35,12 @@ chaos invariants:
   hardware-time attribution coverage — gated against fixed ABS_FLOORS
   (the values are already same-run normalized ratios, so a fixed bar is
   meaningful where a baseline drift bound would let them erode)
+* fps_w: the component-energy-ledger calibration (GATED) — per-
+  accelerator FPS/W-gmean accuracy vs the paper's Figs. 10-11 values
+  (min(modeled/paper, paper/modeled), a deterministic simulator output),
+  EDP-objective dominance ratios (latency plan's EDP / EDP plan's EDP,
+  >= 1 by construction), and the ledger-exactness residual, floor-gated
+  at 1 - 1e-9
 
 Absolute wall img/s swings several-fold with host load on shared CI
 runners (and on a laptop), which would page people for nothing; each
@@ -77,7 +84,7 @@ from pathlib import Path
 from typing import Dict, Iterator, Tuple
 
 REPO_ROOT = Path(__file__).resolve().parent.parent
-BENCH_FILES = ("BENCH_serve.json", "BENCH_kernels.json")
+BENCH_FILES = ("BENCH_serve.json", "BENCH_kernels.json", "BENCH_fps.json")
 SMOKE_COMMANDS = (
     # order matters: serve_bench, chaos_bench and obs_bench all
     # merge-write BENCH_serve.json (each preserves the others' sections)
@@ -87,6 +94,8 @@ SMOKE_COMMANDS = (
     [sys.executable, "-m", "benchmarks.obs_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.run", "--only", "kernel_bench"],
     [sys.executable, "-m", "benchmarks.noise_ablation"],
+    # energy-ledger calibration sweep (writes BENCH_fps.json)
+    [sys.executable, "-m", "benchmarks.run", "--only", "fig10_11_fps"],
 )
 
 
@@ -97,7 +106,7 @@ SMOKE_COMMANDS = (
 #: harness (bitwise under faults, typed shedding, fleet healing) encoded
 #: as 1.0/0.01 so any violation craters its family geomean.
 GATED_FAMILY_PREFIXES = ("kernels.", "serve_fleet.", "serve_fault.",
-                         "serve_sdc.")
+                         "serve_sdc.", "fps_w.")
 
 #: metrics gated by an absolute floor on the FRESH value instead of a
 #: ratio against the baseline.  The overhead ratio and attribution
@@ -119,6 +128,11 @@ ABS_FLOORS = {
     # the 4-bit/1-Gbps design point under its 1.5-LSB RMS noise budget
     # (floor_lsb / measured rms; 1.0 = exactly at budget)
     "kernels.analog_noise.headroom.b4_br1": 1.0,
+    # component-energy ledger (benchmarks/fig10_11_fps.py §energy):
+    # per-layer ledger rows must reproduce energy_per_frame_j; the metric
+    # is 1 - max relative residual over the full sweep, so the floor IS
+    # the 1e-9 exactness acceptance bar
+    "fps_w.ledger.exactness": 1.0 - 1e-9,
 }
 
 
@@ -220,10 +234,35 @@ def kernel_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
                float(floor) / float(design["rms_lsb"]))
 
 
+def fps_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
+    """BENCH_fps.json §energy: calibration accuracy + ledger exactness.
+
+    Everything here is a deterministic simulator output (no wall-clock
+    jitter), so the 30% family bar only fires on a genuine model change
+    that was not re-recorded in the committed baseline.
+    """
+    energy = doc.get("energy", {})
+    for acc, row in sorted(energy.get("calibration", {})
+                           .get("accuracy", {}).items()):
+        for key in ("fps", "fpsw"):
+            if key in row:
+                yield f"fps_w.calibration.{acc}.{key}", float(row[key])
+    if "ledger_max_rel_err" in energy:
+        yield ("fps_w.ledger.exactness",
+               1.0 - float(energy["ledger_max_rel_err"]))
+    for model, by_obj in sorted(energy.get("objectives", {}).items()):
+        lat, edp = by_obj.get("latency", {}), by_obj.get("edp", {})
+        if lat.get("edp") and edp.get("edp"):
+            # >= 1.0 by construction (candidate selection by true EDP)
+            yield (f"fps_w.objective.edp_dominance.{model}",
+                   float(lat["edp"]) / float(edp["edp"]))
+
+
 def collect(bench_dir: Path) -> Dict[str, float]:
     out: Dict[str, float] = {}
     extractors = {"BENCH_serve.json": serve_metrics,
-                  "BENCH_kernels.json": kernel_metrics}
+                  "BENCH_kernels.json": kernel_metrics,
+                  "BENCH_fps.json": fps_metrics}
     for fname, extract in extractors.items():
         path = bench_dir / fname
         if not path.exists():

@@ -1,3 +1,6 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+from .operating_point import OperatingPoint  # noqa: F401
+from .tpc import (ComponentEntry, ComponentLibrary,  # noqa: F401
+                  DEFAULT_LIBRARY, LEDGER_COMPONENTS, component_powers)

@@ -1,0 +1,88 @@
+"""The unified operating-point type: one name for "where this runs".
+
+Three divergent representations of an operating point grew up across the
+stack: ``serve.telemetry.HardwarePoint`` (accelerator family x bit rate),
+``engine.plan.EnginePoint`` (MXU packing geometry + quantization bits),
+and the ad-hoc ``tpc.accelerator_at(acc, x=..., reconfigurable=...)``
+keyword overrides for comb-switch retuning.  :class:`OperatingPoint`
+unifies them: the hardware identity fields lead (so the historical
+positional ``HardwarePoint("RMAM", 1.0)`` construction still works via
+its thin subclass alias), the comb-switch overrides and engine packing
+geometry follow as optional refinements, and the two converters hand
+each subsystem exactly the view it consumes:
+
+    op.to_accelerator()  ->  core.tpc.AcceleratorConfig  (simulator view)
+    op.to_engine()       ->  engine.plan.EnginePoint     (compiler view)
+
+``to_engine`` imports the engine lazily — core must stay importable
+without jax, and the engine imports core, not vice versa.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from .tpc import AcceleratorConfig, accelerator_at, build_accelerator
+
+
+@dataclasses.dataclass(frozen=True)
+class OperatingPoint:
+    """One fully-specified place for a model to run.
+
+    Hardware identity (``accelerator``, ``bit_rate_gbps``) is always
+    set; everything else defaults to "whatever that hardware/engine
+    defaults to": ``x``/``reconfigurable`` override the comb-switch
+    geometry (what ``accelerator_at`` kwargs used to carry), and the
+    ``engine_*``/``block_*``/``bits`` fields override the engine packing
+    geometry (what ``EnginePoint`` carries).  ``None`` means "default",
+    so a bare ``OperatingPoint("AMM", 5.0)`` is exactly the old
+    ``HardwarePoint("AMM", 5.0)``.
+    """
+    accelerator: str = "RMAM"
+    bit_rate_gbps: float = 1.0
+    # comb-switch retune overrides (tpc.accelerator_at)
+    x: Optional[int] = None
+    reconfigurable: Optional[bool] = None
+    # engine packing geometry overrides (engine.plan.EnginePoint)
+    engine_n: Optional[int] = None
+    engine_x: Optional[int] = None
+    block_b: Optional[int] = None
+    block_o: Optional[int] = None
+    block_k: Optional[int] = None
+    bits: int = 4
+
+    @property
+    def label(self) -> str:
+        return f"{self.accelerator}@{self.bit_rate_gbps:g}G"
+
+    def to_accelerator(self) -> AcceleratorConfig:
+        """The simulator's view: a built (and, if ``x``/``reconfigurable``
+        are set, retuned) :class:`AcceleratorConfig`."""
+        acc = build_accelerator(self.accelerator, self.bit_rate_gbps)
+        if self.x is not None or self.reconfigurable is not None:
+            acc = accelerator_at(acc, x=self.x,
+                                 reconfigurable=self.reconfigurable)
+        return acc
+
+    def to_engine(self):
+        """The compiler's view: an ``engine.plan.EnginePoint`` carrying
+        this point's packing geometry (engine defaults where unset)."""
+        from ..engine import plan as _plan  # lazy: core must not need jax
+        kwargs = {"bits": self.bits}
+        for src, dst in (("engine_n", "n"), ("engine_x", "x"),
+                         ("block_b", "block_b"), ("block_o", "block_o"),
+                         ("block_k", "block_k")):
+            v = getattr(self, src)
+            if v is not None:
+                kwargs[dst] = v
+        return _plan.EnginePoint(**kwargs)
+
+    @classmethod
+    def from_engine(cls, point, accelerator: str = "RMAM",
+                    bit_rate_gbps: float = 1.0) -> "OperatingPoint":
+        """Lift an ``EnginePoint`` (plus a hardware identity) into the
+        unified type; ``op.to_engine()`` round-trips it."""
+        return cls(accelerator=accelerator, bit_rate_gbps=bit_rate_gbps,
+                   engine_n=point.n, engine_x=point.x,
+                   block_b=point.block_b, block_o=point.block_o,
+                   block_k=point.block_k, bits=point.bits)

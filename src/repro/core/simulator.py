@@ -14,14 +14,20 @@ from core/mapping.py is scheduled as:
 (MAM-family) TPCs amortize one DIV fetch over M kernels per cycle;
 position-parallel (AMM-family) TPCs fetch M fresh patches per cycle, so the
 supply bound is what separates the organizations once per-pass overheads are
-paid.  Calibrated so the RMAM reference at 1 Gbps streams at its line rate
-(12 TPCs x 43 points/ns; see EXPERIMENTS.md §Fidelity for the study).
+paid.  Recalibrated jointly with the DIV-DAC idle fraction against the
+paper's Figs. 10-11 gmean ratios (see EXPERIMENTS.md §Energy model; the
+original anchor was the RMAM@1Gbps line rate of 516 points/ns).
 
-Energy: static power (lasers, weight DACs, SE chains, ADCs, periphery, DIV
-DAC idle floor) is charged for the full frame latency; DIV DAC switching is
-charged per imprinted sample (23.4 pJ), so a supply-starved organization's
-input DACs idle instead of burning full-rate power.  FPS/W == 1/energy-per-
-frame, matching the paper's static-amortization argument.
+Energy: static power is charged for the full frame latency and decomposed
+into the component ledger of ``AcceleratorConfig.power_breakdown()``
+(laser, weight-DAC, DIV-DAC idle, ADC/PD/TIA, tuning, memory/NoC,
+periphery); DIV DAC switching is charged per imprinted sample (23.4 pJ)
+into the ``div_dac`` row, so a supply-starved organization's input DACs
+idle instead of burning full-rate power.  Per-layer ``LayerCost`` rows and
+their per-component cells sum *exactly* to ``energy_per_frame_j`` —
+attribution and the energy ledger are decompositions, not estimates.
+FPS/W == 1/energy-per-frame, matching the paper's static-amortization
+argument.
 """
 from __future__ import annotations
 
@@ -40,9 +46,12 @@ from .tpc import (ACTIVATION_LATENCY, AcceleratorConfig,
                   REDUCTION_LATENCY, TIA_LATENCY, build_accelerator)
 
 #: Accelerator-wide input-supply bandwidth, fresh 4-bit points per ns.
-#: = the RMAM@1Gbps line rate (12 TPCs x 43 pts/ns), the reference design's
-#: balanced operating point.
-SUPPLY_POINTS_PER_NS = 516.0
+#: Originally anchored at the RMAM@1Gbps line rate (12 TPCs x 43 pts/ns
+#: = 516); recalibrated to 420 by the §Energy-model study — a constrained
+#: joint fit with tpc.DIV_DAC_STATIC_FRACTION against the paper's
+#: Figs. 10-11 gmean ratios, subject to the tier-1 fidelity bounds
+#: (benchmarks/fig10_11_fps.py records the fit).
+SUPPLY_POINTS_PER_NS = 420.0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,16 +71,22 @@ class LayerCost:
     report's rows reproduces ``frame_latency_s`` and summing ``energy_j``
     reproduces ``energy_per_frame_j`` (static power is charged to each
     layer for its own stream time; DIV-DAC switching per its samples), so
-    attribution coverage is 100% by construction.
+    attribution coverage is 100% by construction.  ``components`` splits
+    ``energy_j`` one level further — by the canonical ledger rows of
+    ``tpc.LEDGER_COMPONENTS`` — and ``energy_j`` is *defined* as the sum
+    of its cells, so the component ledger decomposes exactly too.
     """
 
     name: str
     kind: str
     time_s: float             # modeled seconds per frame
-    energy_j: float           # static share + DIV DAC switching, per frame
+    energy_j: float           # == sum(components.values()), per frame
     utilization: float        # MRR utilization of the layer's mapping
     div_samples: float        # DIV DAC sample writes per frame
     rounds: int
+    #: ledger row -> joules per frame (static share per component for this
+    #: layer's time; DIV-DAC switching folded into the ``div_dac`` row)
+    components: Dict[str, float] = dataclasses.field(default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,8 +114,25 @@ class InferenceReport:
         return static + dyn
 
     @property
-    def power_w(self) -> float:
+    def avg_power_w(self) -> float:
+        """Frame-averaged wall power (energy per frame over frame time)."""
         return self.energy_per_frame_j / self.frame_latency_s
+
+    @property
+    def power_w(self) -> float:
+        """Deprecated alias of :attr:`avg_power_w` (this is frame-averaged
+        wall power, NOT peak device power — see :attr:`peak_power_w`)."""
+        import warnings
+        warnings.warn("InferenceReport.power_w is deprecated; use "
+                      "avg_power_w (frame-averaged) or peak_power_w "
+                      "(device peak)", DeprecationWarning, stacklevel=2)
+        return self.avg_power_w
+
+    @property
+    def peak_power_w(self) -> float:
+        """Peak device power (every DIV DAC at full rate) — the
+        AcceleratorConfig passthrough benchmarks used to recompute."""
+        return self.accelerator.power_w()
 
     @property
     def fps_per_watt(self) -> float:
@@ -112,9 +144,21 @@ class InferenceReport:
         active = sum(l.mapping.active_mrr_cycles for l in self.layers)
         return used / max(active, 1)
 
+    def energy_breakdown(self) -> Dict[str, float]:
+        """Per-frame joules by ledger component (sums to
+        ``energy_per_frame_j`` up to float rounding): each component's
+        static watts charged for the frame latency, DIV-DAC switching
+        folded into the ``div_dac`` row."""
+        t = self.frame_latency_s
+        out = {c: p * t
+               for c, p in self.accelerator.power_breakdown().items()}
+        out["div_dac"] += (sum(l.div_samples for l in self.layers)
+                           * DIV_DAC_ENERGY_PER_SAMPLE_J / self.batch)
+        return out
+
     def layer_costs(self) -> List[LayerCost]:
         """Exact per-layer, per-frame breakdown (see :class:`LayerCost`)."""
-        static_w = self.accelerator.power_static_w()
+        breakdown = self.accelerator.power_breakdown()
         out: List[LayerCost] = []
         for i, l in enumerate(self.layers):
             if self.layer_names is not None and i < len(self.layer_names):
@@ -122,13 +166,15 @@ class InferenceReport:
             else:
                 name = f"layer{i}"
             t = l.time_s / self.batch
+            comps = {c: p * t for c, p in breakdown.items()}
+            comps["div_dac"] += (l.div_samples
+                                 * DIV_DAC_ENERGY_PER_SAMPLE_J / self.batch)
             out.append(LayerCost(
                 name=name, kind=l.mapping.layer.kind.value, time_s=t,
-                energy_j=(static_w * t
-                          + l.div_samples * DIV_DAC_ENERGY_PER_SAMPLE_J
-                          / self.batch),
+                energy_j=sum(comps.values()),
                 utilization=l.utilization,
-                div_samples=l.div_samples / self.batch, rounds=l.rounds))
+                div_samples=l.div_samples / self.batch, rounds=l.rounds,
+                components=comps))
         return out
 
 

@@ -26,7 +26,7 @@ from .pipeline import (batch_bucket, corrupted_layer_params,  # noqa: F401
 from .pipeline import evict as pipeline_evict  # noqa: F401
 from .plan import (DEFAULT_POINT, EnginePoint, LayerChoice,  # noqa: F401
                    LayerDef, LayerPlan, MODE_DENSE, MODE_DEPTHWISE,
-                   MODE_PACKED, ModelPlan, PlannerReport, compile_layer,
-                   compile_model, defs_to_specs, get_plan, plan_cache_clear,
-                   plan_cache_info, plan_model, search_cache_evict,
-                   search_points, snr_feasible_options)
+                   MODE_PACKED, ModelPlan, OBJECTIVES, PlannerReport,
+                   compile_layer, compile_model, defs_to_specs, get_plan,
+                   plan_cache_clear, plan_cache_info, plan_model,
+                   search_cache_evict, search_points, snr_feasible_options)

@@ -41,8 +41,9 @@ from ..core import mapping, vdp
 from ..core import photonics as ph
 from ..core import simulator as sim
 from ..core.photonics import InfeasiblePrecisionError
-from ..core.tpc import (AcceleratorConfig, RECONFIG_SWITCH_LATENCY_S,
-                        accelerator_at, build_accelerator)
+from ..core.tpc import (AcceleratorConfig, DIV_DAC_ENERGY_PER_SAMPLE_J,
+                        RECONFIG_SWITCH_LATENCY_S, accelerator_at,
+                        build_accelerator)
 from ..kernels import ops
 from ..kernels import vdpe_gemm as kern
 from ..kernels.common import ACTIVATIONS, round_up as _round_up
@@ -289,6 +290,10 @@ def defs_to_specs(layer_defs: Sequence[LayerDef],
     return tuple(specs)
 
 
+#: Planner objectives: what the Viterbi search minimizes.
+OBJECTIVES = ("latency", "edp", "energy")
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerChoice:
     """The planner's verdict for one layer."""
@@ -297,11 +302,28 @@ class LayerChoice:
     time_s: float             # memoized simulate_layer time at the point
     utilization: float        # Fig. 6 per-VDPE utilization at the point
     modes: Tuple[int, ...]    # hardware slice modes the mapping selected
+    #: modeled joules at the point, from the component ledger: the retuned
+    #: accelerator's power_breakdown() sum charged for time_s, plus
+    #: DIV-DAC switching per sample
+    energy_j: float = 0.0
+    #: the retuned accelerator's peak device power at the point (what the
+    #: power_cap_w feasibility filter screens)
+    point_power_w: float = 0.0
 
     @property
     def cost(self) -> float:
-        """The search objective: modeled time per utilized MRR fraction."""
+        """The latency objective: modeled time per utilized MRR fraction."""
         return self.time_s / max(self.utilization, 1e-9)
+
+    def objective_cost(self, objective: str) -> float:
+        """Per-layer DP cost under an objective.  ``edp`` uses the layer's
+        own energy x time product as its additive proxy (the final plan is
+        still selected by true total EDP — see search_points)."""
+        if objective == "latency":
+            return self.cost
+        if objective == "energy":
+            return self.energy_j
+        return self.energy_j * self.time_s
 
 
 @dataclasses.dataclass(frozen=True)
@@ -321,6 +343,18 @@ class PlannerReport:
     #: minimum received power) — empty when the filter was off or nothing
     #: was dropped
     snr_excluded: Tuple[str, ...] = ()
+    #: the objective the plan was selected under (OBJECTIVES)
+    objective: str = "latency"
+    #: peak-device-power cap the candidate points were screened against
+    #: (None = unconstrained)
+    power_cap_w: Optional[float] = None
+    #: option labels excluded by the power cap (their retuned peak power
+    #: exceeds ``power_cap_w``)
+    cap_excluded: Tuple[str, ...] = ()
+    #: ledger energy of the chosen sequence: per-layer component-ledger
+    #: joules plus base static power charged for switch-penalty time
+    total_energy_j: float = 0.0
+    fixed_energy_j: float = 0.0
 
     @property
     def fps(self) -> float:
@@ -334,6 +368,30 @@ class PlannerReport:
     def uplift(self) -> float:
         """Modeled planner-vs-fixed FPS ratio (the paper's RCA headline)."""
         return self.fixed_time_s / self.total_time_s
+
+    @property
+    def energy_per_frame_j(self) -> float:
+        return self.total_energy_j / self.batch
+
+    @property
+    def avg_power_w(self) -> float:
+        """Frame-averaged wall power of the chosen sequence."""
+        return self.total_energy_j / self.total_time_s
+
+    @property
+    def edp(self) -> float:
+        """Modeled energy-delay product of the chosen sequence."""
+        return self.total_energy_j * self.total_time_s
+
+    @property
+    def fixed_edp(self) -> float:
+        return self.fixed_energy_j * self.fixed_time_s
+
+    @property
+    def max_point_power_w(self) -> float:
+        """Largest peak device power across the chosen points (always
+        <= ``power_cap_w`` when a cap was set)."""
+        return max(c.point_power_w for c in self.choices)
 
     @property
     def mean_utilization(self) -> float:
@@ -355,9 +413,14 @@ def _score_layer(acc: AcceleratorConfig, opt: mapping.PointOption,
     acc_o = accelerator_at(acc, opt)
     rep = sim.simulate_layer(acc_o, spec, batch)
     util = mapping.vdpe_utilization_for_s(acc_o.tpc_config, spec.dkv_size)
+    # ledger energy at the retuned point: its own static breakdown (the
+    # lane-SE share moves with y) for the layer's time + DIV switching
+    energy = (acc_o.power_static_w() * rep.time_s
+              + rep.div_samples * DIV_DAC_ENERGY_PER_SAMPLE_J)
     return LayerChoice(name=spec.name, option=opt, time_s=rep.time_s,
                        utilization=util,
-                       modes=tuple(sorted(rep.mapping.modes)))
+                       modes=tuple(sorted(rep.mapping.modes)),
+                       energy_j=energy, point_power_w=acc_o.power_w())
 
 
 def snr_feasible_options(acc: AcceleratorConfig,
@@ -412,7 +475,8 @@ def search_points(specs: Sequence[LayerSpec],
                   options: Optional[Sequence[mapping.PointOption]] = None,
                   switch_penalty_s: Optional[float] = None,
                   batch: int = 1, bits: int = DEFAULT_POINT.bits,
-                  snr_filter: bool = True) -> PlannerReport:
+                  snr_filter: bool = True, objective: str = "latency",
+                  power_cap_w: Optional[float] = None) -> PlannerReport:
     """Per-layer operating-point search over a layer table (Viterbi).
 
     For every layer the candidate comb-switch points are scored by
@@ -435,14 +499,34 @@ def search_points(specs: Sequence[LayerSpec],
     — a search whose optimal path avoided them is unchanged — and raises
     :class:`InfeasiblePrecisionError` if no candidate survives.
 
-    The DP objective is ``time_s / utilization`` per layer plus the raw
-    switch penalty in seconds: dividing by utilization deliberately biases
-    the search toward configurations that keep MRR area busy (the paper's
-    stated selection criterion), which weights the penalty lightly against
-    low-utilization layers.  Because the *reported* total is pure modeled
-    time, the search falls back to the all-fixed sequence whenever its
-    pick would lose in pure time — ``uplift >= 1`` always holds.
+    Under ``objective="latency"`` (the default) the DP cost is
+    ``time_s / utilization`` per layer plus the raw switch penalty in
+    seconds: dividing by utilization deliberately biases the search toward
+    configurations that keep MRR area busy (the paper's stated selection
+    criterion), which weights the penalty lightly against low-utilization
+    layers.  Because the *reported* total is pure modeled time, the search
+    falls back to the all-fixed sequence whenever its pick would lose in
+    pure time — ``uplift >= 1`` always holds for the latency objective.
+
+    ``objective="energy"`` / ``"edp"`` run the same Viterbi over the
+    component-ledger joules (x time for EDP) as an additive proxy, then
+    select among {objective path, latency path, fixed sequence} by the
+    TRUE sequence total (energy, or energy x time) — so the EDP plan's
+    EDP never exceeds the latency plan's, and the energy plan's joules
+    never exceed either, by construction.  Objectives only reorder the
+    operating-point choices; quantization bits never change, so plan
+    outputs stay bitwise-identical across objectives.
+
+    ``power_cap_w`` screens candidate points by *peak device power* at
+    the retuned geometry (``accelerator_at(...).power_w()``) before the
+    search, recording dropped labels in ``cap_excluded`` and raising
+    ``ValueError`` when nothing survives.  The fixed Mode-1 point has the
+    fewest sharing elements and hence the lowest peak power, so it
+    survives any cap that is feasible at all.
     """
+    if objective not in OBJECTIVES:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"expected one of {OBJECTIVES}")
     if acc is None:
         acc = build_accelerator("RMAM", 1.0)
     opts = (mapping.point_options(acc.n) if options is None
@@ -460,6 +544,23 @@ def search_points(specs: Sequence[LayerSpec],
         if dropped:
             snr_excluded = tuple(o.label for o in dropped)
             opts = kept
+    cap_excluded: Tuple[str, ...] = ()
+    if power_cap_w is not None:
+        kept_c, dropped_c = [], []
+        for opt in opts:
+            if accelerator_at(acc, opt).power_w() <= power_cap_w:
+                kept_c.append(opt)
+            else:
+                dropped_c.append(opt)
+        if not kept_c:
+            raise ValueError(
+                f"power_cap_w={power_cap_w} excludes every operating "
+                f"point (min peak power "
+                f"{min(accelerator_at(acc, o).power_w() for o in opts):.3f}"
+                f" W across {[o.label for o in opts]})")
+        if dropped_c:
+            cap_excluded = tuple(o.label for o in dropped_c)
+            opts = tuple(kept_c)
     penalty = (RECONFIG_SWITCH_LATENCY_S if switch_penalty_s is None
                else switch_penalty_s)
     specs = tuple(specs)
@@ -467,39 +568,49 @@ def search_points(specs: Sequence[LayerSpec],
         raise ValueError("search_points needs at least one layer")
     table = [[_score_layer(acc, opt, spec, batch) for opt in opts]
              for spec in specs]
+    base_static_w = acc.power_static_w()
 
-    dp = [table[0][j].cost for j in range(len(opts))]
-    back: List[List[int]] = []
-    for i in range(1, len(specs)):
-        best_k = 0
+    def viterbi(cost_of, switch_cost):
+        dp = [cost_of(table[0][j]) for j in range(len(opts))]
+        back: List[List[int]] = []
+        for i in range(1, len(specs)):
+            best_k = 0
+            for k in range(1, len(opts)):
+                if dp[k] < dp[best_k]:
+                    best_k = k
+            ndp, nback = [], []
+            for j in range(len(opts)):
+                stay, switch = dp[j], dp[best_k] + switch_cost
+                if stay <= switch:
+                    prev, base = j, stay
+                else:
+                    prev, base = best_k, switch
+                ndp.append(base + cost_of(table[i][j]))
+                nback.append(prev)
+            dp = ndp
+            back.append(nback)
+        j = 0
         for k in range(1, len(opts)):
-            if dp[k] < dp[best_k]:
-                best_k = k
-        ndp, nback = [], []
-        for j in range(len(opts)):
-            stay, switch = dp[j], dp[best_k] + penalty
-            if stay <= switch:
-                prev, base = j, stay
-            else:
-                prev, base = best_k, switch
-            ndp.append(base + table[i][j].cost)
-            nback.append(prev)
-        dp = ndp
-        back.append(nback)
+            if dp[k] < dp[j]:
+                j = k
+        path = [j]
+        for nback in reversed(back):
+            j = nback[j]
+            path.append(j)
+        path.reverse()
+        seq = tuple(table[i][path[i]] for i in range(len(specs)))
+        return seq, sum(1 for a, b in zip(path, path[1:]) if a != b)
 
-    j = 0
-    for k in range(1, len(opts)):
-        if dp[k] < dp[j]:
-            j = k
-    path = [j]
-    for nback in reversed(back):
-        j = nback[j]
-        path.append(j)
-    path.reverse()
+    def seq_time(seq, sw):
+        return sum(c.time_s for c in seq) + sw * penalty
 
-    choices = tuple(table[i][path[i]] for i in range(len(specs)))
-    switches = sum(1 for a, b in zip(path, path[1:]) if a != b)
-    total = sum(c.time_s for c in choices) + switches * penalty
+    def seq_energy(seq, sw):
+        # switch downtime burns the base accelerator's static ledger power
+        return (sum(c.energy_j for c in seq)
+                + sw * penalty * base_static_w)
+
+    choices, switches = viterbi(lambda c: c.cost, penalty)
+    total = seq_time(choices, switches)
     if mapping.FIXED_POINT_OPTION in opts:
         fixed_j = opts.index(mapping.FIXED_POINT_OPTION)
         fixed = [row[fixed_j] for row in table]
@@ -513,11 +624,34 @@ def search_points(specs: Sequence[LayerSpec],
         # pure time — never ship a plan worse than the baseline it is
         # measured against
         choices, switches, total = tuple(fixed), 0, fixed_t
+    if objective != "latency":
+        sw_cost = penalty * base_static_w      # joules per switch
+        if objective == "edp":
+            sw_cost *= penalty                 # J x s per switch (proxy)
+        obj_seq, obj_sw = viterbi(
+            lambda c: c.objective_cost(objective), sw_cost)
+        # the additive DP cost is only a proxy (per-layer EDP does not sum
+        # to sequence EDP) — select among {objective path, latency path,
+        # fixed} by the TRUE sequence total, which also makes
+        # "edp plan's EDP <= latency plan's" hold by construction
+        candidates = [(obj_seq, obj_sw), (choices, switches),
+                      (tuple(fixed), 0)]
+
+        def metric(seq, sw):
+            e = seq_energy(seq, sw)
+            return e if objective == "energy" else e * seq_time(seq, sw)
+
+        choices, switches = min(candidates, key=lambda c: metric(*c))
+        total = seq_time(choices, switches)
     return PlannerReport(accelerator=acc, options=opts, choices=choices,
                          switch_penalty_s=penalty, switches=switches,
                          total_time_s=total, fixed_time_s=fixed_t,
                          fixed_utilization=_time_weighted_utilization(fixed),
-                         batch=batch, snr_excluded=snr_excluded)
+                         batch=batch, snr_excluded=snr_excluded,
+                         objective=objective, power_cap_w=power_cap_w,
+                         cap_excluded=cap_excluded,
+                         total_energy_j=seq_energy(choices, switches),
+                         fixed_energy_j=seq_energy(fixed, 0))
 
 
 def _engine_point_for(base: EnginePoint, ld: LayerDef, spec: LayerSpec,
@@ -551,12 +685,14 @@ def cached_search(name: str, specs: Sequence[LayerSpec],
                   options: Optional[Sequence[mapping.PointOption]] = None,
                   switch_penalty_s: Optional[float] = None,
                   batch: int = 1, bits: int = DEFAULT_POINT.bits,
-                  snr_filter: bool = True) -> PlannerReport:
+                  snr_filter: bool = True, objective: str = "latency",
+                  power_cap_w: Optional[float] = None) -> PlannerReport:
     """Memoized ``search_points``, keyed like ``get_plan`` (model name =
     identity, spec table as the structural guard)."""
     specs = tuple(specs)
     key = (name, acc, None if options is None else tuple(options),
-           switch_penalty_s, batch, bits, snr_filter)
+           switch_penalty_s, batch, bits, snr_filter, objective,
+           power_cap_w)
     cached = _SEARCH_CACHE.get(key)
     if cached is not None:
         cached_specs, report = cached
@@ -570,7 +706,8 @@ def cached_search(name: str, specs: Sequence[LayerSpec],
     _SEARCH_STATS["misses"] += 1
     report = search_points(specs, acc=acc, options=options,
                            switch_penalty_s=switch_penalty_s, batch=batch,
-                           bits=bits, snr_filter=snr_filter)
+                           bits=bits, snr_filter=snr_filter,
+                           objective=objective, power_cap_w=power_cap_w)
     _SEARCH_CACHE[key] = (specs, report)
     return report
 
@@ -588,20 +725,26 @@ def plan_model(name: str, layer_defs: Sequence[LayerDef],
                point: EnginePoint = DEFAULT_POINT,
                acc: Optional[AcceleratorConfig] = None,
                options: Optional[Sequence[mapping.PointOption]] = None,
-               switch_penalty_s: Optional[float] = None) -> ModelPlan:
+               switch_penalty_s: Optional[float] = None,
+               objective: str = "latency",
+               power_cap_w: Optional[float] = None) -> ModelPlan:
     """Compile a model with per-layer operating points (the RCA planner).
 
     Same inputs as ``compile_model`` plus the model's input shape (the
     planner needs the spatial walk to score positions), returning a
     ``ModelPlan`` whose layers carry heterogeneous ``EnginePoint``s and
-    whose ``planner`` field records the search.  Outputs are
-    bitwise-identical to ``compile_model(name, layer_defs, point)`` —
-    only packing geometry differs, never quantization.
+    whose ``planner`` field records the search.  ``objective`` picks the
+    Viterbi metric (OBJECTIVES) and ``power_cap_w`` screens candidate
+    points by peak device power — see ``search_points``.  Outputs are
+    bitwise-identical to ``compile_model(name, layer_defs, point)``
+    under every objective/cap — only packing geometry differs, never
+    quantization.
     """
     specs = defs_to_specs(layer_defs, input_shape)
     report = cached_search(name, specs, acc=acc, options=options,
                            switch_penalty_s=switch_penalty_s,
-                           bits=point.bits)
+                           bits=point.bits, objective=objective,
+                           power_cap_w=power_cap_w)
     layers = tuple(
         compile_layer(ld, _engine_point_for(point, ld, spec, choice))
         for ld, spec, choice in zip(layer_defs, specs, report.choices))

@@ -31,6 +31,9 @@ class LayerStat:
     div_samples: float = 0.0
     util_time_s: float = 0.0     # utilization weighted by modeled time
     frames: int = 0
+    #: ledger row -> total joules (tpc.LEDGER_COMPONENTS; cells sum to
+    #: ``energy_j`` because each LayerCost row's do)
+    components: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def utilization(self) -> float:
@@ -41,7 +44,8 @@ class LayerStat:
         return {"kind": self.kind, "time_s": self.time_s,
                 "energy_j": self.energy_j,
                 "div_samples": self.div_samples,
-                "utilization": self.utilization, "frames": self.frames}
+                "utilization": self.utilization, "frames": self.frames,
+                "energy_components_j": dict(self.components)}
 
 
 @dataclasses.dataclass
@@ -90,6 +94,8 @@ class LayerAttribution:
             stat.div_samples += row.div_samples * frames
             stat.util_time_s += row.utilization * t
             stat.frames += frames
+            for c, j in getattr(row, "components", {}).items():
+                stat.components[c] = stat.components.get(c, 0.0) + j * frames
             m.attributed_time_s += t
 
     def coverage(self, model: str) -> float:
@@ -117,12 +123,17 @@ class LayerAttribution:
         out: Dict = {}
         for model in self.models():
             m = self._models[model]
+            comps: Dict[str, float] = {}
+            for stat in m.layers.values():
+                for c, j in stat.components.items():
+                    comps[c] = comps.get(c, 0.0) + j
             out[model] = {
                 "point": m.point,
                 "frames": m.frames,
                 "coverage": self.coverage(model),
                 "total_time_s": m.total_time_s,
                 "attributed_time_s": m.attributed_time_s,
+                "energy_components_j": comps,
                 "reconfig_switches": m.reconfig_switches,
                 "operating_points": dict(m.operating_points),
                 "by_layer": {name: stat.as_dict()

@@ -55,5 +55,6 @@ from .models import (SERVING_MODELS, serving_defs,  # noqa: F401
                      serving_input_shape, specs_for_defs)
 from .registry import PlanRegistry, ServingModel, paper_cnn_registry  # noqa: F401
 from .server import CNNServer, ServeSLO  # noqa: F401
+from ..core.operating_point import OperatingPoint  # noqa: F401
 from .telemetry import (DEFAULT_HW_POINTS, BatchRecord,  # noqa: F401
                         HardwarePoint, ShardCost, TelemetryLog)

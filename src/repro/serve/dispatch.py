@@ -61,20 +61,20 @@ import numpy as np
 from .. import engine
 from ..cnn.layers import LayerSpec
 from ..core import simulator as sim
-from ..core.tpc import build_accelerator
+from ..core.operating_point import OperatingPoint
 from ..obs.tracer import NOOP_TRACER
 from ..runtime.fault_tolerance import HeartbeatMonitor, StragglerDetector
 from .faults import (CorruptionSpec, FaultInjector, NoHealthyInstances,
                      OutputCorrupted, RetriesExhausted, ServingFault,
                      ShardDeadlineExceeded)
-from .telemetry import HardwarePoint
+from .telemetry import HardwarePoint  # noqa: F401  (backcompat re-export)
 
 
 @dataclasses.dataclass(frozen=True)
 class AcceleratorInstance:
     """One simulated accelerator in the fleet."""
     name: str
-    hw: HardwarePoint = HardwarePoint()
+    hw: OperatingPoint = OperatingPoint()
     capacity: float = 1.0     # relative shard weight (throughput share)
 
     def __post_init__(self) -> None:
@@ -143,7 +143,7 @@ class IntegrityConfig:
             check_every=self.check_every)
 
 
-def default_fleet(k: int, hw: HardwarePoint = HardwarePoint(),
+def default_fleet(k: int, hw: OperatingPoint = OperatingPoint(),
                   ) -> Tuple[AcceleratorInstance, ...]:
     """K homogeneous instances at one hardware operating point."""
     if k < 1:
@@ -172,7 +172,8 @@ class ShardedDispatcher:
                  sleep_fn: Callable[[float], None] = time.sleep,
                  heartbeat: Optional[HeartbeatMonitor] = None,
                  straggler: Optional[StragglerDetector] = None,
-                 integrity: Optional[IntegrityConfig] = None):
+                 integrity: Optional[IntegrityConfig] = None,
+                 fleet_power_cap_w: Optional[float] = None):
         if not instances:
             raise ValueError("dispatcher needs at least one instance")
         names = [i.name for i in instances]
@@ -184,6 +185,17 @@ class ShardedDispatcher:
             raise ValueError(f"max_retries must be >= 0, got {max_retries}")
         self.instances = tuple(instances)
         self._total_capacity = sum(i.capacity for i in self.instances)
+        # peak device watts per instance, from the unified point's
+        # accelerator view — what the fleet power budget admits against
+        self._inst_power: Dict[str, float] = {
+            i.name: i.hw.to_accelerator().power_w() for i in self.instances}
+        if (fleet_power_cap_w is not None
+                and fleet_power_cap_w < min(self._inst_power.values())):
+            raise ValueError(
+                f"fleet_power_cap_w={fleet_power_cap_w} admits no instance "
+                f"(cheapest draws "
+                f"{min(self._inst_power.values()):.3f} W peak)")
+        self.fleet_power_cap_w = fleet_power_cap_w
         self.fault_injector = fault_injector
         self.deadline_s = deadline_s
         self.max_retries = max_retries
@@ -203,7 +215,8 @@ class ShardedDispatcher:
             "timeouts": 0, "faults": 0, "quarantines": 0, "probes": 0,
             "probe_failures": 0, "readmissions": 0,
             "integrity_checks": 0, "sdc_detections": 0,
-            "corrupted_shards": 0, "canary_probes": 0, "canary_failures": 0}
+            "corrupted_shards": 0, "canary_probes": 0, "canary_failures": 0,
+            "power_deferrals": 0}
         self.integrity = integrity
         #: metrics registry (the server wires telemetry's in); detection
         #: latencies land in serve_sdc_detection_latency_seconds
@@ -302,6 +315,32 @@ class ShardedDispatcher:
         act = self.active_instances()
         return sum(i.capacity for i in act) / self._total_capacity
 
+    def power_admitted(self, active: Sequence[AcceleratorInstance],
+                       count: bool = False) -> List[AcceleratorInstance]:
+        """The subset of ``active`` the fleet power budget admits.
+
+        Greedy prefix admission in declared fleet order: each instance is
+        admitted if its peak device watts still fit under
+        ``fleet_power_cap_w``, else skipped (a dispatch-time skip counts
+        as a ``power_deferrals`` round when ``count`` is set) —
+        deterministic, and the capacity split downstream only ever sees
+        the admitted set, so a power-capped fleet never plans shards onto
+        instances it cannot afford to light up.  No cap -> everything
+        passes through.
+        """
+        if self.fleet_power_cap_w is None:
+            return list(active)
+        out: List[AcceleratorInstance] = []
+        used = 0.0
+        for inst in active:
+            p = self._inst_power[inst.name]
+            if used + p <= self.fleet_power_cap_w + 1e-12:
+                out.append(inst)
+                used += p
+            elif count:
+                self.counters["power_deferrals"] += 1
+        return out
+
     def fleet_health(self) -> Dict:
         """Per-instance health + fleet counters (summary()["fleet"])."""
         now = self._time()
@@ -313,6 +352,7 @@ class ShardedDispatcher:
                 "state": h.state,
                 "point": inst.hw.label,
                 "capacity": inst.capacity,
+                "power_w": self._inst_power[inst.name],
                 "frames": h.frames,
                 "shards": h.shards,
                 "failures": h.failures,
@@ -321,11 +361,16 @@ class ShardedDispatcher:
                 "last_beat_age_s": (None if h.last_beat is None
                                     else now - h.last_beat),
             }
+        healthy = [i for i in self.instances
+                   if self.health[i.name].state == "healthy"]
         return {"instances": per, "counters": dict(self.counters),
-                "healthy_fraction": sum(
-                    i.capacity for i in self.instances
-                    if self.health[i.name].state == "healthy")
+                "healthy_fraction": sum(i.capacity for i in healthy)
                 / self._total_capacity,
+                "power_cap_w": self.fleet_power_cap_w,
+                "peak_power_w": sum(self._inst_power.values()),
+                "admitted_power_w": sum(
+                    self._inst_power[i.name]
+                    for i in self.power_admitted(healthy)),
                 "suspect_dead": list(self.heartbeat.dead_hosts())}
 
     # -- apportionment ----------------------------------------------------
@@ -370,9 +415,8 @@ class ShardedDispatcher:
         key = (inst.hw.label, sim_specs, size)
         t = self._model_memo.get(key)
         if t is None:
-            acc = build_accelerator(inst.hw.accelerator,
-                                    inst.hw.bit_rate_gbps)
-            rep = sim.simulate(acc, sim_specs, batch=size)
+            rep = sim.simulate(inst.hw.to_accelerator(), sim_specs,
+                               batch=size)
             t = size / rep.fps
             self._model_memo[key] = t
         return t
@@ -571,11 +615,14 @@ class ShardedDispatcher:
         attempt = 0
         last_exc: Optional[BaseException] = None
         while work:
-            active = [inst for inst in self.active_instances()
-                      if self._canary_ok(inst, plan)]
+            active = self.power_admitted(
+                [inst for inst in self.active_instances()
+                 if self._canary_ok(inst, plan)], count=True)
             if not active:
-                # transiently empty fleet: burn a retry round waiting for
-                # quarantine probes to readmit someone before giving up
+                # transiently empty fleet (all quarantined, or the power
+                # budget admits none of the survivors): burn a retry round
+                # waiting for quarantine probes to readmit someone before
+                # giving up
                 attempt += 1
                 if attempt > self.max_retries:
                     raise NoHealthyInstances(

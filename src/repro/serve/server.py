@@ -43,7 +43,8 @@ from .batcher import DynamicBatcher
 from .dispatch import ShardedDispatcher
 from .faults import AdmissionRejected, CorruptionBudgetExceeded
 from .registry import PlanRegistry
-from .telemetry import DEFAULT_HW_POINTS, HardwarePoint, TelemetryLog
+from ..core.operating_point import OperatingPoint
+from .telemetry import DEFAULT_HW_POINTS, TelemetryLog
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,7 +99,7 @@ class ServeSLO:
 class CNNServer:
     def __init__(self, registry: PlanRegistry, max_batch: int = 8,
                  max_wait_s: float = 0.005,
-                 hw_points: Sequence[HardwarePoint] = DEFAULT_HW_POINTS,
+                 hw_points: Sequence[OperatingPoint] = DEFAULT_HW_POINTS,
                  interpret: Optional[bool] = None,
                  time_fn: Callable[[], float] = time.monotonic,
                  dispatcher: Optional[ShardedDispatcher] = None,

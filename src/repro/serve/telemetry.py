@@ -30,25 +30,27 @@ import numpy as np
 
 from ..cnn.layers import ConvKind, LayerSpec
 from ..core import simulator as sim
-from ..core.tpc import AcceleratorConfig, build_accelerator
+from ..core.operating_point import OperatingPoint
+from ..core.tpc import AcceleratorConfig
 from ..obs.attribution import LayerAttribution
 from ..obs.metrics import LogHistogram, MetricsRegistry
 
 
 @dataclasses.dataclass(frozen=True)
-class HardwarePoint:
-    """One modeled operating point: accelerator family x DAC bit rate."""
-    accelerator: str = "RMAM"
-    bit_rate_gbps: float = 1.0
+class HardwarePoint(OperatingPoint):
+    """Deprecated alias of :class:`repro.core.OperatingPoint`.
 
-    @property
-    def label(self) -> str:
-        return f"{self.accelerator}@{self.bit_rate_gbps:g}G"
+    Telemetry's original point type carried only (accelerator family x
+    DAC bit rate); those are exactly the leading fields of the unified
+    ``OperatingPoint``, so historical positional construction —
+    ``HardwarePoint("AMM", 5.0)`` — still works.  New code should use
+    ``OperatingPoint`` directly.
+    """
 
 
-DEFAULT_HW_POINTS: Tuple[HardwarePoint, ...] = (
-    HardwarePoint("RMAM", 1.0),
-    HardwarePoint("MAM", 1.0),
+DEFAULT_HW_POINTS: Tuple[OperatingPoint, ...] = (
+    OperatingPoint("RMAM", 1.0),
+    OperatingPoint("MAM", 1.0),
 )
 
 
@@ -59,6 +61,10 @@ class HwCost:
     fps_per_watt: float
     frame_latency_s: float
     energy_per_frame_j: float
+    #: per-frame joules by ledger component (tpc.LEDGER_COMPONENTS rows;
+    #: sums to ``energy_per_frame_j`` up to float rounding)
+    energy_components_j: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,20 +137,21 @@ class _Agg:
     batches: int = 0
     t0: float = np.inf
     t1: float = -np.inf
-    # point label -> [fps*frames, fps_per_watt*frames, frames]
-    hw: Dict[str, List[float]] = dataclasses.field(default_factory=dict)
+    # point label -> {"fps": fps*frames, "fpw": fps_per_watt*frames,
+    #                 "energy": J/frame*frames, "frames": frames,
+    #                 "components": {ledger row -> J/frame*frames}}
+    hw: Dict[str, Dict] = dataclasses.field(default_factory=dict)
     act_int8: int = 0
     act_f32: int = 0
 
 
 class TelemetryLog:
-    def __init__(self, points: Sequence[HardwarePoint] = DEFAULT_HW_POINTS,
+    def __init__(self, points: Sequence[OperatingPoint] = DEFAULT_HW_POINTS,
                  max_records: int = 4096,
                  metrics: Optional[MetricsRegistry] = None):
         self.points = tuple(points)
         self._acc: Dict[str, AcceleratorConfig] = {
-            p.label: build_accelerator(p.accelerator, p.bit_rate_gbps)
-            for p in self.points}
+            p.label: p.to_accelerator() for p in self.points}
         #: newest ``max_records`` batches, for inspection/debugging; every
         #: summary aggregate is maintained incrementally and stays exact
         #: after old records fall off
@@ -185,11 +192,11 @@ class TelemetryLog:
         """
         self._fleet_source = source
 
-    def _accelerator(self, point: HardwarePoint) -> AcceleratorConfig:
+    def _accelerator(self, point: OperatingPoint) -> AcceleratorConfig:
         """The built accelerator for a point (fleet points added lazily)."""
         acc = self._acc.get(point.label)
         if acc is None:
-            acc = build_accelerator(point.accelerator, point.bit_rate_gbps)
+            acc = point.to_accelerator()
             self._acc[point.label] = acc
         return acc
 
@@ -204,7 +211,7 @@ class TelemetryLog:
         return specs
 
     def _hw_cost(self, model: str, sim_specs: Sequence[LayerSpec],
-                 batch_size: int, point: HardwarePoint) -> HwCost:
+                 batch_size: int, point: OperatingPoint) -> HwCost:
         self._check_specs(model, sim_specs)
         key = (model, batch_size, point.label)
         cost = self._hw_memo.get(key)
@@ -213,12 +220,13 @@ class TelemetryLog:
                                batch=batch_size)
             cost = HwCost(fps=rep.fps, fps_per_watt=rep.fps_per_watt,
                           frame_latency_s=rep.frame_latency_s,
-                          energy_per_frame_j=rep.energy_per_frame_j)
+                          energy_per_frame_j=rep.energy_per_frame_j,
+                          energy_components_j=rep.energy_breakdown())
             self._hw_memo[key] = cost
         return cost
 
     def _layer_rows(self, model: str, sim_specs: Sequence[LayerSpec],
-                    batch_size: int, point: HardwarePoint,
+                    batch_size: int, point: OperatingPoint,
                     ) -> Tuple[sim.LayerCost, ...]:
         """Per-frame LayerCost rows at a point (simulate_layer is memoized
         upstream, so the repeat-batch-shape case costs a dict lookup)."""
@@ -235,7 +243,7 @@ class TelemetryLog:
                      batch_size: int, t_formed: float, exec_s: float,
                      queue_waits_s: Sequence[float],
                      latencies_s: Sequence[float],
-                     shards: Sequence[Tuple[str, int, HardwarePoint,
+                     shards: Sequence[Tuple[str, int, OperatingPoint,
                                             float]] = (),
                      exec_specs: Optional[Sequence[LayerSpec]] = None,
                      op_points: Optional[Dict[str, str]] = None,
@@ -294,21 +302,32 @@ class TelemetryLog:
             agg.t0 = min(agg.t0, rec.t_formed)
             agg.t1 = max(agg.t1, rec.t_formed + rec.exec_s)
             for label, cost in rec.hw.items():
-                row = agg.hw.setdefault(label, [0.0, 0.0, 0])
-                row[0] += cost.fps * rec.batch_size
-                row[1] += cost.fps_per_watt * rec.batch_size
-                row[2] += rec.batch_size
+                row = agg.hw.setdefault(label, {
+                    "fps": 0.0, "fpw": 0.0, "energy": 0.0, "frames": 0,
+                    "components": {}})
+                row["fps"] += cost.fps * rec.batch_size
+                row["fpw"] += cost.fps_per_watt * rec.batch_size
+                row["energy"] += cost.energy_per_frame_j * rec.batch_size
+                row["frames"] += rec.batch_size
+                for c, j in cost.energy_components_j.items():
+                    row["components"][c] = (row["components"].get(c, 0.0)
+                                            + j * rec.batch_size)
             agg.act_int8 += rec.act_stream_bytes_int8
             agg.act_f32 += rec.act_stream_bytes_f32
         for s in rec.shards:
             d = self._dispatch_agg.setdefault(s.instance, {
                 "point": s.point, "frames": 0, "shards": 0,
-                "exec_s": 0.0, "fps_frames": 0.0, "fpw_frames": 0.0})
+                "exec_s": 0.0, "fps_frames": 0.0, "fpw_frames": 0.0,
+                "energy_frames": 0.0, "components": {}})
             d["frames"] += s.batch_size
             d["shards"] += 1
             d["exec_s"] += s.exec_s
             d["fps_frames"] += s.cost.fps * s.batch_size
             d["fpw_frames"] += s.cost.fps_per_watt * s.batch_size
+            d["energy_frames"] += s.cost.energy_per_frame_j * s.batch_size
+            for c, j in s.cost.energy_components_j.items():
+                d["components"][c] = (d["components"].get(c, 0.0)
+                                      + j * s.batch_size)
         # streaming histograms + counters (bounded, scrape-ready)
         mhist = self._model_lat_hist.get(rec.model)
         if mhist is None:
@@ -408,11 +427,16 @@ class TelemetryLog:
         per-record walk recomputed the same ``frames`` sum once per point.)
         """
         out: Dict[str, Dict] = {}
-        for label, (fps_frames, fpw_frames, frames) in agg.hw.items():
+        for label, row in agg.hw.items():
+            frames = row["frames"]
             if frames == 0:
                 continue
-            out[label] = {"modeled_fps": fps_frames / frames,
-                          "modeled_fps_per_watt": fpw_frames / frames}
+            out[label] = {
+                "modeled_fps": row["fps"] / frames,
+                "modeled_fps_per_watt": row["fpw"] / frames,
+                "modeled_energy_per_frame_j": row["energy"] / frames,
+                "energy_components_j": {c: j / frames for c, j
+                                        in row["components"].items()}}
         return out
 
     def _dispatch_summary(self) -> Dict[str, Dict]:
@@ -423,7 +447,11 @@ class TelemetryLog:
                 "point": d["point"], "frames": d["frames"],
                 "shards": d["shards"], "exec_s": d["exec_s"],
                 "modeled_fps": d["fps_frames"] / d["frames"],
-                "modeled_fps_per_watt": d["fpw_frames"] / d["frames"]}
+                "modeled_fps_per_watt": d["fpw_frames"] / d["frames"],
+                "modeled_energy_per_frame_j": (d["energy_frames"]
+                                               / d["frames"]),
+                "energy_components_j": {c: j / d["frames"] for c, j
+                                        in d["components"].items()}}
         return out
 
     @staticmethod

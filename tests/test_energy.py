@@ -1,0 +1,364 @@
+"""Component-level energy ledger + FPS/W-aware planning tests.
+
+The ledger's contract is exactness by construction: every power/energy
+total in the stack is *defined* as the sum of its component rows
+(``AcceleratorConfig.power_breakdown`` -> ``power_static_w``;
+``LayerCost.components`` -> ``energy_j`` -> ``energy_per_frame_j``), so
+these tests assert tight (1e-9 relative) agreement across the full
+accelerator x bit-rate x CNN-zoo sweep, not loose sanity bounds.  The
+planner side pins the objective guarantees (EDP plan's EDP never exceeds
+the latency plan's; power-capped plans never choose infeasible points)
+and that objectives/caps never change model outputs bitwise.
+"""
+import math
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro import engine, serve
+from repro.cnn.models import MODEL_ZOO
+from repro.core import mapping
+from repro.core import simulator as sim
+from repro.core import tpc
+from repro.core.operating_point import OperatingPoint
+from repro.core.tpc import (DEFAULT_LIBRARY, LEDGER_COMPONENTS,
+                            accelerator_at, build_accelerator,
+                            component_powers)
+from repro.serve import models as zoo
+
+jax.config.update("jax_platform_name", "cpu")
+
+REL = 1e-9
+SWEEP = [(name, br) for name in tpc.ACCELERATORS
+         for br in tpc.PAPER_BIT_RATES]
+
+
+def _rel_err(a: float, b: float) -> float:
+    return abs(a - b) / max(abs(a), abs(b), 1e-30)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    engine.plan_cache_clear()
+    yield
+    engine.plan_cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# ComponentLibrary + power_breakdown
+# ---------------------------------------------------------------------------
+
+def test_power_breakdown_rows_sum_exactly_to_static_power():
+    for name, br in SWEEP:
+        acc = build_accelerator(name, br)
+        bd = acc.power_breakdown()
+        assert tuple(bd) == LEDGER_COMPONENTS, (name, br)
+        assert all(v >= 0.0 for v in bd.values()), (name, br)
+        # power_static_w is DEFINED as the ledger sum — exact equality
+        assert sum(bd.values()) == acc.power_static_w(), (name, br)
+        # peak fills the DIV-DAC idle fraction up to full rate
+        assert acc.power_w() >= acc.power_static_w()
+
+
+def test_component_powers_accessor_matches_method():
+    acc = build_accelerator("RMAM", 1.0)
+    assert component_powers(acc) == acc.power_breakdown()
+    assert component_powers(acc, DEFAULT_LIBRARY) == acc.power_breakdown()
+
+
+def test_module_constants_alias_the_library():
+    assert tpc.DAC_POWER == DEFAULT_LIBRARY["dac"].power_w
+    assert tpc.TIA_POWER == DEFAULT_LIBRARY["tia"].power_w
+    assert tpc.PD_POWER == DEFAULT_LIBRARY["pd"].power_w
+    assert tpc.EDRAM_POWER == DEFAULT_LIBRARY["edram"].power_w
+    for br, (area, p) in tpc.ADC_TABLE.items():
+        e = DEFAULT_LIBRARY.adc_at(br)
+        assert (area, p) == (e.area_mm2, e.power_w)
+    with pytest.raises(KeyError):
+        DEFAULT_LIBRARY["no_such_component"]
+    with pytest.raises(KeyError):
+        DEFAULT_LIBRARY.adc_at(2.0)
+
+
+def test_breakdown_moves_with_retuned_geometry():
+    acc = build_accelerator("RMAM", 1.0)
+    base = acc.power_breakdown()
+    fixed = accelerator_at(acc, mapping.FIXED_POINT_OPTION)
+    retuned = accelerator_at(acc, mapping.PointOption(x=9))
+    # the fixed point drops the per-lane comb-switch SEs -> fewer ADCs
+    assert fixed.power_breakdown()["adc_pd_tia"] < base["adc_pd_tia"]
+    assert retuned.power_breakdown()["adc_pd_tia"] >= base["adc_pd_tia"]
+    # laser/tuning/periphery rows don't move with x
+    for row in ("laser", "tuning", "memory_noc", "periphery"):
+        assert fixed.power_breakdown()[row] == base[row]
+
+
+# ---------------------------------------------------------------------------
+# ledger exactness across the full sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cnn", sorted(MODEL_ZOO))
+def test_ledger_exact_across_accelerator_sweep(cnn):
+    specs = MODEL_ZOO[cnn]()
+    for name, br in SWEEP:
+        rep = sim.simulate(build_accelerator(name, br), specs)
+        total = rep.energy_per_frame_j
+        rows = rep.layer_costs()
+        # per-row: energy_j is DEFINED as the component sum — exact
+        for row in rows:
+            assert tuple(row.components) == LEDGER_COMPONENTS
+            assert row.energy_j == sum(row.components.values())
+        # rows sum to the frame energy within 1e-9 relative
+        assert _rel_err(sum(r.energy_j for r in rows), total) <= REL, (
+            cnn, name, br)
+        # report-level breakdown also sums to the frame energy
+        bd = rep.energy_breakdown()
+        assert tuple(bd) == LEDGER_COMPONENTS
+        assert _rel_err(sum(bd.values()), total) <= REL
+        # column sums of the per-layer ledger reproduce the breakdown
+        for c in LEDGER_COMPONENTS:
+            col = sum(r.components[c] for r in rows)
+            assert _rel_err(col, bd[c]) <= 1e-6, (cnn, name, br, c)
+
+
+def test_batch_amortization_keeps_ledger_exact():
+    specs = MODEL_ZOO["shufflenet_v2"]()
+    for batch in (1, 4, 16):
+        rep = sim.simulate(build_accelerator("RMAM", 1.0), specs,
+                           batch=batch)
+        rows = rep.layer_costs()
+        assert _rel_err(sum(r.energy_j for r in rows),
+                        rep.energy_per_frame_j) <= REL
+        assert _rel_err(sum(r.time_s for r in rows),
+                        rep.frame_latency_s) <= REL
+
+
+# ---------------------------------------------------------------------------
+# InferenceReport power API (satellite c)
+# ---------------------------------------------------------------------------
+
+def test_report_power_naming_and_deprecation():
+    rep = sim.simulate(build_accelerator("RMAM", 1.0),
+                       MODEL_ZOO["mobilenet_v1"]())
+    assert rep.avg_power_w == rep.energy_per_frame_j / rep.frame_latency_s
+    assert rep.peak_power_w == rep.accelerator.power_w()
+    # static <= frame-averaged <= peak
+    assert (rep.accelerator.power_static_w() <= rep.avg_power_w * (1 + REL)
+            <= rep.peak_power_w * (1 + REL))
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        with pytest.raises(DeprecationWarning):
+            rep.power_w
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        assert rep.power_w == rep.avg_power_w
+
+
+# ---------------------------------------------------------------------------
+# OperatingPoint unification (satellite a)
+# ---------------------------------------------------------------------------
+
+def test_operating_point_accelerator_view():
+    op = OperatingPoint("AMM", 5.0)
+    acc = op.to_accelerator()
+    ref = build_accelerator("AMM", 5.0)
+    assert acc == ref and op.label == "AMM@5G"
+    # comb-switch overrides route through accelerator_at
+    op9 = OperatingPoint("RMAM", 1.0, x=9)
+    assert op9.to_accelerator() == accelerator_at(
+        build_accelerator("RMAM", 1.0), x=9)
+    fixed = OperatingPoint("RMAM", 1.0, reconfigurable=False)
+    assert fixed.to_accelerator().y == 0
+
+
+def test_operating_point_engine_roundtrip():
+    ep = engine.EnginePoint(x=0, bits=8)
+    op = OperatingPoint.from_engine(ep, "RMAM", 1.0)
+    assert op.to_engine() == ep
+    # defaults map to the engine's defaults
+    assert OperatingPoint().to_engine() == engine.DEFAULT_POINT
+
+
+def test_hardware_point_is_deprecated_alias():
+    hp = serve.HardwarePoint("RMAM", 5.0)   # historical positional form
+    assert isinstance(hp, OperatingPoint)
+    assert hp.label == "RMAM@5G"
+    assert hp.to_accelerator() == build_accelerator("RMAM", 5.0)
+    assert serve.OperatingPoint is OperatingPoint
+    assert all(isinstance(p, OperatingPoint)
+               for p in serve.DEFAULT_HW_POINTS)
+
+
+# ---------------------------------------------------------------------------
+# planner objectives (tentpole 3)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cnn", sorted(MODEL_ZOO))
+def test_edp_and_energy_objectives_dominate_latency_plan(cnn):
+    specs = MODEL_ZOO[cnn]()
+    acc = build_accelerator("RMAM", 1.0)
+    reps = {o: engine.search_points(specs, acc=acc, objective=o)
+            for o in engine.OBJECTIVES}
+    assert reps["edp"].edp <= reps["latency"].edp * (1 + REL), cnn
+    assert (reps["energy"].total_energy_j
+            <= reps["latency"].total_energy_j * (1 + REL)), cnn
+    assert (reps["energy"].total_energy_j
+            <= reps["edp"].total_energy_j * (1 + REL)), cnn
+    for rep in reps.values():
+        # the reported totals decompose over choices + switch charges
+        assert rep.total_time_s == pytest.approx(
+            sum(c.time_s for c in rep.choices)
+            + rep.switches * rep.switch_penalty_s)
+        assert rep.total_energy_j == pytest.approx(
+            sum(c.energy_j for c in rep.choices)
+            + rep.switches * rep.switch_penalty_s
+            * acc.power_static_w())
+        assert rep.avg_power_w > 0 and rep.fixed_edp > 0
+
+
+def test_objective_validation():
+    with pytest.raises(ValueError, match="objective"):
+        engine.search_points(MODEL_ZOO["mobilenet_v1"]()[:3],
+                             objective="fps")
+
+
+def test_power_cap_screens_infeasible_points():
+    specs = MODEL_ZOO["xception"]()[:16]
+    acc = build_accelerator("RMAM", 1.0)
+    opts = mapping.point_options(acc.n)
+    powers = sorted(accelerator_at(acc, o).power_w() for o in opts)
+    fixed_p = accelerator_at(acc, mapping.FIXED_POINT_OPTION).power_w()
+    assert fixed_p == powers[0]     # fixed point is always cheapest
+    # a cap between the cheapest and priciest point drops some options
+    cap = (powers[0] + powers[-1]) / 2
+    rep = engine.search_points(specs, acc=acc, power_cap_w=cap)
+    assert rep.cap_excluded
+    assert all(c.point_power_w <= cap for c in rep.choices)
+    assert rep.max_point_power_w <= cap
+    assert rep.power_cap_w == cap
+    # the tightest feasible cap forces the all-fixed sequence
+    tight = engine.search_points(specs, acc=acc,
+                                 power_cap_w=fixed_p * (1 + REL))
+    assert set(tight.labels) == {mapping.FIXED_POINT_OPTION.label}
+    # an infeasible cap is a hard error, not a silent empty plan
+    with pytest.raises(ValueError, match="power_cap_w"):
+        engine.search_points(specs, acc=acc, power_cap_w=fixed_p * 0.5)
+
+
+def test_uncapped_unfiltered_latency_search_unchanged():
+    # objective/power_cap_w default to the historical behavior: same
+    # labels and totals as a call that never mentions them
+    specs = MODEL_ZOO["shufflenet_v2"]()
+    a = engine.search_points(specs)
+    b = engine.search_points(specs, objective="latency", power_cap_w=None)
+    assert a.labels == b.labels
+    assert a.total_time_s == b.total_time_s
+    assert a.uplift >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# bitwise identity across objectives/caps (acceptance)
+# ---------------------------------------------------------------------------
+
+def test_objectives_and_caps_never_change_outputs():
+    name = "xception_mini"
+    defs = zoo.serving_defs(name, 0)
+    shape = zoo.serving_input_shape(name)
+    rng = np.random.default_rng(5)
+    xb = rng.normal(size=(3, *shape)).astype(np.float32)
+    acc = build_accelerator("RMAM", 1.0)
+    cap = accelerator_at(acc, mapping.PointOption(x=9)).power_w()
+    variants = {
+        "latency": engine.plan_model(f"{name}#lat", defs, shape),
+        "edp": engine.plan_model(f"{name}#edp", defs, shape,
+                                 objective="edp"),
+        "energy": engine.plan_model(f"{name}#en", defs, shape,
+                                    objective="energy"),
+        "capped": engine.plan_model(f"{name}#cap", defs, shape,
+                                    power_cap_w=cap),
+        "fixed": engine.compile_model(f"{name}#fix", defs),
+    }
+    ref = np.asarray(engine.forward(variants["fixed"], xb))
+    for label, plan in variants.items():
+        np.testing.assert_array_equal(
+            np.asarray(engine.forward(plan, xb)), ref, err_msg=label)
+        np.testing.assert_array_equal(
+            np.asarray(engine.forward_jit(plan, xb)), ref, err_msg=label)
+    # the planner record reflects the requested objective/cap
+    assert variants["edp"].planner.objective == "edp"
+    assert variants["capped"].planner.power_cap_w == cap
+
+
+# ---------------------------------------------------------------------------
+# serving surface: fleet power cap + per-component telemetry
+# ---------------------------------------------------------------------------
+
+def _mini_entry():
+    reg = serve.paper_cnn_registry()
+    return reg.get("xception_mini")
+
+
+def test_fleet_power_cap_respected_and_exported():
+    entry = _mini_entry()
+    rng = np.random.default_rng(9)
+    xb = rng.normal(size=(6, *zoo.serving_input_shape(
+        "xception_mini"))).astype(np.float32)
+    instances = [
+        serve.AcceleratorInstance("a0", OperatingPoint("RMAM", 1.0)),
+        serve.AcceleratorInstance("a1", OperatingPoint("RMAM", 1.0)),
+        serve.AcceleratorInstance("a2", OperatingPoint("RMAM", 5.0)),
+    ]
+    p1 = OperatingPoint("RMAM", 1.0).to_accelerator().power_w()
+    uncapped = serve.ShardedDispatcher(instances)
+    ref, _ = uncapped.run(entry.plan, xb)
+    # budget for exactly the two 1G instances: the 5G one must idle
+    capped = serve.ShardedDispatcher(instances,
+                                     fleet_power_cap_w=2.05 * p1)
+    out, runs = capped.run(entry.plan, xb)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert {r.instance.name for r in runs} == {"a0", "a1"}
+    assert capped.counters["power_deferrals"] >= 1
+    health = capped.fleet_health()
+    assert health["power_cap_w"] == pytest.approx(2.05 * p1)
+    assert health["admitted_power_w"] <= health["power_cap_w"]
+    assert health["peak_power_w"] == pytest.approx(
+        sum(health["instances"][n]["power_w"] for n in health["instances"]))
+    assert health["instances"]["a2"]["power_w"] > p1
+    assert health["instances"]["a2"]["frames"] == 0
+    # a budget no instance fits under is rejected at construction
+    with pytest.raises(ValueError, match="fleet_power_cap_w"):
+        serve.ShardedDispatcher(instances, fleet_power_cap_w=p1 * 0.5)
+    uncapped.close()
+    capped.close()
+
+
+def test_telemetry_reports_component_energy_rows():
+    entry = _mini_entry()
+    log = serve.TelemetryLog(points=(OperatingPoint("RMAM", 1.0),))
+    log.record_batch(model="xception_mini", sim_specs=entry.sim_specs,
+                     batch_size=4, t_formed=0.0, exec_s=0.01,
+                     queue_waits_s=[0.0] * 4, latencies_s=[0.01] * 4,
+                     shards=[("a0", 4, OperatingPoint("RMAM", 1.0), 0.01)])
+    s = log.summary()
+    hw = s["hardware"]["RMAM@1G"]
+    comps = hw["energy_components_j"]
+    assert tuple(comps) == LEDGER_COMPONENTS
+    assert sum(comps.values()) == pytest.approx(
+        hw["modeled_energy_per_frame_j"], rel=REL)
+    disp = s["dispatch"]["a0"]
+    assert sum(disp["energy_components_j"].values()) == pytest.approx(
+        disp["modeled_energy_per_frame_j"], rel=REL)
+    # per-layer attribution carries the same ledger rows and stays exact
+    layers = s["layers"]["xception_mini"]
+    assert layers["coverage"] == pytest.approx(1.0, rel=REL)
+    model_comps = layers["energy_components_j"]
+    by_layer_total = sum(
+        row["energy_components_j"][c]
+        for row in layers["by_layer"].values() for c in LEDGER_COMPONENTS)
+    assert sum(model_comps.values()) == pytest.approx(by_layer_total,
+                                                      rel=REL)
+    for row in layers["by_layer"].values():
+        assert math.isclose(sum(row["energy_components_j"].values()),
+                            row["energy_j"], rel_tol=1e-9)

@@ -210,8 +210,12 @@ def test_fleet_health_export_shape():
     d.close()
     h = d.fleet_health()
     assert set(h) == {"instances", "counters", "healthy_fraction",
-                      "suspect_dead"}
+                      "suspect_dead", "power_cap_w", "peak_power_w",
+                      "admitted_power_w"}
     assert h["healthy_fraction"] == pytest.approx(0.5)
+    assert h["power_cap_w"] is None                  # uncapped fleet
+    assert h["peak_power_w"] == pytest.approx(
+        sum(i["power_w"] for i in h["instances"].values()))
     assert h["instances"]["acc1"]["state"] == "quarantined"
     assert h["instances"]["acc0"]["state"] == "healthy"
     assert h["instances"]["acc0"]["frames"] == 3
