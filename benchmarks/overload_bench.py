@@ -1,0 +1,460 @@
+"""Overload harness: open-loop Poisson load against the brownout ladder.
+
+Drives the continuous-batching serving core (CNNServer with priorities,
+deadlines, bounded queues and a BrownoutController) with multi-model
+Poisson arrival traces at 1x / 4x / 10x the measured serving capacity,
+entirely on a *virtual clock*: service time is the modeled hardware time
+of each served batch (core/simulator.simulate at the server's current
+operating point), so every number in the table — goodput, shed/expired/
+downshift counts, per-class p50/p99 — is deterministic across hosts and
+reproducible from the seed.
+
+The brownout ladder under test is the paper's own knob: the nominal
+serving point is the power-lean *fixed* (non-reconfigurable) RMAM comb
+configuration; under sustained overload the controller walks
+stretch_wait -> shed_batch -> downshift, where the downshift retunes the
+comb-switch to the reconfigurable RMAM point (~1.8x the modeled FPS on
+the paper-scale EfficientNetB7 table for ~35% higher peak device power)
+and replans — bitwise-identical outputs, verified per rung in the
+``bitwise_rungs`` scenario.
+
+Scenarios (recorded under ``BENCH_serve.json["overload"]`` and gated via
+``serve_overload.*`` in scripts/check_bench.py):
+
+* ``rate_1x`` / ``rate_4x`` / ``rate_10x`` — open-loop Poisson at the
+  named multiple of capacity; 10x must sustain goodput >= 0.8x capacity
+  with interactive p99 inside its SLO while the batch class absorbs the
+  shedding.
+* ``recovery``      — a 10x overload phase followed by a light tail: the
+  ladder must walk back to rung 0 and shed nothing after recovery.
+* ``bitwise_rungs`` — every rung's operating point (planner replan
+  included) serves bitwise-identical outputs.
+* ``chaos_overload`` — PR-6/PR-8 composition: availability faults AND
+  value-corrupting SDC fire *during* an overload burst on a sharded
+  fleet; every admitted request's output stays bitwise-correct and all
+  refusals are typed.
+
+Usage:  PYTHONPATH=src python -m benchmarks.overload_bench [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from pathlib import Path
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro import serve
+from repro.core import simulator as sim
+from repro.core.operating_point import OperatingPoint
+
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_serve.json"
+
+MODELS = tuple(serve.SERVING_MODELS)
+
+#: nominal rung-0 point: the power-lean fixed comb configuration
+FIXED_POINT = OperatingPoint("RMAM", 1.0, reconfigurable=False)
+#: brownout downshift target: the reconfigurable comb-switch point
+#: (DEFAULT_LADDER's rung 3) — throughput-optimal at higher peak power
+RECONF_POINT = serve.DEFAULT_LADDER[-1].point
+
+INTERACTIVE_DEADLINE_S = 0.5
+INTERACTIVE_FRACTION = 1.0 / 3.0
+MAX_BATCH = 8
+MAX_WAIT_S = 0.02
+MAX_QUEUE = 64
+AGE_PROMOTE_S = 1.0
+
+
+class VirtualClock:
+    def __init__(self) -> None:
+        self.t = 0.0
+
+    def now(self) -> float:
+        return self.t
+
+    def advance(self, dt: float) -> None:
+        self.t += dt
+
+
+def make_service_model(reg: serve.PlanRegistry):
+    """Modeled batch service time at the server's *current* point.
+
+    ``(model, batch, point) -> seconds`` through the paper-scale
+    simulator tables; memoized per full point (fixed vs reconfigurable
+    variants share a label but not a speed).
+    """
+    memo: Dict[Tuple[str, int, OperatingPoint], float] = {}
+
+    def service_s(model: str, batch: int, point: OperatingPoint) -> float:
+        key = (model, batch, point)
+        s = memo.get(key)
+        if s is None:
+            specs = reg.get(model).sim_specs
+            rep = sim.simulate(point.to_accelerator(), specs, batch=batch)
+            s = batch / rep.fps
+            memo[key] = s
+        return s
+
+    return service_s
+
+
+def measured_capacity_fps(service_s, point: OperatingPoint) -> float:
+    """Saturated mixed-model throughput at ``point``: full ``MAX_BATCH``
+    buckets round-robined across the zoo (exactly what a drained queue
+    serves), frames over modeled seconds."""
+    frames = wall = 0.0
+    for model in MODELS:
+        frames += MAX_BATCH
+        wall += service_s(model, MAX_BATCH, point)
+    return frames / wall
+
+
+def make_trace(n_requests: int, rate_per_s: float, seed: int,
+               t0: float = 0.0) -> List[Tuple[float, str, str]]:
+    """Poisson arrivals: (t, model, priority-class) rows from one seed."""
+    rng = np.random.default_rng(seed)
+    t = t0 + np.cumsum(rng.exponential(1.0 / rate_per_s, size=n_requests))
+    rows = []
+    for i in range(n_requests):
+        model = MODELS[int(rng.integers(len(MODELS)))]
+        cls = (serve.INTERACTIVE
+               if rng.uniform() < INTERACTIVE_FRACTION else serve.BATCH)
+        rows.append((float(t[i]), model, cls))
+    return rows
+
+
+def make_server(reg: serve.PlanRegistry, clock: VirtualClock,
+                brownout: Optional[serve.BrownoutController],
+                ) -> serve.CNNServer:
+    return serve.CNNServer(
+        reg, max_batch=MAX_BATCH, max_wait_s=MAX_WAIT_S,
+        hw_points=(FIXED_POINT,), time_fn=clock.now,
+        slo=serve.ServeSLO(deadline_s=INTERACTIVE_DEADLINE_S),
+        continuous=True, max_queue=MAX_QUEUE, age_promote_s=AGE_PROMOTE_S,
+        brownout=brownout, service_model=make_service_model(reg))
+
+
+def replay(srv: serve.CNNServer, clock: VirtualClock,
+           trace: List[Tuple[float, str, str]],
+           inputs: Dict[str, np.ndarray]) -> Dict:
+    """Open-loop replay: arrivals fire at their trace times regardless of
+    server state (the defining property of an overload test); the clock
+    advances by each served batch's modeled service time."""
+    i, n = 0, len(trace)
+    sheds: List[Tuple[float, str, str]] = []   # (t, class, kind)
+    submitted: Dict[int, str] = {}
+    while i < n or srv.pending() > 0:
+        while i < n and trace[i][0] <= clock.t + 1e-12:
+            _, model, cls = trace[i]
+            deadline = (INTERACTIVE_DEADLINE_S
+                        if cls == serve.INTERACTIVE else None)
+            try:
+                rid = srv.submit(model, inputs[model], priority=cls,
+                                 deadline_s=deadline)
+                submitted[rid] = cls
+            except serve.BrownoutShed:
+                sheds.append((clock.t, cls, "brownout"))
+            except serve.QueueOverflow:
+                sheds.append((clock.t, cls, "queue"))
+            except serve.AdmissionRejected:
+                sheds.append((clock.t, cls, "admission"))
+            i += 1
+        served = srv.step(force=(i >= n))
+        if served:
+            clock.advance(srv.telemetry.records[-1].exec_s)
+        elif i < n:
+            clock.t = max(clock.t, trace[i][0])
+        elif srv.pending() == 0:
+            break
+    expired_by_class = {
+        cls: sum(1 for rid, c in submitted.items()
+                 if c == cls and rid in srv.failures)
+        for cls in serve.PRIORITIES}
+    return {"sheds": sheds, "submitted": submitted,
+            "expired_by_class": expired_by_class}
+
+
+def _class_stats(srv: serve.CNNServer, events: Dict) -> Dict[str, Dict]:
+    summary = srv.telemetry.summary()
+    out: Dict[str, Dict] = {}
+    for cls in serve.PRIORITIES:
+        row = dict(summary.get("classes", {}).get(cls, {"requests": 0}))
+        row["shed"] = sum(1 for _, c, _k in events["sheds"] if c == cls)
+        row["expired"] = events["expired_by_class"][cls]
+        out[cls] = row
+    return out
+
+
+def overload_scenario(rate_x: float, n_requests: int, seed: int) -> Dict:
+    reg = serve.paper_cnn_registry(capacity=3, planner=True)
+    clock = VirtualClock()
+    brown = serve.BrownoutController(
+        queue_high=32, queue_low=4, escalate_dwell_s=0.05,
+        recover_cooldown_s=0.5)
+    srv = make_server(reg, clock, brown)
+    service_s = srv.service_model
+    capacity = measured_capacity_fps(service_s, FIXED_POINT)
+    rng = np.random.default_rng(seed + 1)
+    inputs = {m: rng.normal(size=serve.serving_input_shape(m))
+              .astype(np.float32) for m in MODELS}
+    trace = make_trace(n_requests, rate_x * capacity, seed)
+    events = replay(srv, clock, trace, inputs)
+    span = max(clock.t - trace[0][0], 1e-9)
+    served = srv.telemetry.summary().get("requests", 0)
+    goodput = served / span
+    classes = _class_stats(srv, events)
+    inter = classes[serve.INTERACTIVE]
+    batch = classes[serve.BATCH]
+    batch_damage = batch["shed"] + batch["expired"]
+    inter_damage = inter["shed"] + inter["expired"]
+    row = {
+        "rate_x": rate_x,
+        "offered": n_requests,
+        "served": served,
+        "capacity_fps": capacity,
+        "goodput_fps": goodput,
+        "goodput_vs_capacity": goodput / capacity,
+        "interactive_p99_s": inter.get("latency_p99_s"),
+        "interactive_p99_ok": (
+            inter.get("latency_p99_s") is not None
+            and inter["latency_p99_s"] <= 1.5 * INTERACTIVE_DEADLINE_S),
+        "batch_absorbs": (batch_damage >= inter_damage),
+        "classes": classes,
+        "admission": dict(srv.admission),
+        "brownout": brown.report(),
+        "final_point": {"label": srv.serving_point.label,
+                        "reconfigurable":
+                            bool(srv.serving_point.reconfigurable)},
+    }
+    print(f"overload_bench,rate_{rate_x:g}x,served={served}/{n_requests},"
+          f"goodput_vs_capacity={row['goodput_vs_capacity']:.2f},"
+          f"interactive_p99_s={row['interactive_p99_s']},"
+          f"rung={brown.rung.name},downshifts="
+          f"{brown.counters['downshifts']}")
+    return row
+
+
+def recovery_scenario(n_requests: int, seed: int) -> Dict:
+    """10x overload phase, then a light tail: the ladder must climb, then
+    walk back to rung 0 (cooldown-gated) and shed nothing afterwards."""
+    reg = serve.paper_cnn_registry(capacity=3, planner=True)
+    clock = VirtualClock()
+    brown = serve.BrownoutController(
+        queue_high=32, queue_low=4, escalate_dwell_s=0.05,
+        recover_cooldown_s=0.5)
+    srv = make_server(reg, clock, brown)
+    capacity = measured_capacity_fps(srv.service_model, FIXED_POINT)
+    rng = np.random.default_rng(seed + 1)
+    inputs = {m: rng.normal(size=serve.serving_input_shape(m))
+              .astype(np.float32) for m in MODELS}
+    storm = make_trace(n_requests, 10.0 * capacity, seed)
+    tail = make_trace(n_requests, 0.2 * capacity, seed + 7,
+                      t0=storm[-1][0] + 1.0)
+    events = replay(srv, clock, storm + tail, inputs)
+    recoveries = [tr for tr in brown.transitions if tr.dst == 0]
+    t_recovered = recoveries[-1].t if recoveries else None
+    post_sheds = (sum(1 for t, _c, _k in events["sheds"]
+                      if t > t_recovered) if t_recovered is not None
+                  else len(events["sheds"]))
+    row = {
+        "peak_rung": max((tr.dst for tr in brown.transitions), default=0),
+        "final_rung": brown.rung_index,
+        "recovered": brown.rung_index == 0 and t_recovered is not None,
+        "post_recovery_sheds": post_sheds,
+        "transitions": [
+            {"t": tr.t, "src": brown.rungs[tr.src].name,
+             "dst": brown.rungs[tr.dst].name,
+             "direction": tr.direction}
+            for tr in brown.transitions],
+        "brownout": brown.report(),
+    }
+    print(f"overload_bench,recovery,peak_rung={row['peak_rung']},"
+          f"final_rung={row['final_rung']},"
+          f"post_recovery_sheds={post_sheds}")
+    return row
+
+
+def bitwise_rungs_scenario(seed: int) -> Dict:
+    """Every rung's operating point serves bitwise-identical outputs.
+
+    The registry compiles through the planner, so a rung with a distinct
+    point triggers a full replan against its accelerator — the planner's
+    contract (packing geometry moves, quantization never does) is what
+    makes a mid-traffic downshift invisible to requesters.
+    """
+    reg = serve.paper_cnn_registry(capacity=3, planner=True)
+    clock = VirtualClock()
+    srv = make_server(reg, clock, brownout=None)
+    rng = np.random.default_rng(seed)
+    inputs = {m: rng.normal(size=serve.serving_input_shape(m))
+              .astype(np.float32) for m in MODELS}
+    points = []
+    for rung in serve.DEFAULT_LADDER:
+        points.append((rung.name,
+                       rung.point if rung.point is not None else FIXED_POINT))
+    outs_by_rung: Dict[str, Dict[str, np.ndarray]] = {}
+    for name, point in points:
+        srv.set_operating_point(point)
+        rids = {m: srv.submit(m, inputs[m]) for m in MODELS}
+        res = srv.run_until_drained()
+        outs_by_rung[name] = {m: res[r] for m, r in rids.items()}
+        srv.reset()
+    base = outs_by_rung[points[0][0]]
+    bitwise = all((outs_by_rung[name][m] == base[m]).all()
+                  for name, _ in points for m in MODELS)
+    row = {"bitwise": bool(bitwise),
+           "rungs": [name for name, _ in points],
+           "replans": reg.stats()["replans"]}
+    print(f"overload_bench,bitwise_rungs,bitwise={bitwise},"
+          f"replans={row['replans']}")
+    return row
+
+
+def chaos_overload_scenario(n: int, seed: int) -> Dict:
+    """PR-6/PR-8 composition: faults + SDC during an overload burst.
+
+    A 3-instance fleet with ABFT integrity checking takes a burst far
+    past its bounded queue while a crash, a straggler and value-
+    corrupting faults fire.  Everything admitted must come back
+    bitwise-identical to the healthy single-accelerator run; everything
+    refused must be a typed fault.
+    """
+    model = "shufflenet_mini"
+    rng = np.random.default_rng(seed + 1)
+    xs = rng.normal(size=(n, *serve.serving_input_shape(model))
+                    ).astype(np.float32)
+    # healthy oracle
+    reg0 = serve.paper_cnn_registry()
+    srv0 = serve.CNNServer(reg0, max_batch=4)
+    ref_rids = [srv0.submit(model, x) for x in xs]
+    ref_out = srv0.run_until_drained()
+    reference = [ref_out[r] for r in ref_rids]
+
+    injector = serve.FaultInjector(serve.random_schedule(
+        seed, [f"acc{i}" for i in range(3)], n_events=4,
+        kinds=(serve.FaultKind.CRASH, serve.FaultKind.STRAGGLE,
+               serve.FaultKind.ANALOG_NOISE, serve.FaultKind.ADC_BITFLIP)),
+        seed=seed)
+    fleet = serve.ShardedDispatcher(
+        serve.default_fleet(3), fault_injector=injector,
+        deadline_s=2.0, integrity=serve.IntegrityConfig(check_every=1))
+    reg = serve.paper_cnn_registry()
+    brown = serve.BrownoutController(queue_high=max(4, n // 3),
+                                     queue_low=2,
+                                     escalate_dwell_s=0.0,
+                                     recover_cooldown_s=0.1)
+    srv = serve.CNNServer(reg, max_batch=4, max_wait_s=0.0,
+                          dispatcher=fleet, continuous=True,
+                          max_queue=max(2, n // 2), brownout=brown)
+    # open-loop burst, then client-style retry waves: a typed refusal
+    # (queue/brownout shed) or a batch lost to exhausted retries gets
+    # re-submitted next wave.  Fault windows are finite in dispatch
+    # counts, so the waves converge; the contract under test is that
+    # every frame EVENTUALLY completes bitwise-correct and every loss
+    # along the way was a typed ServingFault.
+    rid_to_idx: Dict[int, int] = {}
+    typed_sheds = 0
+    exec_faults = 0
+    outs: Dict[int, np.ndarray] = {}
+    lost = list(range(n))
+    waves = 0
+    while lost and waves < 20:
+        if waves:
+            # client-style backoff: quarantine readmission probes are on
+            # a wall-clock cooldown, so immediate re-drive of a fully
+            # quarantined fleet would only exhaust retries again
+            time.sleep(0.05 * min(waves, 4))
+        waves += 1
+        for i in lost:
+            cls = serve.INTERACTIVE if i % 3 == 0 else serve.BATCH
+            try:
+                rid_to_idx[srv.submit(model, xs[i], priority=cls)] = i
+            except serve.ServingFault:
+                typed_sheds += 1
+        try:
+            outs = srv.run_until_drained()
+        except serve.ServingFault:
+            exec_faults += 1
+            outs = srv.results
+        done_idx = {i for r, i in rid_to_idx.items() if r in outs}
+        lost = [i for i in range(n) if i not in done_idx]
+    completed = {r: i for r, i in rid_to_idx.items() if r in outs}
+    bitwise = (bool(completed)
+               and all((outs[r] == reference[i]).all()
+                       for r, i in completed.items()))
+    fleet.close()
+    trips = {k: v for k, v in injector.trips.items() if v}
+    row = {
+        "offered": n,
+        "completed": len({i for i in completed.values()}),
+        "waves": waves,
+        "lost_after_retries": len(lost),
+        "all_served": not lost,
+        "typed_sheds": typed_sheds,
+        "exec_faults": exec_faults,
+        "bitwise": bool(bitwise),
+        "fault_trips": trips,
+        "sdc_detections": fleet.counters.get("sdc_detections", 0),
+        "brownout": brown.report(),
+    }
+    print(f"overload_bench,chaos_overload,"
+          f"completed={row['completed']}/{n} in {waves} waves,"
+          f"bitwise={row['bitwise']},typed_sheds={typed_sheds},"
+          f"exec_faults={exec_faults},trips={trips},"
+          f"sdc_detections={row['sdc_detections']}")
+    return row
+
+
+def run(smoke: bool = True, seed: int = 0) -> Dict:
+    # the arrival window must span many service intervals or the ladder
+    # has no burst left to act on (one batch is ~0.04 virtual seconds;
+    # 400 requests at 10x capacity arrive over ~0.18s ≈ 4-5 steps of
+    # climb time) — wall cost stays small, the mini-models execute in ms
+    n = 400 if smoke else 1200
+    scenarios = {
+        "rate_1x": overload_scenario(1.0, n, seed),
+        "rate_4x": overload_scenario(4.0, n, seed + 1),
+        "rate_10x": overload_scenario(10.0, n, seed + 2),
+        "recovery": recovery_scenario(max(60, n // 2), seed + 3),
+        "bitwise_rungs": bitwise_rungs_scenario(seed + 4),
+        "chaos_overload": chaos_overload_scenario(12 if smoke else 32,
+                                                  seed + 5),
+    }
+    doc = {}
+    if OUT_PATH.exists():
+        try:
+            doc = json.loads(OUT_PATH.read_text())
+        except json.JSONDecodeError:
+            doc = {}
+    doc["overload"] = {
+        "smoke": smoke, "seed": seed,
+        "ladder": [
+            {"rung": i, "name": r.name,
+             "max_wait_scale": r.max_wait_scale,
+             "admit_batch": r.admit_batch,
+             "point": (None if r.point is None else r.point.label),
+             "reconfigurable": (None if r.point is None
+                                else bool(r.point.reconfigurable))}
+            for i, r in enumerate(serve.DEFAULT_LADDER)],
+        "scenarios": scenarios,
+    }
+    OUT_PATH.write_text(json.dumps(doc, indent=2, default=float) + "\n")
+    print(f"overload_bench,json,{OUT_PATH}")
+    return scenarios
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small overload traces for CI")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    run(smoke=args.smoke, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

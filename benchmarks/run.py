@@ -10,8 +10,8 @@ import sys
 import time
 
 from . import (chaos_bench, fig4_5_scalability, fig6_utilization,
-               fig10_11_fps, kernel_bench, noise_ablation, sdc_bench,
-               serve_bench, table2_vdpe_size, table3_dkv_census,
+               fig10_11_fps, kernel_bench, noise_ablation, overload_bench,
+               sdc_bench, serve_bench, table2_vdpe_size, table3_dkv_census,
                table4_comb_switch, table8_area_proportionate)
 
 BENCHES = {
@@ -27,6 +27,7 @@ BENCHES = {
     "serve_bench": serve_bench.run,     # smoke settings by default
     "chaos_bench": chaos_bench.run,     # fault-injection scenarios
     "sdc_bench": sdc_bench.run,         # silent-data-corruption defense
+    "overload_bench": overload_bench.run,  # brownout ladder under overload
 }
 
 

@@ -159,9 +159,9 @@ def dispatch_sweep(model: str, batch: int = 8, fleet_sizes: Tuple[int, ...] = (1
             f"{k2['paced_speedup']:.2f}x")
     # heterogeneous fleet: per-instance modeled costs via telemetry
     het = serve.ShardedDispatcher([
-        serve.AcceleratorInstance("rmam1g", serve.HardwarePoint("RMAM", 1.0),
+        serve.AcceleratorInstance("rmam1g", serve.OperatingPoint("RMAM", 1.0),
                                   capacity=2.0),
-        serve.AcceleratorInstance("rmam5g", serve.HardwarePoint("RMAM", 5.0),
+        serve.AcceleratorInstance("rmam5g", serve.OperatingPoint("RMAM", 5.0),
                                   capacity=1.0),
     ])
     res, runs = het.run(entry.plan, xb)

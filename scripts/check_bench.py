@@ -3,8 +3,9 @@
 Snapshots the committed ``BENCH_serve.json`` / ``BENCH_kernels.json`` /
 ``BENCH_fps.json``, re-runs the benches that write them —
 ``benchmarks.serve_bench --smoke``, ``benchmarks.chaos_bench --smoke``,
-``benchmarks.sdc_bench --smoke``, ``benchmarks.obs_bench --smoke`` (all
-four merge-write BENCH_serve.json) plus the full ``kernel_bench`` and
+``benchmarks.sdc_bench --smoke``, ``benchmarks.obs_bench --smoke``,
+``benchmarks.overload_bench --smoke`` (all
+five merge-write BENCH_serve.json) plus the full ``kernel_bench`` and
 ``noise_ablation`` (both merge-write BENCH_kernels.json; the smoke
 variant of kernel_bench is assertion-only and writes no JSON) and the
 ``fig10_11_fps`` calibration sweep (writes BENCH_fps.json; budget ~2 min
@@ -31,6 +32,13 @@ chaos invariants:
   implicit-GEMM vs im2col+GEMM per serving-zoo conv layer, and the
   quantized-domain int8 path vs the quantize-then-float oracle per
   serving-zoo layer (conv and FC)
+* serve_overload: brownout-ladder invariants (GATED) — virtual-clock
+  goodput at 1x/4x/10x offered load (deterministic ratios of modeled
+  time, with the 10x point floor-gated at 0.8x capacity), interactive
+  p99 inside its SLO while the batch class absorbs the damage, nonzero
+  ladder downshifts under 10x, rung-by-rung recovery with zero
+  post-recovery sheds, and bitwise-identical outputs across every rung
+  (including the chaos+SDC overload composition)
 * obs: tracing enabled-vs-disabled throughput ratio and per-layer
   hardware-time attribution coverage — gated against fixed ABS_FLOORS
   (the values are already same-run normalized ratios, so a fixed bar is
@@ -92,6 +100,7 @@ SMOKE_COMMANDS = (
     [sys.executable, "-m", "benchmarks.chaos_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.sdc_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.obs_bench", "--smoke"],
+    [sys.executable, "-m", "benchmarks.overload_bench", "--smoke"],
     [sys.executable, "-m", "benchmarks.run", "--only", "kernel_bench"],
     [sys.executable, "-m", "benchmarks.noise_ablation"],
     # energy-ledger calibration sweep (writes BENCH_fps.json)
@@ -106,7 +115,7 @@ SMOKE_COMMANDS = (
 #: harness (bitwise under faults, typed shedding, fleet healing) encoded
 #: as 1.0/0.01 so any violation craters its family geomean.
 GATED_FAMILY_PREFIXES = ("kernels.", "serve_fleet.", "serve_fault.",
-                         "serve_sdc.", "fps_w.")
+                         "serve_sdc.", "serve_overload.", "fps_w.")
 
 #: metrics gated by an absolute floor on the FRESH value instead of a
 #: ratio against the baseline.  The overhead ratio and attribution
@@ -128,6 +137,11 @@ ABS_FLOORS = {
     # the 4-bit/1-Gbps design point under its 1.5-LSB RMS noise budget
     # (floor_lsb / measured rms; 1.0 = exactly at budget)
     "kernels.analog_noise.headroom.b4_br1": 1.0,
+    # overload harness (benchmarks/overload_bench.py): at 10x offered
+    # load the brownout ladder must sustain >= 0.8x the measured nominal
+    # capacity (goodput_vs_capacity is a ratio of modeled virtual-clock
+    # times — deterministic, so the floor is meaningful)
+    "serve_overload.goodput.r10x": 0.8,
     # component-energy ledger (benchmarks/fig10_11_fps.py §energy):
     # per-layer ledger rows must reproduce energy_per_frame_j; the metric
     # is 1 - max relative residual over the full sweep, so the floor IS
@@ -199,6 +213,41 @@ def serve_metrics(doc: Dict) -> Iterator[Tuple[str, float]]:
                1.0 if (slo_row.get("poisoned_shed", 0) > 0
                        and slo_row.get("recovered_shed", 1) == 0
                        and slo_row.get("bitwise")) else 0.01)
+    # gated: brownout-ladder overload invariants
+    # (benchmarks/overload_bench.py) — goodput ratios are deterministic
+    # virtual-clock numbers; booleans encode 1.0/0.01 like the chaos rows
+    over = doc.get("overload", {}).get("scenarios", {})
+    for name, row in sorted(over.items()):
+        if not name.startswith("rate_"):
+            continue
+        rate = name[len("rate_"):]       # "10x"
+        if "goodput_vs_capacity" in row:
+            yield (f"serve_overload.goodput.r{rate}",
+                   float(row["goodput_vs_capacity"]))
+        if "interactive_p99_ok" in row:
+            yield (f"serve_overload.slo.r{rate}",
+                   1.0 if (row["interactive_p99_ok"]
+                           and row.get("batch_absorbs")) else 0.01)
+    r10 = over.get("rate_10x", {})
+    if r10:
+        yield ("serve_overload.ladder.downshifts",
+               1.0 if r10.get("brownout", {}).get("counters", {})
+               .get("downshifts", 0) > 0 else 0.01)
+    rec_over = over.get("recovery", {})
+    if rec_over:
+        yield ("serve_overload.recovery.clean",
+               1.0 if (rec_over.get("recovered")
+                       and rec_over.get("post_recovery_sheds", 1) == 0)
+               else 0.01)
+    br = over.get("bitwise_rungs", {})
+    if "bitwise" in br:
+        yield ("serve_overload.bitwise.rungs",
+               1.0 if br["bitwise"] else 0.01)
+    co = over.get("chaos_overload", {})
+    if "bitwise" in co:
+        yield ("serve_overload.bitwise.chaos",
+               1.0 if (co["bitwise"] and co.get("all_served")
+                       and co.get("typed_sheds", 0) > 0) else 0.01)
     # floor-gated observability metrics (benchmarks/obs_bench.py)
     observ = doc.get("observability", {})
     ov = observ.get("overhead", {})

@@ -7,8 +7,14 @@ realizes that stream:
 
 * registry.py  — multi-model plan registry: compile-once ModelPlans with
                  LRU eviction and per-model weight factories
-* batcher.py   — dynamic batcher: per-model queues, max-batch + max-wait
-                 admission, mixed-model round-robin dispatch
+* batcher.py   — dynamic + continuous batchers: per-model queues,
+                 max-batch + max-wait admission, two priority classes
+                 with starvation-free aging, bounded queues, per-request
+                 deadlines, mixed-model round-robin dispatch
+* brownout.py  — hysteretic overload ladder: stretch the batching window,
+                 shed the batch class, downshift the comb-switch
+                 operating point (planner replan, bitwise) — then recover
+                 rung-by-rung with cooldown
 * server.py    — CNNServer: forms batches, runs them through the batched
                  engine forward (engine/executor.py), splits results;
                  SLO-aware admission control sheds load the surviving
@@ -41,16 +47,20 @@ Closed-loop benchmark: benchmarks/serve_bench.py.  Chaos harness
 (fault-injection scenarios, §fault_tolerance of BENCH_serve.json):
 benchmarks/chaos_bench.py.
 """
-from .batcher import DynamicBatcher, FormedBatch, Request  # noqa: F401
+from .batcher import (BATCH, ContinuousBatcher, DynamicBatcher,  # noqa: F401
+                      FormedBatch, INTERACTIVE, PRIORITIES, Request)
+from .brownout import (BrownoutController, BrownoutRung,  # noqa: F401
+                       DEFAULT_LADDER, RungTransition)
 from .dispatch import (AcceleratorInstance, InstanceHealth,  # noqa: F401
                        IntegrityConfig, ShardedDispatcher, ShardRun,
                        default_fleet)
 from .faults import (AVAILABILITY_KINDS, AdmissionRejected,  # noqa: F401
-                     CorruptionBudgetExceeded, CorruptionSpec,
+                     BrownoutShed, CorruptionBudgetExceeded, CorruptionSpec,
                      DispatchEffects, FaultEvent, FaultInjector, FaultKind,
                      INTEGRITY_KINDS, InstanceCrashed, NoHealthyInstances,
-                     OutputCorrupted, ReconfigStuck, RetriesExhausted,
-                     ServingFault, ShardDeadlineExceeded, random_schedule)
+                     OutputCorrupted, QueueOverflow, ReconfigStuck,
+                     RequestExpired, RetriesExhausted, ServingFault,
+                     ShardDeadlineExceeded, random_schedule)
 from .models import (SERVING_MODELS, serving_defs,  # noqa: F401
                      serving_input_shape, specs_for_defs)
 from .registry import PlanRegistry, ServingModel, paper_cnn_registry  # noqa: F401

@@ -1,4 +1,4 @@
-"""Dynamic batcher: per-model queues, max-batch/max-wait, round-robin.
+"""Dynamic + continuous batchers: per-model queues, priorities, deadlines.
 
 Requests for the same model queue together (a batch must share one DKV
 imprint); a queue becomes dispatchable when it can fill ``max_batch``
@@ -6,6 +6,42 @@ frames or its oldest request has waited ``max_wait_s`` — the standard
 latency/throughput knob of serving batchers.  Across models, dispatch is
 round-robin over dispatchable queues so one hot model cannot starve the
 others' imprints.
+
+Overload semantics (PR 10) layer on top of that base policy:
+
+* two priority classes — ``INTERACTIVE`` requests are latency-sensitive,
+  ``BATCH`` requests are throughput traffic that may wait (and, under
+  brownout, be shed first).  Within a formed batch, promoted requests are
+  selected before un-promoted ones, oldest first.
+* starvation-free aging: a batch-class request older than
+  ``age_promote_s`` is *promoted* — it competes as interactive from then
+  on, so a steady interactive stream cannot starve the batch tier
+  forever.
+* bounded queues: with ``max_queue`` set, a full per-model queue rejects
+  further submits with the typed :class:`~repro.serve.faults.QueueOverflow`
+  — the hard backpressure bound that keeps drain time finite under
+  overload.
+* per-request deadlines: a request carrying an absolute ``deadline`` is
+  *dead* once the clock passes it — the ``expire()`` sweep removes dead
+  requests (the server turns them into typed ``RequestExpired``
+  failures), and no dead request is ever counted toward dispatchability
+  or selected into a batch.
+
+The flush-deadline signal (``oldest_wait_s``) is computed over the *live*
+requests only — never ``q[0]`` blindly.  An expired-but-unswept head must
+not drive SLO flushes or max-wait dispatch: the queue head can be dead
+while younger live requests behind it are nowhere near their budget, and
+a head-only peek would either force-flush forever on a corpse or batch it
+into a dispatch (regression-tested with a virtual clock in
+tests/test_overload.py).
+
+:class:`ContinuousBatcher` keeps the same queues but is *work-conserving*
+for the interactive class: any live promoted request makes its queue
+dispatchable immediately — no max-wait stall — while batch-class traffic
+still aggregates toward full power-of-two buckets.  Formed batches of any
+size reuse ``engine/pipeline.py``'s per-bucket compiled dispatches
+(``batch_bucket`` rounds up to the next power of two), so continuous
+ragged fills never pay a fresh XLA compile after warmup.
 
 Fairness is *deterministic by construction*: the rotation order is the
 explicit ``_rr`` list (models in first-submission order), never an
@@ -20,6 +56,15 @@ import dataclasses
 from collections import deque
 from typing import Any, Deque, Dict, List, Optional
 
+from .faults import QueueOverflow
+
+#: latency-sensitive traffic: admission defends the SLO deadline, the
+#: continuous batcher dispatches it work-conservingly
+INTERACTIVE = "interactive"
+#: throughput traffic: waits for batch fill, shed first under brownout
+BATCH = "batch"
+PRIORITIES = (INTERACTIVE, BATCH)
+
 
 @dataclasses.dataclass(frozen=True)
 class Request:
@@ -27,6 +72,9 @@ class Request:
     model: str
     x: Any                  # (H, W, D) input image
     t_submit: float
+    priority: str = INTERACTIVE
+    #: absolute expiry on the server clock (None = never expires)
+    deadline: Optional[float] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,13 +90,25 @@ class FormedBatch:
     def queue_waits(self) -> List[float]:
         return [self.t_formed - r.t_submit for r in self.requests]
 
+    def priorities(self) -> List[str]:
+        return [r.priority for r in self.requests]
+
 
 class DynamicBatcher:
-    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.005):
+    def __init__(self, max_batch: int = 8, max_wait_s: float = 0.005,
+                 max_queue: Optional[int] = None,
+                 age_promote_s: Optional[float] = None):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if max_queue is not None and max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got {max_queue}")
+        if age_promote_s is not None and age_promote_s < 0:
+            raise ValueError(
+                f"age_promote_s must be >= 0, got {age_promote_s}")
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.max_queue = max_queue
+        self.age_promote_s = age_promote_s
         self._queues: Dict[str, Deque[Request]] = {}
         self._rr: List[str] = []     # model rotation, first-submission order
         self._rr_next = 0
@@ -58,13 +118,25 @@ class DynamicBatcher:
         #: and a batches-formed counter current
         self.metrics = None
 
-    def submit(self, model: str, x: Any, now: float) -> int:
-        rid = self._next_rid
-        self._next_rid += 1
+    def submit(self, model: str, x: Any, now: float,
+               priority: str = INTERACTIVE,
+               deadline_s: Optional[float] = None) -> int:
+        if priority not in PRIORITIES:
+            raise ValueError(
+                f"priority must be one of {PRIORITIES}, got {priority!r}")
+        if deadline_s is not None and deadline_s <= 0:
+            raise ValueError(f"deadline_s must be > 0, got {deadline_s}")
         if model not in self._queues:
             self._queues[model] = deque()
             self._rr.append(model)
-        self._queues[model].append(Request(rid, model, x, now))
+        q = self._queues[model]
+        if self.max_queue is not None and len(q) >= self.max_queue:
+            raise QueueOverflow(model=model, depth=len(q),
+                                max_queue=self.max_queue)
+        rid = self._next_rid
+        self._next_rid += 1
+        q.append(Request(rid, model, x, now, priority,
+                         None if deadline_s is None else now + deadline_s))
         if self.metrics is not None:
             self.metrics.gauge("serve_queue_depth",
                                "queued requests").set(self.pending())
@@ -80,34 +152,101 @@ class DynamicBatcher:
             return len(self._queues.get(model, ()))
         return sum(len(self._queues[m]) for m in self._rr)
 
+    def pending_promoted(self, now: float) -> int:
+        """Live requests with interactive precedence (class or aging).
+
+        The backlog an arriving *interactive* request actually queues
+        behind: selection orders promoted work first, so unpromoted
+        batch-class requests behind it do not delay it.  This is the
+        depth the server's class-aware admission estimate uses.
+        """
+        return sum(1 for m in self._rr for r in self._queues[m]
+                   if self._live(r, now) and self._promoted(r, now))
+
+    @staticmethod
+    def _live(r: Request, now: float) -> bool:
+        return r.deadline is None or now < r.deadline
+
+    def _promoted(self, r: Request, now: float) -> bool:
+        """Interactive precedence: its class, or aged past promotion."""
+        return (r.priority == INTERACTIVE
+                or (self.age_promote_s is not None
+                    and now - r.t_submit >= self.age_promote_s))
+
+    def expire(self, now: float) -> List[Request]:
+        """Sweep dead requests (deadline passed) out of every queue.
+
+        Returns the expired requests in rotation-then-submission order so
+        the server can fail each with a typed ``RequestExpired``.  The
+        sweep — not a head peek — is what keeps the flush-deadline and
+        dispatchability signals honest after cancellations.
+        """
+        expired: List[Request] = []
+        for m in self._rr:
+            q = self._queues[m]
+            if not q:
+                continue
+            keep: Deque[Request] = deque()
+            for r in q:
+                (keep if self._live(r, now) else expired).append(r)
+            if len(keep) != len(q):
+                self._queues[m] = keep
+        if expired and self.metrics is not None:
+            self.metrics.gauge("serve_queue_depth",
+                               "queued requests").set(self.pending())
+        return expired
+
     def oldest_wait_s(self, now: float,
                       model: Optional[str] = None) -> Optional[float]:
-        """How long the oldest queued request has waited (None if empty).
+        """How long the oldest *live* queued request has waited.
 
         The SLO flush signal: a server defending a completion deadline
-        dispatches a queue early once its head request has burned a
-        fraction of the budget waiting for batch-mates.
+        dispatches a queue early once its oldest request has burned a
+        fraction of the budget waiting for batch-mates.  Recomputed over
+        the live requests — an expired head (cancelled work) must not
+        keep forcing flushes, and ``None`` means nothing live is queued.
         """
-        heads = [self._queues[m][0].t_submit
-                 for m in ([model] if model is not None else self._rr)
-                 if self._queues.get(m)]
-        if not heads:
+        oldest: Optional[float] = None
+        for m in ([model] if model is not None else self._rr):
+            for r in self._queues.get(m, ()):
+                if self._live(r, now) and (oldest is None
+                                           or r.t_submit < oldest):
+                    oldest = r.t_submit
+        if oldest is None:
             return None
-        return now - min(heads)
+        return now - oldest
 
     def _dispatchable(self, model: str, now: float, force: bool) -> bool:
-        q = self._queues[model]
-        if not q:
+        live = [r for r in self._queues[model] if self._live(r, now)]
+        if not live:
             return False
-        return (force or len(q) >= self.max_batch
-                or now - q[0].t_submit >= self.max_wait_s)
+        if force or len(live) >= self.max_batch:
+            return True
+        oldest = min(r.t_submit for r in live)
+        return now - oldest >= self.max_wait_s
+
+    def _select(self, model: str, now: float) -> tuple:
+        """Pick (up to max_batch) live requests: promoted first, oldest
+        first — and rebuild the queue without them (order preserved)."""
+        q = self._queues[model]
+        live = [r for r in q if self._live(r, now)]
+        ranked = sorted(live, key=lambda r: (0 if self._promoted(r, now)
+                                             else 1, r.t_submit, r.rid))
+        take = ranked[:min(self.max_batch, len(ranked))]
+        taken = {r.rid for r in take}
+        self._queues[model] = deque(r for r in q if r.rid not in taken)
+        # stack order within the batch is submission order — deterministic
+        # and independent of promotion timing
+        return tuple(sorted(take, key=lambda r: (r.t_submit, r.rid)))
 
     def pop_batch(self, now: float, force: bool = False,
                   ) -> Optional[FormedBatch]:
         """Form the next batch, or None if no queue is dispatchable.
 
-        ``force`` admits any non-empty queue regardless of fill/wait —
-        the drain path at end of trace (ragged final batches).
+        ``force`` admits any queue with live requests regardless of
+        fill/wait — the drain path at end of trace (ragged final
+        batches).  Dead (expired) requests are never selected; sweep them
+        with ``expire()`` to fail them explicitly.
 
         Candidates are scanned in rotation order starting after the last
         dispatched model (``_rr``/``_rr_next`` — never the queue dict's
@@ -119,9 +258,7 @@ class DynamicBatcher:
             model = self._rr[(self._rr_next + i) % n]
             if not self._dispatchable(model, now, force):
                 continue
-            q = self._queues[model]
-            reqs = tuple(q.popleft()
-                         for _ in range(min(self.max_batch, len(q))))
+            reqs = self._select(model, now)
             self._rr_next = (self._rr_next + i + 1) % n
             if self.metrics is not None:
                 self.metrics.counter("serve_batches_formed_total",
@@ -130,3 +267,28 @@ class DynamicBatcher:
                                    "queued requests").set(self.pending())
             return FormedBatch(model=model, requests=reqs, t_formed=now)
         return None
+
+
+class ContinuousBatcher(DynamicBatcher):
+    """Work-conserving for the interactive class, aggregating for batch.
+
+    A queue holding any live *promoted* request (interactive class, or
+    batch-class aged past ``age_promote_s``) is dispatchable immediately
+    — interactive work never stalls behind the max-wait timer waiting for
+    batch-mates.  Batch-class-only queues keep the base policy (fill
+    ``max_batch`` or wait ``max_wait_s``), aggregating toward full
+    power-of-two buckets so throughput traffic still amortizes its
+    dispatches.  Whatever ragged size forms, the pipeline's bucketed
+    compile cache serves it without a new trace.
+    """
+
+    def _dispatchable(self, model: str, now: float, force: bool) -> bool:
+        live = [r for r in self._queues[model] if self._live(r, now)]
+        if not live:
+            return False
+        if force or len(live) >= self.max_batch:
+            return True
+        if any(self._promoted(r, now) for r in live):
+            return True
+        oldest = min(r.t_submit for r in live)
+        return now - oldest >= self.max_wait_s

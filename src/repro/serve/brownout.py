@@ -1,0 +1,236 @@
+"""Brownout ladder: hysteretic, rung-by-rung overload degradation.
+
+An overloaded photonic server has better moves than dropping requests.
+The paper's core knob — runtime reconfigurability of the MRR comb-switch
+operating point — trades energy/SNR headroom for throughput (HEANA,
+arXiv 2402.03247; the MRR-GEMM comparison of arXiv 2402.03149), so the
+ladder degrades in order of reversibility and cost:
+
+    rung 0  nominal       — base policy, base operating point
+    rung 1  stretch_wait  — larger batching window (max_wait x scale):
+                            fuller power-of-two buckets, better
+                            amortization, slightly worse queue waits
+    rung 2  shed_batch    — stop admitting batch-class work (typed
+                            ``BrownoutShed``); interactive keeps its SLO
+    rung 3  downshift     — retune the comb-switch to the
+                            throughput-optimal reconfigurable point and
+                            replan (planner replan is bitwise: packing
+                            geometry changes, quantization never does) —
+                            more FPS for more peak power
+
+The controller is *hysteretic*, never oscillating: escalation requires
+sustained pressure past the high band for ``escalate_dwell_s`` since the
+last transition; recovery requires the load signal under the (strictly
+lower) low band for ``recover_cooldown_s``.  Both timers gate on the last
+transition of either direction, so an escalate→recover flip is separated
+by at least ``recover_cooldown_s`` and a recover→escalate flip by at
+least ``escalate_dwell_s`` — the property tests/test_overload.py drives
+with a sinusoidal load trace.
+
+Pressure is the max of two normalized signals: queue depth over
+``queue_high``, and estimated completion time over the SLO deadline
+(scaled by ``latency_high``).  The PR-9 power telemetry composes as a
+*guard*: with ``power_cap_w`` set, an escalation into a rung whose
+operating point's modeled device power exceeds the cap is blocked (and
+counted) — a fleet at its power budget sheds instead of downshifting.
+
+The controller is a pure function of its observations — ``observe(now,
+...)`` takes the clock explicitly — so virtual-clock harnesses replay it
+deterministically.  Applying a rung to a live server (max-wait stretch,
+admission gate, operating-point switch + replan, trace instants, metric
+counters) is the server's job: ``CNNServer(brownout=...)`` calls
+``observe`` each step and applies transitions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..core.operating_point import OperatingPoint
+
+
+@dataclasses.dataclass(frozen=True)
+class BrownoutRung:
+    """One degradation level: batching stretch, admission gate, point.
+
+    ``point=None`` means "the server's base operating point"; a set point
+    retunes the device (and replans, when the registry compiles through
+    the planner) while outputs stay bitwise-identical.
+    """
+    name: str
+    max_wait_scale: float = 1.0
+    admit_batch: bool = True
+    point: Optional[OperatingPoint] = None
+
+    def __post_init__(self) -> None:
+        if self.max_wait_scale < 1.0:
+            raise ValueError(
+                f"max_wait_scale must be >= 1, got {self.max_wait_scale}")
+
+
+#: The default ladder.  The downshift target is the paper's
+#: reconfigurability knob itself: the comb-switch-reconfigurable RMAM
+#: point is the throughput-optimal configuration (~1.8x the modeled FPS
+#: of the fixed point on the paper-scale EfficientNetB7 table) at ~35%
+#: higher peak device power — capacity bought with watts, not correctness.
+DEFAULT_LADDER: Tuple[BrownoutRung, ...] = (
+    BrownoutRung("nominal"),
+    BrownoutRung("stretch_wait", max_wait_scale=4.0),
+    BrownoutRung("shed_batch", max_wait_scale=4.0, admit_batch=False),
+    BrownoutRung("downshift", max_wait_scale=4.0, admit_batch=False,
+                 point=OperatingPoint("RMAM", 1.0, reconfigurable=True)),
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class RungTransition:
+    """One applied ladder move (kept in ``transitions``, newest last)."""
+    t: float
+    src: int
+    dst: int
+    pressure: float
+    power_w: Optional[float] = None
+
+    @property
+    def direction(self) -> str:
+        return "escalate" if self.dst > self.src else "recover"
+
+
+class BrownoutController:
+    def __init__(self, rungs: Sequence[BrownoutRung] = DEFAULT_LADDER, *,
+                 queue_high: int = 32, queue_low: int = 4,
+                 latency_high: float = 1.0, latency_low: float = 0.25,
+                 escalate_dwell_s: float = 0.05,
+                 recover_cooldown_s: float = 0.5,
+                 power_cap_w: Optional[float] = None,
+                 max_transitions: int = 4096):
+        rungs = tuple(rungs)
+        if not rungs:
+            raise ValueError("need at least one rung")
+        if not 0 <= queue_low < queue_high:
+            raise ValueError(
+                f"need 0 <= queue_low < queue_high for hysteresis, got "
+                f"{queue_low}/{queue_high}")
+        if not 0 < latency_low < latency_high:
+            raise ValueError(
+                f"need 0 < latency_low < latency_high for hysteresis, got "
+                f"{latency_low}/{latency_high}")
+        if escalate_dwell_s < 0 or recover_cooldown_s < 0:
+            raise ValueError("dwell/cooldown must be >= 0")
+        self.rungs = rungs
+        self.queue_high = queue_high
+        self.queue_low = queue_low
+        self.latency_high = latency_high
+        self.latency_low = latency_low
+        self.escalate_dwell_s = escalate_dwell_s
+        self.recover_cooldown_s = recover_cooldown_s
+        self.power_cap_w = power_cap_w
+        self.max_transitions = max_transitions
+        self.rung_index = 0
+        self._last_change_t: Optional[float] = None
+        self.counters: Dict[str, int] = {
+            "escalations": 0, "deescalations": 0, "downshifts": 0,
+            "power_blocked": 0}
+        #: applied transitions, newest last (bounded at max_transitions)
+        self.transitions: List[RungTransition] = []
+        # modeled peak device power per distinct rung point (memo: the
+        # power guard must not rebuild an accelerator every observation;
+        # keyed by the full point — fixed vs reconfigurable variants of
+        # one family/bit-rate share a label but not a power draw)
+        self._power_memo: Dict[OperatingPoint, float] = {}
+
+    @property
+    def rung(self) -> BrownoutRung:
+        return self.rungs[self.rung_index]
+
+    def pressure(self, depth: int,
+                 est_completion_s: Optional[float] = None,
+                 deadline_s: Optional[float] = None) -> float:
+        """Normalized load: >= 1.0 means "past the high band"."""
+        p = depth / self.queue_high
+        if est_completion_s is not None and deadline_s:
+            p = max(p, (est_completion_s / deadline_s) / self.latency_high)
+        return p
+
+    def _recovered(self, depth: int, est_completion_s: Optional[float],
+                   deadline_s: Optional[float]) -> bool:
+        """Both signals under the low band (strictly below the high one)."""
+        if depth > self.queue_low:
+            return False
+        if (est_completion_s is not None and deadline_s
+                and est_completion_s / deadline_s > self.latency_low):
+            return False
+        return True
+
+    def _rung_power_w(self, rung: BrownoutRung) -> Optional[float]:
+        if rung.point is None:
+            return None
+        w = self._power_memo.get(rung.point)
+        if w is None:
+            w = rung.point.to_accelerator().power_w()
+            self._power_memo[rung.point] = w
+        return w
+
+    def _blocked_by_power(self, rung: BrownoutRung) -> bool:
+        if self.power_cap_w is None:
+            return False
+        w = self._rung_power_w(rung)
+        return w is not None and w > self.power_cap_w
+
+    def _move(self, now: float, dst: int, pressure: float,
+              power_w: Optional[float]) -> RungTransition:
+        tr = RungTransition(t=now, src=self.rung_index, dst=dst,
+                            pressure=pressure, power_w=power_w)
+        if tr.dst > tr.src:
+            self.counters["escalations"] += 1
+            if (self.rungs[dst].point is not None
+                    and self.rungs[dst].point != self.rungs[tr.src].point):
+                self.counters["downshifts"] += 1
+        else:
+            self.counters["deescalations"] += 1
+        self.rung_index = dst
+        self._last_change_t = now
+        self.transitions.append(tr)
+        if len(self.transitions) > self.max_transitions:
+            del self.transitions[:len(self.transitions)
+                                 - self.max_transitions]
+        return tr
+
+    def observe(self, now: float, depth: int,
+                est_completion_s: Optional[float] = None,
+                deadline_s: Optional[float] = None,
+                power_w: Optional[float] = None,
+                ) -> Optional[RungTransition]:
+        """Feed one observation; returns the transition applied (or None).
+
+        At most one rung of movement per observation — the ladder is
+        climbed and descended step by step, each step separated by the
+        dwell/cooldown gates.
+        """
+        p = self.pressure(depth, est_completion_s, deadline_s)
+        since = (None if self._last_change_t is None
+                 else now - self._last_change_t)
+        if p >= 1.0 and self.rung_index < len(self.rungs) - 1:
+            if since is not None and since < self.escalate_dwell_s:
+                return None
+            target = self.rungs[self.rung_index + 1]
+            if self._blocked_by_power(target):
+                self.counters["power_blocked"] += 1
+                return None
+            return self._move(now, self.rung_index + 1, p, power_w)
+        if (self.rung_index > 0
+                and self._recovered(depth, est_completion_s, deadline_s)):
+            if since is not None and since < self.recover_cooldown_s:
+                return None
+            return self._move(now, self.rung_index - 1, p, power_w)
+        return None
+
+    def report(self) -> Dict:
+        """Snapshot for telemetry summaries (counters copied, not live)."""
+        return {
+            "rung": self.rung_index,
+            "rung_name": self.rung.name,
+            "ladder": [r.name for r in self.rungs],
+            "counters": dict(self.counters),
+            "transitions": len(self.transitions),
+        }

@@ -722,7 +722,21 @@ class ShardedDispatcher:
         return jnp.concatenate(outs, axis=0), runs
 
     def close(self) -> None:
-        """Shut down the shard thread pool (idempotent)."""
+        """Shut down the shard thread pool (idempotent).
+
+        The pool is created lazily on first sharded dispatch and
+        recreated the same way after a close, so ``close`` is safe at any
+        point — including mid-lifetime (``CNNServer.reset``): the next
+        ``run`` simply pays pool startup again.
+        """
         if self._pool is not None:
             self._pool.shutdown(wait=False, cancel_futures=True)
             self._pool = None
+
+    def __enter__(self) -> "ShardedDispatcher":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        """Deterministic pool shutdown on scope exit (no pool leaks)."""
+        self.close()
+        return False

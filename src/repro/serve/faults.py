@@ -171,6 +171,62 @@ class AdmissionRejected(ServingFault):
         self.healthy_fraction = healthy_fraction
 
 
+class RequestExpired(ServingFault):
+    """A queued request's per-request deadline passed before dispatch.
+
+    The continuous batcher's cancellation path: ``submit(deadline_s=...)``
+    arms an absolute expiry on the server clock, and the server's expiry
+    sweep (start of every ``step``) removes dead requests from the queue
+    and records this fault in ``CNNServer.failures`` instead of ever
+    serving a result the requester has stopped waiting for.
+    """
+
+    def __init__(self, model: str, rid: int, deadline_s: float,
+                 waited_s: float):
+        super().__init__(
+            f"request {rid} for {model!r} expired in queue: waited "
+            f"{waited_s * 1e3:.0f}ms past its "
+            f"{deadline_s * 1e3:.0f}ms deadline")
+        self.model = model
+        self.rid = rid
+        self.deadline_s = deadline_s
+        self.waited_s = waited_s
+
+
+class QueueOverflow(ServingFault):
+    """A bounded per-model queue was full; the request was never queued.
+
+    Backpressure for the batch class: unlike ``AdmissionRejected`` (an
+    SLO estimate) this is a hard structural bound — under overload the
+    queue bound is what keeps memory and drain time finite.
+    """
+
+    def __init__(self, model: str, depth: int, max_queue: int):
+        super().__init__(
+            f"request for {model!r} rejected: queue full "
+            f"({depth}/{max_queue})")
+        self.model = model
+        self.depth = depth
+        self.max_queue = max_queue
+
+
+class BrownoutShed(ServingFault):
+    """The brownout ladder is shedding this priority class at the door.
+
+    Raised at ``submit`` time while the controller sits on a rung with
+    ``admit_batch=False``: batch-class work is refused so the interactive
+    class keeps its SLO — the explicit, typed form of "degrade the batch
+    tier first".
+    """
+
+    def __init__(self, model: str, rung: str):
+        super().__init__(
+            f"batch-class request for {model!r} shed by brownout rung "
+            f"{rung!r}")
+        self.model = model
+        self.rung = rung
+
+
 class CorruptionBudgetExceeded(ServingFault):
     """Integrity SLO shedding: the corrupted-frame rate blew its budget.
 

@@ -66,9 +66,14 @@ class PlanRegistry:
         self.capacity = capacity
         self.point = point
         self.planner = planner
+        #: current accelerator operating point the planner scores against
+        #: (None = the planner's default device); set_accelerator() moves
+        #: it at runtime (brownout downshift) and triggers a replan
+        self.accelerator = None
         self._registered: Dict[str, _Registration] = {}
         self._loaded: "OrderedDict[str, ServingModel]" = OrderedDict()
-        self._stats = {"hits": 0, "misses": 0, "evictions": 0}
+        self._stats = {"hits": 0, "misses": 0, "evictions": 0,
+                       "replans": 0}
 
     def register(self, name: str, factory: Callable[[], List[LayerDef]],
                  input_shape: Tuple[int, int, int],
@@ -132,10 +137,39 @@ class PlanRegistry:
                 f"different model than its first load; factories must be "
                 f"deterministic per model key")
         if self.planner:
-            plan = plan_model(name, defs, reg.input_shape, self.point)
+            acc = (None if self.accelerator is None
+                   else self.accelerator.to_accelerator())
+            plan = plan_model(name, defs, reg.input_shape, self.point,
+                              acc=acc)
         else:
             plan = compile_model(name, defs, self.point)
         return defs, plan
+
+    def set_accelerator(self, point) -> None:
+        """Retune the registry's device (``core.OperatingPoint``) and
+        replan.
+
+        With ``planner=True`` every resident plan is dropped (pipelines
+        and point-search memos evicted with it) so the next ``get``
+        recompiles through the planner scored against the new
+        accelerator — ``cached_search`` keys include the accelerator, so
+        a downshift can never hit a stale search memo, and by the
+        planner's contract the replanned outputs are bitwise-identical
+        (packing geometry moves, quantization never does).  Without the
+        planner the engine plan does not depend on the device, so the
+        point is recorded (telemetry/pacing consumers read it) and the
+        resident plans stay.
+        """
+        if point == self.accelerator:
+            return
+        self.accelerator = point
+        if not self.planner:
+            return
+        self._stats["replans"] += 1
+        while self._loaded:
+            evicted_name, evicted = self._loaded.popitem(last=False)
+            pipeline_evict(evicted.plan)
+            search_cache_evict(evicted_name)
 
     def weight_report(self, name: str) -> Dict[str, float]:
         """One model's imprint footprint: packed int8 vs f32-equivalent.

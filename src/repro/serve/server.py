@@ -39,9 +39,13 @@ import numpy as np
 
 from .. import engine
 from ..obs.tracer import NOOP_TRACER, Tracer
-from .batcher import DynamicBatcher
+from .batcher import (BATCH, ContinuousBatcher, DynamicBatcher,
+                      INTERACTIVE)
+from .brownout import BrownoutController, RungTransition
 from .dispatch import ShardedDispatcher
-from .faults import AdmissionRejected, CorruptionBudgetExceeded
+from .faults import (AdmissionRejected, BrownoutShed,
+                     CorruptionBudgetExceeded, QueueOverflow,
+                     RequestExpired, ServingFault)
 from .registry import PlanRegistry
 from ..core.operating_point import OperatingPoint
 from .telemetry import DEFAULT_HW_POINTS, TelemetryLog
@@ -104,10 +108,19 @@ class CNNServer:
                  time_fn: Callable[[], float] = time.monotonic,
                  dispatcher: Optional[ShardedDispatcher] = None,
                  slo: Optional[ServeSLO] = None,
-                 tracer: Optional[Tracer] = None):
+                 tracer: Optional[Tracer] = None,
+                 continuous: bool = False,
+                 max_queue: Optional[int] = None,
+                 age_promote_s: Optional[float] = None,
+                 brownout: Optional[BrownoutController] = None,
+                 service_model: Optional[Callable[[str, int, OperatingPoint],
+                                                  float]] = None):
         self.registry = registry
-        self.batcher = DynamicBatcher(max_batch=max_batch,
-                                      max_wait_s=max_wait_s)
+        batcher_cls = ContinuousBatcher if continuous else DynamicBatcher
+        self.batcher = batcher_cls(max_batch=max_batch,
+                                   max_wait_s=max_wait_s,
+                                   max_queue=max_queue,
+                                   age_promote_s=age_promote_s)
         self.telemetry = TelemetryLog(hw_points)
         self.interpret = interpret
         self.dispatcher = dispatcher
@@ -125,13 +138,33 @@ class CNNServer:
         if dispatcher is not None and tracer is not None:
             dispatcher.tracer = self.tracer
         self._time = time_fn
+        #: modeled service time, ``(model, batch_size, serving_point) ->
+        #: seconds``; when set, the service-rate EMA, request latencies
+        #: and telemetry exec_s all run in *modeled* time on the server's
+        #: injectable clock — the virtual-clock determinism the overload
+        #: harness replays on (wall time otherwise)
+        self.service_model = service_model
+        #: brownout ladder controller; observed at the top of every step,
+        #: applied transitions stretch the batching window, gate
+        #: batch-class admission, and downshift the operating point
+        self.brownout = brownout
+        self._base_max_wait_s = max_wait_s
+        #: the operating point the device is currently retuned to; starts
+        #: at the primary telemetry point and moves with brownout rungs
+        #: (``set_operating_point``)
+        self.serving_point: OperatingPoint = self.telemetry.points[0]
+        self._base_point: OperatingPoint = self.serving_point
         self.results: Dict[int, np.ndarray] = {}
+        #: typed per-request failures (rid -> ServingFault): expired
+        #: requests land here instead of ``results``
+        self.failures: Dict[int, ServingFault] = {}
         #: pipeline trace+compile stalls paid inside step() so far — one
         #: per (plan, batch-size bucket), like the registry's plan misses
         self.pipeline_compiles = 0
         #: admission-control state: shed/admitted counters + the EMA of
         #: measured per-frame service time the estimator runs on
-        self.admission = {"admitted": 0, "shed": 0, "integrity_shed": 0}
+        self.admission = {"admitted": 0, "shed": 0, "integrity_shed": 0,
+                          "queue_shed": 0, "brownout_shed": 0, "expired": 0}
         self._frame_s_ema: Optional[float] = None
         self._observed_batches = 0
         #: EMA of detected-corrupted frames per served frame — the
@@ -141,7 +174,7 @@ class CNNServer:
         #: after the corrupting instance is quarantined
         self._corruption_ema = 0.0
         self._corruption_t: Optional[float] = None
-        if dispatcher is not None or slo is not None:
+        if dispatcher is not None or slo is not None or brownout is not None:
             self.telemetry.attach_fleet(self._fleet_report)
 
     # -- fleet / admission reporting -------------------------------------
@@ -159,6 +192,8 @@ class CNNServer:
             "budget": (self.slo.max_corrupted_frame_rate
                        if self.slo else None),
         }
+        if self.brownout is not None:
+            out["brownout"] = self.brownout.report()
         return out
 
     def _now(self, now: Optional[float]) -> float:
@@ -180,7 +215,9 @@ class CNNServer:
             return 1.0
         return self.dispatcher.healthy_capacity_fraction()
 
-    def estimated_completion_s(self) -> Optional[float]:
+    def estimated_completion_s(self, priority: Optional[str] = None,
+                               now: Optional[float] = None,
+                               ) -> Optional[float]:
         """Expected submit-to-result time for a request arriving now.
 
         Queue depth ahead (plus this request) times the measured
@@ -188,6 +225,12 @@ class CNNServer:
         — a 2-of-3 instance loss means a third of the throughput, three
         times the drain time.  ``None`` until enough batches have been
         observed to trust the rate.
+
+        The depth is class-aware: an *interactive* arrival queues behind
+        only the promoted backlog (selection orders promoted work first),
+        so a deep batch-class backlog must not shed interactive traffic
+        the priority system would in fact serve in time.  With
+        ``priority`` omitted (or batch-class), the full depth counts.
         """
         if (self._frame_s_ema is None or self.slo is None
                 or self._observed_batches < self.slo.min_observations):
@@ -195,11 +238,16 @@ class CNNServer:
         frac = self._healthy_fraction()
         if frac <= 0:
             return float("inf")
-        frames_ahead = self.batcher.pending() + 1
+        if priority == INTERACTIVE:
+            frames_ahead = self.batcher.pending_promoted(self._now(now)) + 1
+        else:
+            frames_ahead = self.batcher.pending() + 1
         return frames_ahead * self._frame_s_ema / frac
 
     def submit(self, model: str, x: Any,
-               now: Optional[float] = None) -> int:
+               now: Optional[float] = None,
+               priority: str = INTERACTIVE,
+               deadline_s: Optional[float] = None) -> int:
         """Queue one image for ``model``; returns the request id.
 
         Shape is validated here, at the door: a malformed image must not
@@ -210,6 +258,16 @@ class CNNServer:
         control runs here as well: a request the surviving fleet cannot
         serve inside the deadline is shed with ``AdmissionRejected`` and
         nothing is queued.
+
+        ``priority`` picks the class: interactive requests get
+        completion-estimate admission control against ``deadline_s`` (or
+        the SLO deadline); batch-class requests skip the estimate check
+        unless they carry an explicit ``deadline_s`` — their backpressure
+        is the bounded queue (typed ``QueueOverflow``) and, under
+        brownout, door shedding (typed ``BrownoutShed``).  A request with
+        ``deadline_s`` that is still queued when the deadline passes is
+        cancelled by the next step's expiry sweep (typed
+        ``RequestExpired`` in ``failures``).
         """
         if model not in self.registry.registered:
             raise KeyError(f"model {model!r} not registered "
@@ -220,6 +278,17 @@ class CNNServer:
             raise ValueError(f"model {model!r} expects input shape "
                              f"{expect}, got {got}")
         now = self._now(now)
+        if (self.brownout is not None and priority == BATCH
+                and not self.brownout.rung.admit_batch):
+            self.admission["brownout_shed"] += 1
+            rung = self.brownout.rung.name
+            self.tracer.instant("admission.brownout_shed", cat="admission",
+                                model=model, rung=rung)
+            self.telemetry.metrics.counter(
+                "serve_brownout_sheds_total",
+                "batch-class requests shed by the brownout ladder",
+                model=model).inc()
+            raise BrownoutShed(model=model, rung=rung)
         if self.slo is not None and self.slo.max_corrupted_frame_rate:
             self._decay_corruption(now)
         if (self.slo is not None
@@ -233,18 +302,32 @@ class CNNServer:
             raise CorruptionBudgetExceeded(
                 model=model, rate=self._corruption_ema,
                 budget=self.slo.max_corrupted_frame_rate)
-        if self.slo is not None:
-            est = self.estimated_completion_s()
-            if est is not None and est > self.slo.deadline_s:
+        # completion-estimate admission: always for interactive traffic,
+        # for batch traffic only when it carries its own deadline (its
+        # default backpressure is the queue bound, not an SLO estimate)
+        checked_deadline = (deadline_s if deadline_s is not None
+                            else (self.slo.deadline_s
+                                  if self.slo is not None else None))
+        if (checked_deadline is not None and self.slo is not None
+                and (priority == INTERACTIVE or deadline_s is not None)):
+            est = self.estimated_completion_s(priority=priority, now=now)
+            if est is not None and est > checked_deadline:
                 self.admission["shed"] += 1
                 self.tracer.instant(
                     "admission.shed", cat="admission", model=model,
-                    est_s=est, deadline_s=self.slo.deadline_s)
+                    est_s=est, deadline_s=checked_deadline)
                 raise AdmissionRejected(
-                    model=model, est_s=est, deadline_s=self.slo.deadline_s,
+                    model=model, est_s=est, deadline_s=checked_deadline,
                     healthy_fraction=self._healthy_fraction())
+        try:
+            rid = self.batcher.submit(model, x, now, priority=priority,
+                                      deadline_s=deadline_s)
+        except QueueOverflow:
+            self.admission["queue_shed"] += 1
+            self.tracer.instant("admission.queue_shed", cat="admission",
+                                model=model)
+            raise
         self.admission["admitted"] += 1
-        rid = self.batcher.submit(model, x, now)
         self.tracer.async_begin("request", aid=rid, model=model)
         return rid
 
@@ -252,21 +335,100 @@ class CNNServer:
         return self.batcher.pending()
 
     def reset(self) -> None:
-        """Drop accumulated results and telemetry (start a fresh trace).
+        """Drop the trace's accumulated state and release held resources.
 
-        ``results`` and the telemetry records otherwise grow for the
-        server's lifetime — callers running multiple traces against one
-        server (or consuming results incrementally) should reset between
-        traces, after harvesting what they need.  Admission counters and
-        the service-rate EMA survive (they describe the server, not the
-        trace).
+        ``results``, ``failures`` and the telemetry records otherwise
+        grow for the server's lifetime — callers running multiple traces
+        against one server (or consuming results incrementally) should
+        reset between traces, after harvesting what they need.  Admission
+        counters are cleared with them (they are per-trace tallies), the
+        dispatcher's lazily-created shard thread pool is shut down (it is
+        recreated on the next sharded dispatch — no pool leaks across
+        traces), and only the service-rate EMA survives: it describes the
+        hardware, not the trace.
         """
         if self.batcher.pending():
             raise RuntimeError(
                 f"{self.batcher.pending()} requests still queued; drain "
                 f"before resetting")
+        if self.dispatcher is not None:
+            self.dispatcher.close()
         self.results.clear()
+        self.failures.clear()
+        for key in self.admission:
+            self.admission[key] = 0
         self.telemetry.reset()
+
+    # -- brownout / operating point ---------------------------------------
+
+    def set_operating_point(self, point: OperatingPoint) -> None:
+        """Retune the serving device to ``point`` (and replan if needed).
+
+        The registry's planner recompiles resident plans against the new
+        accelerator on their next fetch — bitwise-identical outputs, only
+        packing geometry moves (``engine.plan_model``'s contract) — so a
+        brownout downshift never changes what requesters receive.
+        """
+        if point == self.serving_point:
+            return
+        prev = self.serving_point
+        self.serving_point = point
+        self.registry.set_accelerator(point)
+        self.telemetry.metrics.counter(
+            "serve_point_switches_total",
+            "serving operating-point retunes").inc()
+        self.tracer.instant("serve.point_switch", cat="brownout",
+                            src=prev.label, dst=point.label)
+
+    def _apply_rung(self, tr: RungTransition) -> None:
+        """Apply one ladder transition to the live serving policy."""
+        rung = self.brownout.rung
+        self.batcher.max_wait_s = self._base_max_wait_s * rung.max_wait_scale
+        self.set_operating_point(rung.point if rung.point is not None
+                                 else self._base_point)
+        m = self.telemetry.metrics
+        m.gauge("serve_brownout_rung",
+                "current brownout ladder rung").set(self.brownout.rung_index)
+        m.counter("serve_brownout_transitions_total",
+                  "brownout rung transitions",
+                  direction=tr.direction).inc()
+        self.tracer.instant(
+            "brownout.rung", cat="brownout", direction=tr.direction,
+            src=self.brownout.rungs[tr.src].name, dst=rung.name,
+            pressure=tr.pressure)
+
+    def _observe_brownout(self, now: float) -> None:
+        power = None
+        if self.dispatcher is not None:
+            health = self.dispatcher.fleet_health()
+            power = health.get("admitted_power_w")
+        tr = self.brownout.observe(
+            now, depth=self.batcher.pending(),
+            est_completion_s=self.estimated_completion_s(),
+            deadline_s=(self.slo.deadline_s if self.slo is not None
+                        else None),
+            power_w=power)
+        if tr is not None:
+            self._apply_rung(tr)
+
+    def _sweep_expired(self, now: float) -> None:
+        """Cancel queued requests whose deadline passed (typed failures)."""
+        for req in self.batcher.expire(now):
+            fault = RequestExpired(
+                model=req.model, rid=req.rid,
+                deadline_s=req.deadline - req.t_submit,
+                waited_s=now - req.t_submit)
+            self.failures[req.rid] = fault
+            self.admission["expired"] += 1
+            self.telemetry.metrics.counter(
+                "serve_requests_expired_total",
+                "queued requests cancelled at their deadline",
+                model=req.model).inc()
+            self.tracer.async_end("request", aid=req.rid, model=req.model,
+                                  expired=True)
+            self.tracer.instant("request.expired", cat="admission",
+                                model=req.model, rid=req.rid,
+                                waited_s=fault.waited_s)
 
     def _slo_flush_due(self, now: float) -> bool:
         """Dispatch early once queue wait eats into the SLO deadline."""
@@ -293,6 +455,9 @@ class CNNServer:
         wall clock they include the compile stall too.
         """
         now = self._now(now)
+        self._sweep_expired(now)
+        if self.brownout is not None:
+            self._observe_brownout(now)
         fb = self.batcher.pop_batch(now,
                                     force=force or self._slo_flush_due(now))
         if fb is None:
@@ -328,7 +493,14 @@ class CNNServer:
             compiled = (engine.pipeline_cache_info()["compiles"]
                         - compiles_before)
             self.pipeline_compiles += compiled
-            exec_s = time.perf_counter() - t0
+            if self.service_model is not None:
+                # modeled service time on the injectable clock: the EMA,
+                # latencies and telemetry all stay in one (virtual) unit
+                # system, deterministic across hosts
+                exec_s = self.service_model(fb.model, fb.size,
+                                            self.serving_point)
+            else:
+                exec_s = time.perf_counter() - t0
             # service-rate EMA feeds admission control; fault retries
             # inflate exec_s, which is exactly the backpressure the
             # estimator needs
@@ -351,7 +523,8 @@ class CNNServer:
                 corrupted_frames = min(
                     fb.size,
                     int(np.ceil(detections * fb.size / shards)))
-            done = self._now(None)
+            done = (now + exec_s if self.service_model is not None
+                    else self._now(None))
             self._decay_corruption(done)
             rate = corrupted_frames / fb.size
             self._corruption_ema = (0.3 * rate
@@ -374,7 +547,8 @@ class CNNServer:
                     queue_waits_s=fb.queue_waits(), latencies_s=lats,
                     shards=shard_info, exec_specs=entry.exec_specs,
                     op_points=entry.plan.layer_points,
-                    reconfig_switches=entry.plan.reconfig_switches)
+                    reconfig_switches=entry.plan.reconfig_switches,
+                    priorities=fb.priorities())
             bsp.set(compiles=compiled, exec_s=exec_s)
             if self.dispatcher is None:
                 # unsharded: the whole batch's modeled device time lands

@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -44,8 +45,17 @@ class HardwarePoint(OperatingPoint):
     DAC bit rate); those are exactly the leading fields of the unified
     ``OperatingPoint``, so historical positional construction —
     ``HardwarePoint("AMM", 5.0)`` — still works.  New code should use
-    ``OperatingPoint`` directly.
+    ``OperatingPoint`` directly; constructing this alias warns (and the
+    repo's pytest config promotes the warning to an error, so deprecated
+    paths cannot creep back into serve/benchmarks).
     """
+
+    def __post_init__(self) -> None:
+        warnings.warn(
+            "serve.HardwarePoint is deprecated; use "
+            "repro.core.OperatingPoint (same leading fields, same "
+            "positional construction)",
+            DeprecationWarning, stacklevel=2)
 
 
 DEFAULT_HW_POINTS: Tuple[OperatingPoint, ...] = (
@@ -87,6 +97,9 @@ class BatchRecord:
     latencies_s: Tuple[float, ...]      # submit -> results ready, per request
     hw: Dict[str, HwCost]               # point label -> modeled cost
     shards: Tuple[ShardCost, ...] = ()  # sharded dispatch (empty if single)
+    #: per-request priority class, aligned with ``latencies_s`` (empty
+    #: when the server predates priorities or none were passed)
+    priorities: Tuple[str, ...] = ()
     #: per-batch activation-stream footprint, a *modeled* metric like the
     #: hw costs above: every DIV element the batch pushes through the
     #: engine, priced at the quantized lattice width (int8 for SC/PC/FC,
@@ -181,6 +194,10 @@ class TelemetryLog:
         self._wait_hist = self.metrics.histogram(
             "serve_queue_wait_seconds", "submit-to-batch-formed queue wait")
         self._model_lat_hist: Dict[str, LogHistogram] = {}
+        # per-priority-class latency: streaming histogram + request count
+        # (the overload harness's per-class p50/p99 source)
+        self._class_lat_hist: Dict[str, LogHistogram] = {}
+        self._class_requests: Dict[str, int] = {}
 
     def attach_fleet(self, source: Callable[[], Dict]) -> None:
         """Register the live fleet-health provider for summary()["fleet"].
@@ -248,6 +265,7 @@ class TelemetryLog:
                      exec_specs: Optional[Sequence[LayerSpec]] = None,
                      op_points: Optional[Dict[str, str]] = None,
                      reconfig_switches: int = 0,
+                     priorities: Sequence[str] = (),
                      ) -> BatchRecord:
         """Record one served batch (and, when sharded, each shard).
 
@@ -276,13 +294,19 @@ class TelemetryLog:
         by_q = by_f = 0
         if exec_specs is not None:
             by_q, by_f = activation_stream_bytes(exec_specs)
+        priorities = tuple(priorities)
+        if priorities and len(priorities) != len(tuple(latencies_s)):
+            raise ValueError(
+                f"priorities ({len(priorities)}) must align with "
+                f"latencies_s ({len(tuple(latencies_s))})")
         rec = BatchRecord(model=model, batch_size=batch_size,
                           t_formed=t_formed, exec_s=exec_s,
                           queue_waits_s=tuple(queue_waits_s),
                           latencies_s=tuple(latencies_s), hw=dict(hw),
                           shards=shard_costs,
                           act_stream_bytes_int8=batch_size * by_q,
-                          act_stream_bytes_f32=batch_size * by_f)
+                          act_stream_bytes_f32=batch_size * by_f,
+                          priorities=priorities)
         self.records.append(rec)
         if len(self.records) > self.max_records:
             drop = len(self.records) - self.max_records
@@ -336,6 +360,14 @@ class TelemetryLog:
         for lat in rec.latencies_s:
             self._lat_hist.record(lat)
             mhist.record(lat)
+        for cls, lat in zip(rec.priorities, rec.latencies_s):
+            chist = self._class_lat_hist.get(cls)
+            if chist is None:
+                chist = self._class_lat_hist[cls] = self.metrics.histogram(
+                    "serve_class_latency_seconds",
+                    "request latency by priority class", priority=cls)
+            chist.record(lat)
+            self._class_requests[cls] = self._class_requests.get(cls, 0) + 1
         for w in rec.queue_waits_s:
             self._wait_hist.record(w)
         self.metrics.counter("serve_requests_total",
@@ -385,6 +417,8 @@ class TelemetryLog:
         self._model_agg.clear()
         self._dispatch_agg.clear()
         self._model_lat_hist.clear()
+        self._class_lat_hist.clear()
+        self._class_requests.clear()
         self.layers.reset()
         self.metrics.reset()
         self._lat_hist = self.metrics.histogram(
@@ -417,6 +451,29 @@ class TelemetryLog:
                 else self._model_lat_hist.get(model))
         if hist is None or hist.count == 0:
             raise ValueError("no served requests to take a percentile of")
+        return hist.percentile(q)
+
+    def class_latency_percentile(self, q: float, priority: str) -> float:
+        """Request-latency percentile for one priority class.
+
+        Exact (numpy over the retained records' aligned priority rows)
+        while nothing has been dropped; falls back to the per-class
+        streaming histogram after the record ring trims.
+        """
+        if self._dropped_records == 0:
+            lats = [lat for r in self.records
+                    for cls, lat in zip(r.priorities, r.latencies_s)
+                    if cls == priority]
+            if not lats:
+                raise ValueError(
+                    f"no served {priority!r}-class requests to take a "
+                    f"percentile of")
+            return float(np.percentile(np.asarray(lats), q))
+        hist = self._class_lat_hist.get(priority)
+        if hist is None or hist.count == 0:
+            raise ValueError(
+                f"no served {priority!r}-class requests to take a "
+                f"percentile of")
         return hist.percentile(q)
 
     @staticmethod
@@ -498,6 +555,13 @@ class TelemetryLog:
             "activation_stream": self._act_stream_summary(agg.act_int8,
                                                           agg.act_f32),
             "layers": self.layers.summary(top_k),
+            "classes": {
+                cls: {"requests": self._class_requests.get(cls, 0),
+                      "latency_p50_s": self.class_latency_percentile(
+                          50, cls),
+                      "latency_p99_s": self.class_latency_percentile(
+                          99, cls)}
+                for cls in sorted(self._class_lat_hist)},
             "models": {},
         }
         for model in sorted(self._model_agg):

@@ -18,8 +18,8 @@ except ImportError:        # pragma: no cover
 
 jax.config.update("jax_platform_name", "cpu")
 
-RMAM1 = serve.HardwarePoint("RMAM", 1.0)
-RMAM5 = serve.HardwarePoint("RMAM", 5.0)
+RMAM1 = serve.OperatingPoint("RMAM", 1.0)
+RMAM5 = serve.OperatingPoint("RMAM", 5.0)
 
 
 @pytest.fixture(autouse=True)

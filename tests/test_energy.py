@@ -182,7 +182,8 @@ def test_operating_point_engine_roundtrip():
 
 
 def test_hardware_point_is_deprecated_alias():
-    hp = serve.HardwarePoint("RMAM", 5.0)   # historical positional form
+    with pytest.warns(DeprecationWarning, match="HardwarePoint is deprec"):
+        hp = serve.HardwarePoint("RMAM", 5.0)   # historical positional form
     assert isinstance(hp, OperatingPoint)
     assert hp.label == "RMAM@5G"
     assert hp.to_accelerator() == build_accelerator("RMAM", 5.0)

@@ -21,7 +21,7 @@ from repro.serve import models as zoo
 
 jax.config.update("jax_platform_name", "cpu")
 
-RMAM1 = serve.HardwarePoint("RMAM", 1.0)
+RMAM1 = serve.OperatingPoint("RMAM", 1.0)
 
 
 @pytest.fixture(autouse=True)

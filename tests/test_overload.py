@@ -1,0 +1,424 @@
+"""Overload-robustness tests: priority/deadline batching, the brownout
+ladder's hysteresis and bitwise-downshift contract, typed shedding
+(queue bound, brownout door, expiry sweep), and resource hygiene
+(dispatcher pool close/context-manager, server reset).
+
+Everything server-side runs on a virtual clock with an injected
+``service_model`` — modeled seconds, deterministic across hosts.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro import engine, obs, serve
+from repro.cnn.layers import ConvKind
+from repro.serve.batcher import ContinuousBatcher, DynamicBatcher
+from repro.serve.registry import PlanRegistry
+
+jax.config.update("jax_platform_name", "cpu")
+
+BASE = serve.OperatingPoint("RMAM", 1.0)
+RECONF = serve.OperatingPoint("RMAM", 1.0, reconfigurable=True)
+
+
+def _tiny_factory(seed=0, f=6, s=5):
+    def factory():
+        rng = np.random.default_rng(seed)
+        w = np.asarray(rng.normal(size=(f, 1, 1, s)), np.float32)
+        return [engine.LayerDef("pc", ConvKind.PC, w, act="relu")]
+    return factory
+
+
+def _tiny_registry(names, capacity=4, planner=False):
+    reg = PlanRegistry(capacity=capacity, planner=planner)
+    for i, name in enumerate(names):
+        reg.register(name, _tiny_factory(seed=i), input_shape=(4, 4, 5))
+    return reg
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def now(self):
+        return self.t
+
+
+def _virtual_server(reg, clock, **kw):
+    kw.setdefault("max_batch", 4)
+    kw.setdefault("max_wait_s", 0.0)
+    kw.setdefault("time_fn", clock.now)
+    kw.setdefault("service_model",
+                  lambda model, batch, point:
+                  0.01 * batch / (2.0 if point.reconfigurable else 1.0))
+    return serve.CNNServer(reg, **kw)
+
+
+# ---------------------------------------------------------------------------
+# batcher: deadlines, expiry, flush-deadline regression
+# ---------------------------------------------------------------------------
+
+def test_expiry_sweep_returns_dead_requests_and_keeps_order():
+    b = DynamicBatcher(max_batch=8, max_wait_s=10.0)
+    r1 = b.submit("m", None, now=0.0, deadline_s=1.0)
+    r2 = b.submit("m", None, now=0.0)               # no deadline: immortal
+    r3 = b.submit("m", None, now=0.5, deadline_s=1.0)
+    assert b.expire(now=0.5) == []
+    expired = b.expire(now=1.2)                     # r1 dead, r3 alive
+    assert [r.rid for r in expired] == [r1]
+    assert b.pending() == 2
+    expired = b.expire(now=2.0)
+    assert [r.rid for r in expired] == [r3]
+    fb = b.pop_batch(now=2.0, force=True)
+    assert [r.rid for r in fb.requests] == [r2]
+
+
+def test_flush_deadline_recomputed_after_head_expiry():
+    """Satellite regression: the oldest-wait flush signal must scan LIVE
+    requests, not trust the queue head — an expired head would otherwise
+    keep forcing flushes (or mask a younger request's wait) forever."""
+    b = DynamicBatcher(max_batch=8, max_wait_s=1.0)
+    b.submit("m", None, now=0.0, deadline_s=2.0)    # will die at t=2
+    r2 = b.submit("m", None, now=1.5)
+    # head alive: it is the oldest wait
+    assert b.oldest_wait_s(1.9) == pytest.approx(1.9)
+    # head dead (no expire() call needed): r2's wait, not the corpse's
+    assert b.oldest_wait_s(2.5) == pytest.approx(1.0)
+    fb = b.pop_batch(now=2.5, force=False)          # r2 stale past max_wait
+    assert fb is not None and [r.rid for r in fb.requests] == [r2]
+    # the corpse is never selected; the explicit sweep fails it typed
+    assert b.oldest_wait_s(3.0) is None
+    assert len(b.expire(now=3.0)) == 1
+    assert b.pending() == 0
+
+
+def test_submit_validates_priority_and_deadline():
+    b = DynamicBatcher()
+    with pytest.raises(ValueError, match="priority"):
+        b.submit("m", None, now=0.0, priority="urgent")
+    with pytest.raises(ValueError, match="deadline_s"):
+        b.submit("m", None, now=0.0, deadline_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# batcher: two-class priority + aging, bounded queue
+# ---------------------------------------------------------------------------
+
+def test_interactive_selected_before_older_batch_requests():
+    b = DynamicBatcher(max_batch=2, max_wait_s=0.0)
+    b1 = b.submit("m", None, now=0.0, priority=serve.BATCH)
+    b2 = b.submit("m", None, now=0.1, priority=serve.BATCH)
+    i1 = b.submit("m", None, now=0.5, priority=serve.INTERACTIVE)
+    fb = b.pop_batch(now=0.5)
+    # interactive jumps the line; the older batch request fills the slot
+    assert {r.rid for r in fb.requests} == {i1, b1}
+    # within the formed batch, submission order is preserved (stacking
+    # order is part of the bitwise contract)
+    assert [r.rid for r in fb.requests] == [b1, i1]
+    fb2 = b.pop_batch(now=0.5, force=True)
+    assert [r.rid for r in fb2.requests] == [b2]
+
+
+def test_batch_class_ages_into_interactive_precedence():
+    b = DynamicBatcher(max_batch=1, max_wait_s=0.0, age_promote_s=5.0)
+    old = b.submit("m", None, now=0.0, priority=serve.BATCH)
+    b.submit("m", None, now=4.9, priority=serve.INTERACTIVE)
+    # before promotion: interactive first despite being younger
+    fb = b.pop_batch(now=4.9)
+    assert fb.priorities() == [serve.INTERACTIVE]
+    # past age_promote_s the starved batch request outranks a fresh
+    # interactive one (same promoted class, older submission)
+    b.submit("m", None, now=5.1, priority=serve.INTERACTIVE)
+    fb = b.pop_batch(now=5.1)
+    assert [r.rid for r in fb.requests] == [old]
+
+
+def test_bounded_queue_sheds_typed_and_counts_nothing():
+    b = DynamicBatcher(max_batch=8, max_wait_s=0.0, max_queue=2)
+    b.submit("m", None, now=0.0)
+    b.submit("m", None, now=0.0)
+    with pytest.raises(serve.QueueOverflow) as ei:
+        b.submit("m", None, now=0.0)
+    assert ei.value.model == "m" and ei.value.max_queue == 2
+    assert b.pending("m") == 2                       # nothing half-queued
+    b.submit("other", None, now=0.0)                 # per-model bound
+
+
+def test_continuous_batcher_is_work_conserving_for_promoted_work():
+    cont = ContinuousBatcher(max_batch=8, max_wait_s=60.0)
+    plain = DynamicBatcher(max_batch=8, max_wait_s=60.0)
+    for b in (cont, plain):
+        b.submit("m", None, now=0.0, priority=serve.INTERACTIVE)
+    # the continuous batcher dispatches a lone interactive request NOW;
+    # the plain batcher holds for batch-mates until max_wait
+    assert plain.pop_batch(now=0.0) is None
+    fb = cont.pop_batch(now=0.0)
+    assert fb is not None and fb.size == 1
+    # batch-class work still waits for the window (it is not starved —
+    # aging promotes it — but it must not defeat batching amortization)
+    cont.submit("m", None, now=1.0, priority=serve.BATCH)
+    assert cont.pop_batch(now=1.0) is None
+    assert cont.pop_batch(now=1.0, force=True).size == 1
+
+
+# ---------------------------------------------------------------------------
+# server: expiry sweep, typed failures, class-aware admission
+# ---------------------------------------------------------------------------
+
+def test_server_expires_queued_requests_with_typed_failures():
+    clock = _Clock()
+    reg = _tiny_registry(["m1"])
+    srv = _virtual_server(reg, clock, max_batch=8, max_wait_s=60.0)
+    x = np.zeros((4, 4, 5), np.float32)
+    doomed = srv.submit("m1", x, deadline_s=0.5)
+    safe = srv.submit("m1", x)
+    clock.t = 1.0
+    srv.step()                                       # sweep runs first
+    fail = srv.failures[doomed]
+    assert isinstance(fail, serve.RequestExpired)
+    assert fail.model == "m1" and fail.deadline_s == pytest.approx(0.5)
+    assert fail.waited_s == pytest.approx(1.0)
+    assert doomed not in srv.results
+    assert srv.admission["expired"] == 1
+    m = srv.telemetry.metrics
+    assert m.counter("serve_requests_expired_total",
+                     model="m1").value == 1.0
+    outs = srv.run_until_drained()
+    assert safe in outs and doomed not in outs
+
+
+def test_interactive_admission_ignores_unpromoted_batch_backlog():
+    """Class-aware admission: a deep batch-class backlog must not shed
+    interactive traffic the priority scheduler would serve in time."""
+    clock = _Clock()
+    reg = _tiny_registry(["m1"])
+    srv = _virtual_server(reg, clock, max_batch=4, max_wait_s=60.0,
+                          continuous=True,
+                          slo=serve.ServeSLO(deadline_s=0.1,
+                                             min_observations=1))
+    x = np.zeros((4, 4, 5), np.float32)
+    srv.submit("m1", x)
+    srv.step(force=True)                             # seed the EMA
+    # bury the queue in batch-class work: full depth would blow the SLO
+    for _ in range(40):
+        srv.submit("m1", x, priority=serve.BATCH)
+    est_batch = srv.estimated_completion_s(priority=serve.BATCH)
+    est_inter = srv.estimated_completion_s(priority=serve.INTERACTIVE,
+                                           now=clock.t)
+    assert est_batch > 0.1          # the backlog itself is past deadline
+    assert est_inter < est_batch    # ...but interactive jumps it
+    rid = srv.submit("m1", x)       # admitted, not shed
+    assert srv.admission["shed"] == 0
+    # a batch request carrying its own deadline IS estimate-checked
+    with pytest.raises(serve.AdmissionRejected):
+        srv.submit("m1", x, priority=serve.BATCH, deadline_s=0.05)
+    outs = srv.run_until_drained()
+    assert rid in outs
+
+
+# ---------------------------------------------------------------------------
+# brownout controller: hysteresis, power guard
+# ---------------------------------------------------------------------------
+
+def test_controller_validates_hysteresis_bands():
+    with pytest.raises(ValueError, match="queue_low < queue_high"):
+        serve.BrownoutController(queue_high=4, queue_low=4)
+    with pytest.raises(ValueError, match="latency_low < latency_high"):
+        serve.BrownoutController(latency_high=0.5, latency_low=0.5)
+    with pytest.raises(ValueError, match="max_wait_scale"):
+        serve.BrownoutRung("bad", max_wait_scale=0.5)
+
+
+def test_hysteresis_never_oscillates_under_sinusoidal_load():
+    """Property: opposite-direction transitions are separated by at least
+    the relevant dwell/cooldown, whatever the load trace does — driven
+    with a sinusoid straddling both bands, the worst case for chatter."""
+    ctl = serve.BrownoutController(
+        queue_high=16, queue_low=4,
+        escalate_dwell_s=0.3, recover_cooldown_s=1.1)
+    period = 2.0
+    for i in range(4000):
+        t = i * 0.01
+        depth = int(16 + 14 * np.sin(2 * np.pi * t / period))
+        ctl.observe(t, depth)
+    trs = ctl.transitions
+    assert len(trs) >= 4                             # it did move
+    for prev, cur in zip(trs, trs[1:]):
+        gap = cur.t - prev.t
+        if cur.direction == "escalate":
+            assert gap >= ctl.escalate_dwell_s - 1e-9
+        else:
+            assert gap >= ctl.recover_cooldown_s - 1e-9
+    # and the counters reconcile with the trajectory
+    c = ctl.counters
+    assert c["escalations"] - c["deescalations"] == ctl.rung_index
+
+
+def test_recovery_requires_the_lower_band_not_just_sub_high():
+    ctl = serve.BrownoutController(queue_high=8, queue_low=2,
+                                   escalate_dwell_s=0.0,
+                                   recover_cooldown_s=0.0)
+    assert ctl.observe(0.0, depth=8) is not None     # escalate
+    # depth 5: below the high band but above the low one — hold the rung
+    assert ctl.observe(1.0, depth=5) is None
+    assert ctl.rung_index == 1
+    tr = ctl.observe(2.0, depth=1)                   # under low band
+    assert tr is not None and tr.direction == "recover"
+    assert ctl.rung_index == 0
+
+
+def test_power_cap_blocks_downshift_and_counts_it():
+    cap = RECONF.to_accelerator().power_w() - 1.0    # just under the rung
+    ctl = serve.BrownoutController(
+        queue_high=2, queue_low=1, escalate_dwell_s=0.0,
+        recover_cooldown_s=0.0, power_cap_w=cap)
+    for t in range(10):
+        ctl.observe(float(t), depth=50)
+    # climbed the no-point rungs, then hit the power wall below downshift
+    assert ctl.rung.name == "shed_batch"
+    assert ctl.counters["power_blocked"] > 0
+    assert ctl.counters["downshifts"] == 0
+
+
+# ---------------------------------------------------------------------------
+# server + brownout: the full ladder on a virtual clock
+# ---------------------------------------------------------------------------
+
+def _ladder_server(clock, tracer=None, planner=True):
+    reg = _tiny_registry(["m1"], planner=planner)
+    brown = serve.BrownoutController(
+        queue_high=4, queue_low=1,
+        escalate_dwell_s=0.0, recover_cooldown_s=0.0)
+    srv = _virtual_server(reg, clock, max_batch=2, max_wait_s=0.01,
+                          continuous=True, brownout=brown, tracer=tracer)
+    return reg, brown, srv
+
+
+def test_brownout_ladder_escalates_sheds_downshifts_and_recovers():
+    clock = _Clock()
+    tracer = obs.Tracer(time_fn=clock.now)
+    reg, brown, srv = _ladder_server(clock, tracer=tracer)
+    x = np.zeros((4, 4, 5), np.float32)
+    base_wait = srv.batcher.max_wait_s
+    assert srv.serving_point == BASE
+
+    for _ in range(8):
+        srv.submit("m1", x)                          # depth past the band
+    srv.step()                                       # -> stretch_wait
+    assert brown.rung.name == "stretch_wait"
+    assert srv.batcher.max_wait_s == pytest.approx(4 * base_wait)
+    srv.step()                                       # -> shed_batch
+    assert brown.rung.name == "shed_batch"
+    with pytest.raises(serve.BrownoutShed) as ei:
+        srv.submit("m1", x, priority=serve.BATCH)
+    assert ei.value.rung == "shed_batch"
+    assert srv.admission["brownout_shed"] == 1
+    srv.submit("m1", x)                              # interactive still in
+    srv.step()                                       # -> downshift
+    assert brown.rung.name == "downshift"
+    assert srv.serving_point == RECONF               # comb-switch retuned
+    assert reg.stats()["replans"] == 1               # planner replanned
+    assert brown.counters["downshifts"] == 1
+
+    srv.run_until_drained()
+    # queue empty: each further step recovers one rung (cooldown 0)
+    for _ in range(3):
+        srv.step()
+    assert brown.rung_index == 0
+    assert srv.serving_point == BASE                 # point restored...
+    assert reg.stats()["replans"] == 2               # ...via a replan
+    assert srv.batcher.max_wait_s == pytest.approx(base_wait)
+
+    # transitions are observable: metrics counters + trace instants
+    m = srv.telemetry.metrics
+    assert m.counter("serve_brownout_transitions_total",
+                     direction="escalate").value == 3.0
+    assert m.counter("serve_brownout_transitions_total",
+                     direction="recover").value == 3.0
+    assert m.gauge("serve_brownout_rung").value == 0.0
+    rungs = [e for e in tracer.events()
+             if e.name == "brownout.rung"]
+    assert len(rungs) == 6
+    switches = [e for e in tracer.events()
+                if e.name == "serve.point_switch"]
+    assert len(switches) == 2                        # down and back
+    # and the fleet summary carries the controller's report
+    rep = srv.telemetry.summary()["fleet"]["brownout"]
+    assert rep["rung"] == 0 and rep["counters"]["downshifts"] == 1
+
+
+def test_downshifted_rung_serves_bitwise_identical_outputs():
+    """Satellite: every rung's operating point — including the planner
+    replan at the downshift rung — must serve bit-identical outputs."""
+    clock = _Clock()
+    reg = _tiny_registry(["m1"], planner=True)
+    srv = _virtual_server(reg, clock, max_batch=4, continuous=True)
+    rng = np.random.default_rng(0)
+    xs = rng.normal(size=(3, 4, 4, 5)).astype(np.float32)
+    outs_by_point = {}
+    for rung in serve.DEFAULT_LADDER:
+        point = rung.point if rung.point is not None else BASE
+        srv.set_operating_point(point)
+        rids = [srv.submit("m1", x) for x in xs]
+        res = srv.run_until_drained()
+        outs_by_point[rung.name] = [res[r] for r in rids]
+        srv.reset()
+    base = outs_by_point["nominal"]
+    for name, outs in outs_by_point.items():
+        for got, want in zip(outs, base):
+            np.testing.assert_array_equal(got, want, err_msg=name)
+    # exactly one device move: the three no-point rungs share the base
+    # point (no spurious replans), only the downshift rung retunes
+    assert reg.stats()["replans"] == 1
+
+
+def test_set_operating_point_is_noop_for_same_point():
+    clock = _Clock()
+    reg = _tiny_registry(["m1"], planner=True)
+    srv = _virtual_server(reg, clock)
+    srv.set_operating_point(BASE)                    # == telemetry primary
+    assert reg.stats()["replans"] == 0
+    m = srv.telemetry.metrics
+    assert m.counter("serve_point_switches_total").value == 0.0
+
+
+# ---------------------------------------------------------------------------
+# resource hygiene: dispatcher close/context-manager, server reset
+# ---------------------------------------------------------------------------
+
+def test_dispatcher_context_manager_closes_pool():
+    reg = _tiny_registry(["m1"])
+    x = np.zeros((2, 4, 4, 5), np.float32)
+    with serve.ShardedDispatcher(serve.default_fleet(2)) as fleet:
+        entry = reg.get("m1")
+        out, runs = fleet.run(entry.plan, x)
+        assert fleet._pool is not None               # lazily created
+    assert fleet._pool is None                       # closed on exit
+    # close() is idempotent and the pool is lazily recreated after it
+    fleet.close()
+    out2, _ = fleet.run(entry.plan, x)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+    fleet.close()
+
+
+def test_server_reset_closes_pool_and_clears_admission():
+    clock = _Clock()
+    fleet = serve.ShardedDispatcher(serve.default_fleet(2))
+    reg = _tiny_registry(["m1"])
+    srv = _virtual_server(reg, clock, max_batch=2, dispatcher=fleet,
+                          max_queue=1)
+    x = np.zeros((4, 4, 5), np.float32)
+    srv.submit("m1", x)
+    with pytest.raises(serve.QueueOverflow):
+        srv.submit("m1", x)
+    srv.run_until_drained()
+    assert fleet._pool is not None
+    assert srv.admission["admitted"] == 1
+    assert srv.admission["queue_shed"] == 1
+    srv.reset()
+    assert fleet._pool is None                       # no pool leak
+    assert all(v == 0 for v in srv.admission.values())
+    assert srv.failures == {} and srv.results == {}
+    rid = srv.submit("m1", x)                        # still servable
+    assert rid in srv.run_until_drained()
+    fleet.close()

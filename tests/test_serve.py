@@ -171,8 +171,8 @@ def test_server_serves_bit_identical_to_per_image_engine():
 def test_server_telemetry_reports_hardware_time():
     reg = _micro_serving_registry()
     srv = serve.CNNServer(reg, max_batch=4, max_wait_s=0.0,
-                          hw_points=(serve.HardwarePoint("RMAM", 1.0),
-                                     serve.HardwarePoint("AMM", 1.0)))
+                          hw_points=(serve.OperatingPoint("RMAM", 1.0),
+                                     serve.OperatingPoint("AMM", 1.0)))
     rng = np.random.default_rng(1)
     for x in rng.normal(size=(5, 8, 8, 3)).astype(np.float32):
         srv.submit("micro", x)
